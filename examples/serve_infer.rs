@@ -1,0 +1,71 @@
+//! Standalone inference-engine benchmark: continuous batching under a prompt
+//! stream, reporting serving-style latency/throughput (the vLLM-substrate
+//! half of the system in isolation).
+//!
+//! ```bash
+//! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64
+//! ```
+
+use pa_rl::config::Config;
+use pa_rl::data::DataLoader;
+use pa_rl::engine::{Engine, GenRequest};
+use pa_rl::runtime::Runtime;
+use pa_rl::util::bench::Table;
+use pa_rl::util::cli::Args;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let config_path = args.str_or("config", "configs/tiny.json");
+    let n_requests = args.usize_or("requests", 64);
+    let seed = args.u64_or("seed", 0);
+
+    let cfg = Config::load(Path::new(&config_path))?;
+    let artifacts = cfg.artifacts_dir();
+    let rt = Runtime::load_validated(Path::new(&artifacts), &cfg)?;
+    rt.prepare(&["init", "prefill", "decode"])?;
+    let params = rt.init_params(seed as i32)?;
+    let mut engine = Engine::new(cfg.clone(), rt, seed);
+    engine.set_weights(&params)?;
+
+    let mut loader = DataLoader::new(cfg.data.clone());
+    let prompts = loader.next_batch(n_requests);
+    let reqs: Vec<GenRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| GenRequest { request_id: i as u64, prompt: p.tokens.clone() })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let results = engine.generate_all(reqs)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut latencies: Vec<f64> = results.iter().map(|r| r.seconds).collect();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies[((latencies.len() as f64 - 1.0) * p).round() as usize];
+    let total_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+    let finished = results
+        .iter()
+        .filter(|r| r.tokens.last() == Some(&pa_rl::data::EOS))
+        .count();
+
+    let mut t = Table::new(
+        "Inference engine: continuous batching benchmark",
+        &["Metric", "Value"],
+    );
+    t.row(&["requests".into(), format!("{n_requests}")]);
+    t.row(&["slots".into(), format!("{}", cfg.engine.n_slots)]);
+    t.row(&["decode chunk".into(), format!("{}", cfg.engine.decode_chunk)]);
+    t.row(&["wall (s)".into(), format!("{wall:.3}")]);
+    t.row(&["generated tokens".into(), format!("{total_tokens}")]);
+    t.row(&["tokens / s".into(), format!("{:.1}", total_tokens as f64 / wall)]);
+    t.row(&["requests / s".into(), format!("{:.2}", n_requests as f64 / wall)]);
+    t.row(&["latency p50 (s)".into(), format!("{:.3}", pct(0.5))]);
+    t.row(&["latency p95 (s)".into(), format!("{:.3}", pct(0.95))]);
+    t.row(&["latency max (s)".into(), format!("{:.3}", pct(1.0))]);
+    t.row(&["EOS-terminated".into(), format!("{finished}/{n_requests}")]);
+    t.row(&["prefills".into(), format!("{}", engine.stats.prefills)]);
+    t.row(&["decode chunks".into(), format!("{}", engine.stats.decode_chunks)]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! End-to-end GRPO training driver — the repository's primary experiment
+//! binary (EXPERIMENTS.md records its runs; Fig. 5's reward curves come from
+//! its CSV output).
+//!
+//! ```bash
+//! make artifacts CONFIG=configs/small.json
+//! cargo run --release --example train_grpo -- \
+//!     --config configs/small.json --mode async --iters 50 \
+//!     --sft-warmup 30 --eval 64 --csv runs/async.csv
+//! ```
+//!
+//! Stages: (1) optional SFT warmup on target answers so the policy emits
+//! digits at all; (2) T iterations of Algorithm 1 in the chosen mode
+//! (sync | async | stale); (3) held-out exact-match evaluation. Per-iteration
+//! metrics stream to stdout and to the CSV.
+
+use pa_rl::config::Config;
+use pa_rl::coordinator::{evaluate, Driver, DriverOpts, Mode};
+use pa_rl::data::{DataLoader, TaskGen, EOS};
+use pa_rl::grpo::{build_standard, Sample};
+use pa_rl::metrics::CsvLog;
+use pa_rl::runtime::Runtime;
+use pa_rl::train::{IterStats, Trainer};
+use pa_rl::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let config_path = args.str_or("config", "configs/tiny.json");
+    let mode = Mode::parse(&args.str_or("mode", "async"))?;
+    let spa = args.has_flag("spa") || args.get("spa").is_some_and(|v| v == "true");
+    let iters = args.u64_or("iters", 10);
+    let sft_warmup = args.usize_or("sft-warmup", 0);
+    let eval_n = args.usize_or("eval", 0);
+    let seed = args.u64_or("seed", 0);
+    let csv_path = args.get("csv").map(PathBuf::from);
+
+    let cfg = Config::load(Path::new(&config_path))?;
+    let artifacts = PathBuf::from(cfg.artifacts_dir());
+    eprintln!(
+        "[train_grpo] config={} mode={mode:?} spa={spa} iters={iters} sft={sft_warmup} params={}",
+        cfg.name,
+        cfg.model.param_count()
+    );
+
+    // ---- optional SFT warmup -------------------------------------------
+    let warm = if sft_warmup > 0 {
+        Some(run_sft_warmup(&cfg, &artifacts, sft_warmup, seed as i32)?)
+    } else {
+        None
+    };
+
+    // ---- RL -------------------------------------------------------------
+    let opts = DriverOpts { mode, spa, seed };
+    let mut driver = Driver::new(cfg.clone(), &artifacts, opts)?;
+    if let Some(params) = warm {
+        driver.set_policy(params)?;
+    }
+    if eval_n > 0 {
+        let before = evaluate(&cfg, &artifacts, driver.trainer().policy(), eval_n)?;
+        println!("eval before RL: accuracy {:.3} ({} / {})", before.accuracy, before.correct, before.n);
+    }
+
+    let mut csv = csv_path.as_ref().map(|p| {
+        CsvLog::new(p, &["iter", "reward", "loss", "kl", "entropy", "grad_norm",
+                         "wall_s", "consumer_wait_s", "train_tokens", "staleness"])
+    });
+    let t0 = std::time::Instant::now();
+    let report = {
+        let mut iters_done = Vec::new();
+        for t in 0..iters {
+            let rep = driver.run(1)?;
+            let it = &rep.iters[0];
+            println!(
+                "iter {t:>3}  reward {:>6.3}  loss {:>9.5}  kl {:>8.5}  wall {:>6.2}s  wait {:>5.2}s  tokens {:>7}  stale {:.2}",
+                it.reward_mean, it.stats.loss, it.stats.kl, it.wall_seconds,
+                it.consumer_wait_seconds, it.train_input_tokens, it.staleness_mean,
+            );
+            if let Some(c) = csv.as_mut() {
+                c.add(&[
+                    t as f64,
+                    it.reward_mean,
+                    it.stats.loss,
+                    it.stats.kl,
+                    it.stats.entropy,
+                    it.stats.grad_norm,
+                    it.wall_seconds,
+                    it.consumer_wait_seconds,
+                    it.train_input_tokens as f64,
+                    it.staleness_mean,
+                ]);
+            }
+            iters_done.push(it.clone());
+        }
+        iters_done
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens: usize = report.iter().map(|i| i.train_input_tokens).sum();
+    let devices = cfg.rl.n_engines + 1;
+    println!(
+        "\nTOTAL: {tokens} train tokens in {wall:.1}s on {devices} instances -> TPSPD {:.3}",
+        tokens as f64 / (wall * devices as f64)
+    );
+    if let Some(c) = &csv {
+        c.flush()?;
+        println!("curve written to {}", csv_path.unwrap().display());
+    }
+    if eval_n > 0 {
+        let after = evaluate(&cfg, &artifacts, driver.trainer().policy(), eval_n)?;
+        println!("eval after RL: accuracy {:.3} ({} / {})", after.accuracy, after.correct, after.n);
+    }
+    println!("\n{}", driver.trace().render_ascii(100));
+    Ok(())
+}
+
+/// Supervised warmup: train on (prompt -> correct answer + EOS) pairs so the
+/// random-init policy produces parseable digit answers before RL begins.
+fn run_sft_warmup(
+    cfg: &Config,
+    artifacts: &Path,
+    steps: usize,
+    seed: i32,
+) -> anyhow::Result<pa_rl::runtime::HostParams> {
+    eprintln!("[train_grpo] SFT warmup: {steps} steps");
+    let rt = Runtime::load_validated(artifacts, cfg)?;
+    rt.prepare(&["init", "sft_step", "adam_update"])?;
+    let mut trainer = Trainer::new(cfg.clone(), rt, seed)?;
+    let mut loader = DataLoader::new(cfg.data.clone());
+    for step in 0..steps {
+        trainer.begin_iteration()?;
+        let prompts = loader.next_batch(cfg.train.micro_bs);
+        let targets: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| {
+                let mut t = loader
+                    .taskgen()
+                    .tokenizer()
+                    .encode(&TaskGen::target_response(p.answer))
+                    .expect("answers tokenize");
+                t.push(EOS);
+                t
+            })
+            .collect();
+        let samples: Vec<Sample> = prompts
+            .iter()
+            .zip(&targets)
+            .map(|(p, t)| Sample { prompt: &p.tokens, response: t, advantage: 0.0 })
+            .collect();
+        let batch = build_standard(&samples, cfg.train.micro_bs, cfg.train.seq_len);
+        let loss = trainer.sft_micro(&batch)?;
+        let mut stats = IterStats::default();
+        trainer.end_iteration(&mut stats)?;
+        if step % 10 == 0 || step + 1 == steps {
+            eprintln!("  sft step {step:>4}  loss {loss:.4}");
+        }
+    }
+    let mut params = trainer.policy().clone();
+    params.version = 0; // RL restarts version numbering from the warm start
+    Ok(params)
+}

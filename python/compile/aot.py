@@ -1,0 +1,206 @@
+"""AOT pipeline: lower every compiled computation to HLO text + manifest.
+
+Usage:
+    python -m compile.aot --config ../configs/small.json [--out DIR]
+                          [--attn-impl jnp|pallas] [--force]
+
+Emits into ``artifacts/<config name>/``:
+  * one ``<artifact>.hlo.txt`` per compiled computation (HLO *text*, not a
+    serialized HloModuleProto: jax >= 0.5 emits 64-bit instruction ids that
+    the xla crate's xla_extension 0.5.1 rejects; the text parser reassigns
+    ids and round-trips cleanly — see /opt/xla-example/README.md);
+  * ``manifest.json`` describing the parameter table, every artifact's input/
+    output signature, and the resolved config — the rust runtime refuses to
+    run against a manifest that disagrees with its own config resolution.
+
+Python runs only here, at build time. The rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import config as cfgmod
+from . import model
+
+MANIFEST_VERSION = 3
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals, names):
+    out = []
+    for name, a in zip(names, avals):
+        out.append({"name": name, "shape": list(a.shape), "dtype": str(a.dtype)})
+    return out
+
+
+def _param_names(prefix=""):
+    return [f"{prefix}{n}" for n in model.PARAM_NAMES]
+
+
+def artifact_specs(cfg, attn_impl):
+    """name -> (fn, example_args, input_names, output_names)."""
+    n = model.PARAM_NAMES
+    shapes = model.param_shapes(cfg)
+    f32 = jax.numpy.float32
+    i32 = jax.numpy.int32
+    params_spec = [jax.ShapeDtypeStruct(shapes[nm], f32) for nm in n]
+
+    batch_names = ["tokens", "labels", "pos", "seg", "adv", "weight", "prompt_len"]
+    metric_names = list(model.TRAIN_METRICS)
+
+    specs = {}
+    specs["init"] = (
+        lambda seed: model.init_params(cfg, seed),
+        [jax.ShapeDtypeStruct((), i32)],
+        ["seed"],
+        _param_names(),
+    )
+    specs["train_step"] = (
+        model.make_train_step(cfg, spa=False, attn_impl="jnp"),
+        model.train_step_example_args(cfg, spa=False),
+        _param_names("policy.") + _param_names("old.") + _param_names("ref.") + batch_names,
+        [f"grad.{nm}" for nm in n] + metric_names,
+    )
+    specs["train_step_spa"] = (
+        model.make_train_step(cfg, spa=True, attn_impl=attn_impl),
+        model.train_step_example_args(cfg, spa=True),
+        _param_names("policy.") + _param_names("old.") + _param_names("ref.") + batch_names,
+        [f"grad.{nm}" for nm in n] + metric_names,
+    )
+    specs["sft_step"] = (
+        model.make_sft_step(cfg),
+        model.sft_step_example_args(cfg),
+        _param_names() + ["tokens", "labels", "pos", "seg", "weight"],
+        [f"grad.{nm}" for nm in n] + ["loss"],
+    )
+    specs["logprob_eval"] = (
+        model.make_logprob_eval(cfg),
+        model.logprob_eval_example_args(cfg),
+        _param_names() + ["tokens", "labels", "pos", "seg"],
+        ["logprobs"],
+    )
+    specs["prefill"] = (
+        model.make_prefill(cfg),
+        model.prefill_example_args(cfg),
+        _param_names() + ["kv", "slot", "tokens", "length"],
+        ["kv", "logits"],
+    )
+    specs["decode"] = (
+        model.make_decode(cfg),
+        model.decode_example_args(cfg),
+        _param_names() + ["kv", "tokens", "pos", "active", "seed", "temperature", "top_p"],
+        ["kv", "tokens", "logprobs", "pos", "active"],
+    )
+    specs["adam_update"] = (
+        model.make_adam(cfg),
+        model.adam_example_args(cfg),
+        _param_names("p.") + _param_names("g.") + _param_names("m.") + _param_names("v.") + ["step"],
+        _param_names("p.") + _param_names("m.") + _param_names("v.") + ["grad_norm"],
+    )
+    return specs
+
+
+def config_fingerprint(cfg, attn_impl):
+    blob = json.dumps(cfgmod.dump_resolved(cfg), sort_keys=True) + attn_impl + str(MANIFEST_VERSION)
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    for fname in sorted(os.listdir(src_dir)):
+        if fname.endswith(".py"):
+            with open(os.path.join(src_dir, fname), "rb") as f:
+                blob += hashlib.sha256(f.read()).hexdigest()
+    kdir = os.path.join(src_dir, "kernels")
+    for fname in sorted(os.listdir(kdir)):
+        if fname.endswith(".py"):
+            with open(os.path.join(kdir, fname), "rb") as f:
+                blob += hashlib.sha256(f.read()).hexdigest()
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def build(config_path, out_dir=None, attn_impl="jnp", force=False, only=None):
+    cfg = cfgmod.load_config(config_path)
+    out_dir = out_dir or os.path.join("..", "artifacts", cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    fp = config_fingerprint(cfg, attn_impl)
+
+    if not force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("fingerprint") == fp and all(
+                os.path.exists(os.path.join(out_dir, a["file"]))
+                for a in old.get("artifacts", {}).values()
+            ):
+                print(f"[aot] {cfg.name}: artifacts fresh (fingerprint {fp}), skipping")
+                return manifest_path
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    specs = artifact_specs(cfg, attn_impl)
+    manifest_artifacts = {}
+    for name, (fn, example_args, in_names, out_names) in specs.items():
+        if only and name not in only:
+            continue
+        print(f"[aot] lowering {name} ...", flush=True)
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        # output signature from the jax trace
+        out_avals = jax.eval_shape(fn, *example_args)
+        flat_out = jax.tree_util.tree_leaves(out_avals)
+        manifest_artifacts[name] = {
+            "file": fname,
+            "inputs": _sig(example_args, in_names),
+            "outputs": _sig(flat_out, out_names),
+        }
+        print(f"[aot]   wrote {fname} ({len(text)} chars)")
+
+    shapes = model.param_shapes(cfg)
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "fingerprint": fp,
+        "attn_impl": attn_impl,
+        "config": cfgmod.dump_resolved(cfg),
+        "param_count": int(model.param_count(cfg)),
+        "params": [
+            {"name": nm, "shape": list(shapes[nm]), "dtype": "float32"}
+            for nm in model.PARAM_NAMES
+        ],
+        "kv_cache": {"shape": list(model.kv_cache_shape(cfg)), "dtype": "float32"},
+        "artifacts": manifest_artifacts,
+        "special_tokens": {"pad": model.PAD_ID, "bos": model.BOS_ID, "eos": model.EOS_ID},
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {manifest_path}")
+    return manifest_path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", required=True)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--attn-impl", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None, help="subset of artifacts")
+    args = ap.parse_args()
+    build(args.config, args.out, args.attn_impl, args.force, args.only)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,122 @@
+"""Config loading for the AOT pipeline.
+
+Reads the same JSON files under ``configs/`` as the rust side
+(``rust/src/config.rs``) and applies the same defaulting rules; the emitted
+``manifest.json`` echoes the resolved values so the rust loader can verify
+both sides agree before touching any artifact.
+"""
+
+import json
+from types import SimpleNamespace
+
+
+def _ns(**kw):
+    return SimpleNamespace(**kw)
+
+
+def load_config(path):
+    with open(path) as f:
+        raw = json.load(f)
+    return resolve(raw)
+
+
+def resolve(raw):
+    m = raw["model"]
+    model = _ns(
+        vocab_size=m["vocab_size"],
+        d_model=m["d_model"],
+        n_layers=m["n_layers"],
+        n_heads=m["n_heads"],
+        n_kv_heads=m.get("n_kv_heads", m["n_heads"]),
+        d_ff=m["d_ff"],
+        rope_theta=m.get("rope_theta", 10000.0),
+        rmsnorm_eps=m.get("rmsnorm_eps", 1e-5),
+    )
+    assert model.d_model % model.n_heads == 0
+    assert model.n_heads % model.n_kv_heads == 0
+    model.head_dim = model.d_model // model.n_heads
+
+    e = raw["engine"]
+    engine = _ns(
+        n_slots=e.get("n_slots", 8),
+        prompt_max=e["prompt_max"],
+        decode_chunk=e.get("decode_chunk", 16),
+        max_new=e["max_new"],
+        temperature=e.get("temperature", 1.0),
+        top_p=e.get("top_p", 1.0),
+        top_k=e.get("top_k", 0),
+    )
+    engine.cache_len = engine.prompt_max + engine.max_new
+
+    r = raw["rl"]
+    rl = _ns(
+        batch_prompts=r["batch_prompts"],
+        group_size=r["group_size"],
+        iters=r.get("iters", 10),
+        n_engines=r.get("n_engines", 1),
+        queue_cap=r.get("queue_cap", 64),
+    )
+
+    t = raw.get("train", {})
+    spa_raw = t.get("spa", {})
+    spa_k = spa_raw.get("k", rl.group_size)
+    train = _ns(
+        micro_bs=t.get("micro_bs", 4),
+        seq_len=t.get("seq_len", engine.prompt_max + engine.max_new),
+        spa_k=spa_k,
+        spa_pack_len=spa_raw.get("pack_len", engine.prompt_max + spa_k * engine.max_new),
+        lr=t.get("lr", 1e-4),
+        beta1=t.get("beta1", 0.9),
+        beta2=t.get("beta2", 0.95),
+        adam_eps=t.get("adam_eps", 1e-8),
+        weight_decay=t.get("weight_decay", 0.01),
+        grad_clip=t.get("grad_clip", 1.0),
+        kl_beta=t.get("kl_beta", 0.02),
+        clip_eps_low=t.get("clip_eps_low", 0.2),
+        clip_eps_high=t.get("clip_eps_high", 0.2),
+    )
+
+    return _ns(
+        name=raw.get("name", "unnamed"),
+        raw=raw,
+        model=model,
+        engine=engine,
+        train=train,
+        rl=rl,
+    )
+
+
+def tiny_test_config(**overrides):
+    """A minimal config for pytest (fast to trace/execute)."""
+    raw = {
+        "name": "pytest-tiny",
+        "model": {
+            "vocab_size": 32,
+            "d_model": 32,
+            "n_layers": 2,
+            "n_heads": 4,
+            "n_kv_heads": 2,
+            "d_ff": 64,
+        },
+        "engine": {"n_slots": 3, "prompt_max": 8, "decode_chunk": 4, "max_new": 8},
+        "train": {"micro_bs": 2, "lr": 1e-3},
+        "rl": {"batch_prompts": 2, "group_size": 2},
+    }
+    for key, val in overrides.items():
+        section, _, field = key.partition(".")
+        if field:
+            raw[section][field] = val
+        else:
+            raw[section] = val
+    return resolve(raw)
+
+
+def dump_resolved(cfg):
+    """Resolved config as a JSON-able dict (manifest echo)."""
+    return {
+        "name": cfg.name,
+        "model": vars(cfg.model).copy(),
+        "engine": vars(cfg.engine).copy(),
+        "train": vars(cfg.train).copy(),
+        "rl": vars(cfg.rl).copy(),
+    }

@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These reference implementations define the *semantics* that the Pallas kernels
+must match bit-for-bit (to float tolerance):
+
+* the shared-prompt attention mask (paper Fig. 4, extended with the
+  duplicated-last-prompt-token layout — see rust/src/grpo/batch.rs for the
+  packing contract and the exactness argument);
+* masked multi-head attention with grouped-query KV heads;
+* fused log-softmax label gather.
+
+They are also what the AOT'd train-step artifacts use by default
+(``attn_impl="jnp"``): XLA fuses the dense-mask attention well on CPU, while
+the Pallas kernel (interpret mode) exists to express and validate the TPU
+block schedule. pytest sweeps assert kernel == ref on randomized shapes.
+"""
+
+import jax.numpy as jnp
+from jax import nn
+
+
+def spa_mask(seg, pos, prompt_len):
+    """Shared-prompt attention mask.
+
+    Args:
+      seg: [S] int32 segment ids: -1 padding, 0 shared prompt, 1..K responses.
+      pos: [S] int32 rope positions (responses restart at prompt_len - 1,
+        the duplicated-last-prompt-token position).
+      prompt_len: scalar int32, length of the shared prompt (Lp).
+
+    Returns:
+      [S, S] bool; True where query i may attend key j.
+
+    Rules (see DESIGN.md and rust/src/grpo/batch.rs):
+      * prompt token i: attends prompt tokens j <= i (standard causal);
+      * response token i in segment k: attends prompt keys with
+        pos_j < Lp - 1 (the original last prompt token is *excluded*; its
+        role is played by the segment's own duplicated first token), plus
+        its own segment's tokens j <= i;
+      * padding: attends only itself (keeps softmax finite; output unused).
+    """
+    s = seg.shape[0]
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    seg_i = seg[:, None]
+    seg_j = seg[None, :]
+    causal_same = (seg_i == seg_j) & (j <= i) & (seg_i >= 0)
+    prompt_key = (seg_i >= 1) & (seg_j == 0) & (pos[None, :] < prompt_len - 1)
+    pad_self = (seg_i < 0) & (i == j)
+    return causal_same | prompt_key | pad_self
+
+
+def causal_mask(s):
+    """[S, S] standard causal mask."""
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    return j <= i
+
+
+def repeat_kv(x, n_rep):
+    """[B, Hk, S, Dh] -> [B, Hk * n_rep, S, Dh] (GQA key/value sharing)."""
+    if n_rep == 1:
+        return x
+    b, hk, s, dh = x.shape
+    x = jnp.broadcast_to(x[:, :, None], (b, hk, n_rep, s, dh))
+    return x.reshape(b, hk * n_rep, s, dh)
+
+
+def attention_ref(q, k, v, mask):
+    """Masked MHA oracle.
+
+    Args:
+      q: [B, Hq, S, Dh]; k, v: [B, Hk, S, Dh] with Hq % Hk == 0.
+      mask: broadcastable to [B, Hq, S, S] bool.
+
+    Returns: [B, Hq, S, Dh].
+    """
+    n_rep = q.shape[1] // k.shape[1]
+    k = repeat_kv(k, n_rep)
+    v = repeat_kv(v, n_rep)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    scores = jnp.where(mask, scores, jnp.asarray(-1e30, q.dtype))
+    probs = nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def logprob_gather_ref(logits, labels):
+    """Per-position log-probability of the label token.
+
+    Args:
+      logits: [..., V] float; labels: [...] int32.
+    Returns: [...] float = log_softmax(logits)[..., labels].
+    """
+    lse = nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return picked - lse

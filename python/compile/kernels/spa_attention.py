@@ -1,0 +1,202 @@
+"""L1 Pallas kernel: shared-prompt attention (paper §4.3, Fig. 4).
+
+A flash-attention-style blockwise kernel whose mask understands the
+shared-prompt packed layout: one GRPO group packed as
+``[prompt, response_1, ..., response_K]`` with segment ids, where each
+response attends the shared prompt plus its own tokens only. Cross-response
+blocks are *fully masked* and the kernel skips them — this is the TPU-shaped
+expression of the paper's redundancy elimination: the prompt's K/V tiles are
+streamed from HBM into VMEM once per query block instead of K times, and the
+(response_i × response_j, i≠j) tiles never leave HBM at all.
+
+Hardware adaptation (DESIGN.md §3): the paper fuses a custom mask into NPU
+``npu_fusion_attention`` / GPU FlashAttention; on TPU the same insight maps to
+a Pallas BlockSpec schedule — Q/K/V tiles staged through VMEM, the running
+softmax in registers, masks evaluated per tile so masked tiles are skipped
+before their matmuls reach the MXU. The kernel runs under ``interpret=True``
+in this repository (the CPU PJRT plugin cannot execute Mosaic custom-calls);
+the pytest suite asserts exact agreement with :mod:`ref` and the estimated
+VMEM/MXU numbers are tabulated in DESIGN.md §Perf.
+
+The same kernel also serves standard causal attention: with all segment ids 0
+the mask degenerates to causal, which the tests exercise too.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tile_mask(qi, kj, seg_q, seg_k, pos_k, prompt_len):
+    """Mask for a (block_q, block_k) tile.
+
+    qi/kj: [bq]/[bk] global indices; seg_q/seg_k: segment ids; pos_k: rope
+    positions of keys; prompt_len: scalar Lp. Semantics match ref.spa_mask.
+    """
+    i = qi[:, None]
+    j = kj[None, :]
+    seg_i = seg_q[:, None]
+    seg_j = seg_k[None, :]
+    causal_same = (seg_i == seg_j) & (j <= i) & (seg_i >= 0)
+    prompt_key = (seg_i >= 1) & (seg_j == 0) & (pos_k[None, :] < prompt_len - 1)
+    pad_self = (seg_i < 0) & (i == j)
+    return causal_same | prompt_key | pad_self
+
+
+def _spa_kernel(seg_ref, pos_ref, plen_ref, q_ref, k_ref, v_ref, o_ref, *, block_k, scale):
+    """One (batch, head, q-block) program: flash attention over key tiles."""
+    bq, dh = q_ref.shape[2], q_ref.shape[3]
+    s = k_ref.shape[2]
+    n_kblocks = s // block_k
+
+    iq = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)  # [bq, dh]
+    qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq,), 0)
+    seg_all = seg_ref[...]
+    pos_all = pos_ref[...]
+    plen = plen_ref[0]
+    seg_q = jax.lax.dynamic_slice(seg_all, (iq * bq,), (bq,))
+
+    def body(jk, carry):
+        m_prev, l_prev, acc = carry
+        start = jk * block_k
+        kj = start + jax.lax.broadcasted_iota(jnp.int32, (block_k,), 0)
+        seg_k = jax.lax.dynamic_slice(seg_all, (start,), (block_k,))
+        pos_k = jax.lax.dynamic_slice(pos_all, (start,), (block_k,))
+        mask = _tile_mask(qi, kj, seg_q, seg_k, pos_k, plen)
+
+        def live(_):
+            k_blk = k_ref[0, 0, pl.ds(start, block_k), :].astype(jnp.float32)
+            v_blk = v_ref[0, 0, pl.ds(start, block_k), :].astype(jnp.float32)
+            scores = q @ k_blk.T * scale  # [bq, bk]
+            scores = jnp.where(mask, scores, -1e30)
+            m_new = jnp.maximum(m_prev, scores.max(axis=1))
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(scores - m_new[:, None])
+            l_new = l_prev * alpha + p.sum(axis=1)
+            acc_new = acc * alpha[:, None] + p @ v_blk
+            return m_new, l_new, acc_new
+
+        def skip(_):
+            return m_prev, l_prev, acc
+
+        # Tile-level sparsity: fully-masked tiles (e.g. response_i keys for a
+        # response_j query block, or prompt queries vs response keys) skip both
+        # the HBM->VMEM loads and the MXU matmuls.
+        return jax.lax.cond(jnp.any(mask), live, skip, operand=None)
+
+    m0 = jnp.full((bq,), -1e30, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, dh), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_kblocks, body, (m0, l0, acc0))
+    # Every row attends at least itself (pad rows self-attend), so l > 0.
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def spa_attention(q, k, v, seg, pos, prompt_len, *, block_q=32, block_k=32, interpret=True):
+    """Shared-prompt attention.
+
+    Args:
+      q: [B, Hq, S, Dh]; k, v: [B, Hk, S, Dh] (Hq % Hk == 0).
+      seg: [S] int32 (-1 pad / 0 prompt / 1..K responses).
+      pos: [S] int32 rope positions.
+      prompt_len: scalar int32 (Lp).
+      block_q, block_k: tile sizes; S must be divisible by both (clamped to S).
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns: [B, Hq, S, Dh], matching ``ref.attention_ref(q, k, v,
+      ref.spa_mask(seg, pos, prompt_len))``.
+
+    Differentiable: the forward pass is the Pallas kernel; the backward pass
+    is the exact dense-reference VJP (recompute-from-residuals, the standard
+    first deployment shape for flash-style kernels — a dedicated backward
+    kernel is the TODO the paper's npu_fusion_attention also hides).
+    """
+    from . import ref as kref  # local import to keep module load cheap
+
+    seg = seg.astype(jnp.int32)
+    pos = pos.astype(jnp.int32)
+    prompt_len = jnp.asarray(prompt_len, jnp.int32)
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return _spa_forward(q, k, v, seg, pos, prompt_len, block_q, block_k, interpret)
+
+    def attn_fwd(q, k, v):
+        return attn(q, k, v), (q, k, v)
+
+    def attn_bwd(res, g):
+        q, k, v = res
+        mask = kref.spa_mask(seg, pos, prompt_len)[None, None]
+        _, vjp = jax.vjp(lambda a, b, c: kref.attention_ref(a, b, c, mask), q, k, v)
+        return vjp(g)
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn(q, k, v)
+
+
+def _spa_forward(q, k, v, seg, pos, prompt_len, block_q, block_k, interpret):
+    b, hq, s, dh = q.shape
+    hk = k.shape[1]
+    assert hq % hk == 0, "query heads must be a multiple of kv heads"
+    n_rep = hq // hk
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (
+        f"seq len {s} must be divisible by block sizes ({block_q}, {block_k})"
+    )
+    plen = jnp.reshape(prompt_len.astype(jnp.int32), (1,))
+
+    grid = (b, hq, s // block_q)
+    kernel = functools.partial(
+        _spa_kernel, block_k=block_k, scale=1.0 / (dh**0.5)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s,), lambda bi, h, iq: (0,)),
+            pl.BlockSpec((s,), lambda bi, h, iq: (0,)),
+            pl.BlockSpec((1,), lambda bi, h, iq: (0,)),
+            pl.BlockSpec((1, 1, block_q, dh), lambda bi, h, iq: (bi, h, iq, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda bi, h, iq, _n=n_rep: (bi, h // _n, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda bi, h, iq, _n=n_rep: (bi, h // _n, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh), lambda bi, h, iq: (bi, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(seg.astype(jnp.int32), pos.astype(jnp.int32), plen, q, k, v)
+
+
+def causal_attention(q, k, v, *, block_q=32, block_k=32, interpret=True):
+    """Standard causal attention via the same kernel (all segments = 0)."""
+    s = q.shape[2]
+    seg = jnp.zeros((s,), jnp.int32)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    # prompt_len = 0 disables the cross-segment prompt rule entirely.
+    return spa_attention(
+        q, k, v, seg, pos, jnp.asarray(0, jnp.int32),
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+def vmem_estimate_bytes(s, dh, block_q, block_k, dtype_bytes=2):
+    """Estimated VMEM working set per program for the TPU lowering:
+    q tile + k tile + v tile + accumulators (f32). Used by DESIGN.md §Perf."""
+    q_tile = block_q * dh * dtype_bytes
+    kv_tiles = 2 * block_k * dh * dtype_bytes
+    acc = block_q * dh * 4 + 2 * block_q * 4
+    meta = 2 * s * 4  # seg/pos vectors
+    return q_tile + kv_tiles + acc + meta
+
+
+def mxu_tile_utilization(block_q, block_k, dh, mxu=128):
+    """Fraction of MXU systolic-array slots filled by the kernel's two matmuls
+    (q@k^T and p@v) at the given tile shape. 1.0 when tiles are multiples of
+    the 128x128 array."""
+    def frac(n):
+        return n / (((n + mxu - 1) // mxu) * mxu)
+
+    return min(frac(block_q), frac(block_k), frac(dh))

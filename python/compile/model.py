@@ -1,0 +1,650 @@
+"""L2: the Qwen-mini transformer and every compiled computation pa-rl ships.
+
+This module defines, in pure JAX (calling the L1 kernels where configured):
+
+* the transformer forward (RMSNorm, RoPE, GQA attention, SwiGLU) with
+  parameters stacked per-layer and scanned, so artifact size and compile time
+  are independent of depth;
+* the **unified tri-model GRPO train step** (paper Fig. 2): policy, old-policy
+  and reference logits computed inside one compiled program from three
+  parameter sets sharing one layout — with both attention layouts (standard
+  causal and shared-prompt attention);
+* the inference engine's prefill / decode-chunk steps over a slot-paged KV
+  cache, with temperature/top-p/top-k sampling inside the program;
+* AdamW with global-norm gradient clipping, SFT warmup step, parameter init,
+  and a logprob evaluator for cross-checking the engine against the trainer.
+
+Everything here executes exactly once per config at build time
+(``make artifacts``): `aot.py` lowers these functions to HLO text which the
+rust runtime loads and drives. Python never runs on the request path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import nn
+
+from .kernels import ref as kref
+from .kernels.logprob import logprob_gather
+from .kernels.spa_attention import spa_attention
+
+# Token ids shared with rust/src/data/tokenizer.rs.
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+
+# Parameter tree: name -> shape builder. Stacked [L, ...] for per-layer
+# tensors. The order here is the flattening contract with the rust runtime
+# (recorded in manifest.json and asserted by its loader).
+PARAM_NAMES = (
+    "tok_emb",
+    "ln1",
+    "wq",
+    "wk",
+    "wv",
+    "wo",
+    "ln2",
+    "w_gate",
+    "w_up",
+    "w_down",
+    "ln_f",
+    "lm_head",
+)
+
+LAYER_PARAMS = ("ln1", "wq", "wk", "wv", "wo", "ln2", "w_gate", "w_up", "w_down")
+
+# ---------------------------------------------------------------------------
+# Parameters
+
+
+def param_shapes(cfg):
+    """name -> shape, in PARAM_NAMES order."""
+    m = cfg.model
+    dh = m.head_dim
+    shapes = {
+        "tok_emb": (m.vocab_size, m.d_model),
+        "ln1": (m.n_layers, m.d_model),
+        "wq": (m.n_layers, m.d_model, m.n_heads * dh),
+        "wk": (m.n_layers, m.d_model, m.n_kv_heads * dh),
+        "wv": (m.n_layers, m.d_model, m.n_kv_heads * dh),
+        "wo": (m.n_layers, m.n_heads * dh, m.d_model),
+        "ln2": (m.n_layers, m.d_model),
+        "w_gate": (m.n_layers, m.d_model, m.d_ff),
+        "w_up": (m.n_layers, m.d_model, m.d_ff),
+        "w_down": (m.n_layers, m.d_ff, m.d_model),
+        "ln_f": (m.d_model,),
+        "lm_head": (m.d_model, m.vocab_size),
+    }
+    return {name: shapes[name] for name in PARAM_NAMES}
+
+
+def param_count(cfg):
+    return sum(int(jnp.prod(jnp.asarray(s))) for s in param_shapes(cfg).values())
+
+
+def init_params(cfg, seed):
+    """Initialise all parameters from an int32 seed (compiled to init.hlo)."""
+    shapes = param_shapes(cfg)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    scale_out = 0.02 / jnp.sqrt(2.0 * cfg.model.n_layers)
+    for i, name in enumerate(PARAM_NAMES):
+        shape = shapes[name]
+        if name in ("ln1", "ln2", "ln_f"):
+            out.append(jnp.ones(shape, jnp.float32))
+            continue
+        k = jax.random.fold_in(key, i)
+        std = scale_out if name in ("wo", "w_down") else 0.02
+        out.append(jax.random.normal(k, shape, jnp.float32) * std)
+    return tuple(out)
+
+
+def params_dict(flat):
+    """Flat tuple (PARAM_NAMES order) -> dict."""
+    return dict(zip(PARAM_NAMES, flat))
+
+
+# ---------------------------------------------------------------------------
+# Transformer forward
+
+
+def rmsnorm(x, w, eps):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, pos, theta):
+    """Rotary embedding, GPT-NeoX half-split convention.
+
+    x: [..., S, H, Dh]; pos: broadcastable to [..., S].
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(h, wg, wu, wd):
+    return (nn.silu(h @ wg) * (h @ wu)) @ wd
+
+
+def forward(cfg, p, tokens, pos, mask=None, spa_info=None, attn_impl="jnp"):
+    """Transformer forward.
+
+    Args:
+      p: params dict; tokens/pos: [B, S] int32.
+      mask: [B or 1, 1, S, S] bool (jnp attention path).
+      spa_info: (seg [S], pos [S], prompt_len scalar) for the pallas path
+        (requires B == 1; the packed SPA layout).
+      attn_impl: "jnp" (dense-mask oracle, default for AOT) or "pallas".
+    Returns: logits [B, S, V] float32.
+    """
+    m = cfg.model
+    b, s = tokens.shape
+    dh = m.head_dim
+    x = p["tok_emb"][tokens]  # [B, S, D]
+
+    layer_stack = tuple(p[name] for name in LAYER_PARAMS)
+
+    def layer(x, lp):
+        ln1, wq, wk, wv, wo, ln2, wg, wu, wd = lp
+        h = rmsnorm(x, ln1, m.rmsnorm_eps)
+        q = (h @ wq).reshape(b, s, m.n_heads, dh)
+        k = (h @ wk).reshape(b, s, m.n_kv_heads, dh)
+        v = (h @ wv).reshape(b, s, m.n_kv_heads, dh)
+        q = rope(q, pos, m.rope_theta).transpose(0, 2, 1, 3)  # [B, Hq, S, Dh]
+        k = rope(k, pos, m.rope_theta).transpose(0, 2, 1, 3)  # [B, Hk, S, Dh]
+        v = v.transpose(0, 2, 1, 3)
+        if attn_impl == "pallas":
+            assert spa_info is not None, "pallas path needs spa_info"
+            seg1, pos1, plen = spa_info
+            att = spa_attention(q, k, v, seg1, pos1, plen)
+        else:
+            att = kref.attention_ref(q, k, v, mask)
+        att = att.transpose(0, 2, 1, 3).reshape(b, s, m.n_heads * dh)
+        x = x + att @ wo
+        x = x + swiglu(rmsnorm(x, ln2, m.rmsnorm_eps), wg, wu, wd)
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, layer_stack)
+    x = rmsnorm(x, p["ln_f"], m.rmsnorm_eps)
+    return x @ p["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# GRPO tri-model train step
+
+
+def _label_logprobs(logits, labels, impl="jnp"):
+    """[B, S, V], [B, S] -> [B, S] log p(label)."""
+    if impl == "pallas":
+        b, s, v = logits.shape
+        return logprob_gather(logits.reshape(b * s, v), labels.reshape(b * s)).reshape(b, s)
+    return kref.logprob_gather_ref(logits, labels)
+
+
+def grpo_objective(cfg, lp_pol, lp_old, lp_ref, adv, weight, logits_pol):
+    """Per-token clipped-surrogate + k3-KL GRPO loss (paper Eq. 1 terms).
+
+    All inputs [B, S]; weight encodes 1/(n_samples * |o_k|) on response-token
+    label positions and 0 elsewhere (sums to 1 over the micro-batch).
+    Returns (loss, metrics dict of scalars).
+    """
+    t = cfg.train
+    ratio = jnp.exp(lp_pol - lp_old)
+    clipped = jnp.clip(ratio, 1.0 - t.clip_eps_low, 1.0 + t.clip_eps_high)
+    surr = jnp.minimum(ratio * adv, clipped * adv)
+    log_rr = lp_ref - lp_pol
+    kl = jnp.exp(log_rr) - log_rr - 1.0  # k3 estimator, >= 0
+    obj = surr - t.kl_beta * kl
+    loss = -jnp.sum(weight * obj)
+
+    probs = nn.softmax(logits_pol, axis=-1)
+    ent_t = -jnp.sum(probs * jnp.log(probs + 1e-9), axis=-1)
+    is_clipped = (ratio < 1.0 - t.clip_eps_low) | (ratio > 1.0 + t.clip_eps_high)
+    w_sum = jnp.sum(weight) + 1e-9
+    metrics = {
+        "kl": jnp.sum(weight * kl) / w_sum,
+        "clip_frac": jnp.sum(weight * is_clipped.astype(jnp.float32)) / w_sum,
+        "entropy": jnp.sum(weight * ent_t) / w_sum,
+        "ratio_mean": jnp.sum(weight * ratio) / w_sum,
+    }
+    return loss, metrics
+
+
+# Names/order of the scalar metrics appended to train-step outputs.
+TRAIN_METRICS = ("loss", "kl", "clip_frac", "entropy", "ratio_mean")
+
+
+def make_train_step(cfg, spa, attn_impl="jnp", lp_impl="jnp"):
+    """Build the tri-model train step.
+
+    Signature (flat, matching manifest.json):
+      policy params (12), old params (12), ref params (12),
+      tokens [m,S] i32, labels [m,S] i32, pos [m,S] i32, seg [m,S] i32,
+      adv [m,S] f32, weight [m,S] f32, prompt_len () i32
+    Returns: grads (12) + 5 scalar metrics.
+
+    ``spa`` selects the packed shared-prompt layout ([1, pack_len], mask from
+    seg/pos/prompt_len) versus the standard causal layout ([micro_bs,
+    seq_len]). Both read the same input names; the standard layout ignores
+    prompt_len and uses seg only to mask padding.
+    """
+    n = len(PARAM_NAMES)
+
+    def step(*args):
+        pol = params_dict(args[0:n])
+        old = params_dict(args[n : 2 * n])
+        ref_p = params_dict(args[2 * n : 3 * n])
+        tokens, labels, pos, seg, adv, weight, prompt_len = args[3 * n :]
+
+        if spa:
+            seg1 = seg[0]
+            pos1 = pos[0]
+            mask = kref.spa_mask(seg1, pos1, prompt_len)[None, None]
+            spa_info = (seg1, pos1, prompt_len)
+        else:
+            s = tokens.shape[1]
+            # causal + padding keys masked (pad tokens have seg -1)
+            valid = (seg >= 0)[:, None, None, :]  # [m,1,1,S]
+            mask = (kref.causal_mask(s)[None, None] & valid) | jnp.eye(s, dtype=bool)[None, None]
+            spa_info = None
+            # prompt_len is unused in the standard layout; anchor it so the
+            # lowered signature matches the SPA variant (jax would DCE the
+            # parameter otherwise and the rust runtime's arity check breaks).
+            tokens = tokens + 0 * prompt_len
+
+        def loss_fn(pol_params):
+            logits = forward(cfg, pol_params, tokens, pos, mask, spa_info, attn_impl)
+            lp_pol = _label_logprobs(logits, labels, lp_impl)
+            logits_old = forward(cfg, old, tokens, pos, mask, spa_info, attn_impl)
+            logits_ref = forward(cfg, ref_p, tokens, pos, mask, spa_info, attn_impl)
+            lp_old = jax.lax.stop_gradient(_label_logprobs(logits_old, labels, lp_impl))
+            lp_ref = jax.lax.stop_gradient(_label_logprobs(logits_ref, labels, lp_impl))
+            loss, metrics = grpo_objective(cfg, lp_pol, lp_old, lp_ref, adv, weight, logits)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(pol)
+        flat_grads = tuple(grads[name] for name in PARAM_NAMES)
+        return flat_grads + (loss, metrics["kl"], metrics["clip_frac"], metrics["entropy"], metrics["ratio_mean"])
+
+    return step
+
+
+def train_step_example_args(cfg, spa):
+    """ShapeDtypeStructs matching make_train_step's signature."""
+    if spa:
+        rows, s = 1, cfg.train.spa_pack_len
+    else:
+        rows, s = cfg.train.micro_bs, cfg.train.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    shapes = param_shapes(cfg)
+    params = [jax.ShapeDtypeStruct(shapes[name], f32) for name in PARAM_NAMES]
+    batch = [
+        jax.ShapeDtypeStruct((rows, s), i32),  # tokens
+        jax.ShapeDtypeStruct((rows, s), i32),  # labels
+        jax.ShapeDtypeStruct((rows, s), i32),  # pos
+        jax.ShapeDtypeStruct((rows, s), i32),  # seg
+        jax.ShapeDtypeStruct((rows, s), f32),  # adv
+        jax.ShapeDtypeStruct((rows, s), f32),  # weight
+        jax.ShapeDtypeStruct((), i32),  # prompt_len
+    ]
+    return params * 3 + batch
+
+
+# ---------------------------------------------------------------------------
+# SFT warmup step (supervised CE on response tokens)
+
+
+def make_sft_step(cfg, attn_impl="jnp"):
+    n = len(PARAM_NAMES)
+
+    def step(*args):
+        pol = params_dict(args[0:n])
+        tokens, labels, pos, seg, weight = args[n:]
+        s = tokens.shape[1]
+        valid = (seg >= 0)[:, None, None, :]
+        mask = (kref.causal_mask(s)[None, None] & valid) | jnp.eye(s, dtype=bool)[None, None]
+
+        def loss_fn(p):
+            logits = forward(cfg, p, tokens, pos, mask, None, attn_impl)
+            lp = _label_logprobs(logits, labels)
+            return -jnp.sum(weight * lp)
+
+        loss, grads = jax.value_and_grad(loss_fn)(pol)
+        return tuple(grads[name] for name in PARAM_NAMES) + (loss,)
+
+    return step
+
+
+def sft_step_example_args(cfg):
+    rows, s = cfg.train.micro_bs, cfg.train.seq_len
+    shapes = param_shapes(cfg)
+    params = [jax.ShapeDtypeStruct(shapes[name], jnp.float32) for name in PARAM_NAMES]
+    batch = [
+        jax.ShapeDtypeStruct((rows, s), jnp.int32),
+        jax.ShapeDtypeStruct((rows, s), jnp.int32),
+        jax.ShapeDtypeStruct((rows, s), jnp.int32),
+        jax.ShapeDtypeStruct((rows, s), jnp.int32),
+        jax.ShapeDtypeStruct((rows, s), jnp.float32),
+    ]
+    return params + batch
+
+
+# ---------------------------------------------------------------------------
+# Logprob evaluator (tests: engine logprobs == tri-model old logprobs)
+
+
+def make_logprob_eval(cfg, attn_impl="jnp"):
+    n = len(PARAM_NAMES)
+
+    def step(*args):
+        p = params_dict(args[0:n])
+        tokens, labels, pos, seg = args[n:]
+        s = tokens.shape[1]
+        valid = (seg >= 0)[:, None, None, :]
+        mask = (kref.causal_mask(s)[None, None] & valid) | jnp.eye(s, dtype=bool)[None, None]
+        logits = forward(cfg, p, tokens, pos, mask, None, attn_impl)
+        return (_label_logprobs(logits, labels),)
+
+    return step
+
+
+def logprob_eval_example_args(cfg):
+    rows, s = cfg.train.micro_bs, cfg.train.seq_len
+    shapes = param_shapes(cfg)
+    params = [jax.ShapeDtypeStruct(shapes[name], jnp.float32) for name in PARAM_NAMES]
+    batch = [jax.ShapeDtypeStruct((rows, s), jnp.int32) for _ in range(4)]
+    return params + batch
+
+
+# ---------------------------------------------------------------------------
+# Inference engine: prefill + decode chunk over a slot-paged KV cache
+#
+# Cache layout: [L, B, 2, Sc, Hk, Dh] float32 — per layer, per slot, (k, v),
+# cache position, kv head, head dim. One device-resident buffer.
+
+
+def kv_cache_shape(cfg):
+    m, e = cfg.model, cfg.engine
+    return (m.n_layers, e.n_slots, 2, e.cache_len, m.n_kv_heads, m.head_dim)
+
+
+def make_prefill(cfg, attn_impl="jnp"):
+    """Prefill one slot: run the prompt, write its K/V into the cache.
+
+    Signature: params (12), kv [cache], slot () i32, tokens [P] i32,
+    length () i32 -> (kv', last_logits [V]).
+    """
+    m, e = cfg.model, cfg.engine
+    n = len(PARAM_NAMES)
+    dh = m.head_dim
+    p_max = e.prompt_max
+
+    def step(*args):
+        p = params_dict(args[0:n])
+        kv, slot, tokens, length = args[n:]
+        tokens2 = tokens[None]  # [1, P]
+        pos = jnp.arange(p_max, dtype=jnp.int32)[None]
+        i = jnp.arange(p_max)[:, None]
+        j = jnp.arange(p_max)[None, :]
+        mask = ((j <= i) & (j < length) | (i == j))[None, None]
+
+        x = p["tok_emb"][tokens2]
+        layer_stack = tuple(p[name] for name in LAYER_PARAMS)
+        kv_in = jnp.moveaxis(kv, 0, 0)  # [L, B, 2, Sc, Hk, Dh]
+
+        def layer(x, lp_kv):
+            lp, kv_l = lp_kv  # kv_l: [B, 2, Sc, Hk, Dh]
+            ln1, wq, wk, wv, wo, ln2, wg, wu, wd = lp
+            h = rmsnorm(x, ln1, m.rmsnorm_eps)
+            q = (h @ wq).reshape(1, p_max, m.n_heads, dh)
+            k = (h @ wk).reshape(1, p_max, m.n_kv_heads, dh)
+            v = (h @ wv).reshape(1, p_max, m.n_kv_heads, dh)
+            q = rope(q, pos, m.rope_theta).transpose(0, 2, 1, 3)
+            k_r = rope(k, pos, m.rope_theta)  # [1, P, Hk, Dh]
+            att = kref.attention_ref(q, k_r.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), mask)
+            att = att.transpose(0, 2, 1, 3).reshape(1, p_max, m.n_heads * dh)
+            x = x + att @ wo
+            x = x + swiglu(rmsnorm(x, ln2, m.rmsnorm_eps), wg, wu, wd)
+            # Write prompt K/V into this slot's cache rows [0, P).
+            kv_pair = jnp.stack([k_r[0], v[0]], axis=0)  # [2, P, Hk, Dh]
+            kv_l = jax.lax.dynamic_update_slice(kv_l, kv_pair[None], (slot, 0, 0, 0, 0))
+            return x, kv_l
+
+        x, kv_out = jax.lax.scan(layer, x, (layer_stack, kv_in))
+        x = rmsnorm(x, p["ln_f"], m.rmsnorm_eps)
+        last = jax.lax.dynamic_slice(x, (0, length - 1, 0), (1, 1, m.d_model))[0, 0]
+        logits = last @ p["lm_head"]
+        return kv_out, logits
+
+    return step
+
+
+def prefill_example_args(cfg):
+    shapes = param_shapes(cfg)
+    params = [jax.ShapeDtypeStruct(shapes[name], jnp.float32) for name in PARAM_NAMES]
+    return params + [
+        jax.ShapeDtypeStruct(kv_cache_shape(cfg), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.engine.prompt_max,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ]
+
+
+def sample_token(logits, key, temperature, top_p, top_k):
+    """Temperature / top-p / top-k sampling (greedy when temperature ~ 0).
+
+    logits: [B, V]; returns (tokens [B] i32, logprob [B] under the sampling
+    distribution).
+    """
+    v = logits.shape[-1]
+    scaled = logits / jnp.maximum(temperature, 1e-6)
+    # top-k (static config; 0 disables)
+    if top_k and top_k > 0 and top_k < v:
+        kth = jnp.sort(scaled, axis=-1)[:, v - top_k][:, None]
+        scaled = jnp.where(scaled >= kth, scaled, -1e30)
+    # top-p nucleus
+    sort_idx = jnp.argsort(-scaled, axis=-1)
+    sorted_logits = jnp.take_along_axis(scaled, sort_idx, axis=-1)
+    probs = nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1) - probs
+    keep_sorted = cum < top_p  # always keeps the top token
+    keep = jnp.zeros_like(keep_sorted).at[
+        jnp.arange(logits.shape[0])[:, None], sort_idx
+    ].set(keep_sorted)
+    masked = jnp.where(keep, scaled, -1e30)
+    sampled = jax.random.categorical(key, masked, axis=-1)
+    greedy = jnp.argmax(logits, axis=-1)
+    tok = jnp.where(temperature > 1e-6, sampled, greedy).astype(jnp.int32)
+    lp = kref.logprob_gather_ref(masked, tok)
+    return tok, lp
+
+
+def make_decode(cfg):
+    """Decode a chunk of C tokens for all slots.
+
+    Signature: params (12), kv [cache], tokens [B] i32 (each slot's current
+    last token), pos [B] i32 (cache index where that token's K/V goes),
+    active [B] i32, seed () i32, temperature () f32, top_p () f32
+      -> (kv', out_tokens [B, C] i32, out_logprobs [B, C] f32,
+          new_pos [B] i32, new_active [B] i32).
+
+    Per step: write the current token's K/V at pos, attend j <= pos, sample
+    the next token. A slot that samples EOS (or hits cache capacity) goes
+    inactive within the chunk: it emits PAD, stops advancing and stops
+    writing K/V. The rust engine retires it and admits a new sequence.
+    """
+    m, e = cfg.model, cfg.engine
+    n = len(PARAM_NAMES)
+    dh = m.head_dim
+    b = e.n_slots
+    sc = e.cache_len
+    c = e.decode_chunk
+    n_rep = m.n_heads // m.n_kv_heads
+
+    def step(*args):
+        p = params_dict(args[0:n])
+        kv0, tok0, pos0, active0, seed, temperature, top_p = args[n:]
+        key = jax.random.PRNGKey(seed)
+        layer_stack = tuple(p[name] for name in LAYER_PARAMS)
+
+        def one_step(carry, step_i):
+            kv, tok, pos, active = carry
+            x = p["tok_emb"][tok]  # [B, D]
+
+            def layer(x, lp_kv):
+                lp, kv_l = lp_kv  # kv_l: [B, 2, Sc, Hk, Dh]
+                ln1, wq, wk, wv, wo, ln2, wg, wu, wd = lp
+                h = rmsnorm(x, ln1, m.rmsnorm_eps)
+                q = (h @ wq).reshape(b, m.n_heads, dh)
+                k_new = (h @ wk).reshape(b, m.n_kv_heads, dh)
+                v_new = (h @ wv).reshape(b, m.n_kv_heads, dh)
+                # rope at per-slot position
+                q = rope(q[:, None], pos[:, None], m.rope_theta)[:, 0]
+                k_new = rope(k_new[:, None], pos[:, None], m.rope_theta)[:, 0]
+
+                def upd(cache_s, kn, vn, pp, act):
+                    # cache_s: [2, Sc, Hk, Dh]
+                    pair = jnp.stack([kn, vn], 0)[:, None]  # [2,1,Hk,Dh]
+                    new = jax.lax.dynamic_update_slice(cache_s, pair, (0, pp, 0, 0))
+                    return jnp.where(act > 0, new, cache_s)
+
+                kv_l = jax.vmap(upd)(kv_l, k_new, v_new, pos, active)
+                k_all = kv_l[:, 0]  # [B, Sc, Hk, Dh]
+                v_all = kv_l[:, 1]
+                # GQA expand and attend j <= pos
+                k_all = jnp.repeat(k_all, n_rep, axis=2)  # [B, Sc, Hq, Dh]
+                v_all = jnp.repeat(v_all, n_rep, axis=2)
+                scores = jnp.einsum("bhd,bshd->bhs", q, k_all) / jnp.sqrt(float(dh))
+                jmask = jnp.arange(sc)[None, None, :] <= pos[:, None, None]
+                scores = jnp.where(jmask, scores, -1e30)
+                att = jnp.einsum("bhs,bshd->bhd", nn.softmax(scores, axis=-1), v_all)
+                x = x + att.reshape(b, m.n_heads * dh) @ wo
+                x = x + swiglu(rmsnorm(x, ln2, m.rmsnorm_eps), wg, wu, wd)
+                return x, kv_l
+
+            x, kv = jax.lax.scan(layer, x, (layer_stack, kv))
+            x = rmsnorm(x, p["ln_f"], m.rmsnorm_eps)
+            logits = x @ p["lm_head"]  # [B, V]
+            k_step = jax.random.fold_in(key, step_i)
+            nxt, lp = sample_token(logits, k_step, temperature, top_p, e.top_k)
+            is_active = active > 0
+            tok_out = jnp.where(is_active, nxt, PAD_ID).astype(jnp.int32)
+            lp_out = jnp.where(is_active, lp, 0.0)
+            new_pos = pos + is_active.astype(jnp.int32)
+            hit_eos = tok_out == EOS_ID
+            full = new_pos >= sc
+            new_active = (is_active & ~hit_eos & ~full).astype(jnp.int32)
+            return (kv, tok_out, new_pos, new_active), (tok_out, lp_out)
+
+        (kv, _, pos_f, act_f), (toks, lps) = jax.lax.scan(
+            one_step, (kv0, tok0, pos0, active0), jnp.arange(c)
+        )
+        return kv, toks.T, lps.T, pos_f, act_f  # [B, C]
+
+    return step
+
+
+def decode_example_args(cfg):
+    shapes = param_shapes(cfg)
+    b = cfg.engine.n_slots
+    params = [jax.ShapeDtypeStruct(shapes[name], jnp.float32) for name in PARAM_NAMES]
+    return params + [
+        jax.ShapeDtypeStruct(kv_cache_shape(cfg), jnp.float32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# AdamW with global-norm clipping
+
+
+def make_adam(cfg):
+    """AdamW step (paper Table 7: Adam, wd 0.01, grad-norm clip 1.0).
+
+    Signature: params (12), grads (12), m (12), v (12), step () i32
+      -> params' (12) + m' (12) + v' (12) + (grad_norm,).
+    Weight decay is decoupled and skipped for the RMSNorm gains.
+    """
+    t = cfg.train
+    n = len(PARAM_NAMES)
+    no_decay = {"ln1", "ln2", "ln_f"}
+
+    def step(*args):
+        params = args[0:n]
+        grads = args[n : 2 * n]
+        ms = args[2 * n : 3 * n]
+        vs = args[3 * n : 4 * n]
+        step_i = args[4 * n]
+
+        gsq = sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads)
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, t.grad_clip / (gnorm + 1e-12))
+
+        tf = step_i.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - t.beta1**tf
+        bc2 = 1.0 - t.beta2**tf
+
+        new_p, new_m, new_v = [], [], []
+        for name, p, g, m_, v_ in zip(PARAM_NAMES, params, grads, ms, vs):
+            g = g * scale
+            m2 = t.beta1 * m_ + (1.0 - t.beta1) * g
+            v2 = t.beta2 * v_ + (1.0 - t.beta2) * (g * g)
+            mhat = m2 / bc1
+            vhat = v2 / bc2
+            upd = mhat / (jnp.sqrt(vhat) + t.adam_eps)
+            if name not in no_decay:
+                upd = upd + t.weight_decay * p
+            new_p.append(p - t.lr * upd)
+            new_m.append(m2)
+            new_v.append(v2)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (gnorm,)
+
+    return step
+
+
+def adam_example_args(cfg):
+    shapes = param_shapes(cfg)
+    ts = [jax.ShapeDtypeStruct(shapes[name], jnp.float32) for name in PARAM_NAMES]
+    return ts * 4 + [jax.ShapeDtypeStruct((), jnp.int32)]
+
+
+# ---------------------------------------------------------------------------
+# Reference (pure-jax) GRPO loss for pytest oracles
+
+
+def reference_grpo_loss(cfg, params, batch, attn_impl="jnp"):
+    """Direct (non-AOT) tri-model loss used by tests; params is a dict of
+    (policy, old, ref) param dicts; batch a dict of arrays."""
+    step = make_train_step(cfg, spa=batch.get("spa", False), attn_impl=attn_impl)
+    flat = (
+        tuple(params["policy"][nm] for nm in PARAM_NAMES)
+        + tuple(params["old"][nm] for nm in PARAM_NAMES)
+        + tuple(params["ref"][nm] for nm in PARAM_NAMES)
+        + (
+            batch["tokens"],
+            batch["labels"],
+            batch["pos"],
+            batch["seg"],
+            batch["adv"],
+            batch["weight"],
+            batch["prompt_len"],
+        )
+    )
+    out = step(*flat)
+    n = len(PARAM_NAMES)
+    grads = dict(zip(PARAM_NAMES, out[0:n]))
+    metrics = dict(zip(TRAIN_METRICS, out[n:]))
+    return grads, metrics

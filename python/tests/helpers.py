@@ -1,0 +1,82 @@
+"""Shared test helpers: a python mirror of the rust micro-batch builders
+(rust/src/grpo/batch.rs). Keeping the packing contract duplicated here is
+deliberate — the tests pin the layout both sides must agree on."""
+
+import numpy as np
+
+PAD_ID = 0
+
+
+def build_standard(samples, rows, seq):
+    """samples: list of (prompt list[int], response list[int], adv float)."""
+    m = max(len(samples), 1)
+    n = rows * seq
+    b = {
+        "tokens": np.full((rows, seq), PAD_ID, np.int32),
+        "labels": np.full((rows, seq), PAD_ID, np.int32),
+        "pos": np.zeros((rows, seq), np.int32),
+        "seg": np.full((rows, seq), -1, np.int32),
+        "adv": np.zeros((rows, seq), np.float32),
+        "weight": np.zeros((rows, seq), np.float32),
+        "prompt_len": np.int32(0),
+    }
+    for row, (prompt, response, adv) in enumerate(samples):
+        lp, lr = len(prompt), len(response)
+        total = lp + lr
+        assert total <= seq
+        b["tokens"][row, :total] = prompt + response
+        b["pos"][row, :total] = np.arange(total)
+        b["seg"][row, :total] = 0
+        b["labels"][row, : total - 1] = b["tokens"][row, 1:total]
+        if lr > 0 and lp > 0:
+            w = 1.0 / (m * lr)
+            b["weight"][row, lp - 1 : lp + lr - 1] = w
+            b["adv"][row, lp - 1 : lp + lr - 1] = adv
+    return b
+
+
+def build_spa(samples, pack_len):
+    """One group, shared prompt; mirrors rust build_spa exactly."""
+    prompt = samples[0][0]
+    lp = len(prompt)
+    k = len(samples)
+    b = {
+        "tokens": np.full((1, pack_len), PAD_ID, np.int32),
+        "labels": np.full((1, pack_len), PAD_ID, np.int32),
+        "pos": np.zeros((1, pack_len), np.int32),
+        "seg": np.full((1, pack_len), -1, np.int32),
+        "adv": np.zeros((1, pack_len), np.float32),
+        "weight": np.zeros((1, pack_len), np.float32),
+        "prompt_len": np.int32(lp),
+    }
+    b["tokens"][0, :lp] = prompt
+    b["pos"][0, :lp] = np.arange(lp)
+    b["seg"][0, :lp] = 0
+    cursor = lp
+    for s_idx, (p, response, adv) in enumerate(samples):
+        assert p == prompt
+        lr = len(response)
+        if lr == 0:
+            continue
+        w = 1.0 / (k * lr)
+        for i in range(lr):
+            idx = cursor + i
+            b["tokens"][0, idx] = prompt[-1] if i == 0 else response[i - 1]
+            b["pos"][0, idx] = lp - 1 + i
+            b["seg"][0, idx] = s_idx + 1
+            b["labels"][0, idx] = response[i]
+            b["weight"][0, idx] = w
+            b["adv"][0, idx] = adv
+        cursor += lr
+    assert cursor <= pack_len
+    return b
+
+
+def random_group(rng, vocab, lp, k, lr_max):
+    """A random (prompt, responses, advs) group avoiding special ids 0..2."""
+    prompt = [int(x) for x in rng.integers(3, vocab, lp)]
+    responses = [
+        [int(x) for x in rng.integers(3, vocab, rng.integers(1, lr_max + 1))] for _ in range(k)
+    ]
+    advs = [float(a) for a in rng.normal(size=k)]
+    return prompt, responses, advs

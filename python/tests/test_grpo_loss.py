@@ -1,0 +1,90 @@
+"""GRPO objective vs a hand-written numpy oracle, plus analytic edge cases."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.config import tiny_test_config
+
+CFG = tiny_test_config()
+
+
+def numpy_grpo(lp_pol, lp_old, lp_ref, adv, weight, beta, el, eh):
+    ratio = np.exp(lp_pol - lp_old)
+    clipped = np.clip(ratio, 1 - el, 1 + eh)
+    surr = np.minimum(ratio * adv, clipped * adv)
+    lrr = lp_ref - lp_pol
+    kl = np.exp(lrr) - lrr - 1
+    return -np.sum(weight * (surr - beta * kl))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([0.1, 1.0, 3.0]))
+def test_matches_numpy(seed, scale):
+    rng = np.random.default_rng(seed)
+    shape = (2, 6)
+    lp_pol = rng.normal(-2, scale, shape).astype(np.float32)
+    lp_old = lp_pol + rng.normal(0, 0.3, shape).astype(np.float32)
+    lp_ref = lp_pol + rng.normal(0, 0.3, shape).astype(np.float32)
+    adv = rng.normal(0, 1, shape).astype(np.float32)
+    weight = rng.uniform(0, 1, shape).astype(np.float32)
+    weight /= weight.sum()
+
+    t = CFG.train
+    want = numpy_grpo(lp_pol, lp_old, lp_ref, adv, weight, t.kl_beta, t.clip_eps_low, t.clip_eps_high)
+
+    logits_dummy = jnp.zeros(shape + (4,), jnp.float32)
+    loss, metrics = model.grpo_objective(
+        CFG,
+        jnp.asarray(lp_pol), jnp.asarray(lp_old), jnp.asarray(lp_ref),
+        jnp.asarray(adv), jnp.asarray(weight), logits_dummy,
+    )
+    assert float(loss) == pytest.approx(float(want), rel=1e-4, abs=1e-6)
+    # kl metric is the weighted k3 estimator
+    lrr = lp_ref - lp_pol
+    kl = np.exp(lrr) - lrr - 1
+    assert float(metrics["kl"]) == pytest.approx(float(np.sum(weight * kl)), rel=1e-4, abs=1e-6)
+
+
+def test_identical_policies_loss_is_zero_advantage_term():
+    """lp_pol == lp_old == lp_ref -> ratio 1, kl 0 -> loss = -sum(w * adv)."""
+    shape = (1, 5)
+    lp = np.full(shape, -1.3, np.float32)
+    adv = np.asarray([[1.0, -1.0, 0.5, 0.0, 2.0]], np.float32)
+    w = np.full(shape, 0.2, np.float32)
+    loss, metrics = model.grpo_objective(
+        CFG, jnp.asarray(lp), jnp.asarray(lp), jnp.asarray(lp),
+        jnp.asarray(adv), jnp.asarray(w), jnp.zeros(shape + (3,)),
+    )
+    assert float(loss) == pytest.approx(-float(np.sum(w * adv)), rel=1e-5)
+    assert float(metrics["kl"]) == pytest.approx(0.0, abs=1e-7)
+    assert float(metrics["clip_frac"]) == 0.0
+    assert float(metrics["ratio_mean"]) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_clipping_engages_for_large_ratios():
+    shape = (1, 2)
+    lp_pol = np.asarray([[0.0, 0.0]], np.float32)
+    lp_old = np.asarray([[-2.0, 2.0]], np.float32)  # ratios e^2, e^-2
+    adv = np.ones(shape, np.float32)
+    w = np.full(shape, 0.5, np.float32)
+    _, metrics = model.grpo_objective(
+        CFG, jnp.asarray(lp_pol), jnp.asarray(lp_old), jnp.asarray(lp_pol),
+        jnp.asarray(adv), jnp.asarray(w), jnp.zeros(shape + (3,)),
+    )
+    assert float(metrics["clip_frac"]) == pytest.approx(1.0)
+
+
+def test_kl_k3_nonnegative():
+    rng = np.random.default_rng(0)
+    shape = (4, 8)
+    lp_pol = rng.normal(-2, 1, shape).astype(np.float32)
+    lp_ref = rng.normal(-2, 1, shape).astype(np.float32)
+    w = np.full(shape, 1.0 / 32, np.float32)
+    _, metrics = model.grpo_objective(
+        CFG, jnp.asarray(lp_pol), jnp.asarray(lp_pol), jnp.asarray(lp_ref),
+        jnp.zeros(shape, jnp.float32), jnp.asarray(w), jnp.zeros(shape + (3,)),
+    )
+    assert float(metrics["kl"]) >= 0.0

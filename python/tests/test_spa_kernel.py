@@ -1,0 +1,163 @@
+"""L1 correctness: the Pallas SPA attention kernel vs the pure-jnp oracle.
+
+The CORE kernel signal: hypothesis sweeps shapes/dtypes/segment layouts and
+asserts allclose against ref.attention_ref(ref.spa_mask(...)).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.spa_attention import (
+    causal_attention,
+    mxu_tile_utilization,
+    spa_attention,
+    vmem_estimate_bytes,
+)
+
+
+def make_spa_layout(rng, s, lp, seg_lens):
+    """Build seg/pos arrays for a packed layout: prompt of lp, segments of
+    seg_lens (each starting at rope position lp-1), padding to s."""
+    seg = np.full((s,), -1, np.int32)
+    pos = np.zeros((s,), np.int32)
+    seg[:lp] = 0
+    pos[:lp] = np.arange(lp)
+    cursor = lp
+    for k, ln in enumerate(seg_lens, start=1):
+        seg[cursor : cursor + ln] = k
+        pos[cursor : cursor + ln] = lp - 1 + np.arange(ln)
+        cursor += ln
+    assert cursor <= s
+    return jnp.asarray(seg), jnp.asarray(pos)
+
+
+def rand_qkv(key, b, hq, hk, s, dh, dtype=jnp.float32):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, s, dh), dtype)
+    k = jax.random.normal(kk, (b, hk, s, dh), dtype)
+    v = jax.random.normal(kv, (b, hk, s, dh), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,hq,hk,s,dh", [(1, 2, 1, 32, 8), (2, 4, 2, 64, 16), (1, 4, 4, 32, 4)])
+def test_kernel_matches_ref_fixed_shapes(b, hq, hk, s, dh):
+    key = jax.random.PRNGKey(0)
+    q, k, v = rand_qkv(key, b, hq, hk, s, dh)
+    lp = s // 4
+    seg, pos = make_spa_layout(None, s, lp, [s // 4, s // 4])
+    plen = jnp.asarray(lp, jnp.int32)
+    out = spa_attention(q, k, v, seg, pos, plen, block_q=16, block_k=16)
+    mask = ref.spa_mask(seg, pos, plen)[None, None]
+    expect = ref.attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    hk=st.sampled_from([1, 2]),
+    rep=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([4, 8, 16]),
+    nblocks=st.integers(2, 4),
+    block=st.sampled_from([8, 16]),
+)
+def test_kernel_matches_ref_hypothesis(seed, hk, rep, dh, nblocks, block):
+    s = nblocks * block
+    rng = np.random.default_rng(seed)
+    lp = int(rng.integers(2, max(3, s // 2)))
+    # random segment lengths that fit
+    seg_lens = []
+    room = s - lp
+    while room > 0 and len(seg_lens) < 4 and rng.random() < 0.8:
+        ln = int(rng.integers(1, room + 1))
+        seg_lens.append(ln)
+        room -= ln
+    key = jax.random.PRNGKey(seed)
+    q, k, v = rand_qkv(key, 1, hk * rep, hk, s, dh)
+    seg, pos = make_spa_layout(rng, s, lp, seg_lens)
+    plen = jnp.asarray(lp, jnp.int32)
+    out = spa_attention(q, k, v, seg, pos, plen, block_q=block, block_k=block)
+    mask = ref.spa_mask(seg, pos, plen)[None, None]
+    expect = ref.attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=3e-5, atol=3e-5)
+
+
+def test_causal_wrapper_matches_causal_ref():
+    key = jax.random.PRNGKey(7)
+    q, k, v = rand_qkv(key, 2, 4, 2, 32, 8)
+    out = causal_attention(q, k, v, block_q=16, block_k=16)
+    mask = ref.causal_mask(32)[None, None]
+    expect = ref.attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+def test_no_cross_response_leakage():
+    """Perturbing response 2's tokens must not change response 1's outputs."""
+    key = jax.random.PRNGKey(3)
+    s, lp = 32, 8
+    seg, pos = make_spa_layout(None, s, lp, [8, 8])
+    plen = jnp.asarray(lp, jnp.int32)
+    q, k, v = rand_qkv(key, 1, 2, 1, s, 8)
+    out1 = spa_attention(q, k, v, seg, pos, plen, block_q=8, block_k=8)
+    # perturb k/v/q rows of segment 2 (indices 16..24)
+    noise = jax.random.normal(jax.random.PRNGKey(9), (1, 1, 8, 8)) * 10
+    k2 = k.at[:, :, 16:24].add(noise)
+    v2 = v.at[:, :, 16:24].add(noise)
+    out2 = spa_attention(q, k2, v2, seg, pos, plen, block_q=8, block_k=8)
+    # segment 1 (rows 8..16) and prompt rows unchanged
+    np.testing.assert_allclose(
+        np.asarray(out1[:, :, :16]), np.asarray(out2[:, :, :16]), rtol=1e-6, atol=1e-6
+    )
+    # segment 2 rows do change
+    assert not np.allclose(np.asarray(out1[:, :, 16:24]), np.asarray(out2[:, :, 16:24]))
+
+
+def test_original_last_prompt_token_key_excluded_for_responses():
+    """Responses must attend the duplicated prompt-last token (inside their own
+    segment), not the original at index lp-1 — perturbing the original's K/V
+    must leave response outputs unchanged."""
+    key = jax.random.PRNGKey(4)
+    s, lp = 32, 8
+    seg, pos = make_spa_layout(None, s, lp, [8, 8])
+    plen = jnp.asarray(lp, jnp.int32)
+    q, k, v = rand_qkv(key, 1, 2, 1, s, 8)
+    out1 = spa_attention(q, k, v, seg, pos, plen, block_q=8, block_k=8)
+    k2 = k.at[:, :, lp - 1].add(5.0)
+    v2 = v.at[:, :, lp - 1].add(5.0)
+    out2 = spa_attention(q, k2, v2, seg, pos, plen, block_q=8, block_k=8)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, :, lp:]), np.asarray(out2[:, :, lp:]), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_mask_reference_properties():
+    """Sanity of the mask itself (unit-level, no kernel)."""
+    s, lp = 16, 6
+    seg, pos = make_spa_layout(None, s, lp, [4, 3])
+    m = np.asarray(ref.spa_mask(seg, pos, jnp.asarray(lp, jnp.int32)))
+    # prompt is standard causal
+    for i in range(lp):
+        for j in range(s):
+            assert m[i, j] == (j <= i and seg[j] == 0)
+    # response tokens never attend other responses
+    assert not m[lp + 1, lp + 4]  # seg1 q, seg2 key region
+    assert not m[lp + 4, lp]  # seg2 q, seg1 key
+    # response tokens attend prompt keys with pos < lp-1 only
+    assert m[lp, 0] and m[lp, lp - 2]
+    assert not m[lp, lp - 1]
+    # padding attends itself only
+    pad_row = lp + 7
+    assert seg[pad_row] == -1
+    assert m[pad_row, pad_row]
+    assert m[pad_row].sum() == 1
+
+
+def test_vmem_and_mxu_estimators():
+    vb = vmem_estimate_bytes(s=2048, dh=128, block_q=128, block_k=128)
+    assert vb < 16 * 1024 * 1024, "VMEM estimate must fit a TPU core's ~16MB"
+    assert mxu_tile_utilization(128, 128, 128) == 1.0
+    assert mxu_tile_utilization(64, 128, 128) == 0.5

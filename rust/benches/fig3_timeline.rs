@@ -1,0 +1,76 @@
+//! Paper Figure 3 — wall-clock execution timelines, synchronous vs
+//! periodically asynchronous.
+//!
+//! Two reproductions:
+//! 1. simulator-traced at paper scale (always runs);
+//! 2. the real mini-cluster (when `artifacts/tiny` exists): one iteration in
+//!    each mode, rendering the actual thread spans.
+//!
+//! Emits machine-readable traces to `target/bench-out/fig3_*.json`.
+
+use pa_rl::config::Config;
+use pa_rl::coordinator::{Driver, DriverOpts, Mode};
+use pa_rl::metrics::Trace;
+use pa_rl::sim::{ClusterSpec, EfficiencySpec, Framework, ModelSpec, SimSetup, WorkloadSpec};
+use std::path::Path;
+
+fn sim_setup(framework: Framework) -> SimSetup {
+    SimSetup {
+        cluster: ClusterSpec::npu(16),
+        model: ModelSpec::qwen(8.0),
+        workload: WorkloadSpec::deepscaler(8, 16384),
+        eff: EfficiencySpec::ours(),
+        framework,
+        infer_fraction: 0.75,
+        infer_tp: 2,
+        spa: false,
+        train_micro_bs: 1,
+        micro_launch_s: 0.5,
+        iters: 1,
+        seed: 3,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    std::fs::create_dir_all("target/bench-out")?;
+
+    println!("== Fig. 3 (simulated, paper scale: 8B / 16 NPUs / one iteration) ==\n");
+    for (name, fw) in [("synchronous", Framework::DecoupledSync), ("async", Framework::PeriodicAsync)] {
+        let trace = Trace::new();
+        let result = sim_setup(fw).run_traced(Some(&trace));
+        println!(
+            "[{name}] iteration wall {:.0}s  (T_inf {:.0}s, T_train {:.0}s, consumer idle {:.0}s)",
+            result.wall_seconds, result.t_infer_mean, result.t_train_mean, result.consumer_idle_mean
+        );
+        println!("{}", trace.render_ascii(100));
+        std::fs::write(
+            format!("target/bench-out/fig3_sim_{name}.json"),
+            trace.to_json().to_pretty(),
+        )?;
+    }
+
+    let tiny = Path::new("artifacts/tiny");
+    if tiny.join("manifest.json").exists() {
+        println!("== Fig. 3 (real mini-cluster, artifacts/tiny) ==\n");
+        let cfg = Config::load(Path::new("configs/tiny.json"))?;
+        for (name, mode) in [("synchronous", Mode::Sync), ("async", Mode::Async)] {
+            let opts = DriverOpts { mode, spa: false, seed: 5 };
+            let mut driver = Driver::new(cfg.clone(), tiny, opts)?;
+            let report = driver.run(2)?;
+            println!(
+                "[{name}] wall {:.2}s, consumer wait {:.2}s",
+                report.wall_seconds,
+                report.iters.iter().map(|i| i.consumer_wait_seconds).sum::<f64>()
+            );
+            println!("{}", report.trace.render_ascii(100));
+            std::fs::write(
+                format!("target/bench-out/fig3_real_{name}.json"),
+                report.trace.to_json().to_pretty(),
+            )?;
+        }
+    } else {
+        println!("(skipping real-cluster trace: run `make artifacts` first)");
+    }
+    println!("traces written to target/bench-out/fig3_*.json");
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! L3 hot-path microbenchmarks: the coordinator-side code that runs per
+//! rollout / per micro-step. None of these may rival the PJRT compute —
+//! EXPERIMENTS.md §Perf tracks the before/after of the optimisation pass.
+
+use pa_rl::data::{DataLoader, TaskGen, Tokenizer};
+use pa_rl::engine::{sample, SamplerCfg};
+use pa_rl::grpo::{build_spa, build_standard, group_advantages, reward, Sample};
+use pa_rl::metrics::Trace;
+use pa_rl::util::bench::{bench, Table};
+use pa_rl::util::json::Json;
+use pa_rl::util::rng::Pcg64;
+
+fn main() {
+    let mut t = Table::new(
+        "L3 microbenchmarks (per-op cost on the request path)",
+        &["Operation", "mean", "p95", "per-unit"],
+    );
+    let mut add = |name: &str, stats: pa_rl::util::bench::Stats, unit: String| {
+        t.row(&[
+            name.to_string(),
+            format!("{:.1} us", stats.mean.as_secs_f64() * 1e6),
+            format!("{:.1} us", stats.p95.as_secs_f64() * 1e6),
+            unit,
+        ]);
+    };
+
+    // SPA packing: one G=32 group, realistic lengths
+    let mut rng = Pcg64::seeded(1);
+    let prompt: Vec<u32> = (0..64).map(|_| 3 + rng.next_u64() as u32 % 20).collect();
+    let responses: Vec<Vec<u32>> =
+        (0..32).map(|_| (0..rng.range(4, 16)).map(|_| 5u32).collect()).collect();
+    let samples: Vec<Sample> =
+        responses.iter().map(|r| Sample { prompt: &prompt, response: r, advantage: 0.5 }).collect();
+    let tokens: usize = 64 + responses.iter().map(|r| r.len()).sum::<usize>();
+    let s = bench("spa_pack", 50, 500, || {
+        std::hint::black_box(build_spa(&samples, 640).unwrap());
+    });
+    add("SPA pack (G=32 group)", s.clone(), format!("{:.0} ns/token", s.mean_secs() * 1e9 / tokens as f64));
+
+    let s = bench("std_pack", 50, 500, || {
+        std::hint::black_box(build_standard(&samples[..8], 8, 96));
+    });
+    add("standard pack (8 rows)", s, String::new());
+
+    // advantages
+    let rewards: Vec<f32> = (0..32).map(|i| (i % 2) as f32).collect();
+    let s = bench("advantages", 100, 2000, || {
+        std::hint::black_box(group_advantages(&rewards));
+    });
+    add("group advantages (G=32)", s, String::new());
+
+    // reward scoring
+    let tok = Tokenizer::new();
+    let resp = tok.encode("1234").unwrap();
+    let s = bench("reward", 100, 2000, || {
+        std::hint::black_box(reward::score(&tok, &resp, 1234));
+    });
+    add("reward score", s, String::new());
+
+    // sampler over a 32k-vocab logits row (production-scale vocab)
+    let logits: Vec<f32> = (0..32_000).map(|i| ((i * 2654435761u64 as usize) % 1000) as f32 / 100.0).collect();
+    let cfg = SamplerCfg { temperature: 1.0, top_p: 0.95, top_k: 20 };
+    let mut srng = Pcg64::seeded(2);
+    let s = bench("sampler32k", 20, 200, || {
+        std::hint::black_box(sample(&logits, &cfg, &mut srng));
+    });
+    add("host sampler (V=32k, top-p+top-k)", s, String::new());
+
+    // prompt generation
+    let gen = TaskGen::new(pa_rl::config::DataConfig { few_shot: 2, max_operand: 99, seed: 0 });
+    let mut i = 0u64;
+    let s = bench("taskgen", 100, 2000, || {
+        i += 1;
+        std::hint::black_box(gen.prompt(i));
+    });
+    add("prompt generation (few-shot 2)", s, String::new());
+
+    // dataloader batch
+    let mut dl = DataLoader::new(pa_rl::config::DataConfig { few_shot: 1, max_operand: 99, seed: 0 });
+    let s = bench("loader", 20, 200, || {
+        std::hint::black_box(dl.next_batch(32));
+    });
+    add("dataloader batch (N=32)", s, String::new());
+
+    // trace recording (multi-thread contention is the concern)
+    let trace = Trace::new();
+    let s = bench("trace", 100, 5000, || {
+        trace.record("lane", "x", 0.0);
+    });
+    add("trace span record", s, String::new());
+
+    // queue send/recv roundtrip
+    let (tx, rx) = std::sync::mpsc::sync_channel::<u64>(1024);
+    let s = bench("queue", 100, 5000, || {
+        tx.send(1).unwrap();
+        std::hint::black_box(rx.recv().unwrap());
+    });
+    add("bounded queue send+recv", s, String::new());
+
+    // json parse of a manifest-sized document
+    let doc = {
+        let mut arr = Vec::new();
+        for i in 0..200 {
+            arr.push(Json::obj(vec![
+                ("name", Json::str(&format!("t{i}"))),
+                ("shape", Json::arr((0..3).map(|d| Json::num((d * i) as f64)))),
+            ]));
+        }
+        Json::obj(vec![("params", Json::Arr(arr))]).to_string()
+    };
+    let s = bench("json", 20, 500, || {
+        std::hint::black_box(Json::parse(&doc).unwrap());
+    });
+    add(&format!("json parse ({} B)", doc.len()), s, String::new());
+
+    // one simulator iteration (bench-harness cost)
+    let sim = pa_rl::sim::SimSetup {
+        cluster: pa_rl::sim::ClusterSpec::npu(16),
+        model: pa_rl::sim::ModelSpec::qwen(8.0),
+        workload: pa_rl::sim::WorkloadSpec::deepscaler(32, 16384),
+        eff: pa_rl::sim::EfficiencySpec::ours(),
+        framework: pa_rl::sim::Framework::PeriodicAsync,
+        infer_fraction: 0.75,
+        infer_tp: 2,
+        spa: false,
+        train_micro_bs: 1,
+        micro_launch_s: 0.5,
+        iters: 1,
+        seed: 1,
+    };
+    let s = bench("sim_iter", 5, 50, || {
+        std::hint::black_box(sim.run());
+    });
+    add("simulator iteration (1024 rollouts)", s, String::new());
+
+    t.print();
+}

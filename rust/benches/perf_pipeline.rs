@@ -1,0 +1,140 @@
+//! End-to-end pipeline benchmark over the real artifacts: per-stage PJRT
+//! costs (prefill, decode chunk, tri-model micro-step std vs SPA, Adam
+//! update, weight sync) and one full iteration in each mode. This is the
+//! §Perf driver — run before/after optimisation changes.
+//!
+//! Requires `artifacts/tiny` (skips politely otherwise).
+
+use pa_rl::config::Config;
+use pa_rl::coordinator::{Driver, DriverOpts, Mode};
+use pa_rl::engine::{Engine, GenRequest};
+use pa_rl::grpo::{build_spa, build_standard, Sample};
+use pa_rl::runtime::Runtime;
+use pa_rl::train::{IterStats, Trainer};
+use pa_rl::util::bench::{bench, Table};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts/tiny");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP perf_pipeline: artifacts/tiny missing — run `make artifacts`");
+        return Ok(());
+    }
+    let cfg = Config::load(Path::new("configs/tiny.json"))?;
+    let mut t = Table::new(
+        "Pipeline stage costs (tiny config, CPU PJRT)",
+        &["Stage", "mean (ms)", "p95 (ms)", "notes"],
+    );
+    let mut add = |name: &str, stats: pa_rl::util::bench::Stats, notes: String| {
+        t.row(&[
+            name.to_string(),
+            format!("{:.2}", stats.mean.as_secs_f64() * 1e3),
+            format!("{:.2}", stats.p95.as_secs_f64() * 1e3),
+            notes,
+        ]);
+    };
+
+    // ---- engine stages ----------------------------------------------------
+    {
+        let rt = Runtime::load_validated(dir, &cfg)?;
+        rt.prepare(&["init", "prefill", "decode"])?;
+        let params = rt.init_params(1)?;
+        let mut engine = Engine::new(cfg.clone(), rt, 1);
+        engine.set_weights(&params)?;
+        let mut loader = pa_rl::data::DataLoader::new(cfg.data.clone());
+        let prompts = loader.next_batch(256);
+        let mut i = 0usize;
+        // prefill+first-token via single-request generate (isolates admission)
+        let s = bench("prefill", 3, 20, || {
+            let p = &prompts[i % prompts.len()];
+            i += 1;
+            engine.submit(GenRequest { request_id: i as u64, prompt: p.tokens.clone() });
+            engine.step().unwrap(); // one admission + one decode chunk
+            while !engine.idle() {
+                engine.step().unwrap();
+            }
+        });
+        let toks = engine.stats.tokens_generated;
+        add(
+            "rollout (prefill + full decode)",
+            s,
+            format!("{toks} tokens total, {} chunks", engine.stats.decode_chunks),
+        );
+    }
+
+    // ---- trainer stages ---------------------------------------------------
+    {
+        let rt = Runtime::load_validated(dir, &cfg)?;
+        rt.prepare(&["init", "train_step", "train_step_spa", "adam_update"])?;
+        let mut trainer = Trainer::new(cfg.clone(), rt, 2)?;
+        let g = cfg.rl.group_size;
+        let prompt: Vec<u32> = (0..cfg.engine.prompt_max as u32).map(|i| 3 + i % 20).collect();
+        let responses: Vec<Vec<u32>> = (0..g).map(|_| vec![5u32; cfg.engine.max_new / 2]).collect();
+        let samples: Vec<Sample> =
+            responses.iter().map(|r| Sample { prompt: &prompt, response: r, advantage: 0.3 }).collect();
+        let std_batch = build_standard(&samples[..cfg.train.micro_bs], cfg.train.micro_bs, cfg.train.seq_len);
+        let spa_batch = build_spa(&samples, cfg.train.spa.pack_len).expect("fits");
+
+        trainer.begin_iteration()?;
+        let mut stats = IterStats::default();
+        let s = bench("micro_std", 3, 15, || {
+            trainer.train_micro(&std_batch, false, 0, &mut stats).unwrap();
+        });
+        add(
+            &format!("tri-model micro (std, {} rows x {})", std_batch.rows, std_batch.seq),
+            s,
+            format!("{} input tokens", std_batch.n_input_tokens),
+        );
+        let s = bench("micro_spa", 3, 15, || {
+            trainer.train_micro(&spa_batch, true, prompt.len(), &mut stats).unwrap();
+        });
+        add(
+            &format!("tri-model micro (SPA, 1 x {})", spa_batch.seq),
+            s,
+            format!("{} input tokens (G={g} packed)", spa_batch.n_input_tokens),
+        );
+        let s = bench("adam", 1, 8, || {
+            trainer.end_iteration(&mut IterStats::default()).unwrap();
+            trainer.begin_iteration().unwrap();
+        });
+        add("adam update + re-upload tri-model", s, format!("{} params", cfg.model.param_count()));
+        trainer.end_iteration(&mut IterStats::default())?;
+    }
+
+    // ---- weight sync -------------------------------------------------------
+    {
+        let rt = Runtime::load_validated(dir, &cfg)?;
+        rt.prepare(&["init", "prefill", "decode"])?;
+        let params = rt.init_params(3)?;
+        let mut engine = Engine::new(cfg.clone(), rt, 3);
+        let s = bench("sync", 2, 20, || {
+            engine.set_weights(&params).unwrap();
+        });
+        add("weight sync (1 engine upload)", s, format!("{:.2} MB", params.bytes() as f64 / 1e6));
+    }
+    t.print();
+
+    // ---- full iterations in each mode ---------------------------------------
+    let mut t2 = Table::new(
+        "Full-iteration wall clock by mode (2 iterations each)",
+        &["Mode", "wall (s)", "TPSPD", "consumer wait (s)"],
+    );
+    for (name, mode, spa) in [
+        ("sync", Mode::Sync, false),
+        ("async", Mode::Async, false),
+        ("async + SPA", Mode::Async, true),
+        ("stale eta=1", Mode::StaleAsync { max_staleness: 1 }, false),
+    ] {
+        let opts = DriverOpts { mode, spa, seed: 9 };
+        let mut driver = Driver::new(cfg.clone(), dir, opts)?;
+        let report = driver.run(2)?;
+        t2.row(&[
+            name.to_string(),
+            format!("{:.2}", report.wall_seconds),
+            format!("{:.1}", report.tpspd()),
+            format!("{:.2}", report.iters.iter().map(|i| i.consumer_wait_seconds).sum::<f64>()),
+        ]);
+    }
+    t2.print();
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Paper Table 1 — Qwen3-8B on DeepScaleR, 16 NPUs, batch 32, G=32, 16K ctx.
+//! Regenerates the four-way framework comparison at paper scale via the
+//! cluster simulator and checks the paper's win-factor shape.
+
+use pa_rl::sim::experiments::{render_rows, table1};
+
+fn main() {
+    let rows = table1(5);
+    println!("{}", render_rows("Table 1 — 8B model on DeepScaleR (16 NPUs, 16K context)", &rows));
+
+    let t = |i: usize| rows[i].sim.tpspd;
+    let checks = [
+        ("async >= VERL (paper: 1.24x)", t(3) >= t(1) * 0.95),
+        ("VERL > sync ours (paper: 1.56x)", t(1) > t(2)),
+        ("sync ours > MindSpeed (paper: 1.62x)", t(2) > t(0)),
+        ("async/sync approaches 2x (paper: 1.92x)", (1.3..=2.1).contains(&(t(3) / t(2)))),
+        ("async/MindSpeed large (paper: 3.12x)", t(3) / t(0) > 2.0),
+    ];
+    let mut ok = true;
+    for (name, pass) in checks {
+        println!("  [{}] {name}", if pass { "PASS" } else { "FAIL" });
+        ok &= pass;
+    }
+    std::process::exit(if ok { 0 } else { 1 });
+}

@@ -1,0 +1,27 @@
+//! Paper Table 2 — DeepSeek-R1-Distill-Qwen-32B on DeepScaleR.
+//! Group 1: ours on 48 NPUs vs MindSpeed-RL on 64 (resource economy);
+//! Group 2: 64 NPUs at 8K context (the largest VERL could fit).
+
+use pa_rl::sim::experiments::{render_rows, table2};
+
+fn main() {
+    let (g1, g2) = table2(4);
+    println!("{}", render_rows("Table 2 group 1 — 32B, 16K ctx, GBS 32", &g1));
+    println!("{}", render_rows("Table 2 group 2 — 32B, 8K ctx, GBS 64, 64 NPUs", &g2));
+
+    let checks = [
+        (
+            "async(48 NPU) beats MindSpeed(64 NPU) by a large factor (paper: 5.05x)",
+            g1[2].sim.tpspd / g1[0].sim.tpspd > 2.5,
+        ),
+        ("async > sync at 48 NPUs (paper: 1.28x)", g1[2].sim.tpspd > g1[1].sim.tpspd),
+        ("async beats VERL at 8K (paper: 1.76x)", g2[2].sim.tpspd > g2[0].sim.tpspd),
+        ("async > sync at 64 NPUs (paper: 1.66x)", g2[2].sim.tpspd > g2[1].sim.tpspd),
+    ];
+    let mut ok = true;
+    for (name, pass) in checks {
+        println!("  [{}] {name}", if pass { "PASS" } else { "FAIL" });
+        ok &= pass;
+    }
+    std::process::exit(if ok { 0 } else { 1 });
+}

@@ -1,0 +1,52 @@
+//! Paper Table 5 + Figure 6 — scalability of the periodic-async framework
+//! over 16/32/64 NPUs: per-device TPSPD declines moderately while total
+//! throughput scales near-linearly.
+
+use pa_rl::sim::experiments::table5;
+use pa_rl::util::bench::{f3, Table};
+
+fn main() {
+    let rows = table5(4);
+    let mut t = Table::new(
+        "Table 5 / Fig. 6 — Qwen3-8B scalability",
+        &["NPUs", "Paper TPSPD", "Sim TPSPD", "Paper total tok/s", "Sim total tok/s", "Sim scaling"],
+    );
+    let mut prev: Option<f64> = None;
+    for (n, paper, sim) in &rows {
+        let total = sim.tpspd * *n as f64;
+        let scaling = prev.map(|p| format!("{:.2}x", total / p)).unwrap_or_else(|| "-".into());
+        t.row(&[
+            format!("{n}"),
+            paper.map(f3).unwrap_or_default(),
+            f3(sim.tpspd),
+            paper.map(|p| f3(p * *n as f64)).unwrap_or_default(),
+            f3(total),
+            scaling,
+        ]);
+        prev = Some(total);
+    }
+    t.note("paper: 1.83x (16->32) and 1.90x (32->64) total-throughput scaling");
+    t.print();
+
+    // Fig. 6 as ASCII bars (total throughput).
+    println!("Fig. 6 — total throughput (tokens/s):");
+    let max_total = rows.iter().map(|(n, _, s)| s.tpspd * *n as f64).fold(0.0, f64::max);
+    for (n, _, sim) in &rows {
+        let total = sim.tpspd * *n as f64;
+        let bar = "█".repeat(((total / max_total) * 50.0).round() as usize);
+        println!("  {n:>3} NPUs |{bar} {total:.0}");
+    }
+
+    let totals: Vec<f64> = rows.iter().map(|(n, _, s)| s.tpspd * *n as f64).collect();
+    let checks = [
+        ("TPSPD declines moderately with scale", rows[0].2.tpspd > rows[2].2.tpspd),
+        ("16->32 scaling near-linear (paper 1.83x)", totals[1] / totals[0] > 1.4),
+        ("32->64 scaling near-linear (paper 1.90x)", totals[2] / totals[1] > 1.25),
+    ];
+    let mut ok = true;
+    for (name, pass) in checks {
+        println!("  [{}] {name}", if pass { "PASS" } else { "FAIL" });
+        ok &= pass;
+    }
+    std::process::exit(if ok { 0 } else { 1 });
+}

@@ -1,0 +1,308 @@
+//! Run configuration.
+//!
+//! A single JSON file under `configs/` describes the model architecture, the
+//! inference-engine geometry, the trainer hyper-parameters and the RL loop.
+//! The same file is read by `python/compile/aot.py` (which bakes the static
+//! shapes into the AOT artifacts) and by the rust binary (which must agree
+//! with the artifact shapes — checked against `manifest.json` at load time).
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Transformer architecture (Qwen-mini family: RMSNorm, RoPE, GQA, SwiGLU).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    pub rmsnorm_eps: f64,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (embeddings + layers + head).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let f = self.d_ff;
+        let hd = self.head_dim();
+        let per_layer = d // ln1
+            + d * (self.n_heads * hd)      // wq
+            + d * (self.n_kv_heads * hd)   // wk
+            + d * (self.n_kv_heads * hd)   // wv
+            + (self.n_heads * hd) * d      // wo
+            + d                            // ln2
+            + d * f                        // w_gate
+            + d * f                        // w_up
+            + f * d; // w_down
+        self.vocab_size * d + self.n_layers * per_layer + d + d * self.vocab_size
+    }
+
+    /// Approximate training FLOPs per token (fwd+bwd ≈ 6 * params, plus
+    /// attention quadratic term handled by callers that know seq lengths).
+    pub fn train_flops_per_token(&self) -> f64 {
+        6.0 * self.param_count() as f64
+    }
+
+    /// Approximate inference FLOPs per generated token (2 * params).
+    pub fn infer_flops_per_token(&self) -> f64 {
+        2.0 * self.param_count() as f64
+    }
+}
+
+/// Inference-engine geometry (vLLM-like slot-based continuous batching).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    /// Concurrent sequence slots per engine instance.
+    pub n_slots: usize,
+    /// Maximum prompt length (prefill shape).
+    pub prompt_max: usize,
+    /// Tokens decoded per compiled decode-chunk call.
+    pub decode_chunk: usize,
+    /// Maximum generated tokens per sequence.
+    pub max_new: usize,
+    pub temperature: f64,
+    pub top_p: f64,
+    /// 0 disables top-k.
+    pub top_k: usize,
+}
+
+impl EngineConfig {
+    /// KV-cache sequence capacity.
+    pub fn cache_len(&self) -> usize {
+        self.prompt_max + self.max_new
+    }
+}
+
+/// Shared-prompt attention settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpaConfig {
+    /// Responses per packed group (K in the paper; equals RL group size here).
+    pub k: usize,
+    /// Packed sequence length: prompt_max + k * max_new.
+    pub pack_len: usize,
+}
+
+/// Trainer hyper-parameters (paper Table 7/8 analog).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    /// Micro-batch rows for the standard (non-SPA) train step.
+    pub micro_bs: usize,
+    /// Padded sample length for the standard train step.
+    pub seq_len: usize,
+    pub spa: SpaConfig,
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub adam_eps: f64,
+    pub weight_decay: f64,
+    pub grad_clip: f64,
+    /// KL penalty coefficient beta (paper: 0.02).
+    pub kl_beta: f64,
+    /// PPO clip range (paper: eps_low = eps_high = 0.2).
+    pub clip_eps_low: f64,
+    pub clip_eps_high: f64,
+}
+
+/// RL loop shape (Algorithm 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RlConfig {
+    /// Prompts per iteration (N; paper "batch size").
+    pub batch_prompts: usize,
+    /// Rollouts per prompt (G; paper "answers per prompt" = 32).
+    pub group_size: usize,
+    /// Training iterations (T).
+    pub iters: usize,
+    /// Inference engine instances (the paper's training:rollout ratio).
+    pub n_engines: usize,
+    /// Bounded rollout-queue capacity (groups).
+    pub queue_cap: usize,
+}
+
+/// Synthetic-task data settings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataConfig {
+    /// Few-shot examples prepended to each prompt (lengthens prompts to reach
+    /// the paper's long-prompt/short-response SPA regime).
+    pub few_shot: usize,
+    /// Operands drawn uniformly from [0, max_operand].
+    pub max_operand: u64,
+    pub seed: u64,
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    pub name: String,
+    pub model: ModelConfig,
+    pub engine: EngineConfig,
+    pub train: TrainConfig,
+    pub rl: RlConfig,
+    pub data: DataConfig,
+}
+
+impl Config {
+    pub fn from_json(j: &Json) -> Result<Config> {
+        let name = j.str_or("name", "unnamed").to_string();
+        let m = j.req("model").context("config: missing 'model'")?;
+        let model = ModelConfig {
+            vocab_size: m.req_usize("vocab_size")?,
+            d_model: m.req_usize("d_model")?,
+            n_layers: m.req_usize("n_layers")?,
+            n_heads: m.req_usize("n_heads")?,
+            n_kv_heads: m.usize_or("n_kv_heads", m.req_usize("n_heads")?),
+            d_ff: m.req_usize("d_ff")?,
+            rope_theta: m.f64_or("rope_theta", 10000.0),
+            rmsnorm_eps: m.f64_or("rmsnorm_eps", 1e-5),
+        };
+        if model.d_model % model.n_heads != 0 {
+            bail!("d_model must be divisible by n_heads");
+        }
+        if model.n_heads % model.n_kv_heads != 0 {
+            bail!("n_heads must be divisible by n_kv_heads");
+        }
+
+        let e = j.req("engine").context("config: missing 'engine'")?;
+        let engine = EngineConfig {
+            n_slots: e.usize_or("n_slots", 8),
+            prompt_max: e.req_usize("prompt_max")?,
+            decode_chunk: e.usize_or("decode_chunk", 16),
+            max_new: e.req_usize("max_new")?,
+            temperature: e.f64_or("temperature", 1.0),
+            top_p: e.f64_or("top_p", 1.0),
+            top_k: e.usize_or("top_k", 0),
+        };
+
+        let r = j.req("rl").context("config: missing 'rl'")?;
+        let rl = RlConfig {
+            batch_prompts: r.req_usize("batch_prompts")?,
+            group_size: r.req_usize("group_size")?,
+            iters: r.usize_or("iters", 10),
+            n_engines: r.usize_or("n_engines", 1),
+            queue_cap: r.usize_or("queue_cap", 64),
+        };
+
+        let t = j.req("train").context("config: missing 'train'")?;
+        let default_seq = engine.prompt_max + engine.max_new;
+        let spa_k = t.path(&["spa", "k"]).and_then(Json::as_usize).unwrap_or(rl.group_size);
+        let train = TrainConfig {
+            micro_bs: t.usize_or("micro_bs", 4),
+            seq_len: t.usize_or("seq_len", default_seq),
+            spa: SpaConfig {
+                k: spa_k,
+                pack_len: t
+                    .path(&["spa", "pack_len"])
+                    .and_then(Json::as_usize)
+                    .unwrap_or(engine.prompt_max + spa_k * engine.max_new),
+            },
+            lr: t.f64_or("lr", 1e-4),
+            beta1: t.f64_or("beta1", 0.9),
+            beta2: t.f64_or("beta2", 0.95),
+            adam_eps: t.f64_or("adam_eps", 1e-8),
+            weight_decay: t.f64_or("weight_decay", 0.01),
+            grad_clip: t.f64_or("grad_clip", 1.0),
+            kl_beta: t.f64_or("kl_beta", 0.02),
+            clip_eps_low: t.f64_or("clip_eps_low", 0.2),
+            clip_eps_high: t.f64_or("clip_eps_high", 0.2),
+        };
+        if train.seq_len < engine.prompt_max + engine.max_new {
+            bail!(
+                "train.seq_len ({}) must cover prompt_max + max_new ({})",
+                train.seq_len,
+                engine.prompt_max + engine.max_new
+            );
+        }
+
+        let d = j.get("data").cloned().unwrap_or(Json::Obj(vec![]));
+        let data = DataConfig {
+            few_shot: d.usize_or("few_shot", 0),
+            max_operand: d.f64_or("max_operand", 99.0) as u64,
+            seed: d.f64_or("seed", 0.0) as u64,
+        };
+
+        Ok(Config { name, model, engine, train, rl, data })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing config {}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    /// Default artifacts directory for this config.
+    pub fn artifacts_dir(&self) -> String {
+        format!("artifacts/{}", self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn demo_json() -> &'static str {
+        r#"{
+          "name": "unit",
+          "model": {"vocab_size": 64, "d_model": 64, "n_layers": 2, "n_heads": 4,
+                    "n_kv_heads": 2, "d_ff": 128},
+          "engine": {"n_slots": 4, "prompt_max": 16, "decode_chunk": 4, "max_new": 8},
+          "train": {"micro_bs": 2, "lr": 0.001},
+          "rl": {"batch_prompts": 4, "group_size": 4, "iters": 3, "n_engines": 2},
+          "data": {"few_shot": 1, "max_operand": 20, "seed": 7}
+        }"#
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let j = Json::parse(demo_json()).unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.name, "unit");
+        assert_eq!(c.model.head_dim(), 16);
+        assert_eq!(c.engine.cache_len(), 24);
+        assert_eq!(c.train.seq_len, 24);
+        // spa defaults: k = group_size, pack_len = prompt + k*max_new
+        assert_eq!(c.train.spa.k, 4);
+        assert_eq!(c.train.spa.pack_len, 16 + 4 * 8);
+        assert_eq!(c.rl.n_engines, 2);
+        assert_eq!(c.data.seed, 7);
+    }
+
+    #[test]
+    fn param_count_matches_manual() {
+        let j = Json::parse(demo_json()).unwrap();
+        let m = Config::from_json(&j).unwrap().model;
+        // embeddings 64*64, head 64 + 64*64, layers: 2 * (64 + 64*64 + 64*32 + 64*32 + 64*64 + 64 + 3*64*128)
+        let per_layer = 64 + 64 * 64 + 64 * 32 + 64 * 32 + 64 * 64 + 64 + 3 * (64 * 128);
+        let expect = 64 * 64 + 2 * per_layer + 64 + 64 * 64;
+        assert_eq!(m.param_count(), expect);
+    }
+
+    #[test]
+    fn rejects_bad_dims() {
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":65,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":4,"max_new":4},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_short_seq_len() {
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":16},
+                "train":{"seq_len": 8},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Group assembly: collects scored rollouts into complete GRPO groups and
+//! computes group-normalised advantages on completion.
+//!
+//! Rollouts arrive in completion-time order, interleaved across prompts (and,
+//! in the staleness ablation, across batches); the assembler buffers partial
+//! groups and releases each group the moment its G-th rollout lands — the
+//! earliest point at which GRPO advantages are computable.
+
+use super::messages::ScoredRollout;
+use crate::data::Prompt;
+use crate::grpo::{group_advantages, Group, Rollout};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+struct Partial {
+    prompt: Prompt,
+    expected: usize,
+    rollouts: Vec<Option<Rollout>>,
+    received: usize,
+    max_gen_seconds: f64,
+}
+
+/// Assembles [`ScoredRollout`]s into [`Group`]s.
+#[derive(Default)]
+pub struct Assembler {
+    partial: HashMap<u64, Partial>,
+}
+
+impl Assembler {
+    pub fn new() -> Assembler {
+        Assembler { partial: HashMap::new() }
+    }
+
+    /// Register a prompt expecting `group_size` rollouts.
+    pub fn register(&mut self, prompt: Prompt, group_size: usize) {
+        let id = prompt.id;
+        let prev = self.partial.insert(
+            id,
+            Partial {
+                prompt,
+                expected: group_size,
+                rollouts: (0..group_size).map(|_| None).collect(),
+                received: 0,
+                max_gen_seconds: 0.0,
+            },
+        );
+        assert!(prev.is_none(), "prompt {id} registered twice");
+    }
+
+    /// Number of prompts still awaiting rollouts.
+    pub fn pending_prompts(&self) -> usize {
+        self.partial.len()
+    }
+
+    /// Ingest one rollout; returns the completed group if this was the last
+    /// member. Duplicate or unknown rollouts are errors (they would silently
+    /// corrupt advantages).
+    pub fn ingest(&mut self, r: ScoredRollout) -> Result<Option<Group>> {
+        let Some(p) = self.partial.get_mut(&r.prompt_id) else {
+            bail!("rollout for unregistered prompt {}", r.prompt_id);
+        };
+        if r.sample_idx >= p.expected {
+            bail!("sample_idx {} out of range (G={})", r.sample_idx, p.expected);
+        }
+        if p.rollouts[r.sample_idx].is_some() {
+            bail!("duplicate rollout for prompt {} sample {}", r.prompt_id, r.sample_idx);
+        }
+        p.max_gen_seconds = p.max_gen_seconds.max(r.gen_seconds);
+        p.rollouts[r.sample_idx] = Some(Rollout {
+            sample_idx: r.sample_idx,
+            weight_version: r.weight_version,
+            tokens: r.tokens,
+            logprobs: r.logprobs,
+            reward: r.reward,
+        });
+        p.received += 1;
+        if p.received < p.expected {
+            return Ok(None);
+        }
+        let p = self.partial.remove(&r.prompt_id).unwrap();
+        let rollouts: Vec<Rollout> = p.rollouts.into_iter().map(|r| r.unwrap()).collect();
+        let rewards: Vec<f32> = rollouts.iter().map(|r| r.reward).collect();
+        let weight_version = rollouts[0].weight_version;
+        Ok(Some(Group {
+            prompt: p.prompt,
+            weight_version,
+            advantages: group_advantages(&rewards),
+            rollouts,
+            gen_seconds: p.max_gen_seconds,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    fn mk_prompt(id: u64) -> Prompt {
+        Prompt { id, tokens: vec![1, 5, 6], text: "Q".into(), answer: 3 }
+    }
+
+    fn mk_rollout(prompt_id: u64, sample_idx: usize, reward: f32) -> ScoredRollout {
+        ScoredRollout {
+            prompt_id,
+            sample_idx,
+            weight_version: 1,
+            tokens: vec![9, 2],
+            logprobs: vec![-0.5, -0.1],
+            reward,
+            gen_seconds: 0.1,
+            engine_idx: 0,
+        }
+    }
+
+    #[test]
+    fn completes_group_with_advantages() {
+        let mut a = Assembler::new();
+        a.register(mk_prompt(0), 3);
+        assert!(a.ingest(mk_rollout(0, 1, 1.0)).unwrap().is_none());
+        assert!(a.ingest(mk_rollout(0, 0, 0.0)).unwrap().is_none());
+        let g = a.ingest(mk_rollout(0, 2, 0.0)).unwrap().unwrap();
+        assert_eq!(g.rollouts.len(), 3);
+        assert_eq!(g.rollouts[0].reward, 0.0);
+        assert_eq!(g.rollouts[1].reward, 1.0);
+        assert!(g.advantages[1] > 0.0 && g.advantages[0] < 0.0);
+        assert_eq!(a.pending_prompts(), 0);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_unknown() {
+        let mut a = Assembler::new();
+        a.register(mk_prompt(7), 2);
+        a.ingest(mk_rollout(7, 0, 1.0)).unwrap();
+        assert!(a.ingest(mk_rollout(7, 0, 1.0)).is_err());
+        assert!(a.ingest(mk_rollout(99, 0, 1.0)).is_err());
+        assert!(a.ingest(mk_rollout(7, 5, 1.0)).is_err());
+    }
+
+    #[test]
+    fn prop_any_arrival_order_completes() {
+        prop::quick(
+            "assembler completes under arbitrary interleaving",
+            |rng: &mut Pcg64, size| {
+                let n_prompts = rng.range(1, size.scaled(8).max(1) + 1);
+                let g = rng.range(1, 5);
+                let mut arrivals: Vec<(u64, usize)> = (0..n_prompts as u64)
+                    .flat_map(|p| (0..g).map(move |s| (p, s)))
+                    .collect();
+                rng.shuffle(&mut arrivals);
+                (n_prompts, g, arrivals)
+            },
+            |(n_prompts, g, arrivals)| {
+                let mut a = Assembler::new();
+                for p in 0..*n_prompts as u64 {
+                    a.register(mk_prompt(p), *g);
+                }
+                let mut completed = 0;
+                for &(p, s) in arrivals {
+                    if a.ingest(mk_rollout(p, s, s as f32)).map_err(|e| e.to_string())?.is_some() {
+                        completed += 1;
+                    }
+                }
+                if completed != *n_prompts {
+                    return Err(format!("{completed} of {n_prompts} groups completed"));
+                }
+                if a.pending_prompts() != 0 {
+                    return Err("assembler left partial groups".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,61 @@
+//! Held-out accuracy evaluation (the paper's AIME24/GSM8K accuracy columns,
+//! in analog): greedy decoding over an evaluation set with exact-match
+//! scoring. Runs on a dedicated engine instance with evaluation sampling
+//! settings, outside the TPSPD-timed path — mirroring the paper, where
+//! evaluation uses different sampling (temp 0.6 / top-p 0.95) and separate
+//! passes.
+
+use crate::config::Config;
+use crate::data::{TaskGen, Tokenizer};
+use crate::engine::{Engine, GenRequest, SamplerCfg};
+use crate::grpo::reward;
+use crate::runtime::{HostParams, Runtime};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Accuracy result.
+#[derive(Debug, Clone)]
+pub struct EvalReport {
+    pub n: usize,
+    pub correct: usize,
+    pub accuracy: f64,
+    pub mean_response_len: f64,
+}
+
+/// Evaluate `params` on `n` held-out prompts with greedy decoding.
+pub fn evaluate(
+    cfg: &Config,
+    artifacts_dir: &Path,
+    params: &HostParams,
+    n: usize,
+) -> Result<EvalReport> {
+    let rt = Runtime::load_validated(artifacts_dir, cfg).context("eval runtime")?;
+    let mut engine = Engine::new(cfg.clone(), rt, 0xE7A1);
+    engine.set_sampler(SamplerCfg::greedy());
+    engine.set_weights(params)?;
+    let gen = TaskGen::new(cfg.data.clone());
+    let tokenizer = Tokenizer::new();
+
+    let mut correct = 0usize;
+    let mut total_len = 0usize;
+    let prompts: Vec<_> = (0..n as u64).map(|i| gen.eval_prompt(i)).collect();
+    let reqs: Vec<GenRequest> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| GenRequest { request_id: i as u64, prompt: p.tokens.clone() })
+        .collect();
+    let results = engine.generate_all(reqs)?;
+    for r in &results {
+        let p = &prompts[r.request_id as usize];
+        if reward::score(&tokenizer, &r.tokens, p.answer) > 0.5 {
+            correct += 1;
+        }
+        total_len += r.tokens.len();
+    }
+    Ok(EvalReport {
+        n,
+        correct,
+        accuracy: correct as f64 / n.max(1) as f64,
+        mean_response_len: total_len as f64 / n.max(1) as f64,
+    })
+}

@@ -1,0 +1,45 @@
+//! Messages flowing between the coordinator's threads.
+
+use crate::engine::GenRequest;
+use crate::runtime::HostParams;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Commands to an engine worker thread.
+pub enum EngineMsg {
+    /// Install new policy weights (iteration-boundary sync, Alg. 1 line 3).
+    /// The worker acks on the provided channel once the upload completes;
+    /// the coordinator blocks on all acks before dispatching the batch.
+    SetWeights(Arc<HostParams>, mpsc::Sender<()>),
+    /// Generate one rollout.
+    Gen(Box<GenJob>),
+    /// Drain and exit.
+    Shutdown,
+}
+
+/// A generation job: the request plus everything the worker needs to score
+/// the rollout on completion ("each coroutine independently evaluates the
+/// reward", paper §4.2.1).
+#[derive(Debug, Clone)]
+pub struct GenJob {
+    pub prompt_id: u64,
+    pub sample_idx: usize,
+    pub request: GenRequest,
+    /// Ground-truth answer for the rule-based reward.
+    pub answer: i64,
+}
+
+/// A scored rollout produced by an engine worker — the unit that travels
+/// through the shared queue to the consumer.
+#[derive(Debug, Clone)]
+pub struct ScoredRollout {
+    pub prompt_id: u64,
+    pub sample_idx: usize,
+    pub weight_version: u64,
+    pub tokens: Vec<u32>,
+    pub logprobs: Vec<f32>,
+    pub reward: f32,
+    pub gen_seconds: f64,
+    /// Which engine instance produced it (timeline lanes).
+    pub engine_idx: usize,
+}

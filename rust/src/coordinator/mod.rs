@@ -1,0 +1,19 @@
+//! The coordinator — the paper's system contribution (Algorithm 1).
+//!
+//! A producer–consumer pipeline over decoupled training and inference
+//! instances: engine worker threads generate and score rollouts into a
+//! bounded shared queue; the consumer trains on groups in completion-time
+//! order; model weights synchronise at iteration boundaries only, keeping
+//! every batch strictly on-policy (Prop. 1) while inference and training
+//! overlap inside the iteration (periodic asynchrony).
+
+pub mod assembler;
+pub mod driver;
+pub mod eval;
+pub mod messages;
+pub mod worker;
+
+pub use assembler::Assembler;
+pub use driver::{Driver, DriverOpts, IterReport, Mode, RunReport};
+pub use eval::{evaluate, EvalReport};
+pub use messages::{EngineMsg, GenJob, ScoredRollout};

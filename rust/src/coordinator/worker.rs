@@ -1,0 +1,135 @@
+//! Engine worker threads — the producer side of the pipeline.
+//!
+//! Each worker owns one [`Engine`] instance (its own PJRT client + compiled
+//! artifacts), pulls jobs from its inbox, steps the engine, scores finished
+//! rollouts with the rule-based reward, and pushes [`ScoredRollout`]s into
+//! the shared bounded queue. The send blocks when the queue is full —
+//! backpressure toward the inference side, bounding rollout memory exactly
+//! like the paper's shared queue.
+
+use super::messages::{EngineMsg, GenJob, ScoredRollout};
+use crate::config::Config;
+use crate::data::Tokenizer;
+use crate::engine::Engine;
+use crate::grpo::reward;
+use crate::metrics::Trace;
+use crate::runtime::Runtime;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
+use std::thread::JoinHandle;
+
+/// Handle to a spawned worker.
+pub struct WorkerHandle {
+    pub thread: JoinHandle<Result<()>>,
+    pub inbox: std::sync::mpsc::Sender<EngineMsg>,
+}
+
+/// Spawn an engine worker. `artifacts_dir` is loaded inside the thread (the
+/// PJRT client is thread-bound).
+pub fn spawn_worker(
+    idx: usize,
+    cfg: Config,
+    artifacts_dir: PathBuf,
+    seed: u64,
+    queue: SyncSender<ScoredRollout>,
+    trace: Trace,
+) -> WorkerHandle {
+    let (tx, rx) = std::sync::mpsc::channel::<EngineMsg>();
+    let thread = std::thread::Builder::new()
+        .name(format!("engine-{idx}"))
+        .spawn(move || worker_main(idx, cfg, artifacts_dir, seed, rx, queue, trace))
+        .expect("spawning engine worker");
+    WorkerHandle { thread, inbox: tx }
+}
+
+fn worker_main(
+    idx: usize,
+    cfg: Config,
+    artifacts_dir: PathBuf,
+    seed: u64,
+    inbox: Receiver<EngineMsg>,
+    queue: SyncSender<ScoredRollout>,
+    trace: Trace,
+) -> Result<()> {
+    let rt = Runtime::load_validated(&artifacts_dir, &cfg)
+        .with_context(|| format!("engine-{idx}: loading artifacts"))?;
+    rt.prepare(&["prefill", "decode"])
+        .with_context(|| format!("engine-{idx}: compiling artifacts"))?;
+    let mut engine = Engine::new(cfg, rt, seed ^ (idx as u64).wrapping_mul(0x9E37));
+    let tokenizer = Tokenizer::new();
+    let lane = format!("infer-{idx}");
+    // request_id -> job metadata for scoring
+    let mut jobs: HashMap<u64, GenJob> = HashMap::new();
+
+    loop {
+        // Block when idle; otherwise drain without blocking.
+        if engine.idle() {
+            match inbox.recv() {
+                Ok(msg) => {
+                    if handle_msg(msg, &mut engine, &mut jobs)? {
+                        return Ok(());
+                    }
+                }
+                Err(_) => return Ok(()), // coordinator dropped
+            }
+        }
+        loop {
+            match inbox.try_recv() {
+                Ok(msg) => {
+                    if handle_msg(msg, &mut engine, &mut jobs)? {
+                        return Ok(());
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return Ok(()),
+            }
+        }
+        if !engine.idle() {
+            let t0 = trace.now();
+            let finished = engine.step().with_context(|| format!("engine-{idx}: step"))?;
+            trace.record(&lane, "step", t0);
+            for r in finished {
+                let job = jobs
+                    .remove(&r.request_id)
+                    .context("engine returned unknown request id")?;
+                let score = reward::score(&tokenizer, &r.tokens, job.answer);
+                let rollout = ScoredRollout {
+                    prompt_id: job.prompt_id,
+                    sample_idx: job.sample_idx,
+                    weight_version: r.weight_version,
+                    tokens: r.tokens,
+                    logprobs: r.logprobs,
+                    reward: score,
+                    gen_seconds: r.seconds,
+                    engine_idx: idx,
+                };
+                // Blocking send = backpressure when the trainer lags.
+                if queue.send(rollout).is_err() {
+                    return Ok(()); // consumer gone; shut down quietly
+                }
+            }
+        }
+    }
+}
+
+/// Returns true on shutdown.
+fn handle_msg(
+    msg: EngineMsg,
+    engine: &mut Engine,
+    jobs: &mut HashMap<u64, GenJob>,
+) -> Result<bool> {
+    match msg {
+        EngineMsg::SetWeights(params, ack) => {
+            engine.set_weights(&params)?;
+            let _ = ack.send(());
+        }
+        EngineMsg::Gen(job) => {
+            jobs.insert(job.request.request_id, (*job).clone());
+            engine.submit(job.request);
+        }
+        EngineMsg::Shutdown => return Ok(true),
+    }
+    Ok(false)
+}

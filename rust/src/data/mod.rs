@@ -1,0 +1,11 @@
+//! Data plane: tokenizer, synthetic task generation, streaming loader.
+//!
+//! Substitutes the paper's GSM8K / DeepScaleR pipelines (see DESIGN.md §6):
+//! a deterministic arithmetic-problem generator with controllable
+//! prompt/response length ratio and a rule-based exact-match verifier.
+
+pub mod taskgen;
+pub mod tokenizer;
+
+pub use taskgen::{DataLoader, Prompt, TaskGen};
+pub use tokenizer::{Tokenizer, BOS, EOS, PAD};

@@ -1,0 +1,150 @@
+//! Character-level tokenizer for the synthetic arithmetic corpus.
+//!
+//! The paper trains on GSM8K / DeepScaleR with Qwen tokenizers; in this
+//! reproduction the data substrate is a synthetic arithmetic task (see
+//! [`super::taskgen`]) so a small fixed character vocabulary suffices. The
+//! vocabulary is stable across runs — token ids are baked into the AOT
+//! artifacts' embedding shapes via `vocab_size` in the config.
+
+/// Reserved special tokens.
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+
+/// Characters mapped to ids `3..3+len`.
+const CHARS: &str = "0123456789+-*/=?QA:.# ";
+
+/// Character-level tokenizer with PAD/BOS/EOS specials.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// byte -> token id (dense table over u8 space).
+    encode_table: [Option<u32>; 256],
+    /// token id -> char.
+    decode_table: Vec<char>,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        let mut encode_table = [None; 256];
+        let mut decode_table = vec!['\0', '\0', '\0']; // PAD, BOS, EOS placeholders
+        for (i, c) in CHARS.chars().enumerate() {
+            let id = 3 + i as u32;
+            encode_table[c as usize] = Some(id);
+            decode_table.push(c);
+        }
+        Tokenizer { encode_table, decode_table }
+    }
+
+    /// Number of distinct token ids (specials + chars).
+    pub fn vocab_used(&self) -> usize {
+        self.decode_table.len()
+    }
+
+    /// Encode text. Unknown characters are an error in this closed domain.
+    pub fn encode(&self, text: &str) -> Result<Vec<u32>, String> {
+        text.chars()
+            .map(|c| {
+                if (c as usize) < 256 {
+                    self.encode_table[c as usize].ok_or_else(|| format!("unknown char {c:?}"))
+                } else {
+                    Err(format!("unknown char {c:?}"))
+                }
+            })
+            .collect()
+    }
+
+    /// Decode ids, stopping at EOS, skipping PAD/BOS.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut s = String::new();
+        for &id in ids {
+            if id == EOS {
+                break;
+            }
+            if id == PAD || id == BOS {
+                continue;
+            }
+            if let Some(&c) = self.decode_table.get(id as usize) {
+                s.push(c);
+            }
+        }
+        s
+    }
+
+    /// Decode including everything after EOS (debugging).
+    pub fn decode_raw(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&id| match id {
+                PAD => '_',
+                BOS => '^',
+                EOS => '$',
+                id => *self.decode_table.get(id as usize).unwrap_or(&'?'),
+            })
+            .collect()
+    }
+
+    pub fn id_of(&self, c: char) -> Option<u32> {
+        if (c as usize) < 256 {
+            self.encode_table[c as usize]
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new();
+        let text = "Q:17+25=?A:42";
+        let ids = t.encode(text).unwrap();
+        assert_eq!(t.decode(&ids), text);
+    }
+
+    #[test]
+    fn specials_are_reserved() {
+        let t = Tokenizer::new();
+        let ids = t.encode("0").unwrap();
+        assert!(ids[0] >= 3);
+        assert_eq!(t.decode(&[BOS, ids[0], EOS, ids[0]]), "0");
+    }
+
+    #[test]
+    fn unknown_char_rejected() {
+        let t = Tokenizer::new();
+        assert!(t.encode("hello").is_err()); // lowercase not in vocab
+        assert!(t.encode("Q:1+1=?A:").is_ok());
+    }
+
+    #[test]
+    fn vocab_fits_default_config() {
+        let t = Tokenizer::new();
+        assert!(t.vocab_used() <= 64, "vocab {} exceeds default 64", t.vocab_used());
+    }
+
+    #[test]
+    fn decode_stops_at_eos() {
+        let t = Tokenizer::new();
+        let a = t.id_of('1').unwrap();
+        let b = t.id_of('2').unwrap();
+        assert_eq!(t.decode(&[a, EOS, b]), "1");
+        assert_eq!(t.decode_raw(&[a, EOS, b]), "1$2");
+    }
+
+    #[test]
+    fn all_chars_unique_ids() {
+        let t = Tokenizer::new();
+        let mut seen = std::collections::HashSet::new();
+        for c in CHARS.chars() {
+            assert!(seen.insert(t.id_of(c).unwrap()), "duplicate id for {c:?}");
+        }
+    }
+}

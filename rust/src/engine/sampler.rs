@@ -1,0 +1,183 @@
+//! Host-side token sampler.
+//!
+//! Samples the *first* response token from prefill logits (subsequent tokens
+//! are sampled inside the compiled decode chunk — see
+//! `python/compile/model.py::sample_token`, whose semantics this mirrors:
+//! temperature scaling, optional top-k, then top-p nucleus truncation that
+//! always keeps the highest-probability token, then categorical sampling;
+//! temperature <= 1e-6 means greedy argmax).
+
+use crate::util::rng::Pcg64;
+
+/// Sampling hyper-parameters (paper Table 10: temperature 1.0 for training
+/// rollouts; 0.6 / top-p 0.95 / top-k 20 for evaluation).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplerCfg {
+    pub temperature: f32,
+    pub top_p: f32,
+    /// 0 disables top-k.
+    pub top_k: usize,
+}
+
+impl SamplerCfg {
+    pub fn greedy() -> SamplerCfg {
+        SamplerCfg { temperature: 0.0, top_p: 1.0, top_k: 0 }
+    }
+}
+
+/// Sample a token id from raw logits. Returns (token, logprob under the
+/// truncated sampling distribution).
+pub fn sample(logits: &[f32], cfg: &SamplerCfg, rng: &mut Pcg64) -> (u32, f32) {
+    assert!(!logits.is_empty());
+    if cfg.temperature <= 1e-6 {
+        let (tok, _) = argmax(logits);
+        return (tok as u32, 0.0);
+    }
+    let inv_t = 1.0 / cfg.temperature;
+    let mut scaled: Vec<f32> = logits.iter().map(|&l| l * inv_t).collect();
+
+    // top-k: mask everything below the k-th largest.
+    if cfg.top_k > 0 && cfg.top_k < scaled.len() {
+        let mut sorted = scaled.clone();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let kth = sorted[cfg.top_k - 1];
+        for s in scaled.iter_mut() {
+            if *s < kth {
+                *s = f32::NEG_INFINITY;
+            }
+        }
+    }
+
+    // top-p: sort descending, keep tokens whose cumulative mass *before* them
+    // is < top_p (always keeps the top token).
+    let mut idx: Vec<usize> = (0..scaled.len()).collect();
+    idx.sort_by(|&a, &b| scaled[b].partial_cmp(&scaled[a]).unwrap());
+    let max = scaled[idx[0]];
+    let exps: Vec<f32> = idx.iter().map(|&i| (scaled[i] - max).exp()).collect();
+    let z: f32 = exps.iter().sum();
+    let mut keep = vec![false; scaled.len()];
+    let mut cum = 0.0f32;
+    for (rank, &i) in idx.iter().enumerate() {
+        if cum < cfg.top_p {
+            keep[i] = true;
+        } else {
+            break;
+        }
+        cum += exps[rank] / z;
+    }
+
+    // categorical over kept tokens
+    let kept_mass: f32 = scaled
+        .iter()
+        .zip(&keep)
+        .filter(|(_, &k)| k)
+        .map(|(&s, _)| (s - max).exp())
+        .sum();
+    let mut x = rng.f64() as f32 * kept_mass;
+    let mut chosen = idx[0];
+    for (i, (&s, &k)) in scaled.iter().zip(&keep).enumerate() {
+        if !k {
+            continue;
+        }
+        let w = (s - max).exp();
+        x -= w;
+        if x < 0.0 {
+            chosen = i;
+            break;
+        }
+    }
+    let lp = (scaled[chosen] - max).exp() / kept_mass;
+    (chosen as u32, lp.ln())
+}
+
+fn argmax(xs: &[f32]) -> (usize, f32) {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    (best, xs[best])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn greedy_takes_argmax() {
+        let mut rng = Pcg64::seeded(0);
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        for _ in 0..10 {
+            let (tok, _) = sample(&logits, &SamplerCfg::greedy(), &mut rng);
+            assert_eq!(tok, 1);
+        }
+    }
+
+    #[test]
+    fn top_p_truncates_to_dominant_token() {
+        let mut rng = Pcg64::seeded(1);
+        let logits = vec![5.0, 0.0, 0.0, 0.0];
+        let cfg = SamplerCfg { temperature: 1.0, top_p: 0.5, top_k: 0 };
+        for _ in 0..50 {
+            let (tok, lp) = sample(&logits, &cfg, &mut rng);
+            assert_eq!(tok, 0);
+            assert!((lp - 0.0).abs() < 1e-5, "sole kept token has logprob 0, got {lp}");
+        }
+    }
+
+    #[test]
+    fn top_k_limits_support() {
+        let mut rng = Pcg64::seeded(2);
+        let logits = vec![1.0, 0.9, 0.8, -2.0];
+        let cfg = SamplerCfg { temperature: 1.0, top_p: 1.0, top_k: 2 };
+        for _ in 0..100 {
+            let (tok, _) = sample(&logits, &cfg, &mut rng);
+            assert!(tok < 2, "token {tok} outside top-2");
+        }
+    }
+
+    #[test]
+    fn temperature_one_matches_softmax_frequencies() {
+        let mut rng = Pcg64::seeded(3);
+        let probs = [0.7f32, 0.2, 0.1];
+        let logits: Vec<f32> = probs.iter().map(|p| p.ln()).collect();
+        let cfg = SamplerCfg { temperature: 1.0, top_p: 1.0, top_k: 0 };
+        let mut counts = [0usize; 3];
+        let n = 30_000;
+        for _ in 0..n {
+            let (tok, _) = sample(&logits, &cfg, &mut rng);
+            counts[tok as usize] += 1;
+        }
+        for (c, p) in counts.iter().zip(&probs) {
+            let freq = *c as f32 / n as f32;
+            assert!((freq - p).abs() < 0.02, "freq {freq} vs p {p}");
+        }
+    }
+
+    #[test]
+    fn prop_logprob_is_log_of_kept_distribution() {
+        prop::quick(
+            "sampled logprob normalises over kept set",
+            |rng, size| {
+                let v = rng.range(2, size.scaled(32).max(2) + 2);
+                let logits: Vec<f32> = (0..v).map(|_| rng.f32() * 6.0 - 3.0).collect();
+                let top_p = 0.3 + rng.f32() * 0.7;
+                (logits, top_p, rng.next_u64())
+            },
+            |(logits, top_p, seed)| {
+                let cfg = SamplerCfg { temperature: 1.0, top_p: *top_p, top_k: 0 };
+                let mut rng = Pcg64::seeded(*seed);
+                let (tok, lp) = sample(logits, &cfg, &mut rng);
+                if !(lp <= 1e-6) {
+                    return Err(format!("logprob {lp} > 0"));
+                }
+                if tok as usize >= logits.len() {
+                    return Err("token out of range".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

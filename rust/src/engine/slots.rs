@@ -1,0 +1,149 @@
+//! Sequence-slot bookkeeping for the continuous-batching engine.
+//!
+//! The KV cache has `n_slots` fixed sequence slots; this module tracks which
+//! slot holds which in-flight request and enforces the allocator invariants
+//! (no double allocation, no lost slots) that the proptests pin down.
+
+/// An in-flight generation bound to one KV-cache slot.
+#[derive(Debug, Clone)]
+pub struct InFlight {
+    /// Caller-assigned request id.
+    pub request_id: u64,
+    /// Prompt token length (cache rows [0, prompt_len) hold the prompt).
+    pub prompt_len: usize,
+    /// Response tokens generated so far (including EOS when emitted).
+    pub tokens: Vec<u32>,
+    /// Per-token logprobs (first token from the host sampler, rest from the
+    /// compiled decode chunks).
+    pub logprobs: Vec<f32>,
+    /// Wall-clock start of this request's processing (prefill begin).
+    pub started: std::time::Instant,
+}
+
+/// Slot table.
+#[derive(Debug)]
+pub struct SlotTable {
+    slots: Vec<Option<InFlight>>,
+}
+
+impl SlotTable {
+    pub fn new(n_slots: usize) -> SlotTable {
+        SlotTable { slots: (0..n_slots).map(|_| None).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.len() - self.active_count()
+    }
+
+    /// Claim a free slot for a request. Returns the slot index.
+    pub fn claim(&mut self, inflight: InFlight) -> Option<usize> {
+        let idx = self.slots.iter().position(|s| s.is_none())?;
+        self.slots[idx] = Some(inflight);
+        Some(idx)
+    }
+
+    /// Release a slot, returning its in-flight state.
+    pub fn release(&mut self, idx: usize) -> Option<InFlight> {
+        self.slots[idx].take()
+    }
+
+    pub fn get(&self, idx: usize) -> Option<&InFlight> {
+        self.slots.get(idx).and_then(|s| s.as_ref())
+    }
+
+    pub fn get_mut(&mut self, idx: usize) -> Option<&mut InFlight> {
+        self.slots.get_mut(idx).and_then(|s| s.as_mut())
+    }
+
+    pub fn iter_active(&self) -> impl Iterator<Item = (usize, &InFlight)> {
+        self.slots.iter().enumerate().filter_map(|(i, s)| s.as_ref().map(|f| (i, f)))
+    }
+
+    pub fn iter_active_mut(&mut self) -> impl Iterator<Item = (usize, &mut InFlight)> {
+        self.slots.iter_mut().enumerate().filter_map(|(i, s)| s.as_mut().map(|f| (i, f)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+    use std::time::Instant;
+
+    fn mk(id: u64) -> InFlight {
+        InFlight { request_id: id, prompt_len: 4, tokens: vec![], logprobs: vec![], started: Instant::now() }
+    }
+
+    #[test]
+    fn claim_and_release() {
+        let mut t = SlotTable::new(2);
+        let a = t.claim(mk(1)).unwrap();
+        let b = t.claim(mk(2)).unwrap();
+        assert_ne!(a, b);
+        assert!(t.claim(mk(3)).is_none(), "table full");
+        let released = t.release(a).unwrap();
+        assert_eq!(released.request_id, 1);
+        assert_eq!(t.free_count(), 1);
+        assert!(t.claim(mk(3)).is_some());
+    }
+
+    #[test]
+    fn prop_allocator_invariants() {
+        prop::quick(
+            "slot allocator: no double alloc, conservation",
+            |rng: &mut Pcg64, size| {
+                let n_slots = rng.range(1, 6);
+                let ops: Vec<(bool, usize)> = (0..size.scaled(60))
+                    .map(|_| (rng.chance(0.6), rng.range(0, n_slots)))
+                    .collect();
+                (n_slots, ops)
+            },
+            |(n_slots, ops)| {
+                let mut t = SlotTable::new(*n_slots);
+                let mut next_id = 0u64;
+                let mut live: std::collections::HashSet<u64> = Default::default();
+                for &(is_claim, idx) in ops {
+                    if is_claim {
+                        if let Some(slot) = t.claim(mk(next_id)) {
+                            if slot >= *n_slots {
+                                return Err("slot index out of range".into());
+                            }
+                            live.insert(next_id);
+                            next_id += 1;
+                        } else if t.free_count() != 0 {
+                            return Err("claim failed with free slots".into());
+                        }
+                    } else if let Some(f) = t.release(idx) {
+                        if !live.remove(&f.request_id) {
+                            return Err(format!("released unknown request {}", f.request_id));
+                        }
+                    }
+                    if t.active_count() != live.len() {
+                        return Err(format!(
+                            "active {} != live {}",
+                            t.active_count(),
+                            live.len()
+                        ));
+                    }
+                    if t.active_count() + t.free_count() != *n_slots {
+                        return Err("slot conservation violated".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

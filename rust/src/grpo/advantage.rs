@@ -1,0 +1,99 @@
+//! Group-normalised advantages (GRPO).
+//!
+//! For a group of G rewards r_1..r_G generated from the same prompt,
+//! A_i = (r_i - mean(r)) / (std(r) + eps). A zero-variance group (all
+//! rollouts equally right/wrong) yields all-zero advantages — the group
+//! contributes only its KL term to the loss, matching standard GRPO
+//! implementations.
+
+/// Epsilon guarding the std division.
+pub const ADV_EPS: f32 = 1e-6;
+
+/// Compute group-normalised advantages.
+pub fn group_advantages(rewards: &[f32]) -> Vec<f32> {
+    let g = rewards.len();
+    if g == 0 {
+        return Vec::new();
+    }
+    let mean = rewards.iter().sum::<f32>() / g as f32;
+    let var = rewards.iter().map(|r| (r - mean) * (r - mean)).sum::<f32>() / g as f32;
+    let std = var.sqrt();
+    if std < ADV_EPS {
+        return vec![0.0; g];
+    }
+    rewards.iter().map(|r| (r - mean) / (std + ADV_EPS)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn zero_variance_gives_zero_advantage() {
+        assert_eq!(group_advantages(&[1.0; 8]), vec![0.0; 8]);
+        assert_eq!(group_advantages(&[0.0; 8]), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn mixed_rewards_sign_structure() {
+        let a = group_advantages(&[1.0, 0.0, 0.0, 0.0]);
+        assert!(a[0] > 0.0);
+        assert!(a[1] < 0.0);
+        assert_eq!(a[1], a[2]);
+    }
+
+    #[test]
+    fn empty_group() {
+        assert!(group_advantages(&[]).is_empty());
+    }
+
+    #[test]
+    fn prop_zero_mean_unit_scale() {
+        prop::quick(
+            "advantages are zero-mean, bounded scale",
+            |rng: &mut Pcg64, size| {
+                let g = rng.range(2, size.scaled(32).max(2) + 2);
+                (0..g).map(|_| if rng.chance(0.5) { 1.0 } else { 0.0 }).collect::<Vec<f32>>()
+            },
+            |rewards| {
+                let adv = group_advantages(rewards);
+                let mean: f32 = adv.iter().sum::<f32>() / adv.len() as f32;
+                if mean.abs() > 1e-4 {
+                    return Err(format!("advantage mean {mean} not ~0"));
+                }
+                // normalised by std -> values bounded by sqrt(G)
+                let bound = (adv.len() as f32).sqrt() + 1e-3;
+                if adv.iter().any(|a| a.abs() > bound) {
+                    return Err(format!("advantage exceeds sqrt(G) bound {bound}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_shift_invariance() {
+        prop::quick(
+            "advantages invariant to reward shift",
+            |rng: &mut Pcg64, size| {
+                let g = rng.range(2, size.scaled(16).max(2) + 2);
+                let rewards: Vec<f32> = (0..g).map(|_| rng.f32()).collect();
+                let shift = rng.f32() * 10.0 - 5.0;
+                (rewards, shift)
+            },
+            |(rewards, shift)| {
+                let a = group_advantages(rewards);
+                let shifted: Vec<f32> = rewards.iter().map(|r| r + shift).collect();
+                let b = group_advantages(&shifted);
+                for (x, y) in a.iter().zip(&b) {
+                    if (x - y).abs() > 1e-3 {
+                        return Err(format!("shift changed advantage: {x} vs {y}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,368 @@
+//! Micro-batch construction for the two compiled train-step layouts.
+//!
+//! Both builders lower a set of (prompt, response, advantage) samples into the
+//! flat i32/f32 arrays the AOT train-step artifacts consume. Per-token loss
+//! weights encode the GRPO normalisation (1/n_samples * 1/|o_k| on response-
+//! token label positions, 0 elsewhere), so the L2 loss is simply
+//! `sum(weight * per_token_term)` and padded rows/positions contribute
+//! nothing. The weights of a full micro-batch sum to exactly 1.
+//!
+//! **Standard layout** (`train_step`): one sample per row `[m, S]`, prompt and
+//! response concatenated, causal attention; the prompt is recomputed for every
+//! row of the same group — the redundancy SPA removes.
+//!
+//! **Shared-prompt layout** (`train_step_spa`, paper §4.3): one GRPO group per
+//! micro-batch, packed as `[prompt, seg_1, ..., seg_K]` in a single row. Each
+//! response segment *duplicates the final prompt token* as its first input
+//! token (at the same rope position `Lp-1`): the duplicate's attention context
+//! is {prompt[0..Lp-1], itself} — exactly the original last prompt token's
+//! context — so its hidden state equals the standard computation's, and the
+//! first response token's logprob is recovered exactly rather than dropped.
+//! Segment tokens attend `{prompt[0..Lp-1]} ∪ {own segment ≤ self}`; the
+//! original last prompt token's K/V is attended only by the prompt itself.
+//! This makes SPA *exactly* equivalent to per-sample causal training
+//! (∇L_shared = Σ∇L_k with no approximation), which the python tests assert.
+
+use super::types::Group;
+use crate::data::PAD;
+
+/// A lowered micro-batch ready for a train-step artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainBatch {
+    /// Rows (m for standard layout, 1 for SPA).
+    pub rows: usize,
+    /// Padded row length.
+    pub seq: usize,
+    /// `[rows*seq]` input token ids.
+    pub tokens: Vec<i32>,
+    /// `[rows*seq]` label ids (PAD where unused; weight is 0 there).
+    pub labels: Vec<i32>,
+    /// `[rows*seq]` rope position ids.
+    pub pos: Vec<i32>,
+    /// `[rows*seq]` segment ids (SPA: -1 pad, 0 prompt, 1..=K responses;
+    /// standard layout: 0 for valid tokens, -1 for padding).
+    pub seg: Vec<i32>,
+    /// `[rows*seq]` per-token advantage (broadcast from the sample).
+    pub adv: Vec<f32>,
+    /// `[rows*seq]` per-token loss weight; sums to 1 over a full micro-batch.
+    pub weight: Vec<f32>,
+    /// Samples represented.
+    pub n_samples: usize,
+    /// Response tokens carrying loss (weight > 0).
+    pub n_loss_tokens: usize,
+    /// Total non-pad input tokens (compute volume; TPSPD counts these).
+    pub n_input_tokens: usize,
+}
+
+/// One sample: prompt tokens, response tokens, advantage.
+#[derive(Debug, Clone)]
+pub struct Sample<'a> {
+    pub prompt: &'a [u32],
+    pub response: &'a [u32],
+    pub advantage: f32,
+}
+
+impl<'a> Sample<'a> {
+    pub fn from_group(group: &'a Group) -> Vec<Sample<'a>> {
+        group
+            .rollouts
+            .iter()
+            .zip(&group.advantages)
+            .map(|(r, &a)| Sample {
+                prompt: &group.prompt.tokens,
+                response: &r.tokens,
+                advantage: a,
+            })
+            .collect()
+    }
+}
+
+/// Build a standard-layout micro-batch. `samples.len() <= rows`; spare rows
+/// are fully padded with zero weight. Responses longer than the row allows
+/// are truncated (callers size `seq >= prompt_max + max_new` so this only
+/// triggers on misconfiguration).
+pub fn build_standard(samples: &[Sample], rows: usize, seq: usize) -> TrainBatch {
+    assert!(samples.len() <= rows, "{} samples > {rows} rows", samples.len());
+    let n = rows * seq;
+    let mut b = TrainBatch {
+        rows,
+        seq,
+        tokens: vec![PAD as i32; n],
+        labels: vec![PAD as i32; n],
+        pos: vec![0; n],
+        seg: vec![-1; n],
+        adv: vec![0.0; n],
+        weight: vec![0.0; n],
+        n_samples: samples.len(),
+        n_loss_tokens: 0,
+        n_input_tokens: 0,
+    };
+    let m = samples.len().max(1);
+    for (row, s) in samples.iter().enumerate() {
+        let base = row * seq;
+        let lp = s.prompt.len().min(seq);
+        let lr = s.response.len().min(seq - lp);
+        let total = lp + lr;
+        for (i, &t) in s.prompt[..lp].iter().chain(s.response[..lr].iter()).enumerate() {
+            b.tokens[base + i] = t as i32;
+            b.pos[base + i] = i as i32;
+            b.seg[base + i] = 0;
+        }
+        // labels: position t predicts tokens[t+1]
+        for t in 0..total.saturating_sub(1) {
+            b.labels[base + t] = b.tokens[base + t + 1];
+        }
+        // loss on label positions predicting response tokens:
+        // t in [lp-1, lp+lr-2] predicts response[0..lr]
+        if lr > 0 && lp > 0 {
+            let w = 1.0 / (m as f32 * lr as f32);
+            for t in (lp - 1)..(lp + lr - 1) {
+                b.weight[base + t] = w;
+                b.adv[base + t] = s.advantage;
+            }
+            b.n_loss_tokens += lr;
+        }
+        b.n_input_tokens += total;
+    }
+    b
+}
+
+/// Build a shared-prompt (SPA) micro-batch from one group's samples.
+/// All samples must share the same prompt. Returns `None` if the packed
+/// group does not fit in `pack_len` (caller falls back to standard layout).
+pub fn build_spa(samples: &[Sample], pack_len: usize) -> Option<TrainBatch> {
+    assert!(!samples.is_empty());
+    let prompt = samples[0].prompt;
+    debug_assert!(samples.iter().all(|s| s.prompt == prompt), "SPA pack requires one shared prompt");
+    let lp = prompt.len();
+    if lp == 0 {
+        return None;
+    }
+    let needed: usize = lp + samples.iter().map(|s| s.response.len()).sum::<usize>();
+    if needed > pack_len {
+        return None;
+    }
+    let k = samples.len();
+    let n = pack_len;
+    let mut b = TrainBatch {
+        rows: 1,
+        seq: pack_len,
+        tokens: vec![PAD as i32; n],
+        labels: vec![PAD as i32; n],
+        pos: vec![0; n],
+        seg: vec![-1; n],
+        adv: vec![0.0; n],
+        weight: vec![0.0; n],
+        n_samples: k,
+        n_loss_tokens: 0,
+        n_input_tokens: 0,
+    };
+    // Prompt segment.
+    for (i, &t) in prompt.iter().enumerate() {
+        b.tokens[i] = t as i32;
+        b.pos[i] = i as i32;
+        b.seg[i] = 0;
+    }
+    let mut cursor = lp;
+    for (s_idx, s) in samples.iter().enumerate() {
+        let lr = s.response.len();
+        if lr == 0 {
+            continue;
+        }
+        let seg_id = (s_idx + 1) as i32;
+        let w = 1.0 / (k as f32 * lr as f32);
+        // Segment inputs: [prompt_last, response[0..lr-1]] at rope positions
+        // [lp-1, lp, ..., lp+lr-2]; labels: response[0..lr].
+        for i in 0..lr {
+            let idx = cursor + i;
+            b.tokens[idx] =
+                if i == 0 { prompt[lp - 1] as i32 } else { s.response[i - 1] as i32 };
+            b.pos[idx] = (lp - 1 + i) as i32;
+            b.seg[idx] = seg_id;
+            b.labels[idx] = s.response[i] as i32;
+            b.weight[idx] = w;
+            b.adv[idx] = s.advantage;
+        }
+        cursor += lr;
+        b.n_loss_tokens += lr;
+    }
+    b.n_input_tokens = cursor;
+    Some(b)
+}
+
+/// The paper's Eq. 5 complexity-reduction ratio rho for a packed group:
+/// shared cost / standard cost (attention token-pair counts).
+pub fn spa_ratio(lp: usize, lr: usize, k: usize) -> f64 {
+    let lp = lp as f64;
+    let lr = lr as f64;
+    let k = k as f64;
+    (lp * lp + k * lr * (lp + lr)) / (k * (lp + lr) * (lp + lr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    fn mk_samples<'a>(prompt: &'a [u32], responses: &'a [Vec<u32>]) -> Vec<Sample<'a>> {
+        responses
+            .iter()
+            .enumerate()
+            .map(|(i, r)| Sample { prompt, response: r, advantage: i as f32 - 1.0 })
+            .collect()
+    }
+
+    #[test]
+    fn standard_layout_shapes_and_shift() {
+        let prompt = vec![1u32, 10, 11, 12];
+        let responses = vec![vec![20u32, 21, 2], vec![30u32, 2]];
+        let samples = mk_samples(&prompt, &responses);
+        let b = build_standard(&samples, 4, 12);
+        assert_eq!(b.rows, 4);
+        assert_eq!(b.tokens.len(), 48);
+        // row 0: tokens = prompt + response
+        assert_eq!(&b.tokens[0..7], &[1, 10, 11, 12, 20, 21, 2]);
+        // labels shifted by one
+        assert_eq!(&b.labels[0..6], &[10, 11, 12, 20, 21, 2]);
+        // loss weights on label positions 3..6 (predicting the 3 response tokens)
+        assert_eq!(b.weight[2], 0.0);
+        assert!(b.weight[3] > 0.0 && b.weight[4] > 0.0 && b.weight[5] > 0.0);
+        assert_eq!(b.weight[6], 0.0);
+        assert_eq!(b.n_loss_tokens, 5);
+        assert_eq!(b.n_input_tokens, 7 + 6);
+    }
+
+    #[test]
+    fn standard_weights_sum_to_one() {
+        let prompt = vec![1u32, 10, 11];
+        let responses = vec![vec![20u32, 2], vec![30u32, 31, 32, 2], vec![40u32, 2]];
+        let samples = mk_samples(&prompt, &responses);
+        let b = build_standard(&samples, 3, 10);
+        let total: f32 = b.weight.iter().sum();
+        assert!((total - 1.0).abs() < 1e-5, "weights sum {total}");
+    }
+
+    #[test]
+    fn spa_pack_layout() {
+        let prompt = vec![1u32, 10, 11, 12]; // lp = 4
+        let responses = vec![vec![20u32, 21, 2], vec![30u32, 2]];
+        let samples = mk_samples(&prompt, &responses);
+        let b = build_spa(&samples, 16).unwrap();
+        assert_eq!(b.rows, 1);
+        // prompt occupies 0..4 with seg 0
+        assert_eq!(&b.tokens[0..4], &[1, 10, 11, 12]);
+        assert_eq!(&b.seg[0..4], &[0, 0, 0, 0]);
+        // segment 1: inputs [prompt_last=12, 20, 21], pos [3,4,5], labels [20,21,2]
+        assert_eq!(&b.tokens[4..7], &[12, 20, 21]);
+        assert_eq!(&b.pos[4..7], &[3, 4, 5]);
+        assert_eq!(&b.labels[4..7], &[20, 21, 2]);
+        assert_eq!(&b.seg[4..7], &[1, 1, 1]);
+        // segment 2: inputs [12, 30], labels [30, 2]
+        assert_eq!(&b.tokens[7..9], &[12, 30]);
+        assert_eq!(&b.labels[7..9], &[30, 2]);
+        assert_eq!(&b.seg[7..9], &[2, 2]);
+        // padding tail
+        assert_eq!(b.seg[9], -1);
+        let total: f32 = b.weight.iter().sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert_eq!(b.n_loss_tokens, 5);
+        assert_eq!(b.n_input_tokens, 9);
+    }
+
+    #[test]
+    fn spa_rejects_overflow() {
+        let prompt = vec![1u32; 10];
+        let responses = vec![vec![5u32; 8], vec![6u32; 8]];
+        let samples = mk_samples(&prompt, &responses);
+        assert!(build_spa(&samples, 20).is_none());
+        assert!(build_spa(&samples, 26).is_some());
+    }
+
+    #[test]
+    fn spa_ratio_matches_eq5_limits() {
+        // Lp >> Lr: rho -> 1/K
+        let rho = spa_ratio(1000, 10, 16);
+        assert!((rho - 1.0 / 16.0).abs() < 0.05, "rho {rho}");
+        // Lr >> Lp: rho -> 1 (no benefit)
+        let rho = spa_ratio(10, 1000, 16);
+        assert!(rho > 0.9, "rho {rho}");
+    }
+
+    #[test]
+    fn prop_spa_input_token_saving() {
+        // SPA packs lp + sum(lr) input tokens vs standard's k*lp + sum(lr).
+        prop::quick(
+            "spa packs fewer input tokens than standard",
+            |rng: &mut Pcg64, size| {
+                let lp = rng.range(2, size.scaled(40) + 3);
+                let k = rng.range(2, 9);
+                let responses: Vec<Vec<u32>> = (0..k)
+                    .map(|_| (0..rng.range(1, 12)).map(|_| 5 + rng.next_u64() as u32 % 10).collect())
+                    .collect();
+                let prompt: Vec<u32> = (0..lp).map(|_| 3 + rng.next_u64() as u32 % 10).collect();
+                (prompt, responses)
+            },
+            |(prompt, responses)| {
+                let samples = mk_samples(prompt, responses);
+                let sum_lr: usize = responses.iter().map(|r| r.len()).sum();
+                let pack_len = prompt.len() + sum_lr + 4;
+                let spa = build_spa(&samples, pack_len).ok_or("pack failed")?;
+                let std =
+                    build_standard(&samples, samples.len(), prompt.len() + 13);
+                if spa.n_input_tokens > std.n_input_tokens {
+                    return Err(format!(
+                        "spa {} tokens > std {}",
+                        spa.n_input_tokens, std.n_input_tokens
+                    ));
+                }
+                // identical loss-token counts & weight normalisation
+                if spa.n_loss_tokens != std.n_loss_tokens {
+                    return Err("loss token mismatch".into());
+                }
+                let ws: f32 = spa.weight.iter().sum();
+                let wt: f32 = std.weight.iter().sum();
+                if (ws - 1.0).abs() > 1e-4 || (wt - 1.0).abs() > 1e-4 {
+                    return Err(format!("weight sums {ws} {wt}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_spa_labels_cover_all_response_tokens() {
+        prop::quick(
+            "every response token appears exactly once as a weighted SPA label",
+            |rng: &mut Pcg64, size| {
+                let lp = rng.range(2, size.scaled(20) + 3);
+                let k = rng.range(1, 6);
+                let responses: Vec<Vec<u32>> = (0..k)
+                    .map(|_| (0..rng.range(1, 10)).map(|_| 3 + rng.next_u64() as u32 % 20).collect())
+                    .collect();
+                let prompt: Vec<u32> = (0..lp).map(|_| 3 + rng.next_u64() as u32 % 20).collect();
+                (prompt, responses)
+            },
+            |(prompt, responses)| {
+                let samples = mk_samples(prompt, responses);
+                let sum_lr: usize = responses.iter().map(|r| r.len()).sum();
+                let b = build_spa(&samples, prompt.len() + sum_lr).ok_or("pack failed")?;
+                let mut labelled: Vec<i32> = b
+                    .weight
+                    .iter()
+                    .zip(&b.labels)
+                    .filter(|(w, _)| **w > 0.0)
+                    .map(|(_, l)| *l)
+                    .collect();
+                let mut expected: Vec<i32> =
+                    responses.iter().flatten().map(|&t| t as i32).collect();
+                labelled.sort_unstable();
+                expected.sort_unstable();
+                if labelled != expected {
+                    return Err("labelled multiset != response tokens".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

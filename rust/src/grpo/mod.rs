@@ -1,0 +1,12 @@
+//! GRPO data plane: rollout/group types, rule-based rewards, group-normalised
+//! advantages, and micro-batch lowering for the two train-step layouts
+//! (standard causal and shared-prompt attention).
+
+pub mod advantage;
+pub mod batch;
+pub mod reward;
+pub mod types;
+
+pub use advantage::group_advantages;
+pub use batch::{build_spa, build_standard, spa_ratio, Sample, TrainBatch};
+pub use types::{Group, Rollout};

@@ -1,0 +1,97 @@
+//! Rule-based reward (the paper §6: "the predicted answer is considered
+//! correct if it can be accurately extracted and matches the ground-truth
+//! answer; otherwise it is deemed incorrect").
+//!
+//! Binary reward over the synthetic arithmetic task: decode the response,
+//! extract the integer answer, exact-match against ground truth.
+
+use crate::data::{Tokenizer, EOS};
+
+/// Extract the answer from decoded response text. The extraction rule is
+/// strict, mirroring GSM8K-style verifiers: the response up to EOS must be a
+/// bare (optionally sign-prefixed) integer, ignoring surrounding whitespace
+/// and a trailing period. Anything else fails extraction.
+pub fn extract_answer(text: &str) -> Option<i64> {
+    let t = text.trim().trim_end_matches('.').trim();
+    if t.is_empty() {
+        return None;
+    }
+    let (sign, digits) = match t.strip_prefix('-') {
+        Some(rest) => (-1i64, rest),
+        None => (1i64, t),
+    };
+    if digits.is_empty() || !digits.chars().all(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    // Reject absurdly long numbers (overflow guard).
+    if digits.len() > 18 {
+        return None;
+    }
+    digits.parse::<i64>().ok().map(|v| sign * v)
+}
+
+/// Score a response token sequence against the ground truth.
+pub fn score(tokenizer: &Tokenizer, response: &[u32], answer: i64) -> f32 {
+    // Responses that never emitted EOS were truncated; still score the text
+    // (matching the paper's handling of truncation at reduced context, §6.2:
+    // truncation lowers accuracy, it is not special-cased).
+    let text = tokenizer.decode(response);
+    match extract_answer(&text) {
+        Some(a) if a == answer => 1.0,
+        _ => 0.0,
+    }
+}
+
+/// Whether a response terminated with EOS.
+pub fn terminated(response: &[u32]) -> bool {
+    response.last() == Some(&EOS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Tokenizer, EOS};
+
+    #[test]
+    fn extracts_plain_integers() {
+        assert_eq!(extract_answer("42"), Some(42));
+        assert_eq!(extract_answer(" 42 "), Some(42));
+        assert_eq!(extract_answer("42."), Some(42));
+        assert_eq!(extract_answer("-7"), Some(-7));
+        assert_eq!(extract_answer("0"), Some(0));
+    }
+
+    #[test]
+    fn rejects_non_answers() {
+        assert_eq!(extract_answer(""), None);
+        assert_eq!(extract_answer("4 2"), None);
+        assert_eq!(extract_answer("abc"), None);
+        assert_eq!(extract_answer("4a"), None);
+        assert_eq!(extract_answer("--4"), None);
+        assert_eq!(extract_answer("99999999999999999999999"), None);
+    }
+
+    #[test]
+    fn scores_token_sequences() {
+        let t = Tokenizer::new();
+        let ids42: Vec<u32> = t.encode("42").unwrap();
+        let mut with_eos = ids42.clone();
+        with_eos.push(EOS);
+        assert_eq!(score(&t, &with_eos, 42), 1.0);
+        assert_eq!(score(&t, &with_eos, 43), 0.0);
+        // Truncated (no EOS) but correct text still scores.
+        assert_eq!(score(&t, &ids42, 42), 1.0);
+        // Garbage after the number fails strict extraction.
+        let bad = t.encode("42+").unwrap();
+        assert_eq!(score(&t, &bad, 42), 0.0);
+    }
+
+    #[test]
+    fn terminated_checks_eos() {
+        let t = Tokenizer::new();
+        let mut ids = t.encode("7").unwrap();
+        assert!(!terminated(&ids));
+        ids.push(EOS);
+        assert!(terminated(&ids));
+    }
+}

@@ -1,0 +1,51 @@
+//! Core GRPO data types flowing through the producer–consumer pipeline.
+
+use crate::data::Prompt;
+
+/// One generated response for a prompt, tagged with the policy version that
+/// produced it. The version tag makes the paper's on-policy invariant
+/// (Prop. 1: all rollouts in a batch come from θ_t) *structural*: the
+/// consumer asserts `weight_version == iteration` on every dequeue.
+#[derive(Debug, Clone)]
+pub struct Rollout {
+    /// Index within the group (0..G).
+    pub sample_idx: usize,
+    /// Policy version (iteration t) whose weights generated this rollout.
+    pub weight_version: u64,
+    /// Response token ids, including the terminating EOS if one was emitted.
+    pub tokens: Vec<u32>,
+    /// Engine-side per-token log-probabilities (diagnostics / integration
+    /// tests against the tri-model's old-policy logprobs).
+    pub logprobs: Vec<f32>,
+    /// Rule-based reward.
+    pub reward: f32,
+}
+
+/// A complete GRPO group: one prompt with its G scored rollouts and
+/// group-normalised advantages. The unit that flows through the shared queue
+/// (advantages need the full group, so groups are enqueued whole).
+#[derive(Debug, Clone)]
+pub struct Group {
+    pub prompt: Prompt,
+    pub weight_version: u64,
+    pub rollouts: Vec<Rollout>,
+    /// Group-normalised advantage per rollout.
+    pub advantages: Vec<f32>,
+    /// Wall-clock seconds spent generating this group (for the timeline).
+    pub gen_seconds: f64,
+}
+
+impl Group {
+    /// Total response tokens in the group (the "training tokens" that TPSPD
+    /// counts for non-SPA training; SPA counts packed tokens).
+    pub fn response_tokens(&self) -> usize {
+        self.rollouts.iter().map(|r| r.tokens.len()).sum()
+    }
+
+    pub fn mean_reward(&self) -> f32 {
+        if self.rollouts.is_empty() {
+            return 0.0;
+        }
+        self.rollouts.iter().map(|r| r.reward).sum::<f32>() / self.rollouts.len() as f32
+    }
+}

@@ -1,0 +1,155 @@
+//! `pa-rl` — command-line launcher.
+//!
+//! ```text
+//! pa-rl train     --config configs/small.json --mode async [--spa] [--iters N]
+//! pa-rl simulate  --table 1..5|all [--iters N]
+//! pa-rl inspect   --config configs/small.json
+//! pa-rl eval      --config configs/small.json --n 64 [--seed S]
+//! ```
+//!
+//! The examples/ binaries cover richer flows (SFT warmup, CSV curves,
+//! equivalence checking, serving benchmarks); this launcher is the minimal
+//! production entrypoint.
+
+use anyhow::{bail, Result};
+use pa_rl::config::Config;
+use pa_rl::coordinator::{evaluate, Driver, DriverOpts, Mode};
+use pa_rl::runtime::{Manifest, Runtime};
+use pa_rl::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "usage: pa-rl <train|simulate|inspect|eval> [--options]
+  train     --config FILE [--mode sync|async|stale] [--spa] [--iters N] [--seed S]
+  simulate  [--table 1|2|3|4|5|all] [--iters N]
+  inspect   --config FILE
+  eval      --config FILE [--n N] [--seed S]";
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("eval") => cmd_eval(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn load_cfg(args: &Args) -> Result<(Config, PathBuf)> {
+    let config_path = args.str_or("config", "configs/tiny.json");
+    let cfg = Config::load(Path::new(&config_path))?;
+    let artifacts = PathBuf::from(cfg.artifacts_dir());
+    if !artifacts.join("manifest.json").exists() {
+        bail!(
+            "artifacts missing at {} — run `make artifacts CONFIG={}`",
+            artifacts.display(),
+            config_path
+        );
+    }
+    Ok((cfg, artifacts))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (cfg, artifacts) = load_cfg(args)?;
+    let mode = Mode::parse(&args.str_or("mode", "async"))?;
+    let opts = DriverOpts { mode, spa: args.has_flag("spa"), seed: args.u64_or("seed", 0) };
+    let iters = args.u64_or("iters", cfg.rl.iters as u64);
+    let mut driver = Driver::new(cfg.clone(), &artifacts, opts)?;
+    for t in 0..iters {
+        let rep = driver.run(1)?;
+        let it = &rep.iters[0];
+        println!(
+            "iter {t:>3}  reward {:>6.3}  loss {:>9.5}  kl {:>8.5}  wall {:>6.2}s  tokens {:>7}",
+            it.reward_mean, it.stats.loss, it.stats.kl, it.wall_seconds, it.train_input_tokens
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    // Compact table printer; see examples/simulate_cluster.rs for the full
+    // side-by-side comparison output.
+    use pa_rl::sim::experiments;
+    use pa_rl::util::bench::{f3, Table};
+    let iters = args.usize_or("iters", 3);
+    let which = args.str_or("table", "all");
+    let print = |title: &str, rows: &[experiments::Row]| {
+        let mut t = Table::new(title, &["Setting", "Paper TPSPD", "Sim TPSPD"]);
+        for r in rows {
+            t.row(&[
+                r.setting.clone(),
+                r.paper_tpspd.map(f3).unwrap_or_default(),
+                f3(r.sim.tpspd),
+            ]);
+        }
+        t.print();
+    };
+    if which == "1" || which == "all" {
+        print("Table 1", &experiments::table1(iters));
+    }
+    if which == "2" || which == "all" {
+        let (g1, g2) = experiments::table2(iters);
+        print("Table 2 (group 1)", &g1);
+        print("Table 2 (group 2)", &g2);
+    }
+    if which == "3" || which == "all" {
+        print("Table 3", &experiments::table3(iters));
+    }
+    if which == "4" || which == "all" {
+        print("Table 4", &experiments::table4(iters));
+    }
+    if which == "5" || which == "all" {
+        let mut t = Table::new("Table 5 / Fig 6", &["NPUs", "Paper TPSPD", "Sim TPSPD"]);
+        for (n, paper, sim) in experiments::table5(iters) {
+            t.row(&[format!("{n}"), paper.map(f3).unwrap_or_default(), f3(sim.tpspd)]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let (cfg, artifacts) = load_cfg(args)?;
+    let manifest = Manifest::load(&artifacts)?;
+    println!("config:      {}", cfg.name);
+    println!(
+        "params:      {} ({:.2} MB f32)",
+        manifest.param_count,
+        manifest.param_count as f64 * 4e-6
+    );
+    println!("attn impl:   {}", manifest.attn_impl);
+    println!("fingerprint: {}", manifest.fingerprint);
+    println!("kv cache:    {:?}", manifest.kv_cache.shape);
+    println!("artifacts:");
+    for (name, a) in &manifest.artifacts {
+        let size = std::fs::metadata(&a.file).map(|m| m.len()).unwrap_or(0);
+        println!(
+            "  {name:<16} {:>4} inputs  {:>3} outputs  {:>8} bytes",
+            a.inputs.len(),
+            a.outputs.len(),
+            size
+        );
+    }
+    println!("param table:");
+    for p in &manifest.params {
+        println!("  {:<10} {:?}", p.name, p.shape);
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (cfg, artifacts) = load_cfg(args)?;
+    let n = args.usize_or("n", 64);
+    let rt = Runtime::load_validated(&artifacts, &cfg)?;
+    let params = rt.init_params(args.u64_or("seed", 0) as i32)?;
+    drop(rt);
+    let report = evaluate(&cfg, &artifacts, &params, n)?;
+    println!(
+        "accuracy {:.3} ({}/{}), mean response length {:.1}",
+        report.accuracy, report.correct, report.n, report.mean_response_len
+    );
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Measurement plane: wall-clock timeline traces (paper Fig. 3), TPSPD
+//! throughput accounting (the paper's headline metric), and CSV curve logs
+//! (paper Fig. 5).
+
+pub mod trace;
+
+pub use trace::{Span, Trace};
+
+use std::time::Instant;
+
+/// Tokens-trained-per-second-per-device — the paper's primary metric
+/// ("end-to-end training throughput, measured by tokens trained per second
+/// per device"). On this testbed a "device" is one engine or trainer
+/// instance (each owns a PJRT client); the simulator uses real device counts.
+#[derive(Debug, Clone)]
+pub struct Tpspd {
+    started: Instant,
+    pub trained_tokens: u64,
+    pub devices: usize,
+}
+
+impl Tpspd {
+    pub fn start(devices: usize) -> Tpspd {
+        Tpspd { started: Instant::now(), trained_tokens: 0, devices }
+    }
+
+    pub fn add_tokens(&mut self, n: usize) {
+        self.trained_tokens += n as u64;
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn value(&self) -> f64 {
+        self.trained_tokens as f64 / (self.elapsed() * self.devices as f64).max(1e-9)
+    }
+
+    /// TPSPD from explicit components (simulator / offline computation).
+    pub fn compute(tokens: f64, seconds: f64, devices: usize) -> f64 {
+        tokens / (seconds * devices as f64).max(1e-12)
+    }
+}
+
+/// Append-only CSV logger for training curves (reward/loss/kl per step —
+/// regenerates paper Fig. 5).
+pub struct CsvLog {
+    path: std::path::PathBuf,
+    header: Vec<String>,
+    rows: Vec<Vec<f64>>,
+}
+
+impl CsvLog {
+    pub fn new(path: &std::path::Path, header: &[&str]) -> CsvLog {
+        CsvLog {
+            path: path.to_path_buf(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.header.len(), "csv row width");
+        self.rows.push(row.to_vec());
+    }
+
+    pub fn flush(&self) -> std::io::Result<()> {
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            let cells: Vec<String> = row.iter().map(|x| format!("{x}")).collect();
+            s.push_str(&cells.join(","));
+            s.push('\n');
+        }
+        std::fs::write(&self.path, s)
+    }
+
+    pub fn rows(&self) -> &[Vec<f64>] {
+        &self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tpspd_compute() {
+        assert_eq!(Tpspd::compute(1000.0, 10.0, 10), 10.0);
+        let mut t = Tpspd::start(2);
+        t.add_tokens(100);
+        assert_eq!(t.trained_tokens, 100);
+        assert!(t.value() > 0.0);
+    }
+
+    #[test]
+    fn csv_log_roundtrip() {
+        let dir = std::env::temp_dir().join("pa_rl_csv_test");
+        let path = dir.join("curve.csv");
+        let mut log = CsvLog::new(&path, &["step", "reward"]);
+        log.add(&[0.0, 0.1]);
+        log.add(&[1.0, 0.4]);
+        log.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,reward\n"));
+        assert_eq!(text.lines().count(), 3);
+    }
+}

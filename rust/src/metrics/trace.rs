@@ -1,0 +1,176 @@
+//! Wall-clock execution timeline (paper Figure 3).
+//!
+//! Threads record named spans into lanes ("infer-0", "train", "sync"); the
+//! trace renders as JSON (machine-readable) or as an ASCII timeline that
+//! makes the sync-vs-async overlap visible exactly like the paper's figure:
+//!
+//! ```text
+//! infer-0 |████████████░░░░░░░░░░░░|
+//! train   |░░░░████████████████████|
+//! ```
+
+use crate::util::json::Json;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One recorded span.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub lane: String,
+    pub name: String,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// Thread-safe trace recorder anchored at a run's start instant.
+#[derive(Clone)]
+pub struct Trace {
+    epoch: Instant,
+    spans: Arc<Mutex<Vec<Span>>>,
+}
+
+impl Default for Trace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace { epoch: Instant::now(), spans: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Record a span that started at `start_s` (from [`Trace::now`]) and ends
+    /// now.
+    pub fn record(&self, lane: &str, name: &str, start_s: f64) {
+        let end_s = self.now();
+        self.spans.lock().unwrap().push(Span {
+            lane: lane.to_string(),
+            name: name.to_string(),
+            start_s,
+            end_s,
+        });
+    }
+
+    /// Record with explicit bounds (simulator).
+    pub fn record_abs(&self, lane: &str, name: &str, start_s: f64, end_s: f64) {
+        self.spans.lock().unwrap().push(Span {
+            lane: lane.to_string(),
+            name: name.to_string(),
+            start_s,
+            end_s,
+        });
+    }
+
+    pub fn spans(&self) -> Vec<Span> {
+        self.spans.lock().unwrap().clone()
+    }
+
+    /// Total busy time per lane.
+    pub fn lane_busy(&self) -> Vec<(String, f64)> {
+        let spans = self.spans.lock().unwrap();
+        let mut lanes: Vec<(String, f64)> = Vec::new();
+        for s in spans.iter() {
+            match lanes.iter_mut().find(|(l, _)| *l == s.lane) {
+                Some((_, acc)) => *acc += s.end_s - s.start_s,
+                None => lanes.push((s.lane.clone(), s.end_s - s.start_s)),
+            }
+        }
+        lanes
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.spans().into_iter().map(|s| {
+            Json::obj(vec![
+                ("lane", Json::str(&s.lane)),
+                ("name", Json::str(&s.name)),
+                ("start", Json::num(s.start_s)),
+                ("end", Json::num(s.end_s)),
+            ])
+        }))
+    }
+
+    /// ASCII rendering: one row per lane, `width` columns over [0, t_max].
+    pub fn render_ascii(&self, width: usize) -> String {
+        let spans = self.spans();
+        if spans.is_empty() {
+            return String::from("(empty trace)\n");
+        }
+        let t_max = spans.iter().map(|s| s.end_s).fold(0.0f64, f64::max).max(1e-9);
+        let mut lanes: Vec<String> = Vec::new();
+        for s in &spans {
+            if !lanes.contains(&s.lane) {
+                lanes.push(s.lane.clone());
+            }
+        }
+        lanes.sort();
+        let name_w = lanes.iter().map(|l| l.len()).max().unwrap_or(4).max(4);
+        let mut out = String::new();
+        out.push_str(&format!(
+            "timeline 0.0s .. {t_max:.2}s ({} spans; █ busy, · idle)\n",
+            spans.len()
+        ));
+        for lane in &lanes {
+            let mut cells = vec!['·'; width];
+            for s in spans.iter().filter(|s| &s.lane == lane) {
+                let a = ((s.start_s / t_max) * width as f64).floor() as usize;
+                let b = ((s.end_s / t_max) * width as f64).ceil() as usize;
+                for cell in cells.iter_mut().take(b.min(width)).skip(a.min(width)) {
+                    *cell = '█';
+                }
+            }
+            let bar: String = cells.into_iter().collect();
+            out.push_str(&format!("{lane:<name_w$} |{bar}|\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_renders() {
+        let tr = Trace::new();
+        tr.record_abs("infer-0", "gen", 0.0, 0.6);
+        tr.record_abs("train", "micro", 0.3, 1.0);
+        let busy = tr.lane_busy();
+        assert_eq!(busy.len(), 2);
+        let infer = busy.iter().find(|(l, _)| l == "infer-0").unwrap().1;
+        assert!((infer - 0.6).abs() < 1e-9);
+        let art = tr.render_ascii(20);
+        assert!(art.contains("infer-0"));
+        assert!(art.contains('█'));
+        // json form parses back
+        let j = tr.to_json();
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn thread_safe_recording() {
+        let tr = Trace::new();
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            let tr2 = tr.clone();
+            handles.push(std::thread::spawn(move || {
+                for k in 0..25 {
+                    tr2.record_abs(&format!("lane-{i}"), "x", k as f64, k as f64 + 0.5);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(tr.spans().len(), 100);
+    }
+
+    #[test]
+    fn empty_trace_renders() {
+        assert!(Trace::new().render_ascii(10).contains("empty"));
+    }
+}

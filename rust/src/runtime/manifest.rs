@@ -1,0 +1,243 @@
+//! `manifest.json` — the contract between the python AOT pipeline and the
+//! rust runtime.
+//!
+//! The manifest describes every artifact's input/output signature, the
+//! parameter table (names/shapes in flattening order), the KV-cache geometry
+//! and the resolved config that was baked into the shapes. The runtime
+//! validates arguments against these signatures before every execution and
+//! refuses to start if the manifest disagrees with the rust-side config.
+
+use crate::config::Config;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::tensor::DType;
+
+/// Shape + dtype + name of one tensor in a signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req_str("name")?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_usize_vec()
+                .context("tensor spec shape")?,
+            dtype: DType::parse(j.req_str("dtype")?)?,
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub fingerprint: String,
+    pub attn_impl: String,
+    pub dir: PathBuf,
+    pub param_count: usize,
+    /// Parameter tensors in flattening order (the PARAM_NAMES contract).
+    pub params: Vec<TensorSpec>,
+    pub kv_cache: TensorSpec,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    /// Resolved config echoed by the AOT pipeline.
+    pub config: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let params = j
+            .req("params")?
+            .as_arr()
+            .context("params must be an array")?
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+
+        let kv = j.req("kv_cache")?;
+        let kv_cache = TensorSpec {
+            name: "kv".into(),
+            shape: kv.req("shape")?.as_usize_vec().context("kv shape")?,
+            dtype: DType::parse(kv.str_or("dtype", "float32"))?,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts")?.as_obj().context("artifacts obj")? {
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .context("inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()
+                .context("outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(a.req_str("file")?),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let st = j.req("special_tokens")?;
+        Ok(Manifest {
+            version: j.req_usize("version")?,
+            fingerprint: j.str_or("fingerprint", "").to_string(),
+            attn_impl: j.str_or("attn_impl", "jnp").to_string(),
+            dir: dir.to_path_buf(),
+            param_count: j.req_usize("param_count")?,
+            params,
+            kv_cache,
+            artifacts,
+            pad_id: st.req_usize("pad")? as i32,
+            bos_id: st.req_usize("bos")? as i32,
+            eos_id: st.req_usize("eos")? as i32,
+            config: j.req("config")?.clone(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest (have: {:?})", self.artifacts.keys().collect::<Vec<_>>()))
+    }
+
+    /// Total parameter element count (sum over the param table).
+    pub fn param_elements(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+
+    /// Cross-check the manifest against the rust-side config resolution.
+    /// Any mismatch means artifacts were built from a different config and
+    /// every shape downstream would be garbage — fail loudly here.
+    pub fn validate(&self, cfg: &Config) -> Result<()> {
+        let m = self.config.req("model")?;
+        let checks: [(&str, usize, usize); 6] = [
+            ("vocab_size", m.req_usize("vocab_size")?, cfg.model.vocab_size),
+            ("d_model", m.req_usize("d_model")?, cfg.model.d_model),
+            ("n_layers", m.req_usize("n_layers")?, cfg.model.n_layers),
+            ("n_heads", m.req_usize("n_heads")?, cfg.model.n_heads),
+            ("n_kv_heads", m.req_usize("n_kv_heads")?, cfg.model.n_kv_heads),
+            ("d_ff", m.req_usize("d_ff")?, cfg.model.d_ff),
+        ];
+        for (name, manifest_v, config_v) in checks {
+            if manifest_v != config_v {
+                bail!("manifest/config mismatch on model.{name}: artifacts built with {manifest_v}, config says {config_v} — re-run `make artifacts`");
+            }
+        }
+        let e = self.config.req("engine")?;
+        for (name, mv, cv) in [
+            ("n_slots", e.req_usize("n_slots")?, cfg.engine.n_slots),
+            ("prompt_max", e.req_usize("prompt_max")?, cfg.engine.prompt_max),
+            ("decode_chunk", e.req_usize("decode_chunk")?, cfg.engine.decode_chunk),
+            ("max_new", e.req_usize("max_new")?, cfg.engine.max_new),
+        ] {
+            if mv != cv {
+                bail!("manifest/config mismatch on engine.{name}: {mv} vs {cv} — re-run `make artifacts`");
+            }
+        }
+        let t = self.config.req("train")?;
+        for (name, mv, cv) in [
+            ("micro_bs", t.req_usize("micro_bs")?, cfg.train.micro_bs),
+            ("seq_len", t.req_usize("seq_len")?, cfg.train.seq_len),
+            ("spa_k", t.req_usize("spa_k")?, cfg.train.spa.k),
+            ("spa_pack_len", t.req_usize("spa_pack_len")?, cfg.train.spa.pack_len),
+        ] {
+            if mv != cv {
+                bail!("manifest/config mismatch on train.{name}: {mv} vs {cv} — re-run `make artifacts`");
+            }
+        }
+        if cfg.model.param_count() != self.param_count {
+            bail!(
+                "param count mismatch: rust computes {}, manifest says {}",
+                cfg.model.param_count(),
+                self.param_count
+            );
+        }
+        // param table consistency
+        let total: usize = self.param_elements();
+        if total != self.param_count {
+            bail!("manifest param table sums to {total}, param_count says {}", self.param_count);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DEMO: &str = r#"{
+      "version": 3,
+      "fingerprint": "abc",
+      "attn_impl": "jnp",
+      "config": {"model": {"vocab_size": 8}},
+      "param_count": 20,
+      "params": [
+        {"name": "tok_emb", "shape": [4, 3], "dtype": "float32"},
+        {"name": "lm_head", "shape": [8], "dtype": "float32"}
+      ],
+      "kv_cache": {"shape": [2, 3, 2, 8, 2, 4], "dtype": "float32"},
+      "artifacts": {
+        "init": {"file": "init.hlo.txt",
+                 "inputs": [{"name": "seed", "shape": [], "dtype": "int32"}],
+                 "outputs": [{"name": "tok_emb", "shape": [4, 3], "dtype": "float32"}]}
+      },
+      "special_tokens": {"pad": 0, "bos": 1, "eos": 2}
+    }"#;
+
+    #[test]
+    fn parses_demo_manifest() {
+        let dir = std::env::temp_dir().join("pa_rl_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), DEMO).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.version, 3);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].shape, vec![4, 3]);
+        assert_eq!(m.param_elements(), 20);
+        assert_eq!(m.eos_id, 2);
+        let a = m.artifact("init").unwrap();
+        assert_eq!(a.inputs[0].name, "seed");
+        assert!(a.file.ends_with("init.hlo.txt"));
+        assert!(m.artifact("nope").is_err());
+    }
+}

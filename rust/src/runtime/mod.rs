@@ -1,0 +1,245 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! One `Runtime` per thread: the `xla` crate's `PjRtClient` is `Rc`-based
+//! (not thread-safe to clone), so every engine instance and the trainer each
+//! construct their own client and compile their own executables. This mirrors
+//! the paper's decoupled deployment — training and inference run as separate
+//! instances whose only coupling is the host-side weight publication at
+//! iteration boundaries (plus the rollout queue).
+//!
+//! Execution model per call: host tensors are validated against the
+//! manifest signature, uploaded as device buffers alongside any persistent
+//! buffers the caller retained (params, KV cache), executed via
+//! `execute_b`, and the tuple result is read back as host tensors.
+
+pub mod manifest;
+pub mod params;
+pub mod tensor;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use params::{DeviceParams, HostParams};
+pub use tensor::{DType, TData, Tensor};
+
+use crate::config::Config;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// An argument to [`Runtime::run`]: either a host tensor (uploaded for this
+/// call) or a persistent device buffer the caller keeps across calls.
+pub enum Arg<'a> {
+    Host(&'a Tensor),
+    Buf(&'a xla::PjRtBuffer),
+}
+
+impl<'a> From<&'a Tensor> for Arg<'a> {
+    fn from(t: &'a Tensor) -> Self {
+        Arg::Host(t)
+    }
+}
+
+impl<'a> From<&'a xla::PjRtBuffer> for Arg<'a> {
+    fn from(b: &'a xla::PjRtBuffer) -> Self {
+        Arg::Buf(b)
+    }
+}
+
+/// Cumulative execution statistics (profiling / the timeline trace).
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub calls: u64,
+    pub exec_seconds: f64,
+    pub upload_seconds: f64,
+    pub download_seconds: f64,
+    pub compile_seconds: f64,
+}
+
+/// Per-thread PJRT runtime bound to one artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<HashMap<String, RunStats>>,
+}
+
+impl Runtime {
+    /// Load the manifest and create a PJRT CPU client. Artifacts compile
+    /// lazily on first use (see [`Runtime::prepare`] to force).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Load and validate against a rust-side config.
+    pub fn load_validated(dir: &Path, cfg: &Config) -> Result<Runtime> {
+        let rt = Self::load(dir)?;
+        rt.manifest.validate(cfg).context("manifest/config validation")?;
+        Ok(rt)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Eagerly compile a set of artifacts (engines: prefill/decode; trainer:
+    /// train_step/adam_update/...), so the first iteration isn't skewed.
+    pub fn prepare(&self, names: &[&str]) -> Result<()> {
+        for name in names {
+            self.exe(name)?;
+        }
+        Ok(())
+    }
+
+    fn exe(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.borrow_mut().entry(name.to_string()).or_default().compile_seconds += dt;
+        let exe = Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a host tensor to a device buffer on this runtime's client.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        match &t.data {
+            TData::F32(v) => self
+                .client
+                .buffer_from_host_buffer(v, &t.shape, None)
+                .context("uploading f32 tensor"),
+            TData::I32(v) => self
+                .client
+                .buffer_from_host_buffer(v, &t.shape, None)
+                .context("uploading i32 tensor"),
+        }
+    }
+
+    /// Execute an artifact. `args` must match the manifest signature
+    /// (host tensors are validated; persistent buffers are trusted — they
+    /// were validated when uploaded). Returns the flattened tuple outputs.
+    pub fn run(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let exe = self.exe(name)?;
+        let spec = self.manifest.artifact(name)?;
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{name}': {} args given, signature has {}",
+                args.len(),
+                spec.inputs.len()
+            );
+        }
+
+        let t_up = Instant::now();
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut ordered: Vec<(bool, usize)> = Vec::new(); // (is_owned, index)
+        for (i, (arg, ispec)) in args.iter().zip(&spec.inputs).enumerate() {
+            match arg {
+                Arg::Host(t) => {
+                    if t.shape != ispec.shape {
+                        bail!(
+                            "artifact '{name}' input {i} ('{}'): shape {:?} != expected {:?}",
+                            ispec.name, t.shape, ispec.shape
+                        );
+                    }
+                    if t.dtype() != ispec.dtype {
+                        bail!(
+                            "artifact '{name}' input {i} ('{}'): dtype {:?} != expected {:?}",
+                            ispec.name, t.dtype(), ispec.dtype
+                        );
+                    }
+                    owned.push(self.upload(t)?);
+                    ordered.push((true, owned.len() - 1));
+                }
+                Arg::Buf(_) => ordered.push((false, i)),
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> = ordered
+            .iter()
+            .map(|&(is_owned, idx)| {
+                if is_owned {
+                    &owned[idx]
+                } else {
+                    match args[idx] {
+                        Arg::Buf(b) => b,
+                        _ => unreachable!(),
+                    }
+                }
+            })
+            .collect();
+        let upload_s = t_up.elapsed().as_secs_f64();
+
+        let t_ex = Instant::now();
+        let result = exe
+            .execute_b(&refs)
+            .with_context(|| format!("executing artifact '{name}'"))?;
+        let exec_s = t_ex.elapsed().as_secs_f64();
+
+        let t_dl = Instant::now();
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("downloading result tuple")?;
+        let lits = tuple.to_tuple().context("untupling result")?;
+        if lits.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{name}': {} outputs, signature has {}",
+                lits.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(lits.len());
+        for (lit, ospec) in lits.iter().zip(&spec.outputs) {
+            let t = Tensor::from_literal(lit)
+                .with_context(|| format!("reading output '{}'", ospec.name))?;
+            if t.shape != ospec.shape {
+                bail!(
+                    "artifact '{name}' output '{}': shape {:?} != manifest {:?}",
+                    ospec.name, t.shape, ospec.shape
+                );
+            }
+            out.push(t);
+        }
+        let download_s = t_dl.elapsed().as_secs_f64();
+
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.exec_seconds += exec_s;
+        s.upload_seconds += upload_s;
+        s.download_seconds += download_s;
+        Ok(out)
+    }
+
+    /// Initialise model parameters via the `init` artifact.
+    pub fn init_params(&self, seed: i32) -> Result<HostParams> {
+        let seed_t = Tensor::scalar_i32(seed);
+        let tensors = self.run("init", &[Arg::Host(&seed_t)])?;
+        let hp = HostParams { tensors, version: 0 };
+        hp.validate(self)?;
+        Ok(hp)
+    }
+
+    /// Snapshot of per-artifact execution statistics.
+    pub fn stats(&self) -> HashMap<String, RunStats> {
+        self.stats.borrow().clone()
+    }
+}

@@ -1,0 +1,88 @@
+//! Model parameter sets: host-resident (the currency of weight sync) and
+//! device-resident (uploaded once per iteration / per publication).
+//!
+//! The paper's weight-synchronisation protocol (Algorithm 1 line 3) moves the
+//! policy weights from the trainer to every rollout worker at iteration
+//! boundaries. Here `HostParams` is the published snapshot — an `Arc` swap in
+//! the coordinator — and each engine instance uploads it into its *own* PJRT
+//! client's buffers (`DeviceParams`), which models the per-instance weight
+//! transfer the paper pays on NPU/GPU clusters (and we measure its cost).
+
+use super::tensor::Tensor;
+use super::Runtime;
+use anyhow::{bail, Result};
+
+/// A complete set of model parameters on the host, tagged with the policy
+/// version that produced it (iteration index). The version tag is what makes
+/// the on-policy invariant checkable end-to-end.
+#[derive(Debug, Clone)]
+pub struct HostParams {
+    /// Tensors in manifest param-table order.
+    pub tensors: Vec<Tensor>,
+    /// Policy version: 0 = initial weights, t = after iteration t's update.
+    pub version: u64,
+}
+
+impl HostParams {
+    /// Validate count/shapes against the runtime's manifest.
+    pub fn validate(&self, rt: &Runtime) -> Result<()> {
+        let specs = &rt.manifest().params;
+        if specs.len() != self.tensors.len() {
+            bail!("param count mismatch: {} vs manifest {}", self.tensors.len(), specs.len());
+        }
+        for (t, s) in self.tensors.iter().zip(specs) {
+            if t.shape != s.shape {
+                bail!("param '{}' shape {:?} != manifest {:?}", s.name, t.shape, s.shape);
+            }
+        }
+        Ok(())
+    }
+
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Approximate bytes (f32).
+    pub fn bytes(&self) -> usize {
+        self.elements() * 4
+    }
+
+    /// Upload to device buffers on `rt`'s client.
+    pub fn upload(&self, rt: &Runtime) -> Result<DeviceParams> {
+        let bufs = self
+            .tensors
+            .iter()
+            .map(|t| rt.upload(t))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(DeviceParams { bufs, version: self.version })
+    }
+
+    /// Zero-valued params with manifest shapes (optimizer-state init).
+    pub fn zeros_like(rt: &Runtime) -> HostParams {
+        let tensors = rt
+            .manifest()
+            .params
+            .iter()
+            .map(|s| Tensor::zeros_f32(&s.shape))
+            .collect();
+        HostParams { tensors, version: 0 }
+    }
+}
+
+/// Parameters uploaded to one PJRT client. NOT `Send` (PJRT buffers are tied
+/// to their client's thread in this crate); each thread owns its copy.
+pub struct DeviceParams {
+    pub bufs: Vec<xla::PjRtBuffer>,
+    pub version: u64,
+}
+
+impl DeviceParams {
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+}

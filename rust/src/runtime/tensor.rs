@@ -1,0 +1,175 @@
+//! Host-side tensors crossing the PJRT boundary.
+//!
+//! `Tensor` is the thread-safe (plain `Vec`-backed) currency between the
+//! coordinator's threads; each thread's [`super::Runtime`] converts it to/from
+//! `xla::Literal` at its own PJRT client boundary.
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a tensor (the subset pa-rl uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// Tensor payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: shape + data. Scalars have an empty shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TData,
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TData::F32(data) }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TData::I32(data) }
+    }
+
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor { shape: vec![], data: TData::F32(vec![x]) }
+    }
+
+    pub fn scalar_i32(x: i32) -> Tensor {
+        Tensor { shape: vec![], data: TData::I32(vec![x]) }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::f32(vec![0.0; shape.iter().product()], shape)
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TData::F32(_) => DType::F32,
+            TData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TData::F32(v) => v.len(),
+            TData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            TData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self.data {
+            TData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        match &self.data {
+            TData::F32(v) if v.len() == 1 => Ok(v[0]),
+            TData::I32(v) if v.len() == 1 => Ok(v[0] as f32),
+            _ => bail!("tensor is not a scalar (shape {:?})", self.shape),
+        }
+    }
+
+    /// Convert to an `xla::Literal` (host-side copy).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TData::F32(v) => xla::Literal::vec1(v),
+            TData::I32(v) => xla::Literal::vec1(v),
+        };
+        lit.reshape(&dims).context("reshaping literal")
+    }
+
+    /// Read back from an `xla::Literal`.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.shape().context("literal shape")?;
+        let arr = xla::ArrayShape::try_from(&shape).context("literal is not an array")?;
+        let dims: Vec<usize> = arr.dims().iter().map(|&d| d as usize).collect();
+        match arr.element_type() {
+            xla::ElementType::F32 => Ok(Tensor::f32(lit.to_vec::<f32>()?, &dims)),
+            xla::ElementType::S32 => Ok(Tensor::i32(lit.to_vec::<i32>()?, &dims)),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar() {
+        let t = Tensor::scalar_i32(-7);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[-7]);
+        assert!(back.shape.is_empty());
+        assert_eq!(back.scalar().unwrap(), -7.0);
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("bfloat16").is_err());
+    }
+
+    #[test]
+    fn accessor_errors() {
+        let t = Tensor::i32(vec![1, 2], &[2]);
+        assert!(t.as_f32().is_err());
+        assert!(t.scalar().is_err());
+        assert_eq!(t.as_i32().unwrap(), &[1, 2]);
+    }
+}

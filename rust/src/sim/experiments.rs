@@ -1,0 +1,349 @@
+//! Paper experiment configurations (Tables 1–5, Fig. 6) and their reference
+//! numbers, wired to the simulator. Each `tableN()` returns rows pairing the
+//! paper's reported TPSPD with the simulated value so the bench binaries can
+//! print side-by-side comparisons and win-factor checks.
+
+use super::frameworks::{Framework, SimResult, SimSetup};
+use super::specs::{ClusterSpec, EfficiencySpec, ModelSpec, WorkloadSpec};
+
+/// One table row: the paper's setting name + reported TPSPD, and ours.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub setting: String,
+    pub paper_tpspd: Option<f64>,
+    pub sim: SimResult,
+}
+
+/// Render rows paper-vs-sim with win-factors relative to the last row (the
+/// paper's tables put "Async (ours)" last). Used by every bench binary.
+pub fn render_rows(title: &str, rows: &[Row]) -> String {
+    use crate::util::bench::{f3, fx, Table};
+    let base = rows.last().expect("non-empty rows");
+    let mut t = Table::new(
+        title,
+        &["Setting", "Paper TPSPD", "Sim TPSPD", "Paper win", "Sim win", "T_inf(s)", "T_train(s)"],
+    );
+    for r in rows {
+        let paper_win = match (base.paper_tpspd, r.paper_tpspd) {
+            (Some(a), Some(x)) if x > 0.0 => fx(a / x),
+            _ => "-".into(),
+        };
+        t.row(&[
+            r.setting.clone(),
+            r.paper_tpspd.map(f3).unwrap_or_else(|| "-".into()),
+            f3(r.sim.tpspd),
+            paper_win,
+            fx(base.sim.tpspd / r.sim.tpspd),
+            format!("{:.0}", r.sim.t_infer_mean),
+            format!("{:.0}", r.sim.t_train_mean),
+        ]);
+    }
+    t.note("'win' = last row (Async ours) over this row; shape, not absolute TPSPD, is the target");
+    t.render()
+}
+
+fn setup(
+    framework: Framework,
+    cluster: ClusterSpec,
+    model: ModelSpec,
+    workload: WorkloadSpec,
+    eff: EfficiencySpec,
+    infer_tp: usize,
+    spa: bool,
+    micro_bs: usize,
+    iters: usize,
+) -> SimSetup {
+    SimSetup {
+        cluster,
+        model,
+        workload,
+        eff,
+        framework,
+        infer_fraction: 0.8, // paper's typical training:rollout = 1:4
+        infer_tp,
+        spa,
+        train_micro_bs: micro_bs,
+        micro_launch_s: 0.5, // NPU-stack launch cost; table4 overrides for GPU
+        iters,
+        seed: 0xEA5,
+    }
+}
+
+/// Table 1: Qwen3-8B on DeepScaleR, 16 NPUs, batch 32, G=32, 16K context.
+pub fn table1(iters: usize) -> Vec<Row> {
+    let cluster = ClusterSpec::npu(16);
+    let model = ModelSpec::qwen(8.0);
+    let w = WorkloadSpec::deepscaler(32, 16384);
+    // Rollout TP per paper Table 9 (Exp 1): MindSpeed/ours TP2, VERL TP8.
+    let async_row =
+        setup(Framework::PeriodicAsync, cluster, model, w.clone(), EfficiencySpec::ours(), 2, false, 1, iters)
+            .run_tuned();
+    // paper deploys sync at the same training:rollout ratio as async
+    let mut sync_setup =
+        setup(Framework::DecoupledSync, cluster, model, w.clone(), EfficiencySpec::ours(), 2, false, 1, iters);
+    sync_setup.infer_fraction = async_row.infer_fraction;
+    vec![
+        Row {
+            setting: Framework::ColocatedSync.label().into(),
+            paper_tpspd: Some(61.641),
+            sim: setup(Framework::ColocatedSync, cluster, model, w.clone(), EfficiencySpec::mindspeed(), 2, false, 1, iters).run(),
+        },
+        Row {
+            setting: Framework::ColocatedContinuous.label().into(),
+            paper_tpspd: Some(155.521),
+            sim: setup(Framework::ColocatedContinuous, cluster, model, w.clone(), EfficiencySpec::verl(), 8, false, 16, iters).run(),
+        },
+        Row { setting: Framework::DecoupledSync.label().into(), paper_tpspd: Some(99.966), sim: sync_setup.run() },
+        Row { setting: Framework::PeriodicAsync.label().into(), paper_tpspd: Some(192.259), sim: async_row },
+    ]
+}
+
+/// Table 2: DeepSeek-R1-Distill-Qwen-32B on DeepScaleR.
+/// Group 1: GBS 32 @ 16K — MindSpeed on 64 NPUs vs ours on 48.
+/// Group 2: GBS 64 @ 8K on 64 NPUs (VERL OOMs at 16K).
+pub fn table2(iters: usize) -> (Vec<Row>, Vec<Row>) {
+    let model = ModelSpec::qwen(32.0);
+    let w16 = WorkloadSpec::deepscaler(32, 16384);
+    let g1 = vec![
+        Row {
+            setting: "MindSpeed-RL (64 NPU)".into(),
+            paper_tpspd: Some(6.627),
+            sim: setup(
+                Framework::ColocatedSync,
+                ClusterSpec::npu(64),
+                model,
+                w16.clone(),
+                EfficiencySpec::mindspeed(),
+                4,
+                false,
+                1,
+                iters,
+            )
+            .run(),
+        },
+        Row {
+            setting: "Sync ours (48 NPU)".into(),
+            paper_tpspd: Some(26.219),
+            sim: setup(
+                Framework::DecoupledSync,
+                ClusterSpec::npu(48),
+                model,
+                w16.clone(),
+                EfficiencySpec::ours(),
+                4,
+                false,
+                1,
+                iters,
+            )
+            .run_tuned(),
+        },
+        Row {
+            setting: "Async ours (48 NPU)".into(),
+            paper_tpspd: Some(33.449),
+            sim: setup(
+                Framework::PeriodicAsync,
+                ClusterSpec::npu(48),
+                model,
+                w16,
+                EfficiencySpec::ours(),
+                4,
+                false,
+                1,
+                iters,
+            )
+            .run_tuned(),
+        },
+    ];
+    let w8 = WorkloadSpec::deepscaler(64, 8192);
+    let g2 = vec![
+        Row {
+            setting: "VERL (64 NPU, 8K)".into(),
+            paper_tpspd: Some(44.016),
+            sim: setup(
+                Framework::ColocatedContinuous,
+                ClusterSpec::npu(64),
+                model,
+                w8.clone(),
+                EfficiencySpec::verl(),
+                8,
+                false,
+                64,
+                iters,
+            )
+            .run(),
+        },
+        Row {
+            setting: "Sync ours (64 NPU, 8K)".into(),
+            paper_tpspd: Some(46.519),
+            sim: setup(
+                Framework::DecoupledSync,
+                ClusterSpec::npu(64),
+                model,
+                w8.clone(),
+                EfficiencySpec::ours(),
+                4,
+                false,
+                1,
+                iters,
+            )
+            .run_tuned(),
+        },
+        Row {
+            setting: "Async ours (64 NPU, 8K)".into(),
+            paper_tpspd: Some(77.342),
+            sim: setup(
+                Framework::PeriodicAsync,
+                ClusterSpec::npu(64),
+                model,
+                w8,
+                EfficiencySpec::ours(),
+                4,
+                false,
+                1,
+                iters,
+            )
+            .run_tuned(),
+        },
+    ];
+    (g1, g2)
+}
+
+/// Table 3: Qwen2.5-7B on GSM8K, 16 NPUs, 1K context — the
+/// training-dominated regime where Shared-Prompt Attention bites.
+pub fn table3(iters: usize) -> Vec<Row> {
+    let cluster = ClusterSpec::npu(16);
+    let model = ModelSpec::qwen(7.0);
+    let w = WorkloadSpec::gsm8k(32);
+    let mk = |fw: Framework, eff: EfficiencySpec, spa: bool, micro: usize, label: &str, paper: f64| Row {
+        setting: label.into(),
+        paper_tpspd: Some(paper),
+        sim: setup(fw, cluster, model, w.clone(), eff, 2, spa, micro, iters).run_tuned(),
+    };
+    let mk2 = |fw: Framework, eff: EfficiencySpec, tp: usize, spa: bool, micro: usize, label: &str, paper: f64| Row {
+        setting: label.into(),
+        paper_tpspd: Some(paper),
+        sim: setup(fw, cluster, model, w.clone(), eff, tp, spa, micro, iters).run(),
+    };
+    vec![
+        mk2(Framework::ColocatedSync, EfficiencySpec::mindspeed(), 2, false, 16, "MindSpeed-RL", 199.142),
+        mk2(Framework::ColocatedContinuous, EfficiencySpec::verl(), 4, false, 16, "VERL", 167.297),
+        mk(Framework::PeriodicAsync, EfficiencySpec::ours(), false, 1, "Async ours, w/o SPA", 52.400),
+        mk(Framework::DecoupledSync, EfficiencySpec::ours(), true, 16, "Sync ours, w/ SPA", 218.396),
+        mk(Framework::PeriodicAsync, EfficiencySpec::ours(), true, 16, "Async ours, w/ SPA", 437.530),
+    ]
+}
+
+/// Table 4: Qwen2.5-1.5B on GSM8K, 8×A100-40G, data-parallel only.
+pub fn table4(iters: usize) -> Vec<Row> {
+    let cluster = ClusterSpec::gpu(8);
+    let model = ModelSpec::qwen(1.5);
+    let w = WorkloadSpec::gsm8k(32);
+    let mk = |fw: Framework, eff: EfficiencySpec, frac: f64, label: &str, paper: f64| {
+        let mut s = setup(fw, cluster, model, w.clone(), eff, 1, false, 4, iters);
+        s.micro_launch_s = 0.1; // GPU launches are much cheaper than NPU
+        s.infer_fraction = frac;
+        Row { setting: label.into(), paper_tpspd: Some(paper), sim: s.run_tuned() }
+    };
+    vec![
+        mk(Framework::ColocatedContinuous, EfficiencySpec::verl(), 0.5, "VERL", 488.919),
+        mk(Framework::FullyAsync, EfficiencySpec::areal(), 0.5, "AReaL", 1067.582),
+        // paper: ours uses training:rollout 3:1 on GPU... ratio 1:1 for sync
+        mk(Framework::DecoupledSync, EfficiencySpec::ours(), 0.5, "Sync ours", 628.503),
+        mk(Framework::PeriodicAsync, EfficiencySpec::ours(), 0.25, "Async ours", 1510.418),
+    ]
+}
+
+/// Table 5 / Fig. 6: Qwen3-8B scalability over 16/32/64 NPUs.
+pub fn table5(iters: usize) -> Vec<(usize, Option<f64>, SimResult)> {
+    let model = ModelSpec::qwen(8.0);
+    [(16usize, Some(188.162)), (32, Some(171.824)), (64, Some(163.208))]
+        .iter()
+        .map(|&(n, paper)| {
+            // batch scales with data-parallel width, per the paper's setup
+            let w = WorkloadSpec::deepscaler(32 * n / 16, 16384);
+            let s = setup(
+                Framework::PeriodicAsync,
+                ClusterSpec::npu(n),
+                model,
+                w,
+                EfficiencySpec::ours(),
+                2,
+                false,
+                1,
+                iters,
+            );
+            (n, paper, s.run_tuned())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's qualitative claims that must survive simulation.
+    #[test]
+    fn table1_ordering_holds() {
+        let rows = table1(3);
+        let t = |i: usize| rows[i].sim.tpspd;
+        // async >= verl > sync(ours) > mindspeed — the paper's ordering
+        // (async vs VERL is the tightest margin in the paper too: 1.24x)
+        assert!(t(3) > t(1) * 0.95, "async {} should match/beat VERL {}", t(3), t(1));
+        assert!(t(1) > t(2), "VERL {} should beat sync ours {} at 16K", t(1), t(2));
+        assert!(t(2) > t(0), "sync ours {} should beat MindSpeed {}", t(2), t(0));
+        let async_vs_sync = t(3) / t(2);
+        assert!(
+            (1.3..=2.1).contains(&async_vs_sync),
+            "async/sync {async_vs_sync:.2} should approach the 2x bound"
+        );
+    }
+
+    #[test]
+    fn table2_resource_economy() {
+        let (g1, _) = table2(2);
+        // ours on 48 NPUs beats MindSpeed on 64 by a large factor
+        let speedup = g1[2].sim.tpspd / g1[0].sim.tpspd;
+        assert!(speedup > 2.5, "32B async-vs-MindSpeed speedup {speedup:.2} too small");
+    }
+
+    #[test]
+    fn table3_spa_ablation_shape() {
+        let rows = table3(3);
+        let by = |label: &str| {
+            rows.iter().find(|r| r.setting.contains(label)).unwrap().sim.tpspd
+        };
+        // SPA alone (sync) already competitive with baselines
+        assert!(by("Sync ours, w/ SPA") > by("VERL"));
+        // async+SPA is the fastest and approaches 2x sync+SPA
+        let ratio = by("Async ours, w/ SPA") / by("Sync ours, w/ SPA");
+        assert!((1.2..=2.1).contains(&ratio), "async/sync w/ SPA = {ratio:.2}");
+        // w/o SPA at micro-bs 1 collapses (launch-overhead bound)
+        assert!(by("Async ours, w/o SPA") < by("MindSpeed-RL"));
+        // large SPA win, in the spirit of the paper's 8x
+        let spa_win = by("Async ours, w/ SPA") / by("Async ours, w/o SPA");
+        assert!(spa_win > 3.0, "SPA win {spa_win:.2} too small");
+    }
+
+    #[test]
+    fn table4_gpu_ordering() {
+        let rows = table4(3);
+        let t = |i: usize| rows[i].sim.tpspd;
+        assert!(t(3) > t(1), "async ours should beat AReaL-like");
+        assert!(t(1) > t(0), "AReaL-like should beat VERL-like");
+        assert!(t(3) > t(2), "async should beat sync");
+        assert!(t(1) > t(2) * 0.95, "AReaL-like should be at least on par with sync ours");
+    }
+
+    #[test]
+    fn table5_tpspd_decreases_moderately_with_scale() {
+        let rows = table5(2);
+        assert!(rows[0].2.tpspd > rows[1].2.tpspd);
+        assert!(rows[1].2.tpspd > rows[2].2.tpspd);
+        // but total throughput still scales near-linearly (Fig. 6)
+        let total16 = rows[0].2.tpspd * 16.0;
+        let total64 = rows[2].2.tpspd * 64.0;
+        // near-linear in the paper (3.5x over 4x devices); inter-node comm
+        // bites harder in our model — still clearly super-2x
+        assert!(total64 / total16 > 2.2, "total throughput should scale >2.2x over 4x devices, got {}", total64 / total16);
+    }
+}

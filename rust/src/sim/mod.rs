@@ -1,0 +1,19 @@
+//! Discrete-event cluster simulator.
+//!
+//! The paper's evaluation runs on 16–64 Ascend-910B NPUs and 8×A100 GPUs
+//! with 1.5B–32B models — hardware this reproduction does not have. The
+//! simulator substitutes it (DESIGN.md §6): device/cluster/model/workload
+//! specs carry the paper's published constants, five framework executors
+//! model the compared systems' scheduling structure (wave-batched colocated,
+//! continuous-batched colocated, decoupled sync, periodic async, fully
+//! async), and `experiments` wires up each paper table. The real mini-cluster
+//! (coordinator module) validates the same scheduling logic end-to-end at
+//! small scale; the simulator extends the comparison to paper scale.
+
+pub mod experiments;
+pub mod frameworks;
+pub mod queue;
+pub mod specs;
+
+pub use frameworks::{Framework, SimResult, SimSetup};
+pub use specs::{ClusterSpec, DeviceSpec, EfficiencySpec, ModelSpec, WorkloadSpec};

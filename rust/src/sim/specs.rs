@@ -1,0 +1,323 @@
+//! Specifications for the cluster-scale simulator: devices, clusters, models
+//! and workloads, parameterised with the paper's testbeds (air-cooled
+//! Ascend-910B nodes, A100-40G nodes) and datasets (DeepScaleR long-response,
+//! GSM8K short-response).
+
+use crate::util::rng::Pcg64;
+
+/// An accelerator device.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceSpec {
+    /// Peak dense bf16 FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s (decode is bandwidth-bound).
+    pub hbm_bw: f64,
+    /// Device memory, bytes.
+    pub mem_bytes: f64,
+}
+
+impl DeviceSpec {
+    /// Air-cooled Ascend-910B (paper §6.1: 64 GB, ~376 TFLOPs bf16 nominal;
+    /// air-cooled parts clock lower, ~280 TF effective peak).
+    pub fn ascend_910b() -> DeviceSpec {
+        DeviceSpec { peak_flops: 280e12, hbm_bw: 1.2e12, mem_bytes: 64e9 }
+    }
+
+    /// NVIDIA A100-40G (312 TFLOPs bf16, 1.55 TB/s).
+    pub fn a100_40g() -> DeviceSpec {
+        DeviceSpec { peak_flops: 312e12, hbm_bw: 1.555e12, mem_bytes: 40e9 }
+    }
+}
+
+/// A cluster of identical devices.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSpec {
+    pub device: DeviceSpec,
+    pub n_devices: usize,
+    /// Devices per node.
+    pub node_size: usize,
+    /// Intra-node interconnect, bytes/s per device (910B: 196 GB/s; A100
+    /// paper setup: 64 GB/s).
+    pub intra_bw: f64,
+    /// Inter-node network, bytes/s per device (100 Gb/s = 12.5 GB/s).
+    pub inter_bw: f64,
+}
+
+impl ClusterSpec {
+    pub fn npu(n_devices: usize) -> ClusterSpec {
+        ClusterSpec {
+            device: DeviceSpec::ascend_910b(),
+            n_devices,
+            node_size: 8,
+            intra_bw: 196e9,
+            inter_bw: 12.5e9,
+        }
+    }
+
+    pub fn gpu(n_devices: usize) -> ClusterSpec {
+        ClusterSpec {
+            device: DeviceSpec::a100_40g(),
+            n_devices,
+            node_size: 8,
+            intra_bw: 64e9,
+            inter_bw: 12.5e9,
+        }
+    }
+
+    /// Effective per-device bandwidth for cluster-wide weight movement:
+    /// bottlenecked by the inter-node link once the cluster spans nodes.
+    pub fn sync_bw(&self) -> f64 {
+        if self.n_devices > self.node_size {
+            self.inter_bw
+        } else {
+            self.intra_bw
+        }
+    }
+}
+
+/// Model size class.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelSpec {
+    /// Parameter count.
+    pub params: f64,
+    /// Bytes per parameter in inference/weight-sync (bf16).
+    pub param_bytes: f64,
+    /// KV-cache bytes per token (2 · layers · kv_heads · head_dim · 2B) —
+    /// decode at long context is dominated by streaming this from HBM.
+    pub kv_bytes_per_token: f64,
+}
+
+impl ModelSpec {
+    /// Qwen-family sizes used in the paper (KV geometry from the model cards:
+    /// 1.5B: 28L × 2kv × 128; 7B: 28L × 4×128; Qwen3-8B: 36L × 8×128;
+    /// R1-Distill-32B: 64L × 8×128).
+    pub fn qwen(params_b: f64) -> ModelSpec {
+        let (layers, kv_dim) = if params_b <= 2.0 {
+            (28.0, 256.0)
+        } else if params_b <= 7.5 {
+            (28.0, 512.0)
+        } else if params_b <= 14.0 {
+            (36.0, 1024.0)
+        } else {
+            (64.0, 1024.0)
+        };
+        ModelSpec {
+            params: params_b * 1e9,
+            param_bytes: 2.0,
+            kv_bytes_per_token: 2.0 * layers * kv_dim * 2.0,
+        }
+    }
+
+    /// Training FLOPs per token. The paper's unified tri-model computes
+    /// policy fwd+bwd (6P) and the old/reference logits (2P each) in a single
+    /// fused pass: 10P effective. Baseline frameworks schedule old-logprob
+    /// and ref-logprob as *separate phases* (extra weight gathers, launches,
+    /// memory traffic), which we charge as the two forwards running at half
+    /// efficiency: 6P + 2·(2P·2) = 14P effective.
+    pub fn train_flops_per_token(&self, unified_tri_model: bool) -> f64 {
+        if unified_tri_model {
+            10.0 * self.params
+        } else {
+            14.0 * self.params
+        }
+    }
+
+    pub fn infer_flops_per_token(&self) -> f64 {
+        2.0 * self.params
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.params * self.param_bytes
+    }
+}
+
+/// Workload: prompt/response length distributions and GRPO shape.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    /// Prompts per iteration (global batch).
+    pub batch_prompts: usize,
+    /// Rollouts per prompt (G = 32 in all paper experiments).
+    pub group_size: usize,
+    pub prompt_mean: f64,
+    pub prompt_std: f64,
+    /// Lognormal response lengths (heavy right tail, like CoT rollouts).
+    pub response_median: f64,
+    pub response_sigma: f64,
+    /// Context limit: prompt + response truncated here.
+    pub context: usize,
+}
+
+impl WorkloadSpec {
+    /// DeepScaleR-like: short prompts, long chain-of-thought responses.
+    pub fn deepscaler(batch_prompts: usize, context: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            batch_prompts,
+            group_size: 32,
+            prompt_mean: 110.0,
+            prompt_std: 30.0,
+            response_median: 6500.0,
+            response_sigma: 0.75,
+            context,
+        }
+    }
+
+    /// GSM8K-like at 1K context: medium prompts, short answers — the
+    /// training-dominated, SPA-friendly regime of paper Table 3.
+    pub fn gsm8k(batch_prompts: usize) -> WorkloadSpec {
+        WorkloadSpec {
+            batch_prompts,
+            group_size: 32,
+            prompt_mean: 180.0,
+            prompt_std: 60.0,
+            response_median: 320.0,
+            response_sigma: 0.70,
+            context: 1024,
+        }
+    }
+
+    /// Mean response length (lognormal mean = median · exp(σ²/2), truncated).
+    pub fn response_mean(&self) -> f64 {
+        (self.response_median * (self.response_sigma * self.response_sigma / 2.0).exp())
+            .min(self.context as f64 - self.prompt_mean)
+    }
+
+    /// Average attention context during decode (prompt + half the response) —
+    /// what a decode step's KV read amortises to over a sequence's lifetime.
+    pub fn avg_decode_context(&self) -> f64 {
+        (self.prompt_mean + self.response_mean() / 2.0).min(self.context as f64)
+    }
+
+    /// Sample one (prompt_len, response_len) pair.
+    pub fn sample(&self, rng: &mut Pcg64) -> (usize, usize) {
+        let p = (self.prompt_mean + self.prompt_std * rng.normal())
+            .clamp(8.0, self.context as f64 * 0.8);
+        let mu = self.response_median.ln();
+        let r = rng.lognormal(mu, self.response_sigma);
+        let p = p.round() as usize;
+        let r = (r.round() as usize).clamp(1, self.context - p);
+        (p, r)
+    }
+}
+
+/// Parallelism/efficiency knobs per framework (paper Table 9 analog).
+#[derive(Debug, Clone, Copy)]
+pub struct EfficiencySpec {
+    /// Training MFU (model FLOPs utilisation).
+    pub train_mfu: f64,
+    /// Prefill MFU.
+    pub prefill_mfu: f64,
+    /// Decode bandwidth utilisation.
+    pub decode_bw_util: f64,
+    /// Fixed per-iteration overhead (scheduling, python, dataloader), s.
+    pub iter_overhead: f64,
+    /// Extra per-iteration cost for colocated designs: weight resharding /
+    /// engine switch between train and rollout phases, s per GB of weights.
+    pub reshard_s_per_gb: f64,
+    /// Padding inflation for frameworks that pad micro-batches to the max
+    /// sample length (1.0 = native dynamic lengths, no padding).
+    pub padding_factor: f64,
+    /// Whether policy/old/reference logits are computed in one fused pass
+    /// (the paper's unified tri-model) or as separate scheduled phases.
+    pub unified_tri_model: bool,
+}
+
+impl EfficiencySpec {
+    /// pa-rl / EasyLLM-like: dynamic-length training, no padding.
+    pub fn ours() -> EfficiencySpec {
+        EfficiencySpec {
+            train_mfu: 0.42,
+            prefill_mfu: 0.50,
+            decode_bw_util: 0.55,
+            iter_overhead: 2.0,
+            reshard_s_per_gb: 0.0,
+            padding_factor: 1.0,
+            unified_tri_model: true,
+        }
+    }
+
+    /// MindSpeed-RL-like: Megatron backend, shared-accelerator (colocated)
+    /// design — pays resharding on every phase switch and pads micro-batches.
+    pub fn mindspeed() -> EfficiencySpec {
+        EfficiencySpec {
+            train_mfu: 0.38,
+            prefill_mfu: 0.45,
+            decode_bw_util: 0.45,
+            iter_overhead: 8.0,
+            reshard_s_per_gb: 1.4,
+            padding_factor: 1.35,
+            unified_tri_model: false,
+        }
+    }
+
+    /// VERL-like: FSDP colocated, vLLM rollouts (continuous batching),
+    /// lighter resharding than full Megatron reshard.
+    pub fn verl() -> EfficiencySpec {
+        EfficiencySpec {
+            train_mfu: 0.32,
+            prefill_mfu: 0.50,
+            decode_bw_util: 0.40,
+            iter_overhead: 20.0,
+            reshard_s_per_gb: 0.5,
+            padding_factor: 1.15,
+            unified_tri_model: false,
+        }
+    }
+
+    /// AReaL-like: fully asynchronous decoupled system. The cross-iteration
+    /// pipeline removes every barrier, but the machinery that makes it safe
+    /// (interruptible rollouts, KV migration on weight update, staleness
+    /// bookkeeping) taxes both stages — the reason the paper's periodic
+    /// design still wins end-to-end (Table 4) despite synchronising more.
+    pub fn areal() -> EfficiencySpec {
+        EfficiencySpec {
+            train_mfu: 0.36,
+            prefill_mfu: 0.47,
+            decode_bw_util: 0.48,
+            iter_overhead: 3.0,
+            reshard_s_per_gb: 0.0,
+            padding_factor: 1.05,
+            unified_tri_model: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_samples_within_context() {
+        let mut rng = Pcg64::seeded(1);
+        let w = WorkloadSpec::deepscaler(32, 16384);
+        for _ in 0..2000 {
+            let (p, r) = w.sample(&mut rng);
+            assert!(p + r <= 16384);
+            assert!(r >= 1);
+        }
+    }
+
+    #[test]
+    fn gsm8k_shorter_than_deepscaler() {
+        let mut rng = Pcg64::seeded(2);
+        let d = WorkloadSpec::deepscaler(8, 16384);
+        let g = WorkloadSpec::gsm8k(8);
+        let mean = |w: &WorkloadSpec, rng: &mut Pcg64| {
+            (0..500).map(|_| w.sample(rng).1).sum::<usize>() as f64 / 500.0
+        };
+        assert!(mean(&d, &mut rng) > 5.0 * mean(&g, &mut rng));
+    }
+
+    #[test]
+    fn sync_bw_depends_on_span() {
+        assert_eq!(ClusterSpec::npu(8).sync_bw(), 196e9);
+        assert_eq!(ClusterSpec::npu(16).sync_bw(), 12.5e9);
+    }
+
+    #[test]
+    fn model_flops() {
+        let m = ModelSpec::qwen(8.0);
+        assert_eq!(m.params, 8e9);
+        assert_eq!(m.infer_flops_per_token(), 16e9);
+        assert_eq!(m.weight_bytes(), 16e9);
+    }
+}

@@ -1,0 +1,209 @@
+//! Checkpoint (de)serialisation — a small self-describing binary format
+//! (no serde/bincode in the offline environment).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "PARL" | u32 version | u64 step | u64 policy_version |
+//! u32 n_sections | sections...
+//! section: u32 name_len | name bytes | u32 n_tensors | tensors...
+//! tensor:  u32 name_len | name | u32 ndims | u64 dims... | f32 data...
+//! ```
+
+use crate::runtime::{HostParams, Tensor};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"PARL";
+const VERSION: u32 = 1;
+
+/// Full trainer state: policy weights + Adam moments + counters.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub policy_version: u64,
+    pub policy: Vec<Tensor>,
+    pub adam_m: Vec<Tensor>,
+    pub adam_v: Vec<Tensor>,
+}
+
+impl Checkpoint {
+    pub fn from_params(policy: &HostParams, m: &[Tensor], v: &[Tensor], step: u64) -> Checkpoint {
+        Checkpoint {
+            step,
+            policy_version: policy.version,
+            policy: policy.tensors.clone(),
+            adam_m: m.to_vec(),
+            adam_v: v.to_vec(),
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        w.write_all(&self.policy_version.to_le_bytes())?;
+        w.write_all(&3u32.to_le_bytes())?;
+        for (name, tensors) in
+            [("policy", &self.policy), ("adam_m", &self.adam_m), ("adam_v", &self.adam_v)]
+        {
+            write_section(&mut w, name, tensors)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a pa-rl checkpoint (bad magic)");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let step = read_u64(&mut r)?;
+        let policy_version = read_u64(&mut r)?;
+        let n_sections = read_u32(&mut r)?;
+        let mut policy = Vec::new();
+        let mut adam_m = Vec::new();
+        let mut adam_v = Vec::new();
+        for _ in 0..n_sections {
+            let (name, tensors) = read_section(&mut r)?;
+            match name.as_str() {
+                "policy" => policy = tensors,
+                "adam_m" => adam_m = tensors,
+                "adam_v" => adam_v = tensors,
+                other => bail!("unknown checkpoint section '{other}'"),
+            }
+        }
+        if policy.is_empty() {
+            bail!("checkpoint has no policy section");
+        }
+        Ok(Checkpoint { step, policy_version, policy, adam_m, adam_v })
+    }
+
+    pub fn to_host_params(&self) -> HostParams {
+        HostParams { tensors: self.policy.clone(), version: self.policy_version }
+    }
+}
+
+fn write_section<W: Write>(w: &mut W, name: &str, tensors: &[Tensor]) -> Result<()> {
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name.as_bytes())?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (i, t) in tensors.iter().enumerate() {
+        let tname = format!("t{i}");
+        w.write_all(&(tname.len() as u32).to_le_bytes())?;
+        w.write_all(tname.as_bytes())?;
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        let data = t.as_f32().context("checkpoint tensors must be f32")?;
+        for &x in data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+fn read_section<R: Read>(r: &mut R) -> Result<(String, Vec<Tensor>)> {
+    let name = read_string(r)?;
+    let n = read_u32(r)? as usize;
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        let _tname = read_string(r)?;
+        let ndims = read_u32(r)? as usize;
+        if ndims > 16 {
+            bail!("implausible tensor rank {ndims}");
+        }
+        let mut shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            shape.push(read_u64(r)? as usize);
+        }
+        let count: usize = shape.iter().product();
+        let mut bytes = vec![0u8; count * 4];
+        r.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        tensors.push(Tensor::f32(data, &shape));
+    }
+    Ok((name, tensors))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_string<R: Read>(r: &mut R) -> Result<String> {
+    let len = read_u32(r)? as usize;
+    if len > 1 << 20 {
+        bail!("implausible string length {len}");
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).context("checkpoint string not utf-8")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Checkpoint {
+        Checkpoint {
+            step: 42,
+            policy_version: 7,
+            policy: vec![
+                Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]),
+                Tensor::f32(vec![5.0], &[1]),
+            ],
+            adam_m: vec![Tensor::zeros_f32(&[2, 2]), Tensor::zeros_f32(&[1])],
+            adam_v: vec![Tensor::zeros_f32(&[2, 2]), Tensor::zeros_f32(&[1])],
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let path = std::env::temp_dir().join("pa_rl_ckpt_test").join("a.ckpt");
+        let ck = demo();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.policy_version, 7);
+        assert_eq!(back.policy, ck.policy);
+        assert_eq!(back.adam_v.len(), 2);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("pa_rl_ckpt_test").join("bad.ckpt");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"NOPE0000").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn host_params_conversion() {
+        let hp = demo().to_host_params();
+        assert_eq!(hp.version, 7);
+        assert_eq!(hp.tensors.len(), 2);
+    }
+}

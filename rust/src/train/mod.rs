@@ -1,0 +1,8 @@
+//! Training engine: tri-model GRPO trainer (micro-batch accumulation +
+//! AdamW), and checkpointing.
+
+pub mod checkpoint;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use trainer::{IterStats, Trainer};

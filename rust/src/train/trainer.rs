@@ -1,0 +1,364 @@
+//! The training engine: tri-model GRPO steps with micro-batch gradient
+//! accumulation and a single AdamW update per iteration (Algorithm 1 lines
+//! 6–11).
+//!
+//! Consumes [`Group`]s in whatever order the queue delivers them — Remark 1
+//! (gradient permutation invariance) guarantees the accumulated gradient is
+//! order-independent, which the proptests verify numerically. The old-policy
+//! snapshot is moved *before* the Adam update is applied (Algorithm 1's line
+//! 10/11 ordering: "the old policy always retains the weights from the
+//! previous iteration", i.e. a one-step-delayed copy of the policy).
+
+use crate::config::Config;
+use crate::grpo::{build_spa, build_standard, Group, Sample, TrainBatch};
+use crate::runtime::{Arg, DeviceParams, HostParams, Runtime, Tensor};
+use anyhow::{bail, Context, Result};
+
+/// Metrics aggregated over one iteration's micro-steps.
+#[derive(Debug, Clone, Default)]
+pub struct IterStats {
+    pub micro_steps: usize,
+    pub samples: usize,
+    pub loss_tokens: usize,
+    pub input_tokens: usize,
+    pub loss: f64,
+    pub kl: f64,
+    pub clip_frac: f64,
+    pub entropy: f64,
+    pub ratio_mean: f64,
+    pub grad_norm: f64,
+    pub train_seconds: f64,
+    pub update_seconds: f64,
+}
+
+impl IterStats {
+    fn add_micro(&mut self, metrics: &[f32], batch: &TrainBatch, seconds: f64) {
+        self.micro_steps += 1;
+        self.samples += batch.n_samples;
+        self.loss_tokens += batch.n_loss_tokens;
+        self.input_tokens += batch.n_input_tokens;
+        self.loss += metrics[0] as f64;
+        self.kl += metrics[1] as f64;
+        self.clip_frac += metrics[2] as f64;
+        self.entropy += metrics[3] as f64;
+        self.ratio_mean += metrics[4] as f64;
+        self.train_seconds += seconds;
+    }
+
+    /// Mean-per-micro view of the accumulated metrics.
+    pub fn finalize(&mut self) {
+        let m = self.micro_steps.max(1) as f64;
+        self.loss /= m;
+        self.kl /= m;
+        self.clip_frac /= m;
+        self.entropy /= m;
+        self.ratio_mean /= m;
+    }
+}
+
+/// The trainer. Owns its PJRT runtime and the three parameter sets of the
+/// unified tri-model (policy / old-policy / reference).
+pub struct Trainer {
+    cfg: Config,
+    rt: Runtime,
+    policy: HostParams,
+    old: HostParams,
+    reference: HostParams,
+    adam_m: Vec<Tensor>,
+    adam_v: Vec<Tensor>,
+    step: u64,
+    // per-iteration state
+    dev_policy: Option<DeviceParams>,
+    dev_old: Option<DeviceParams>,
+    dev_ref: Option<DeviceParams>,
+    accum: Option<Vec<Vec<f32>>>,
+    micro_count: usize,
+    in_iteration: bool,
+}
+
+impl Trainer {
+    /// Initialise from seed via the `init` artifact. Old and reference start
+    /// as copies of the policy (the reference keeps the original weights for
+    /// the whole run, per the paper's tri-model).
+    pub fn new(cfg: Config, rt: Runtime, seed: i32) -> Result<Trainer> {
+        let policy = rt.init_params(seed)?;
+        let old = HostParams { tensors: policy.tensors.clone(), version: 0 };
+        let reference = HostParams { tensors: policy.tensors.clone(), version: 0 };
+        let adam_m: Vec<Tensor> =
+            policy.tensors.iter().map(|t| Tensor::zeros_f32(&t.shape)).collect();
+        let adam_v = adam_m.clone();
+        Ok(Trainer {
+            cfg,
+            rt,
+            policy,
+            old,
+            reference,
+            adam_m,
+            adam_v,
+            step: 0,
+            dev_policy: None,
+            dev_old: None,
+            dev_ref: None,
+            accum: None,
+            micro_count: 0,
+            in_iteration: false,
+        })
+    }
+
+    /// Resume from pre-trained weights (e.g. the SFT warmup checkpoint).
+    pub fn with_params(cfg: Config, rt: Runtime, policy: HostParams) -> Result<Trainer> {
+        policy.validate(&rt)?;
+        let old = HostParams { tensors: policy.tensors.clone(), version: policy.version };
+        let reference = HostParams { tensors: policy.tensors.clone(), version: policy.version };
+        let adam_m: Vec<Tensor> =
+            policy.tensors.iter().map(|t| Tensor::zeros_f32(&t.shape)).collect();
+        let adam_v = adam_m.clone();
+        Ok(Trainer {
+            cfg,
+            rt,
+            policy,
+            old,
+            reference,
+            adam_m,
+            adam_v,
+            step: 0,
+            dev_policy: None,
+            dev_old: None,
+            dev_ref: None,
+            accum: None,
+            micro_count: 0,
+            in_iteration: false,
+        })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Current policy snapshot (what gets published to engines at iteration
+    /// boundaries).
+    pub fn policy(&self) -> &HostParams {
+        &self.policy
+    }
+
+    pub fn policy_version(&self) -> u64 {
+        self.policy.version
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    pub fn adam_state(&self) -> (&[Tensor], &[Tensor]) {
+        (&self.adam_m, &self.adam_v)
+    }
+
+    /// Replace the policy (and reset old/reference/optimizer state) with
+    /// externally-provided weights, e.g. after SFT warmup.
+    pub fn set_policy_params(&mut self, policy: HostParams) -> Result<()> {
+        if self.in_iteration {
+            bail!("set_policy_params during an open iteration");
+        }
+        policy.validate(&self.rt)?;
+        self.old = HostParams { tensors: policy.tensors.clone(), version: policy.version };
+        self.reference = HostParams { tensors: policy.tensors.clone(), version: policy.version };
+        self.adam_m = policy.tensors.iter().map(|t| Tensor::zeros_f32(&t.shape)).collect();
+        self.adam_v = self.adam_m.clone();
+        self.policy = policy;
+        self.step = 0;
+        // Invalidate cached device buffers (weights changed wholesale).
+        self.dev_policy = None;
+        self.dev_old = None;
+        self.dev_ref = None;
+        Ok(())
+    }
+
+    /// Upload the tri-model parameter sets and reset the gradient
+    /// accumulator (Algorithm 1 line 6).
+    ///
+    /// Upload traffic is minimised (§Perf): the reference set never changes
+    /// after construction so its device buffers are uploaded once and
+    /// cached; the old-policy set is exactly the previous iteration's
+    /// policy, whose device buffers are recycled at `end_iteration` — so
+    /// steady-state iterations upload only ONE param set instead of three.
+    pub fn begin_iteration(&mut self) -> Result<()> {
+        if self.in_iteration {
+            bail!("begin_iteration called twice");
+        }
+        self.dev_policy = Some(self.policy.upload(&self.rt)?);
+        if self.dev_old.as_ref().map(|d| d.version) != Some(self.old.version) {
+            self.dev_old = Some(self.old.upload(&self.rt)?);
+        }
+        if self.dev_ref.is_none() {
+            self.dev_ref = Some(self.reference.upload(&self.rt)?);
+        }
+        self.accum = Some(
+            self.policy
+                .tensors
+                .iter()
+                .map(|t| vec![0.0f32; t.len()])
+                .collect(),
+        );
+        self.micro_count = 0;
+        self.in_iteration = true;
+        Ok(())
+    }
+
+    /// Train on one group (Algorithm 1 line 8). With SPA the group becomes a
+    /// single packed micro-batch; otherwise its samples are chunked into
+    /// standard micro-batches of `micro_bs` rows. Falls back to the standard
+    /// layout when a group doesn't fit the SPA pack (documented in DESIGN.md).
+    pub fn train_group(&mut self, group: &Group, spa: bool, stats: &mut IterStats) -> Result<()> {
+        if !self.in_iteration {
+            bail!("train_group outside an iteration");
+        }
+        let samples = Sample::from_group(group);
+        if spa {
+            if let Some(batch) = build_spa(&samples, self.cfg.train.spa.pack_len) {
+                return self.train_micro(&batch, true, group.prompt.tokens.len(), stats);
+            }
+        }
+        for chunk in samples.chunks(self.cfg.train.micro_bs) {
+            let batch = build_standard(chunk, self.cfg.train.micro_bs, self.cfg.train.seq_len);
+            self.train_micro(&batch, false, 0, stats)?;
+        }
+        Ok(())
+    }
+
+    /// One compiled tri-model micro-step; grads accumulate on the host
+    /// (enables the Remark-1 permutation-invariance property tests).
+    pub fn train_micro(
+        &mut self,
+        batch: &TrainBatch,
+        spa: bool,
+        prompt_len: usize,
+        stats: &mut IterStats,
+    ) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let artifact = if spa { "train_step_spa" } else { "train_step" };
+        let shape = [batch.rows, batch.seq];
+        let tokens = Tensor::i32(batch.tokens.clone(), &shape);
+        let labels = Tensor::i32(batch.labels.clone(), &shape);
+        let pos = Tensor::i32(batch.pos.clone(), &shape);
+        let seg = Tensor::i32(batch.seg.clone(), &shape);
+        let adv = Tensor::f32(batch.adv.clone(), &shape);
+        let weight = Tensor::f32(batch.weight.clone(), &shape);
+        let plen = Tensor::scalar_i32(prompt_len as i32);
+
+        let dev_policy = self.dev_policy.as_ref().context("no iteration open")?;
+        let dev_old = self.dev_old.as_ref().unwrap();
+        let dev_ref = self.dev_ref.as_ref().unwrap();
+        let mut args: Vec<Arg> = Vec::with_capacity(3 * dev_policy.bufs.len() + 7);
+        args.extend(dev_policy.bufs.iter().map(Arg::Buf));
+        args.extend(dev_old.bufs.iter().map(Arg::Buf));
+        args.extend(dev_ref.bufs.iter().map(Arg::Buf));
+        for t in [&tokens, &labels, &pos, &seg, &adv, &weight, &plen] {
+            args.push(Arg::Host(t));
+        }
+        let out = self.rt.run(artifact, &args)?;
+        let n = self.policy.tensors.len();
+        let accum = self.accum.as_mut().unwrap();
+        for (acc, g) in accum.iter_mut().zip(&out[..n]) {
+            let gv = g.as_f32()?;
+            for (a, &x) in acc.iter_mut().zip(gv) {
+                *a += x;
+            }
+        }
+        let metrics: Vec<f32> = out[n..].iter().map(|t| t.scalar().unwrap_or(0.0)).collect();
+        self.micro_count += 1;
+        stats.add_micro(&metrics, batch, t0.elapsed().as_secs_f64());
+        Ok(())
+    }
+
+    /// Apply the accumulated update (Algorithm 1 lines 10–11):
+    /// old ← policy (pre-update), then policy ← AdamW(policy, mean grads).
+    /// Returns the global gradient norm.
+    pub fn end_iteration(&mut self, stats: &mut IterStats) -> Result<f64> {
+        if !self.in_iteration {
+            bail!("end_iteration without begin_iteration");
+        }
+        let t0 = std::time::Instant::now();
+        let mut accum = self.accum.take().context("no accumulator")?;
+        let m = self.micro_count.max(1) as f32;
+        for g in accum.iter_mut() {
+            for x in g.iter_mut() {
+                *x /= m;
+            }
+        }
+
+        // Line 10: move current policy weights to old policy BEFORE updating.
+        self.old = HostParams {
+            tensors: self.policy.tensors.clone(),
+            version: self.policy.version,
+        };
+
+        // Line 11: apply the accumulated gradient.
+        let grads: Vec<Tensor> = accum
+            .into_iter()
+            .zip(&self.policy.tensors)
+            .map(|(g, t)| Tensor::f32(g, &t.shape))
+            .collect();
+        let step_t = Tensor::scalar_i32(self.step as i32);
+        let mut args: Vec<Arg> = Vec::new();
+        args.extend(self.policy.tensors.iter().map(Arg::Host));
+        args.extend(grads.iter().map(Arg::Host));
+        args.extend(self.adam_m.iter().map(Arg::Host));
+        args.extend(self.adam_v.iter().map(Arg::Host));
+        args.push(Arg::Host(&step_t));
+        let mut out = self.rt.run("adam_update", &args)?;
+        let n = self.policy.tensors.len();
+        let grad_norm = out.pop().context("adam outputs")?.scalar()? as f64;
+        let vs: Vec<Tensor> = out.split_off(2 * n);
+        let ms: Vec<Tensor> = out.split_off(n);
+        self.policy = HostParams { tensors: out, version: self.policy.version + 1 };
+        self.adam_m = ms;
+        self.adam_v = vs;
+        self.step += 1;
+        // Recycle the pre-update policy's device buffers as the next
+        // iteration's old-policy set (they are byte-identical to self.old).
+        self.dev_old = self.dev_policy.take().map(|mut d| {
+            d.version = self.old.version;
+            d
+        });
+        self.in_iteration = false;
+        stats.grad_norm = grad_norm;
+        stats.update_seconds = t0.elapsed().as_secs_f64();
+        stats.finalize();
+        Ok(grad_norm)
+    }
+
+    /// Number of micro-steps accumulated so far this iteration.
+    pub fn micro_count(&self) -> usize {
+        self.micro_count
+    }
+
+    /// Supervised warmup micro-step (SFT on target responses).
+    pub fn sft_micro(&mut self, batch: &TrainBatch) -> Result<f32> {
+        if !self.in_iteration {
+            bail!("sft_micro outside an iteration");
+        }
+        let shape = [batch.rows, batch.seq];
+        let tokens = Tensor::i32(batch.tokens.clone(), &shape);
+        let labels = Tensor::i32(batch.labels.clone(), &shape);
+        let pos = Tensor::i32(batch.pos.clone(), &shape);
+        let seg = Tensor::i32(batch.seg.clone(), &shape);
+        let weight = Tensor::f32(batch.weight.clone(), &shape);
+        let dev_policy = self.dev_policy.as_ref().context("no iteration open")?;
+        let mut args: Vec<Arg> = Vec::new();
+        args.extend(dev_policy.bufs.iter().map(Arg::Buf));
+        for t in [&tokens, &labels, &pos, &seg, &weight] {
+            args.push(Arg::Host(t));
+        }
+        let out = self.rt.run("sft_step", &args)?;
+        let n = self.policy.tensors.len();
+        let accum = self.accum.as_mut().unwrap();
+        for (acc, g) in accum.iter_mut().zip(&out[..n]) {
+            let gv = g.as_f32()?;
+            for (a, &x) in acc.iter_mut().zip(gv) {
+                *a += x;
+            }
+        }
+        self.micro_count += 1;
+        out[n].scalar().map_err(Into::into)
+    }
+}

@@ -1,0 +1,219 @@
+//! Benchmark harness (no `criterion` in the offline environment).
+//!
+//! Each `benches/*.rs` target sets `harness = false` and drives this module:
+//! warmup + timed repetitions with robust statistics, plus an aligned table
+//! printer used to emit exactly the rows the paper's tables report
+//! (paper value alongside measured value and the win-factor).
+
+use std::time::{Duration, Instant};
+
+/// Statistics for a set of timed runs.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_durations(mut xs: Vec<Duration>) -> Stats {
+        assert!(!xs.is_empty());
+        xs.sort();
+        let n = xs.len();
+        let total: Duration = xs.iter().sum();
+        let mean = total / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = xs
+            .iter()
+            .map(|d| {
+                let diff = d.as_secs_f64() - mean_s;
+                diff * diff
+            })
+            .sum::<f64>()
+            / n as f64;
+        let pct = |p: f64| xs[((n as f64 - 1.0) * p).round() as usize];
+        Stats {
+            n,
+            mean,
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+            min: xs[0],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            max: xs[n - 1],
+        }
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` with warmup. `label` is printed as progress on stderr.
+pub fn bench<F: FnMut()>(label: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    let stats = Stats::from_durations(times);
+    eprintln!(
+        "  [bench] {label}: mean {:.3} ms  p50 {:.3} ms  p95 {:.3} ms  (n={})",
+        stats.mean.as_secs_f64() * 1e3,
+        stats.p50.as_secs_f64() * 1e3,
+        stats.p95.as_secs_f64() * 1e3,
+        stats.n
+    );
+    stats
+}
+
+/// Quick-and-dirty throughput helper: items per second over one timed call.
+pub fn throughput<F: FnOnce() -> usize>(f: F) -> (usize, f64, f64) {
+    let t0 = Instant::now();
+    let items = f();
+    let secs = t0.elapsed().as_secs_f64();
+    (items, secs, items as f64 / secs.max(1e-12))
+}
+
+/// An aligned text table used by the bench binaries to print paper-style rows.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn note(&mut self, note: &str) -> &mut Self {
+        self.notes.push(note.to_string());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (i, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$} | ", cell, w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&sep, &widths));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        for note in &self.notes {
+            out.push_str(&format!("  note: {note}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// Format a speedup factor like the paper ("3.12x").
+pub fn fx(factor: f64) -> String {
+    format!("{factor:.2}x")
+}
+
+/// Format a float with 3 decimals (TPSPD style).
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let xs = vec![
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ];
+        let s = Stats::from_durations(xs);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.mean, Duration::from_millis(20));
+        assert_eq!(s.min, Duration::from_millis(10));
+        assert_eq!(s.max, Duration::from_millis(30));
+        assert_eq!(s.p50, Duration::from_millis(20));
+    }
+
+    #[test]
+    fn bench_runs_expected_iters() {
+        let mut count = 0;
+        let s = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["Setting", "TPSPD", "Speedup"]);
+        t.row_strs(&["Sync (ours)", "99.966", "1.00x"]);
+        t.row_strs(&["Async (ours)", "192.259", "1.92x"]);
+        t.note("example");
+        let r = t.render();
+        assert!(r.contains("Async (ours)"));
+        assert!(r.contains("== Demo =="));
+        assert!(r.contains("note: example"));
+        // All data lines share the same width.
+        let lines: Vec<&str> = r.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fx(3.118), "3.12x");
+        assert_eq!(f3(192.2591), "192.259");
+    }
+}

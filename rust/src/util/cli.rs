@@ -1,0 +1,127 @@
+//! Command-line argument parsing (no `clap` in the offline environment).
+//!
+//! Supports the subcommand + `--key value` / `--flag` style used by the
+//! `pa-rl` binary and the examples:
+//!
+//! ```text
+//! pa-rl train --config configs/small.json --mode async --iters 20
+//! pa-rl simulate --table 1
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: an optional subcommand, named options, bare flags and
+/// positional arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut items: Vec<String> = iter.into_iter().collect();
+        if !items.is_empty() && !items[0].starts_with('-') {
+            args.subcommand = Some(items.remove(0));
+        }
+        let mut i = 0;
+        while i < items.len() {
+            let item = &items[i];
+            if let Some(name) = item.strip_prefix("--") {
+                // --key=value form
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    args.options.insert(name.to_string(), items[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(item.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse the real process arguments.
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --config configs/small.json --iters 20 --spa");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("configs/small.json"));
+        assert_eq!(a.usize_or("iters", 0), 20);
+        assert!(a.has_flag("spa"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("simulate --table=2 --mode=async");
+        assert_eq!(a.get("table"), Some("2"));
+        assert_eq!(a.str_or("mode", "sync"), "async");
+    }
+
+    #[test]
+    fn trailing_flag_and_defaults() {
+        let a = parse("bench --verbose");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.usize_or("iters", 7), 7);
+        assert_eq!(a.f64_or("lr", 1e-6), 1e-6);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("inspect artifacts/small extra");
+        assert_eq!(a.subcommand.as_deref(), Some("inspect"));
+        assert_eq!(a.positional, vec!["artifacts/small", "extra"]);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, None);
+        assert!(a.has_flag("help"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Foundation substrates built from scratch for the offline environment
+//! (no serde / rand / clap / criterion / proptest available): JSON, RNG,
+//! CLI parsing, bench harness, and a mini property-testing framework.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

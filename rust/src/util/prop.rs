@@ -1,0 +1,148 @@
+//! Miniature property-based testing harness.
+//!
+//! The offline environment has no `proptest`/`quickcheck`, so pa-rl provides a
+//! small seeded property harness: a generator closure produces random cases
+//! from a [`Pcg64`](super::rng::Pcg64), a checker validates each case, and on
+//! failure the harness retries a bounded number of "shrink" passes by asking
+//! the generator for *smaller* cases (via a shrink hint), then reports the
+//! failing seed so the case is exactly reproducible.
+//!
+//! Used throughout the coordinator/engine/sim tests for the paper's invariants
+//! (gradient permutation invariance, on-policy version tags, queue
+//! completeness, KV-slot safety, packing round-trips, ...).
+
+use super::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    /// Number of random cases to generate.
+    pub cases: usize,
+    /// Root seed; each case uses a derived stream so failures name one seed.
+    pub seed: u64,
+    /// Max shrink attempts after a failure (re-generating with reduced size).
+    pub shrink_rounds: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Root seed can be pinned for reproduction via PA_RL_PROP_SEED.
+        let seed = std::env::var("PA_RL_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        PropConfig { cases: 64, seed, shrink_rounds: 32 }
+    }
+}
+
+/// Size hint passed to generators: starts small, grows across cases, and is
+/// driven back toward zero during shrinking.
+#[derive(Debug, Clone, Copy)]
+pub struct Size(pub usize);
+
+impl Size {
+    /// Scale a nominal maximum by the current size (at least 1).
+    pub fn scaled(&self, max: usize) -> usize {
+        (max * self.0 / 100).max(1)
+    }
+}
+
+/// Run a property: `gen` builds a case, `check` returns `Err(reason)` on
+/// violation. Panics with a reproducible report on failure.
+pub fn check<T, G, C>(name: &str, cfg: PropConfig, mut gen: G, mut check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64, Size) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    for case_idx in 0..cfg.cases {
+        // size ramps 1..100 over the run
+        let size = Size(1 + (case_idx * 99) / cfg.cases.max(1));
+        let mut rng = Pcg64::new(cfg.seed, case_idx as u64 + 1);
+        let case = gen(&mut rng, size);
+        if let Err(reason) = check(&case) {
+            // Attempt shrink passes: same stream, smaller sizes.
+            let mut best: (Size, T, String) = (size, case, reason);
+            for round in 0..cfg.shrink_rounds {
+                let smaller = Size((best.0 .0 * 2 / 3).max(1));
+                if smaller.0 >= best.0 .0 {
+                    break;
+                }
+                let mut rng = Pcg64::new(cfg.seed, case_idx as u64 + 1 + (round as u64) << 32);
+                let candidate = gen(&mut rng, smaller);
+                if let Err(r) = check(&candidate) {
+                    best = (smaller, candidate, r);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case_idx}, seed {seed}, size {sz}):\n  reason: {reason}\n  case: {case:?}\n  reproduce with PA_RL_PROP_SEED={seed}",
+                seed = cfg.seed,
+                sz = best.0 .0,
+                reason = best.2,
+                case = best.1,
+            );
+        }
+    }
+}
+
+/// Convenience wrapper with default config.
+pub fn quick<T, G, C>(name: &str, gen: G, check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Pcg64, Size) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    self::check(name, PropConfig::default(), gen, check)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        quick(
+            "reverse-involution",
+            |rng, size| {
+                let n = rng.range(0, size.scaled(64) + 1);
+                (0..n).map(|_| rng.next_u64()).collect::<Vec<_>>()
+            },
+            |xs| {
+                let mut r = xs.clone();
+                r.reverse();
+                r.reverse();
+                if r == *xs {
+                    Ok(())
+                } else {
+                    Err("reverse twice changed the vec".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_report() {
+        quick(
+            "always-fails",
+            |rng, _| rng.range(0, 100),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_len = 0usize;
+        check(
+            "size-ramp",
+            PropConfig { cases: 50, seed: 1, shrink_rounds: 0 },
+            |rng, size| {
+                let n = size.scaled(1000);
+                max_len = max_len.max(n);
+                rng.range(0, n + 1)
+            },
+            |_| Ok(()),
+        );
+        assert!(max_len > 500, "expected late cases to be large, got {max_len}");
+    }
+}

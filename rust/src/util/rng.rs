@@ -1,0 +1,267 @@
+//! Deterministic pseudo-random number generation and sampling distributions.
+//!
+//! The offline build environment provides no `rand` crate, so pa-rl carries its
+//! own RNG substrate: a PCG-XSH-RR 64/32-based 64-bit generator (`Pcg64`) with
+//! explicit seeding, stream splitting, and the distributions the system needs
+//! (uniform, normal, lognormal, categorical, permutation). Everything in the
+//! repository that needs randomness threads one of these through explicitly so
+//! runs are reproducible from a single root seed.
+
+/// A 64-bit PCG-family generator (two xsh-rr 32-bit outputs per `next_u64`).
+///
+/// Deterministic, seedable, and cheap to fork into independent streams —
+/// exactly what the coordinator needs to give each rollout worker / simulator
+/// entity its own reproducible stream.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+    /// Cached second normal variate from the last Box-Muller draw.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Different `stream`
+    /// values with the same seed yield statistically independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 { state: 0, inc: (stream << 1) | 1, spare_normal: None };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience constructor on stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Fork an independent child stream; advances `self`.
+    pub fn fork(&mut self, stream: u64) -> Self {
+        Self::new(self.next_u64(), stream.wrapping_mul(0x9E3779B97F4A7C15).max(1))
+    }
+
+    fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Uniform 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in `[lo, hi)` (Lemire-style rejection-free mapping is
+    /// unnecessary here; modulo bias is negligible for our ranges but we use
+    /// widening multiply anyway for correctness).
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo < hi, "empty range [{lo}, {hi})");
+        let span = hi - lo;
+        // widening-multiply trick: floor(x * span / 2^64)
+        let x = self.next_u64();
+        lo + ((x as u128 * span as u128) >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        self.range_u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Bernoulli draw.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller (caches the spare variate).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // avoid log(0)
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = std::f64::consts::TAU * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Lognormal parameterised by the *underlying* normal's mu/sigma.
+    /// Used by the simulator for rollout-length distributions (long right
+    /// tail, matching CoT response lengths).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Exponential with rate lambda (inter-arrival times in the simulator).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        let u = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        -u.ln() / lambda
+    }
+
+    /// Sample an index from unnormalised non-negative weights.
+    /// Returns `None` if all weights are zero/empty.
+    pub fn categorical(&mut self, weights: &[f64]) -> Option<usize> {
+        let total: f64 = weights.iter().sum();
+        if !(total > 0.0) {
+            return None;
+        }
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return Some(i);
+            }
+        }
+        Some(weights.len() - 1)
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.range(0, i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42, 7);
+        let mut b = Pcg64::new(42, 7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2, "streams should be effectively independent");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::seeded(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn range_bounds_inclusive_exclusive() {
+        let mut r = Pcg64::seeded(2);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..10_000 {
+            let x = r.range(3, 6);
+            assert!((3..6).contains(&x));
+            seen_lo |= x == 3;
+            seen_hi |= x == 5;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::seeded(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Pcg64::seeded(4);
+        let w = [1.0, 0.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.categorical(&w).unwrap()] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let ratio = counts[2] as f64 / counts[0] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn categorical_zero_weights_is_none() {
+        let mut r = Pcg64::seeded(5);
+        assert!(r.categorical(&[0.0, 0.0]).is_none());
+        assert!(r.categorical(&[]).is_none());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::seeded(6);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let mut r = Pcg64::seeded(7);
+        for _ in 0..1000 {
+            assert!(r.lognormal(0.0, 1.0) > 0.0);
+        }
+    }
+}
