@@ -2,8 +2,14 @@
 //! stream, reporting serving-style latency/throughput (the vLLM-substrate
 //! half of the system in isolation).
 //!
+//! `--group G` replays each prompt G times (GRPO-style grouped traffic, or a
+//! serving workload with repeated prompts): with the shared-prefix KV cache
+//! enabled, only the first occurrence runs the compiled prefill and the
+//! report shows the cache hit rate and skipped prefills.
+//!
 //! ```bash
 //! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64
+//! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64 --group 8
 //! ```
 
 use pa_rl::config::Config;
@@ -18,6 +24,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let config_path = args.str_or("config", "configs/tiny.json");
     let n_requests = args.usize_or("requests", 64);
+    let group = args.usize_or("group", 1).max(1);
     let seed = args.u64_or("seed", 0);
 
     let cfg = Config::load(Path::new(&config_path))?;
@@ -29,11 +36,12 @@ fn main() -> anyhow::Result<()> {
     engine.set_weights(&params)?;
 
     let mut loader = DataLoader::new(cfg.data.clone());
-    let prompts = loader.next_batch(n_requests);
-    let reqs: Vec<GenRequest> = prompts
-        .iter()
-        .enumerate()
-        .map(|(i, p)| GenRequest { request_id: i as u64, prompt: p.tokens.clone() })
+    let n_unique = n_requests.div_ceil(group);
+    let prompts = loader.next_batch(n_unique);
+    // Grouped traffic: a prompt's repeats are adjacent, like the
+    // coordinator's group-affine dispatch.
+    let reqs: Vec<GenRequest> = (0..n_requests)
+        .map(|i| GenRequest { request_id: i as u64, prompt: prompts[i / group].tokens.clone() })
         .collect();
 
     let t0 = std::time::Instant::now();
@@ -54,6 +62,7 @@ fn main() -> anyhow::Result<()> {
         &["Metric", "Value"],
     );
     t.row(&["requests".into(), format!("{n_requests}")]);
+    t.row(&["group size".into(), format!("{group}")]);
     t.row(&["slots".into(), format!("{}", cfg.engine.n_slots)]);
     t.row(&["decode chunk".into(), format!("{}", cfg.engine.decode_chunk)]);
     t.row(&["wall (s)".into(), format!("{wall:.3}")]);
@@ -64,8 +73,22 @@ fn main() -> anyhow::Result<()> {
     t.row(&["latency p95 (s)".into(), format!("{:.3}", pct(0.95))]);
     t.row(&["latency max (s)".into(), format!("{:.3}", pct(1.0))]);
     t.row(&["EOS-terminated".into(), format!("{finished}/{n_requests}")]);
-    t.row(&["prefills".into(), format!("{}", engine.stats.prefills)]);
+    t.row(&["prefills (compiled)".into(), format!("{}", engine.stats.prefills)]);
+    t.row(&["prefills skipped".into(), format!("{}", engine.stats.prefills_skipped)]);
     t.row(&["decode chunks".into(), format!("{}", engine.stats.decode_chunks)]);
+    match engine.cache_stats() {
+        Some(c) => {
+            t.row(&["prefix cache".into(), "on".into()]);
+            t.row(&["kv hit rate".into(), format!("{:.1}%", c.hit_rate() * 100.0)]);
+            t.row(&[
+                "prompt tokens hit/miss".into(),
+                format!("{}/{}", c.hit_tokens, c.miss_tokens),
+            ]);
+            t.row(&["kv bytes saved".into(), format!("{}", c.bytes_saved)]);
+            t.row(&["cache evictions".into(), format!("{}", c.evictions)]);
+        }
+        None => t.row(&["prefix cache".into(), "off".into()]),
+    }
     t.print();
     Ok(())
 }

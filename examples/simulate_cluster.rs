@@ -54,6 +54,12 @@ fn main() -> anyhow::Result<()> {
     if which == "4" || which == "all" {
         print_rows("Table 4 — Qwen2.5-1.5B, GSM8K, 8xA100", &experiments::table4(iters));
     }
+    if which == "prefix" || which == "all" {
+        print_rows(
+            "Prefix-cache ablation — Qwen2.5-7B, GSM8K, engine KV prefix cache off/on",
+            &experiments::prefix_cache_ablation(iters),
+        );
+    }
     if which == "5" || which == "all" {
         let rows = experiments::table5(iters);
         let mut t = Table::new(

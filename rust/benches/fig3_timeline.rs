@@ -24,6 +24,7 @@ fn sim_setup(framework: Framework) -> SimSetup {
         infer_fraction: 0.75,
         infer_tp: 2,
         spa: false,
+        prefix_cache: false,
         train_micro_bs: 1,
         micro_launch_s: 0.5,
         iters: 1,

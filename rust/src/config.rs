@@ -6,6 +6,7 @@
 //! shapes into the AOT artifacts) and by the rust binary (which must agree
 //! with the artifact shapes — checked against `manifest.json` at load time).
 
+use crate::engine::kvcache::EvictPolicy;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -72,12 +73,34 @@ pub struct EngineConfig {
     pub top_p: f64,
     /// 0 disables top-k.
     pub top_k: usize,
+    /// Shared-prefix KV cache on the admission path (`engine::kvcache`).
+    /// Off = bit-identical to the pre-cache engine (every request prefills).
+    pub prefix_cache: bool,
+    /// Prefix-cache block size in tokens; must divide `prompt_max`.
+    pub cache_block: usize,
+    /// Prefix-cache pool capacity in blocks; must be >= `n_slots`.
+    pub cache_blocks: usize,
+    /// Which refcount-zero leaf the prefix cache evicts first.
+    pub cache_evict: EvictPolicy,
 }
 
 impl EngineConfig {
     /// KV-cache sequence capacity.
     pub fn cache_len(&self) -> usize {
         self.prompt_max + self.max_new
+    }
+
+    /// Pool blocks one full-length prompt occupies.
+    pub fn blocks_per_prompt(&self) -> usize {
+        self.prompt_max.div_ceil(self.cache_block)
+    }
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
     }
 }
 
@@ -170,14 +193,47 @@ impl Config {
         }
 
         let e = j.req("engine").context("config: missing 'engine'")?;
+        let n_slots = e.usize_or("n_slots", 8);
+        let prompt_max = e.req_usize("prompt_max")?;
+        // Default block size: the largest divisor of prompt_max that is <= 16
+        // and a divisor of 16 (so the default always validates).
+        let cache_block = e.usize_or("cache_block", gcd(prompt_max, 16));
+        if cache_block == 0 || prompt_max % cache_block != 0 {
+            bail!(
+                "engine.cache_block ({cache_block}) must be >= 1 and divide prompt_max ({prompt_max})"
+            );
+        }
+        // Default capacity: 4 prompt-sets' worth of blocks — enough to keep
+        // every slot's group prefix plus a few generations of warm prompts.
+        let default_blocks = n_slots * prompt_max.div_ceil(cache_block) * 4;
+        let cache_blocks = e.usize_or("cache_blocks", default_blocks);
+        if cache_blocks < n_slots {
+            bail!(
+                "engine.cache_blocks ({cache_blocks}) must be >= n_slots ({n_slots}) so every slot can pin a prefix"
+            );
+        }
+        // A pool that cannot hold one full-length prompt (+1 block for a
+        // copy-on-write tail fork) would silently drop every insert and the
+        // cache would never hit — reject it rather than limp.
+        let min_for_one_prompt = prompt_max.div_ceil(cache_block) + 1;
+        if cache_blocks < min_for_one_prompt {
+            bail!(
+                "engine.cache_blocks ({cache_blocks}) cannot hold one full prompt: need >= {min_for_one_prompt} blocks of {cache_block} tokens for prompt_max {prompt_max}"
+            );
+        }
         let engine = EngineConfig {
-            n_slots: e.usize_or("n_slots", 8),
-            prompt_max: e.req_usize("prompt_max")?,
+            n_slots,
+            prompt_max,
             decode_chunk: e.usize_or("decode_chunk", 16),
             max_new: e.req_usize("max_new")?,
             temperature: e.f64_or("temperature", 1.0),
             top_p: e.f64_or("top_p", 1.0),
             top_k: e.usize_or("top_k", 0),
+            prefix_cache: e.bool_or("prefix_cache", true),
+            cache_block,
+            cache_blocks,
+            cache_evict: EvictPolicy::parse(e.str_or("cache_evict", "lru"))
+                .context("engine.cache_evict")?,
         };
 
         let r = j.req("rl").context("config: missing 'rl'")?;
@@ -272,6 +328,95 @@ mod tests {
         assert_eq!(c.train.spa.pack_len, 16 + 4 * 8);
         assert_eq!(c.rl.n_engines, 2);
         assert_eq!(c.data.seed, 7);
+        // prefix-cache defaults: on, block = gcd(prompt_max, 16), capacity =
+        // 4 prompt-sets, LRU eviction
+        assert!(c.engine.prefix_cache);
+        assert_eq!(c.engine.cache_block, 16);
+        assert_eq!(c.engine.blocks_per_prompt(), 1);
+        assert_eq!(c.engine.cache_blocks, 4 * 1 * 4);
+        assert_eq!(c.engine.cache_evict, EvictPolicy::Lru);
+    }
+
+    #[test]
+    fn cache_knobs_parse_explicitly() {
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"n_slots":2,"prompt_max":24,"max_new":4,"prefix_cache":false,
+                          "cache_block":8,"cache_blocks":9,"cache_evict":"fifo"},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert!(!c.engine.prefix_cache);
+        assert_eq!(c.engine.cache_block, 8);
+        assert_eq!(c.engine.blocks_per_prompt(), 3);
+        assert_eq!(c.engine.cache_blocks, 9);
+        assert_eq!(c.engine.cache_evict, EvictPolicy::Fifo);
+    }
+
+    #[test]
+    fn cache_block_default_divides_odd_prompt_max() {
+        // prompt_max = 24: gcd(24, 16) = 8 — the default must always satisfy
+        // its own validation.
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":24,"max_new":4},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.engine.cache_block, 8);
+        assert_eq!(c.engine.prompt_max % c.engine.cache_block, 0);
+    }
+
+    #[test]
+    fn rejects_cache_block_not_dividing_prompt_max() {
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4,"cache_block":5},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        let err = Config::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("cache_block"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_cache_blocks_below_n_slots() {
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"n_slots":8,"prompt_max":16,"max_new":4,"cache_blocks":7},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        let err = Config::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("cache_blocks"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_cache_too_small_for_one_prompt() {
+        // 8 slots satisfies the >= n_slots bound, but 8 one-token blocks
+        // cannot hold a 16-token prompt (+1 CoW block): must be rejected,
+        // not silently drop every insert.
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"n_slots":8,"prompt_max":16,"max_new":4,"cache_block":1,"cache_blocks":8},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        let err = Config::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("cannot hold one full prompt"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_unknown_eviction_policy() {
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4,"cache_evict":"random"},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_json(&j).is_err());
     }
 
     #[test]

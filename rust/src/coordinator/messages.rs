@@ -1,6 +1,6 @@
 //! Messages flowing between the coordinator's threads.
 
-use crate::engine::GenRequest;
+use crate::engine::{CacheStats, EngineStats, GenRequest};
 use crate::runtime::HostParams;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -13,6 +13,13 @@ pub enum EngineMsg {
     SetWeights(Arc<HostParams>, mpsc::Sender<()>),
     /// Generate one rollout.
     Gen(Box<GenJob>),
+    /// Generate a whole GRPO group's rollouts on this worker. Group-affine
+    /// dispatch is what makes the engine's shared-prefix KV cache bite: the
+    /// G requests share one prompt, so landing them on one engine turns G
+    /// compiled prefills into 1 (the inference-side dual of SPA).
+    GenGroup(Vec<GenJob>),
+    /// Report engine + prefix-cache counters on the provided channel.
+    QueryStats(mpsc::Sender<WorkerStats>),
     /// Drain and exit.
     Shutdown,
 }
@@ -42,4 +49,14 @@ pub struct ScoredRollout {
     pub gen_seconds: f64,
     /// Which engine instance produced it (timeline lanes).
     pub engine_idx: usize,
+}
+
+/// Cumulative counters snapshot from one engine worker (response to
+/// [`EngineMsg::QueryStats`]).
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub engine_idx: usize,
+    pub engine: EngineStats,
+    /// Present when the worker's shared-prefix KV cache is enabled.
+    pub cache: Option<CacheStats>,
 }

@@ -16,4 +16,4 @@ pub mod worker;
 pub use assembler::Assembler;
 pub use driver::{Driver, DriverOpts, IterReport, Mode, RunReport};
 pub use eval::{evaluate, EvalReport};
-pub use messages::{EngineMsg, GenJob, ScoredRollout};
+pub use messages::{EngineMsg, GenJob, ScoredRollout, WorkerStats};

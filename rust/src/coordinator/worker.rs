@@ -7,7 +7,7 @@
 //! backpressure toward the inference side, bounding rollout memory exactly
 //! like the paper's shared queue.
 
-use super::messages::{EngineMsg, GenJob, ScoredRollout};
+use super::messages::{EngineMsg, GenJob, ScoredRollout, WorkerStats};
 use crate::config::Config;
 use crate::data::Tokenizer;
 use crate::engine::Engine;
@@ -68,7 +68,7 @@ fn worker_main(
         if engine.idle() {
             match inbox.recv() {
                 Ok(msg) => {
-                    if handle_msg(msg, &mut engine, &mut jobs)? {
+                    if handle_msg(msg, idx, &mut engine, &mut jobs, &trace, &lane)? {
                         return Ok(());
                     }
                 }
@@ -78,7 +78,7 @@ fn worker_main(
         loop {
             match inbox.try_recv() {
                 Ok(msg) => {
-                    if handle_msg(msg, &mut engine, &mut jobs)? {
+                    if handle_msg(msg, idx, &mut engine, &mut jobs, &trace, &lane)? {
                         return Ok(());
                     }
                 }
@@ -117,8 +117,11 @@ fn worker_main(
 /// Returns true on shutdown.
 fn handle_msg(
     msg: EngineMsg,
+    idx: usize,
     engine: &mut Engine,
     jobs: &mut HashMap<u64, GenJob>,
+    trace: &Trace,
+    lane: &str,
 ) -> Result<bool> {
     match msg {
         EngineMsg::SetWeights(params, ack) => {
@@ -128,6 +131,28 @@ fn handle_msg(
         EngineMsg::Gen(job) => {
             jobs.insert(job.request.request_id, (*job).clone());
             engine.submit(job.request);
+        }
+        EngineMsg::GenGroup(group) => {
+            // The group's requests enter the pending queue back-to-back:
+            // the first admission prefills and populates the prefix cache,
+            // the remaining G-1 admissions hit it.
+            for job in group {
+                jobs.insert(job.request.request_id, job.clone());
+                engine.submit(job.request);
+            }
+        }
+        EngineMsg::QueryStats(reply) => {
+            let cache = engine.cache_stats().cloned();
+            if let Some(c) = &cache {
+                // Surface the hit rate on this worker's timeline lane so the
+                // rendered trace carries it next to the TPSPD spans.
+                trace.annotate(lane, "kv_hit", c.hit_rate());
+            }
+            let _ = reply.send(WorkerStats {
+                engine_idx: idx,
+                engine: engine.stats.clone(),
+                cache,
+            });
         }
         EngineMsg::Shutdown => return Ok(true),
     }

@@ -1,0 +1,346 @@
+//! Ref-counted KV block allocator with copy-on-write fork.
+//!
+//! Storage currency of the prefix cache: a **block** holds the host-side KV
+//! rows (one row = every layer's K and V vectors for one token position) for
+//! up to `block_tokens` consecutive tokens of some cached prefix. Blocks are
+//! ref-counted because a radix-tree split leaves the block that straddles the
+//! split point shared between the two halves; a block is only returned to the
+//! free list when its last owner lets go — the "eviction never frees a
+//! referenced block" invariant the proptests pin down.
+//!
+//! Mutation discipline: appending rows requires exclusive ownership
+//! (`refs == 1`) *and* that the segment being extended is the block's packed
+//! tail. [`BlockPool::cow`] forks a segment into a fresh exclusively-owned
+//! block when either condition fails — the copy-on-write path taken when a
+//! cached prefix is extended past a previously shared boundary.
+
+/// Handle to one pooled block. Stable for the lifetime of the block (ids are
+/// recycled only after the block is freed).
+pub type BlockId = usize;
+
+#[derive(Debug)]
+struct Block {
+    /// Row storage, `len * row_elems` f32s used.
+    data: Vec<f32>,
+    /// Rows (token positions) currently stored.
+    len: usize,
+    /// Owners: radix segments referencing any rows of this block.
+    refs: u32,
+}
+
+/// Fixed-capacity pool of KV blocks.
+#[derive(Debug)]
+pub struct BlockPool {
+    block_tokens: usize,
+    row_elems: usize,
+    capacity: usize,
+    blocks: Vec<Option<Block>>,
+    free: Vec<BlockId>,
+    live: usize,
+}
+
+impl BlockPool {
+    /// A pool of at most `capacity` blocks, each holding up to `block_tokens`
+    /// rows of `row_elems` f32s.
+    pub fn new(capacity: usize, block_tokens: usize, row_elems: usize) -> BlockPool {
+        assert!(block_tokens > 0 && row_elems > 0, "degenerate block geometry");
+        BlockPool { block_tokens, row_elems, capacity, blocks: Vec::new(), free: Vec::new(), live: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.row_elems
+    }
+
+    /// Blocks currently owned by at least one segment.
+    pub fn live_count(&self) -> usize {
+        self.live
+    }
+
+    /// Blocks that could still be allocated without eviction.
+    pub fn free_count(&self) -> usize {
+        self.capacity - self.live
+    }
+
+    /// Allocate an empty block with `refs == 1`. `None` when the pool is at
+    /// capacity (the caller evicts and retries, or drops the insert).
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        if self.live == self.capacity {
+            return None;
+        }
+        let block = Block {
+            data: Vec::with_capacity(self.block_tokens * self.row_elems),
+            len: 0,
+            refs: 1,
+        };
+        self.live += 1;
+        match self.free.pop() {
+            Some(id) => {
+                debug_assert!(self.blocks[id].is_none(), "free list held a live block");
+                self.blocks[id] = Some(block);
+                Some(id)
+            }
+            None => {
+                self.blocks.push(Some(block));
+                Some(self.blocks.len() - 1)
+            }
+        }
+    }
+
+    fn get(&self, id: BlockId) -> &Block {
+        self.blocks[id].as_ref().expect("dangling BlockId")
+    }
+
+    fn get_mut(&mut self, id: BlockId) -> &mut Block {
+        self.blocks[id].as_mut().expect("dangling BlockId")
+    }
+
+    /// Add one owner.
+    pub fn retain(&mut self, id: BlockId) {
+        self.get_mut(id).refs += 1;
+    }
+
+    /// Drop one owner; frees the block (and recycles the id) at zero.
+    pub fn release(&mut self, id: BlockId) {
+        let b = self.get_mut(id);
+        debug_assert!(b.refs > 0, "release on unreferenced block");
+        b.refs -= 1;
+        if b.refs == 0 {
+            self.blocks[id] = None;
+            self.free.push(id);
+            self.live -= 1;
+        }
+    }
+
+    pub fn refs(&self, id: BlockId) -> u32 {
+        self.get(id).refs
+    }
+
+    /// Rows stored in the block.
+    pub fn len(&self, id: BlockId) -> usize {
+        self.get(id).len
+    }
+
+    /// Read rows `[start, start + n)`.
+    pub fn rows(&self, id: BlockId, start: usize, n: usize) -> &[f32] {
+        let b = self.get(id);
+        assert!(start + n <= b.len, "row range {start}..{} past block len {}", start + n, b.len);
+        &b.data[start * self.row_elems..(start + n) * self.row_elems]
+    }
+
+    /// Append rows to an exclusively-owned block. Returns rows appended
+    /// (bounded by remaining block capacity); `rows.len()` must be a multiple
+    /// of `row_elems`.
+    pub fn push_rows(&mut self, id: BlockId, rows: &[f32]) -> usize {
+        assert_eq!(rows.len() % self.row_elems, 0, "ragged row append");
+        let row_elems = self.row_elems;
+        let block_tokens = self.block_tokens;
+        let b = self.get_mut(id);
+        assert_eq!(b.refs, 1, "append to shared block (fork first)");
+        let fit = (block_tokens - b.len).min(rows.len() / row_elems);
+        b.data.extend_from_slice(&rows[..fit * row_elems]);
+        b.len += fit;
+        fit
+    }
+
+    /// Copy-on-write fork: return a block exclusively owning rows
+    /// `[start, start + n)` packed from row 0, ready for appends.
+    ///
+    /// Fast path: if the segment already *is* the whole of an exclusively
+    /// owned block, it is returned as-is. Otherwise a fresh block is
+    /// allocated, the rows are copied, and the caller's reference on `id` is
+    /// released. `None` when the pool is exhausted (caller's reference is
+    /// kept untouched so it can unwind cleanly).
+    pub fn cow(&mut self, id: BlockId, start: usize, n: usize) -> Option<BlockId> {
+        {
+            let b = self.get(id);
+            assert!(start + n <= b.len, "cow range past block len");
+            if b.refs == 1 && start == 0 && n == b.len {
+                return Some(id);
+            }
+        }
+        let fresh = self.alloc()?;
+        let rows = self.rows(id, start, n).to_vec();
+        let appended = self.push_rows(fresh, &rows);
+        debug_assert_eq!(appended, n, "fresh block must fit the forked rows");
+        self.release(id);
+        Some(fresh)
+    }
+
+    /// Drop every block (cache flush).
+    pub fn clear(&mut self) {
+        self.blocks.clear();
+        self.free.clear();
+        self.live = 0;
+    }
+
+    /// Structural invariants, for the proptests: id-space conservation and
+    /// no live block on the free list.
+    pub fn check(&self) -> Result<(), String> {
+        let live = self.blocks.iter().filter(|b| b.is_some()).count();
+        if live != self.live {
+            return Err(format!("live count {} != occupied slots {live}", self.live));
+        }
+        if live > self.capacity {
+            return Err(format!("live {live} exceeds capacity {}", self.capacity));
+        }
+        if self.free.len() + live != self.blocks.len() {
+            return Err(format!(
+                "id conservation violated: {} free + {live} live != {} ids",
+                self.free.len(),
+                self.blocks.len()
+            ));
+        }
+        for &id in &self.free {
+            if self.blocks[id].is_some() {
+                return Err(format!("block {id} is both free and live"));
+            }
+        }
+        for (id, b) in self.blocks.iter().enumerate() {
+            if let Some(b) = b {
+                if b.refs == 0 {
+                    return Err(format!("live block {id} has zero refs"));
+                }
+                if b.len > self.block_tokens || b.data.len() != b.len * self.row_elems {
+                    return Err(format!("block {id} row bookkeeping corrupt"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn alloc_release_recycles_ids() {
+        let mut p = BlockPool::new(2, 4, 3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(p.alloc().is_none(), "pool at capacity");
+        p.release(a);
+        assert_eq!(p.free_count(), 1);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a, "freed id is recycled");
+        p.check().unwrap();
+        p.release(b);
+        p.release(c);
+        assert_eq!(p.live_count(), 0);
+        p.check().unwrap();
+    }
+
+    #[test]
+    fn shared_block_survives_one_release() {
+        let mut p = BlockPool::new(4, 4, 2);
+        let a = p.alloc().unwrap();
+        p.push_rows(a, &[1.0; 8]); // 4 rows
+        p.retain(a);
+        assert_eq!(p.refs(a), 2);
+        p.release(a);
+        assert_eq!(p.refs(a), 1);
+        assert_eq!(p.rows(a, 0, 4).len(), 8, "rows intact after partial release");
+        p.release(a);
+        assert_eq!(p.live_count(), 0);
+    }
+
+    #[test]
+    fn push_rows_respects_capacity() {
+        let mut p = BlockPool::new(1, 3, 2);
+        let a = p.alloc().unwrap();
+        assert_eq!(p.push_rows(a, &[0.5; 4]), 2);
+        assert_eq!(p.push_rows(a, &[1.5; 6]), 1, "only one row fits");
+        assert_eq!(p.len(a), 3);
+        assert_eq!(p.rows(a, 2, 1), &[1.5, 1.5]);
+    }
+
+    #[test]
+    fn cow_forks_shared_and_partial_segments() {
+        let mut p = BlockPool::new(4, 4, 1);
+        let a = p.alloc().unwrap();
+        p.push_rows(a, &[1.0, 2.0, 3.0, 4.0]);
+        // Exclusive whole-block fast path: same id.
+        assert_eq!(p.cow(a, 0, 4).unwrap(), a);
+        // Shared: fork copies and drops one reference.
+        p.retain(a);
+        let f = p.cow(a, 1, 2).unwrap();
+        assert_ne!(f, a);
+        assert_eq!(p.rows(f, 0, 2), &[2.0, 3.0]);
+        assert_eq!(p.refs(a), 1, "cow released the caller's reference");
+        assert_eq!(p.refs(f), 1);
+        // Forked block is append-ready.
+        assert_eq!(p.push_rows(f, &[9.0]), 1);
+        assert_eq!(p.rows(f, 2, 1), &[9.0]);
+        p.check().unwrap();
+    }
+
+    #[test]
+    fn cow_exhaustion_keeps_reference() {
+        let mut p = BlockPool::new(1, 4, 1);
+        let a = p.alloc().unwrap();
+        p.push_rows(a, &[1.0, 2.0]);
+        p.retain(a);
+        assert!(p.cow(a, 0, 1).is_none(), "no room to fork");
+        assert_eq!(p.refs(a), 2, "failed cow must not leak a release");
+        p.check().unwrap();
+    }
+
+    #[test]
+    fn prop_pool_conservation() {
+        prop::quick(
+            "block pool: id conservation under random alloc/retain/release",
+            |rng: &mut Pcg64, size| {
+                let cap = rng.range(1, 8);
+                let ops: Vec<u64> = (0..size.scaled(80)).map(|_| rng.next_u64()).collect();
+                (cap, ops)
+            },
+            |(cap, ops)| {
+                let mut p = BlockPool::new(*cap, 2, 1);
+                let mut owned: Vec<BlockId> = Vec::new(); // one entry per reference we hold
+                for &op in ops {
+                    match op % 3 {
+                        0 => {
+                            if let Some(id) = p.alloc() {
+                                owned.push(id);
+                            } else if p.free_count() != 0 {
+                                return Err("alloc failed with free capacity".into());
+                            }
+                        }
+                        1 => {
+                            if !owned.is_empty() {
+                                let id = owned[(op as usize / 3) % owned.len()];
+                                p.retain(id);
+                                owned.push(id);
+                            }
+                        }
+                        _ => {
+                            if !owned.is_empty() {
+                                let id = owned.swap_remove((op as usize / 3) % owned.len());
+                                p.release(id);
+                            }
+                        }
+                    }
+                    p.check().map_err(|e| e.to_string())?;
+                    // every reference we hold must still resolve
+                    for &id in &owned {
+                        if p.refs(id) == 0 {
+                            return Err(format!("held block {id} was freed"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

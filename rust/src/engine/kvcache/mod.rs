@@ -1,0 +1,506 @@
+//! Shared-prefix KV cache — the inference-side dual of shared-prompt
+//! attention.
+//!
+//! The paper's SPA kernel computes each GRPO group's common prompt **once**
+//! on the training side; this subsystem does the same for the inference
+//! engine's prefill. The engine's compiled `prefill` artifact writes a
+//! prompt's KV rows into the monolithic host-resident cache tensor
+//! (`[layers, slots, 2, cache_len, kv_heads, head_dim]`), and those rows
+//! depend only on the prompt tokens and the weights — never on the slot — so
+//! they are relocatable. On admission the engine first consults this cache:
+//!
+//! * **miss** — run the compiled `prefill`, then copy the prompt's KV rows
+//!   (and the last-position logits) into ref-counted pool blocks indexed by a
+//!   radix tree over token prefixes ([`radix`], [`blocks`]);
+//! * **hit** — copy the cached rows into the claimed slot (a private fork of
+//!   the shared prefix: decode appends beyond `prompt_len` without ever
+//!   touching cache memory), sample the first token from the cached logits,
+//!   and **skip the compiled `prefill` entirely**.
+//!
+//! A G-rollout GRPO group therefore triggers exactly one compiled prefill:
+//! prefill cost scales with *unique prompts*, not total rollouts, and the
+//! prompt-token hit rate on grouped traffic approaches `(G-1)/G`.
+//!
+//! Consistency: cached KV/logits are functions of the weights, so
+//! [`PrefixCache::clear`] must run on every weight sync (the engine does this
+//! inside `set_weights`, which already requires idleness). Leases taken by
+//! in-flight requests pin their prefix against eviction until retirement and
+//! are epoch-tagged so a flush cannot be corrupted by a stale release.
+
+pub mod blocks;
+pub mod radix;
+pub mod stats;
+
+pub use radix::EvictPolicy;
+pub use stats::CacheStats;
+
+use anyhow::{bail, Result};
+use blocks::BlockPool;
+use radix::RadixTree;
+
+/// Geometry of the engine's KV-cache tensor
+/// `[n_layers, n_slots, 2, cache_len, kv_heads, head_dim]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvGeometry {
+    pub n_layers: usize,
+    pub n_slots: usize,
+    pub cache_len: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl KvGeometry {
+    /// Derive the geometry from the manifest's KV-cache shape.
+    pub fn from_kv_shape(shape: &[usize]) -> Result<KvGeometry> {
+        let [l, s, two, c, h, d] = shape else {
+            bail!("kv cache shape {shape:?} is not 6-dimensional");
+        };
+        if *two != 2 {
+            bail!("kv cache shape {shape:?}: expected K/V pair axis of 2");
+        }
+        Ok(KvGeometry { n_layers: *l, n_slots: *s, cache_len: *c, kv_heads: *h, head_dim: *d })
+    }
+
+    /// f32 elements in one token row (every layer's K and V vectors).
+    pub fn row_elems(&self) -> usize {
+        self.n_layers * 2 * self.kv_heads * self.head_dim
+    }
+
+    /// Element offset of `(layer, slot, k_or_v, position)` in the flat tensor.
+    fn chunk_offset(&self, layer: usize, slot: usize, pair: usize, pos: usize) -> usize {
+        ((((layer * self.n_slots + slot) * 2) + pair) * self.cache_len + pos)
+            * self.kv_heads
+            * self.head_dim
+    }
+}
+
+/// Copy the first `n_tokens` KV rows of `slot` out of the flat cache tensor,
+/// token-major (`[token][layer][k/v][kv_heads * head_dim]`).
+pub fn gather_prompt_rows(kv: &[f32], g: &KvGeometry, slot: usize, n_tokens: usize) -> Vec<f32> {
+    let chunk = g.kv_heads * g.head_dim;
+    let mut out = Vec::with_capacity(n_tokens * g.row_elems());
+    for pos in 0..n_tokens {
+        for layer in 0..g.n_layers {
+            for pair in 0..2 {
+                let o = g.chunk_offset(layer, slot, pair, pos);
+                out.extend_from_slice(&kv[o..o + chunk]);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`gather_prompt_rows`]: write token-major rows into `slot`'s
+/// positions `[0, rows / row_elems)` of the flat cache tensor.
+pub fn scatter_prompt_rows(kv: &mut [f32], g: &KvGeometry, slot: usize, rows: &[f32]) {
+    let chunk = g.kv_heads * g.head_dim;
+    let row_elems = g.row_elems();
+    assert_eq!(rows.len() % row_elems, 0, "ragged row scatter");
+    for pos in 0..rows.len() / row_elems {
+        let row = &rows[pos * row_elems..(pos + 1) * row_elems];
+        for layer in 0..g.n_layers {
+            for pair in 0..2 {
+                let o = g.chunk_offset(layer, slot, pair, pos);
+                let r = (layer * 2 + pair) * chunk;
+                kv[o..o + chunk].copy_from_slice(&row[r..r + chunk]);
+            }
+        }
+    }
+}
+
+/// Cache sizing/eviction knobs (validated by `config::Config`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrefixCacheCfg {
+    /// Tokens per pool block.
+    pub block_tokens: usize,
+    /// Pool capacity in blocks.
+    pub capacity_blocks: usize,
+    pub policy: EvictPolicy,
+}
+
+/// Pin on a cached prefix held by one in-flight request; returned on a hit or
+/// an insert and released when the request retires. Epoch-tagged: releases
+/// that outlive a [`PrefixCache::clear`] are ignored.
+#[derive(Debug)]
+pub struct Lease {
+    node: usize,
+    epoch: u64,
+}
+
+/// A full-prompt hit: everything the engine needs to admit the request
+/// without running the compiled prefill.
+#[derive(Debug)]
+pub struct PrefixHit {
+    /// Token-major KV rows for the whole prompt (scatter into the slot).
+    pub rows: Vec<f32>,
+    /// Last-position logits (sample the first response token on the host).
+    pub logits: Vec<f32>,
+    pub lease: Lease,
+}
+
+/// The prefix cache: radix index + block pool + counters.
+#[derive(Debug)]
+pub struct PrefixCache {
+    geom: KvGeometry,
+    tree: RadixTree,
+    pool: BlockPool,
+    pub stats: CacheStats,
+    epoch: u64,
+}
+
+impl PrefixCache {
+    pub fn new(geom: KvGeometry, cfg: PrefixCacheCfg) -> PrefixCache {
+        let pool = BlockPool::new(cfg.capacity_blocks, cfg.block_tokens, geom.row_elems());
+        PrefixCache { geom, tree: RadixTree::new(cfg.policy), pool, stats: CacheStats::default(), epoch: 0 }
+    }
+
+    pub fn geometry(&self) -> &KvGeometry {
+        &self.geom
+    }
+
+    pub fn live_blocks(&self) -> usize {
+        self.pool.live_count()
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.pool.block_tokens()
+    }
+
+    /// Look up a prompt on admission. Only a full-length, node-boundary match
+    /// with cached logits counts as a hit — the compiled prefill is
+    /// monolithic, so a partial prefix cannot save the call. Every prompt
+    /// token is accounted to exactly one of `hit_tokens` / `miss_tokens`.
+    pub fn match_prompt(&mut self, seq: &[u32]) -> Option<PrefixHit> {
+        self.stats.lookups += 1;
+        let m = self.tree.lookup(seq);
+        let full = m
+            .terminal
+            .filter(|&t| m.matched == seq.len() && self.tree.logits(t).is_some());
+        match full {
+            Some(t) => {
+                let rows = self.tree.path_rows(t, &self.pool);
+                let logits = self.tree.logits(t).unwrap().to_vec();
+                self.tree.acquire(t);
+                self.stats.hits += 1;
+                self.stats.hit_tokens += seq.len() as u64;
+                self.stats.bytes_saved +=
+                    (seq.len() * self.geom.row_elems() * std::mem::size_of::<f32>()) as u64;
+                Some(PrefixHit { rows, logits, lease: Lease { node: t, epoch: self.epoch } })
+            }
+            None => {
+                self.stats.misses += 1;
+                self.stats.miss_tokens += seq.len() as u64;
+                None
+            }
+        }
+    }
+
+    /// Insert a prompt after a miss (rows gathered from the slot the compiled
+    /// prefill just wrote). Evicts cold leaves to make room; returns `None`
+    /// (and counts an `insert_drop`) when the prompt cannot fit even after
+    /// evicting everything evictable.
+    pub fn insert(&mut self, seq: &[u32], rows: &[f32], logits: Vec<f32>) -> Option<Lease> {
+        let budget = RadixTree::insert_budget(seq.len(), self.pool.block_tokens());
+        if budget > self.pool.capacity() {
+            self.stats.insert_drops += 1;
+            return None;
+        }
+        while self.pool.free_count() < budget {
+            match self.tree.evict_one(&mut self.pool) {
+                Some(freed) => {
+                    self.stats.evictions += 1;
+                    self.stats.blocks_evicted += freed as u64;
+                }
+                None => {
+                    self.stats.insert_drops += 1;
+                    return None;
+                }
+            }
+        }
+        let node = self.tree.insert(seq, rows, Some(logits), &mut self.pool, &mut self.stats);
+        self.tree.acquire(node);
+        self.stats.inserts += 1;
+        Some(Lease { node, epoch: self.epoch })
+    }
+
+    /// Release a lease (request retirement). Stale leases from before a
+    /// [`PrefixCache::clear`] are ignored.
+    pub fn release(&mut self, lease: Lease) {
+        if lease.epoch == self.epoch {
+            self.tree.release(lease.node);
+        }
+    }
+
+    /// Flush everything (weight sync: cached KV/logits are functions of the
+    /// weights). Bumps the lease epoch so in-flight leases cannot corrupt the
+    /// fresh tree — the engine only calls this while idle anyway.
+    pub fn clear(&mut self) {
+        self.tree.clear();
+        self.pool.clear();
+        self.epoch += 1;
+        self.stats.clears += 1;
+    }
+
+    /// Structural invariants (tree linkage + block ownership == refcounts).
+    pub fn check(&self) -> Result<(), String> {
+        self.tree.check(&self.pool)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    fn tiny_geom() -> KvGeometry {
+        KvGeometry { n_layers: 2, n_slots: 3, cache_len: 12, kv_heads: 2, head_dim: 2 }
+    }
+
+    fn cache(capacity_blocks: usize, block_tokens: usize) -> PrefixCache {
+        PrefixCache::new(
+            tiny_geom(),
+            PrefixCacheCfg { block_tokens, capacity_blocks, policy: EvictPolicy::Lru },
+        )
+    }
+
+    /// Deterministic per-prefix rows, mirroring real KV: row p depends on
+    /// tokens[..=p] only.
+    fn rows_for(seq: &[u32], row_elems: usize) -> Vec<f32> {
+        let mut acc = 3u64;
+        let mut out = Vec::with_capacity(seq.len() * row_elems);
+        for &t in seq {
+            acc = acc.wrapping_mul(2862933555777941757).wrapping_add(t as u64 + 1);
+            for e in 0..row_elems {
+                out.push(((acc >> (e % 56)) & 0x7F) as f32);
+            }
+        }
+        out
+    }
+
+    fn logits_for(seq: &[u32]) -> Vec<f32> {
+        vec![seq.iter().sum::<u32>() as f32, seq.len() as f32]
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_between_slots() {
+        let g = tiny_geom();
+        let total = g.n_layers * g.n_slots * 2 * g.cache_len * g.kv_heads * g.head_dim;
+        let mut kv: Vec<f32> = (0..total).map(|i| i as f32).collect();
+        let rows = gather_prompt_rows(&kv, &g, 1, 5);
+        assert_eq!(rows.len(), 5 * g.row_elems());
+        scatter_prompt_rows(&mut kv, &g, 0, &rows);
+        // Slot 0's first 5 positions now mirror slot 1's.
+        assert_eq!(gather_prompt_rows(&kv, &g, 0, 5), rows);
+        // Positions beyond the scatter and other slots are untouched.
+        let o = g.chunk_offset(0, 0, 0, 5);
+        assert_eq!(kv[o], o as f32);
+        let o2 = g.chunk_offset(1, 2, 1, 0);
+        assert_eq!(kv[o2], o2 as f32);
+    }
+
+    #[test]
+    fn group_admission_hits_g_minus_1_of_g() {
+        let mut c = cache(16, 4);
+        let re = c.geometry().row_elems();
+        let prompt = vec![5, 6, 7, 8, 9, 10];
+        let g = 8usize;
+        let mut leases = Vec::new();
+        for i in 0..g {
+            match c.match_prompt(&prompt) {
+                Some(hit) => {
+                    assert!(i > 0, "first admission must miss");
+                    assert_eq!(hit.rows, rows_for(&prompt, re));
+                    assert_eq!(hit.logits, logits_for(&prompt));
+                    leases.push(hit.lease);
+                }
+                None => {
+                    assert_eq!(i, 0, "only the first admission may miss");
+                    let lease = c
+                        .insert(&prompt, &rows_for(&prompt, re), logits_for(&prompt))
+                        .expect("insert fits");
+                    leases.push(lease);
+                }
+            }
+        }
+        assert_eq!(c.stats.hits, (g - 1) as u64);
+        assert_eq!(c.stats.misses, 1);
+        assert_eq!(c.stats.prompt_tokens(), (g * prompt.len()) as u64);
+        assert!((c.stats.hit_rate() - (g - 1) as f64 / g as f64).abs() < 1e-12);
+        for l in leases {
+            c.release(l);
+        }
+        c.check().unwrap();
+    }
+
+    #[test]
+    fn clear_invalidates_and_stale_release_is_ignored() {
+        let mut c = cache(8, 4);
+        let re = c.geometry().row_elems();
+        let p = vec![1, 2, 3];
+        let lease = c.insert(&p, &rows_for(&p, re), logits_for(&p)).unwrap();
+        c.clear();
+        assert!(c.match_prompt(&p).is_none(), "flushed entry must miss");
+        c.release(lease); // stale epoch: no-op, must not corrupt the new tree
+        c.check().unwrap();
+        assert_eq!(c.stats.clears, 1);
+        assert_eq!(c.live_blocks(), 0);
+    }
+
+    #[test]
+    fn oversized_prompt_is_dropped_not_wedged() {
+        let mut c = cache(2, 4); // capacity 2 blocks; budget for 8 tokens = 3
+        let re = c.geometry().row_elems();
+        let p: Vec<u32> = (0..8).collect();
+        assert!(c.insert(&p, &rows_for(&p, re), logits_for(&p)).is_none());
+        assert_eq!(c.stats.insert_drops, 1);
+        c.check().unwrap();
+    }
+
+    /// The acceptance invariants, under random grouped traffic with leases,
+    /// eviction pressure and flushes:
+    /// * insert/match round-trip (hit rows+logits always byte-exact),
+    /// * hit_tokens + miss_tokens == total admitted prompt tokens,
+    /// * block ownership == pool refcounts after every op (no leak, no
+    ///   premature free),
+    /// * releasing every lease and evicting to dryness empties the pool.
+    #[test]
+    fn prop_cache_traffic_invariants() {
+        prop::quick(
+            "prefix cache: traffic invariants",
+            |rng: &mut Pcg64, size| {
+                let n_ops = size.scaled(60);
+                let ops: Vec<(u64, Vec<u32>)> = (0..n_ops)
+                    .map(|_| {
+                        // Small alphabet + short lengths force prefix overlap,
+                        // splits and shared boundary blocks.
+                        let len = rng.range(1, 10);
+                        let seq: Vec<u32> = (0..len).map(|_| rng.range(0, 3) as u32).collect();
+                        (rng.next_u64(), seq)
+                    })
+                    .collect();
+                let capacity = rng.range(3, 20);
+                (capacity, ops)
+            },
+            |(capacity, ops)| {
+                let mut c = PrefixCache::new(
+                    tiny_geom(),
+                    PrefixCacheCfg {
+                        block_tokens: 4,
+                        capacity_blocks: *capacity,
+                        policy: EvictPolicy::Lru,
+                    },
+                );
+                let re = c.geometry().row_elems();
+                let mut leases = Vec::new();
+                let mut admitted_tokens = 0u64;
+                for (op, seq) in ops {
+                    match op % 8 {
+                        0..=5 => {
+                            // admission: lookup, insert on miss
+                            admitted_tokens += seq.len() as u64;
+                            match c.match_prompt(seq) {
+                                Some(hit) => {
+                                    if hit.rows != rows_for(seq, re) {
+                                        return Err(format!("hit rows corrupt for {seq:?}"));
+                                    }
+                                    if hit.logits != logits_for(seq) {
+                                        return Err(format!("hit logits corrupt for {seq:?}"));
+                                    }
+                                    leases.push(hit.lease);
+                                }
+                                None => {
+                                    if let Some(l) =
+                                        c.insert(seq, &rows_for(seq, re), logits_for(seq))
+                                    {
+                                        leases.push(l);
+                                    }
+                                }
+                            }
+                        }
+                        6 => {
+                            // retire a random in-flight request
+                            if !leases.is_empty() {
+                                let i = (*op as usize / 8) % leases.len();
+                                c.release(leases.swap_remove(i));
+                            }
+                        }
+                        _ => {
+                            // weight sync: flush; outstanding leases go stale
+                            c.clear();
+                            leases.clear();
+                        }
+                    }
+                    c.check().map_err(|e| format!("after {seq:?}: {e}"))?;
+                    if c.stats.prompt_tokens() != admitted_tokens {
+                        return Err(format!(
+                            "accounting: {} hit+miss tokens vs {admitted_tokens} admitted",
+                            c.stats.prompt_tokens()
+                        ));
+                    }
+                }
+                // Drain: release every lease, then evict to dryness. With no
+                // pins left, every block must find its way back to the pool —
+                // the "refcount never leaks blocks" acceptance invariant.
+                for l in leases.drain(..) {
+                    c.release(l);
+                }
+                while c.tree.evict_one(&mut c.pool).is_some() {}
+                if c.live_blocks() != 0 {
+                    return Err(format!("{} blocks leaked after full drain", c.live_blocks()));
+                }
+                c.check().map_err(|e| e.to_string())
+            },
+        );
+    }
+
+    /// Eviction pressure with held leases: a leased prefix's blocks are never
+    /// freed (hits stay byte-exact) while unleased entries get evicted.
+    #[test]
+    fn prop_leases_pin_against_eviction() {
+        prop::quick(
+            "prefix cache: leases pin blocks under pressure",
+            |rng: &mut Pcg64, size| {
+                let pinned: Vec<u32> = (0..rng.range(2, 8)).map(|_| rng.range(0, 4) as u32).collect();
+                let churn: Vec<Vec<u32>> = (0..size.scaled(30))
+                    .map(|_| (0..rng.range(1, 8)).map(|_| rng.range(0, 50) as u32).collect())
+                    .collect();
+                (pinned, churn)
+            },
+            |(pinned, churn)| {
+                let mut c = PrefixCache::new(
+                    tiny_geom(),
+                    PrefixCacheCfg { block_tokens: 2, capacity_blocks: 6, policy: EvictPolicy::Lru },
+                );
+                let re = c.geometry().row_elems();
+                let _lease = match c.match_prompt(pinned) {
+                    Some(h) => h.lease,
+                    None => c
+                        .insert(pinned, &rows_for(pinned, re), logits_for(pinned))
+                        .ok_or("pinned prompt must fit an empty cache")?,
+                };
+                for seq in churn {
+                    if c.match_prompt(seq).is_none() {
+                        let _ = c.insert(seq, &rows_for(seq, re), logits_for(seq));
+                    }
+                    c.check().map_err(|e| e.to_string())?;
+                }
+                // The pinned terminal was never evictable; unless a later
+                // insert split it (moving logits below the pin), it must
+                // still hit byte-exactly. Either way its blocks were never
+                // freed — check() above verifies ownership each step.
+                if let Some(hit) = c.match_prompt(pinned) {
+                    if hit.rows != rows_for(pinned, re) {
+                        return Err("pinned rows corrupted under pressure".into());
+                    }
+                    c.release(hit.lease);
+                }
+                Ok(())
+            },
+        );
+    }
+}

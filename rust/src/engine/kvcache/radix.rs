@@ -1,0 +1,634 @@
+//! Radix tree over cached prompt prefixes.
+//!
+//! Each node owns one token fragment of a cached prefix plus the KV rows for
+//! that fragment, stored as segments of ref-counted pool blocks
+//! ([`super::blocks`]). The tree supports longest-prefix match, insert with
+//! node splitting (the block straddling a split point is *shared* between the
+//! two halves via the pool refcount), in-place extension of unshared leaf
+//! tails (copy-on-write forking the tail block when it is shared or no longer
+//! packed), and LRU/FIFO eviction of leaves with no active lease.
+//!
+//! Lease semantics: a lease pins its terminal node (`refs > 0`), which keeps
+//! that node — and, structurally, every ancestor — out of eviction's reach.
+//! When a node is split, the pin conservatively stays on the upper half; the
+//! lower half may be evicted early, which only shortens future matches (hits
+//! copy rows out of the cache, so no reader ever holds a freed block).
+//! Safety is block-level: a shared block is freed only when its last owning
+//! segment is released, which `check` cross-verifies against the pool.
+
+use super::blocks::{BlockId, BlockPool};
+use super::stats::CacheStats;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Which refcount-zero leaf to evict first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictPolicy {
+    /// Least-recently-matched leaf first (default).
+    Lru,
+    /// Oldest-inserted leaf first.
+    Fifo,
+}
+
+impl EvictPolicy {
+    pub fn parse(s: &str) -> Result<EvictPolicy> {
+        match s {
+            "lru" => Ok(EvictPolicy::Lru),
+            "fifo" => Ok(EvictPolicy::Fifo),
+            other => bail!("unknown eviction policy '{other}' (lru|fifo)"),
+        }
+    }
+}
+
+/// Rows `[start, start + len)` of one pool block.
+#[derive(Debug, Clone)]
+struct Seg {
+    block: BlockId,
+    start: usize,
+    len: usize,
+}
+
+#[derive(Debug)]
+struct Node {
+    parent: usize,
+    /// Edge fragment from the parent; empty only for the root.
+    tokens: Vec<u32>,
+    /// KV storage covering `tokens` (segment lens sum to `tokens.len()`).
+    segs: Vec<Seg>,
+    /// Children keyed by the first token of their fragment.
+    children: HashMap<u32, usize>,
+    /// Active leases whose prefix ends at this node.
+    refs: u32,
+    last_use: u64,
+    created: u64,
+    /// Last-position prefill logits when a complete cached prompt ends
+    /// exactly at this node's fragment end.
+    logits: Option<Vec<f32>>,
+}
+
+/// Longest-prefix match result.
+#[derive(Debug)]
+pub struct Match {
+    /// Tokens of the query covered by cached nodes.
+    pub matched: usize,
+    /// The node whose fragment end coincides with the query end — present
+    /// only for exact full-length, node-boundary matches.
+    pub terminal: Option<usize>,
+}
+
+/// The prefix index. Block budget discipline: callers reserve pool capacity
+/// (via eviction) before [`RadixTree::insert`]; an alloc failure inside an
+/// insert is a caller bug and panics rather than corrupting the tree.
+#[derive(Debug)]
+pub struct RadixTree {
+    nodes: Vec<Option<Node>>,
+    free_ids: Vec<usize>,
+    root: usize,
+    tick: u64,
+    policy: EvictPolicy,
+}
+
+impl RadixTree {
+    pub fn new(policy: EvictPolicy) -> RadixTree {
+        let root = Node {
+            parent: 0,
+            tokens: Vec::new(),
+            segs: Vec::new(),
+            children: HashMap::new(),
+            refs: 0,
+            last_use: 0,
+            created: 0,
+            logits: None,
+        };
+        RadixTree { nodes: vec![Some(root)], free_ids: Vec::new(), root: 0, tick: 1, policy }
+    }
+
+    pub fn policy(&self) -> EvictPolicy {
+        self.policy
+    }
+
+    /// Live nodes, excluding the root.
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count() - 1
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("dangling node id")
+    }
+
+    fn node_mut(&mut self, id: usize) -> &mut Node {
+        self.nodes[id].as_mut().expect("dangling node id")
+    }
+
+    fn touch(&mut self, id: usize) {
+        let t = self.tick;
+        self.tick += 1;
+        self.node_mut(id).last_use = t;
+    }
+
+    fn add_node(&mut self, node: Node) -> usize {
+        match self.free_ids.pop() {
+            Some(id) => {
+                debug_assert!(self.nodes[id].is_none());
+                self.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Longest-prefix match; refreshes LRU stamps along fully matched nodes.
+    pub fn lookup(&mut self, seq: &[u32]) -> Match {
+        let mut i = 0usize;
+        let mut cur = self.root;
+        loop {
+            if i == seq.len() {
+                let terminal = if cur != self.root { Some(cur) } else { None };
+                return Match { matched: i, terminal };
+            }
+            let Some(&child) = self.node(cur).children.get(&seq[i]) else {
+                return Match { matched: i, terminal: None };
+            };
+            let frag = &self.node(child).tokens;
+            let common = frag.iter().zip(&seq[i..]).take_while(|(a, b)| a == b).count();
+            if common < frag.len() {
+                // diverged (or query exhausted) inside the fragment
+                return Match { matched: i + common, terminal: None };
+            }
+            i += common;
+            self.touch(child);
+            cur = child;
+        }
+    }
+
+    /// Tokens covered by the path root -> `id`.
+    pub fn path_tokens(&self, id: usize) -> usize {
+        let mut n = 0;
+        let mut cur = id;
+        while cur != self.root {
+            n += self.node(cur).tokens.len();
+            cur = self.node(cur).parent;
+        }
+        n
+    }
+
+    /// Concatenated KV rows for the path root -> `id`, in prompt order.
+    pub fn path_rows(&self, id: usize, pool: &BlockPool) -> Vec<f32> {
+        let mut chain = Vec::new();
+        let mut cur = id;
+        while cur != self.root {
+            chain.push(cur);
+            cur = self.node(cur).parent;
+        }
+        chain.reverse();
+        let mut out = Vec::with_capacity(self.path_tokens(id) * pool.row_elems());
+        for nid in chain {
+            for seg in &self.node(nid).segs {
+                out.extend_from_slice(pool.rows(seg.block, seg.start, seg.len));
+            }
+        }
+        out
+    }
+
+    /// Cached logits at `id`, if a complete prompt ends there.
+    pub fn logits(&self, id: usize) -> Option<&[f32]> {
+        self.node(id).logits.as_deref()
+    }
+
+    /// Pin `id` against eviction (lease acquire).
+    pub fn acquire(&mut self, id: usize) {
+        self.node_mut(id).refs += 1;
+    }
+
+    /// Drop one lease on `id`.
+    pub fn release(&mut self, id: usize) {
+        let n = self.node_mut(id);
+        debug_assert!(n.refs > 0, "lease release without acquire");
+        n.refs = n.refs.saturating_sub(1);
+    }
+
+    /// Worst-case pool blocks an insert of `seq` may allocate: storage for
+    /// every token plus one block for a copy-on-write tail fork.
+    pub fn insert_budget(seq_len: usize, block_tokens: usize) -> usize {
+        seq_len.div_ceil(block_tokens) + 1
+    }
+
+    /// Insert a prompt with its KV rows (`seq.len() * row_elems` f32s) and
+    /// optional terminal logits. The caller must have reserved
+    /// [`RadixTree::insert_budget`] free blocks. Returns the terminal node.
+    pub fn insert(
+        &mut self,
+        seq: &[u32],
+        rows: &[f32],
+        logits: Option<Vec<f32>>,
+        pool: &mut BlockPool,
+        stats: &mut CacheStats,
+    ) -> usize {
+        let row_elems = pool.row_elems();
+        assert_eq!(rows.len(), seq.len() * row_elems, "rows/seq mismatch");
+        assert!(!seq.is_empty(), "cannot cache an empty prompt");
+        let mut i = 0usize;
+        let mut cur = self.root;
+        loop {
+            if i == seq.len() {
+                self.node_mut(cur).logits = logits;
+                self.touch(cur);
+                return cur;
+            }
+            match self.node(cur).children.get(&seq[i]).copied() {
+                None => {
+                    let n = self.node(cur);
+                    let extendable = cur != self.root
+                        && n.children.is_empty()
+                        && n.logits.is_none()
+                        && n.refs == 0;
+                    if extendable {
+                        self.extend_node(cur, &seq[i..], &rows[i * row_elems..], pool, stats);
+                        self.node_mut(cur).logits = logits;
+                        self.touch(cur);
+                        return cur;
+                    }
+                    let leaf = self.new_leaf(cur, &seq[i..], &rows[i * row_elems..], pool);
+                    self.node_mut(cur).children.insert(seq[i], leaf);
+                    self.node_mut(leaf).logits = logits;
+                    return leaf;
+                }
+                Some(child) => {
+                    let frag = &self.node(child).tokens;
+                    let common =
+                        frag.iter().zip(&seq[i..]).take_while(|(a, b)| a == b).count();
+                    debug_assert!(common > 0, "child keyed by first token");
+                    if common < self.node(child).tokens.len() {
+                        self.split(child, common, pool);
+                    }
+                    i += common;
+                    self.touch(child);
+                    cur = child;
+                }
+            }
+        }
+    }
+
+    /// Allocate a fresh leaf storing `tokens`/`rows` under `parent`.
+    fn new_leaf(&mut self, parent: usize, tokens: &[u32], rows: &[f32], pool: &mut BlockPool) -> usize {
+        let mut segs = Vec::new();
+        let mut off = 0usize; // rows stored so far
+        while off < tokens.len() {
+            let b = pool.alloc().expect("block budget reserved by caller");
+            let n = pool.push_rows(b, &rows[off * pool.row_elems()..]);
+            debug_assert!(n > 0);
+            segs.push(Seg { block: b, start: 0, len: n });
+            off += n;
+        }
+        let t = self.tick;
+        self.tick += 1;
+        self.add_node(Node {
+            parent,
+            tokens: tokens.to_vec(),
+            segs,
+            children: HashMap::new(),
+            refs: 0,
+            last_use: t,
+            created: t,
+            logits: None,
+        })
+    }
+
+    /// Append `tokens`/`rows` to an unshared leaf's fragment, forking the
+    /// tail block (copy-on-write) when it is shared or not the block's
+    /// packed tail.
+    fn extend_node(
+        &mut self,
+        id: usize,
+        tokens: &[u32],
+        rows: &[f32],
+        pool: &mut BlockPool,
+        stats: &mut CacheStats,
+    ) {
+        let row_elems = pool.row_elems();
+        let mut off = 0usize;
+        if let Some(last) = self.node(id).segs.last().cloned() {
+            let at_packed_tail = last.start + last.len == pool.len(last.block);
+            let has_room = pool.len(last.block) < pool.block_tokens() || !at_packed_tail;
+            if has_room {
+                let block = if pool.refs(last.block) > 1 || !at_packed_tail {
+                    let forked = pool
+                        .cow(last.block, last.start, last.len)
+                        .expect("block budget reserved by caller");
+                    if forked != last.block {
+                        stats.cow_forks += 1;
+                    }
+                    forked
+                } else {
+                    last.block
+                };
+                let n = pool.push_rows(block, rows);
+                let seg = self.node_mut(id).segs.last_mut().unwrap();
+                *seg = Seg { block, start: if block == last.block { last.start } else { 0 }, len: last.len + n };
+                off += n;
+            }
+        }
+        while off < tokens.len() {
+            let b = pool.alloc().expect("block budget reserved by caller");
+            let n = pool.push_rows(b, &rows[off * row_elems..]);
+            debug_assert!(n > 0);
+            self.node_mut(id).segs.push(Seg { block: b, start: 0, len: n });
+            off += n;
+        }
+        self.node_mut(id).tokens.extend_from_slice(tokens);
+    }
+
+    /// Split `id` at fragment offset `p` (0 < p < len). The upper half keeps
+    /// the id (parent links stay valid); the lower half takes the children,
+    /// logits and trailing storage. A block straddling `p` becomes shared.
+    fn split(&mut self, id: usize, p: usize, pool: &mut BlockPool) {
+        let node = self.node_mut(id);
+        debug_assert!(p > 0 && p < node.tokens.len(), "split point out of range");
+        let bottom_tokens = node.tokens.split_off(p);
+        // Find the segment containing row p.
+        let mut cum = 0usize;
+        let mut k = 0usize;
+        while cum + node.segs[k].len <= p {
+            cum += node.segs[k].len;
+            k += 1;
+        }
+        let o = p - cum; // offset within seg k
+        let mut bottom_segs;
+        if o == 0 {
+            bottom_segs = node.segs.split_off(k);
+        } else {
+            let seg = node.segs[k].clone();
+            bottom_segs = vec![Seg { block: seg.block, start: seg.start + o, len: seg.len - o }];
+            bottom_segs.extend(node.segs.split_off(k + 1));
+            node.segs[k].len = o;
+            pool.retain(seg.block); // straddling block now has two owners
+        }
+        let children = std::mem::take(&mut node.children);
+        let logits = node.logits.take();
+        let (last_use, created) = (node.last_use, node.created);
+        let first = bottom_tokens[0];
+        let bottom = self.add_node(Node {
+            parent: id,
+            tokens: bottom_tokens,
+            segs: bottom_segs,
+            children,
+            refs: 0,
+            last_use,
+            created,
+            logits,
+        });
+        // Reparent the grandchildren onto the lower half.
+        let grandchildren: Vec<usize> = self.node(bottom).children.values().copied().collect();
+        for g in grandchildren {
+            self.node_mut(g).parent = bottom;
+        }
+        self.node_mut(id).children.insert(first, bottom);
+    }
+
+    /// Evict the best refcount-zero leaf per the policy. Returns the number
+    /// of blocks actually freed, or `None` when nothing is evictable.
+    ///
+    /// Linear scan over the node slab: O(nodes) per eviction. Fine at this
+    /// reproduction's cache sizes (tens to hundreds of blocks) and grouped
+    /// traffic (eviction runs off the per-group hot path, once per cold
+    /// prompt); a lazily-invalidated heap of evictable leaves is the upgrade
+    /// path if caches grow to many thousands of entries (ROADMAP).
+    pub fn evict_one(&mut self, pool: &mut BlockPool) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for (id, n) in self.nodes.iter().enumerate() {
+            let Some(n) = n else { continue };
+            if id == self.root || !n.children.is_empty() || n.refs > 0 {
+                continue;
+            }
+            let key = match self.policy {
+                EvictPolicy::Lru => n.last_use,
+                EvictPolicy::Fifo => n.created,
+            };
+            if best.map(|(k, _)| key < k).unwrap_or(true) {
+                best = Some((key, id));
+            }
+        }
+        let (_, id) = best?;
+        let node = self.nodes[id].take().expect("candidate vanished");
+        self.free_ids.push(id);
+        let parent = self.node_mut(node.parent);
+        let removed = parent.children.remove(&node.tokens[0]);
+        debug_assert_eq!(removed, Some(id), "parent/child link corrupt");
+        let mut freed = 0usize;
+        for seg in &node.segs {
+            if pool.refs(seg.block) == 1 {
+                freed += 1;
+            }
+            pool.release(seg.block);
+        }
+        Some(freed)
+    }
+
+    /// Drop every node (cache flush); the caller clears the pool.
+    pub fn clear(&mut self) {
+        let policy = self.policy;
+        *self = RadixTree::new(policy);
+    }
+
+    /// Structural invariants for the proptests: tree linkage, fragment/row
+    /// conservation, and block ownership exactly matching pool refcounts.
+    pub fn check(&self, pool: &BlockPool) -> Result<(), String> {
+        pool.check()?;
+        let root = self.nodes[self.root].as_ref().ok_or("root missing")?;
+        if !root.tokens.is_empty() {
+            return Err("root has a fragment".into());
+        }
+        let mut owners: HashMap<BlockId, u32> = HashMap::new();
+        for (id, n) in self.nodes.iter().enumerate() {
+            let Some(n) = n else {
+                if !self.free_ids.contains(&id) {
+                    return Err(format!("node {id} neither live nor free"));
+                }
+                continue;
+            };
+            if id != self.root {
+                if n.tokens.is_empty() {
+                    return Err(format!("node {id} has empty fragment"));
+                }
+                let p = self
+                    .nodes
+                    .get(n.parent)
+                    .and_then(|p| p.as_ref())
+                    .ok_or(format!("node {id} has dead parent"))?;
+                if p.children.get(&n.tokens[0]) != Some(&id) {
+                    return Err(format!("parent of {id} does not link back"));
+                }
+                let rows: usize = n.segs.iter().map(|s| s.len).sum();
+                if rows != n.tokens.len() {
+                    return Err(format!(
+                        "node {id}: {rows} rows for {} tokens",
+                        n.tokens.len()
+                    ));
+                }
+            }
+            for seg in &n.segs {
+                if seg.len == 0 {
+                    return Err(format!("node {id} holds an empty segment"));
+                }
+                *owners.entry(seg.block).or_insert(0) += 1;
+            }
+            for (&tok, &c) in &n.children {
+                let child = self
+                    .nodes
+                    .get(c)
+                    .and_then(|c| c.as_ref())
+                    .ok_or(format!("node {id} has dead child"))?;
+                if child.tokens.first() != Some(&tok) {
+                    return Err(format!("child key mismatch under {id}"));
+                }
+            }
+        }
+        if owners.len() != pool.live_count() {
+            return Err(format!(
+                "{} blocks owned by segments, pool says {} live",
+                owners.len(),
+                pool.live_count()
+            ));
+        }
+        for (&b, &count) in &owners {
+            if pool.refs(b) != count {
+                return Err(format!(
+                    "block {b}: {count} owning segments but refcount {}",
+                    pool.refs(b)
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B: usize = 4; // block tokens
+    const R: usize = 2; // row elems
+
+    /// Deterministic "KV" rows: row p of a prompt depends on the whole prefix
+    /// up to p, mirroring real KV (attention over positions <= p).
+    fn rows_for(seq: &[u32]) -> Vec<f32> {
+        let mut acc = 17u64;
+        let mut out = Vec::with_capacity(seq.len() * R);
+        for &t in seq {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(t as u64);
+            for e in 0..R {
+                out.push(((acc >> (8 * e)) & 0xFF) as f32);
+            }
+        }
+        out
+    }
+
+    fn insert(tree: &mut RadixTree, pool: &mut BlockPool, seq: &[u32]) -> usize {
+        let mut stats = CacheStats::default();
+        tree.insert(seq, &rows_for(seq), Some(vec![seq.len() as f32]), pool, &mut stats)
+    }
+
+    #[test]
+    fn roundtrip_and_shared_prefix() {
+        let mut pool = BlockPool::new(32, B, R);
+        let mut tree = RadixTree::new(EvictPolicy::Lru);
+        let a = vec![1, 2, 3, 4, 5, 6];
+        let b = vec![1, 2, 3, 9, 9];
+        insert(&mut tree, &mut pool, &a);
+        insert(&mut tree, &mut pool, &b);
+        tree.check(&pool).unwrap();
+
+        for seq in [&a, &b] {
+            let m = tree.lookup(seq);
+            assert_eq!(m.matched, seq.len());
+            let t = m.terminal.expect("exact boundary match");
+            assert_eq!(tree.path_tokens(t), seq.len());
+            assert_eq!(tree.path_rows(t, &pool), rows_for(seq));
+            assert_eq!(tree.logits(t), Some(&[seq.len() as f32][..]));
+        }
+        // Split at offset 3 (inside block 0): the straddling block is shared.
+        assert_eq!(tree.node_count(), 3, "top half + two tails");
+        // Prefix-only query: full tokens matched but no terminal boundary.
+        let m = tree.lookup(&[1, 2]);
+        assert_eq!(m.matched, 2);
+        assert!(m.terminal.is_none());
+        // Divergent query: partial match.
+        let m = tree.lookup(&[1, 2, 7]);
+        assert_eq!(m.matched, 2);
+        assert!(m.terminal.is_none());
+    }
+
+    #[test]
+    fn leased_leaf_survives_eviction_pressure() {
+        let mut pool = BlockPool::new(4, B, R);
+        let mut tree = RadixTree::new(EvictPolicy::Lru);
+        let hot = vec![1, 1, 1, 1];
+        let id = insert(&mut tree, &mut pool, &hot);
+        tree.acquire(id);
+        let cold = insert(&mut tree, &mut pool, &[2, 2, 2, 2]);
+        assert_ne!(id, cold);
+        // Pool is at 2/4; force evictions until dry.
+        let mut freed = 0;
+        while let Some(f) = tree.evict_one(&mut pool) {
+            freed += f;
+        }
+        assert_eq!(freed, 1, "only the unleased leaf may be evicted");
+        assert!(tree.lookup(&hot).terminal.is_some(), "leased entry intact");
+        tree.check(&pool).unwrap();
+        tree.release(id);
+        assert_eq!(tree.evict_one(&mut pool), Some(1), "released entry now evictable");
+        assert_eq!(pool.live_count(), 0);
+    }
+
+    #[test]
+    fn fifo_and_lru_pick_different_victims() {
+        for (policy, expect_victim) in [(EvictPolicy::Fifo, 1u32), (EvictPolicy::Lru, 2u32)] {
+            let mut pool = BlockPool::new(8, B, R);
+            let mut tree = RadixTree::new(policy);
+            insert(&mut tree, &mut pool, &[1, 10]);
+            insert(&mut tree, &mut pool, &[2, 20]);
+            // Refresh the older entry's LRU stamp.
+            assert_eq!(tree.lookup(&[1, 10]).matched, 2);
+            tree.evict_one(&mut pool).unwrap();
+            let survivor = if expect_victim == 1 { [2, 20] } else { [1, 10] };
+            let victim = if expect_victim == 1 { [1, 10] } else { [2, 20] };
+            assert!(tree.lookup(&survivor).terminal.is_some(), "{policy:?}");
+            assert_eq!(tree.lookup(&victim).matched, 0, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn extend_in_place_forks_unpacked_tail() {
+        let mut pool = BlockPool::new(16, B, R);
+        let mut tree = RadixTree::new(EvictPolicy::Lru);
+        let a = vec![1, 2, 3, 4, 5, 6];
+        insert(&mut tree, &mut pool, &a);
+        // Diverge at offset 5 -> split inside block 1; tail block shared.
+        let b = vec![1, 2, 3, 4, 5, 7];
+        insert(&mut tree, &mut pool, &b);
+        tree.check(&pool).unwrap();
+        // Evict both tails; the upper half [1,2,3,4,5] becomes a bare leaf
+        // whose tail segment is row 0 of a 2-row block (not the packed tail).
+        tree.evict_one(&mut pool).unwrap();
+        tree.evict_one(&mut pool).unwrap();
+        tree.check(&pool).unwrap();
+        let c = vec![1, 2, 3, 4, 5, 8, 9];
+        let mut stats = CacheStats::default();
+        let id = tree.insert(&c, &rows_for(&c), Some(vec![7.0]), &mut pool, &mut stats);
+        assert_eq!(stats.cow_forks, 1, "shared/unpacked tail must fork");
+        assert_eq!(tree.path_rows(id, &pool), rows_for(&c));
+        assert_eq!(tree.node_count(), 1, "extension stayed in place");
+        tree.check(&pool).unwrap();
+    }
+
+    #[test]
+    fn insert_budget_is_sufficient() {
+        // Worst case: brand-new prompt, every block partial-capable + 1 cow.
+        assert_eq!(RadixTree::insert_budget(6, 4), 3);
+        assert_eq!(RadixTree::insert_budget(8, 4), 3);
+        assert_eq!(RadixTree::insert_budget(1, 4), 2);
+    }
+}

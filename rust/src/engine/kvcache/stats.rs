@@ -1,0 +1,85 @@
+//! Prefix-cache counters.
+//!
+//! The accounting contract (pinned by proptests in the parent module): every
+//! prompt token admitted through [`super::PrefixCache::match_prompt`] lands in
+//! exactly one of `hit_tokens` (served from cached KV, compiled `prefill`
+//! skipped) or `miss_tokens` (ran through the compiled `prefill`), so
+//! `hit_tokens + miss_tokens` always equals the total prompt tokens the
+//! engine admitted. On a G-rollout group with a cold cache that yields a
+//! `(G-1)/G` token hit rate — the inference-side dual of SPA's compute saving.
+
+/// Cumulative prefix-cache counters (one instance per engine).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStats {
+    /// Prompt lookups (one per admitted request while the cache is enabled).
+    pub lookups: u64,
+    /// Full-prompt hits (compiled prefill skipped entirely).
+    pub hits: u64,
+    /// Lookups that fell through to the compiled prefill.
+    pub misses: u64,
+    /// Prompt tokens whose KV was restored from the cache.
+    pub hit_tokens: u64,
+    /// Prompt tokens recomputed by the compiled prefill.
+    pub miss_tokens: u64,
+    /// Prompts inserted after a miss.
+    pub inserts: u64,
+    /// Inserts abandoned because eviction could not free enough blocks.
+    pub insert_drops: u64,
+    /// Radix nodes evicted (LRU/FIFO leaves with no active lease).
+    pub evictions: u64,
+    /// Blocks returned to the pool by eviction.
+    pub blocks_evicted: u64,
+    /// Copy-on-write block forks (shared tail block repacked before extend).
+    pub cow_forks: u64,
+    /// KV bytes *not* recomputed thanks to hits (hit tokens x row bytes).
+    pub bytes_saved: u64,
+    /// Whole-cache flushes (weight sync invalidates every entry).
+    pub clears: u64,
+}
+
+impl CacheStats {
+    /// Prompt-token hit rate in [0, 1]; 0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hit_tokens + self.miss_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.hit_tokens as f64 / total as f64
+        }
+    }
+
+    /// Total prompt tokens accounted (hit + miss).
+    pub fn prompt_tokens(&self) -> u64 {
+        self.hit_tokens + self.miss_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_rate_edges() {
+        let mut s = CacheStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        s.hit_tokens = 30;
+        s.miss_tokens = 10;
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(s.prompt_tokens(), 40);
+    }
+
+    #[test]
+    fn group_hit_rate_shape() {
+        // G rollouts of one prompt of length L: 1 miss + (G-1) hits.
+        let (g, l) = (8u64, 64u64);
+        let s = CacheStats {
+            lookups: g,
+            hits: g - 1,
+            misses: 1,
+            hit_tokens: (g - 1) * l,
+            miss_tokens: l,
+            ..Default::default()
+        };
+        assert!((s.hit_rate() - (g - 1) as f64 / g as f64).abs() < 1e-12);
+    }
+}

@@ -3,9 +3,19 @@
 //! The KV cache has `n_slots` fixed sequence slots; this module tracks which
 //! slot holds which in-flight request and enforces the allocator invariants
 //! (no double allocation, no lost slots) that the proptests pin down.
+//!
+//! Allocation is O(log n) via a min-heap free list rather than a linear scan.
+//! A *min*-heap (not a plain LIFO stack) is deliberate: it hands out the
+//! lowest free index exactly like the original scan, so request→slot
+//! assignment — and therefore cache-off engine output — is bit-identical to
+//! the pre-free-list engine.
+
+use super::kvcache::Lease;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// An in-flight generation bound to one KV-cache slot.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct InFlight {
     /// Caller-assigned request id.
     pub request_id: u64,
@@ -18,17 +28,25 @@ pub struct InFlight {
     pub logprobs: Vec<f32>,
     /// Wall-clock start of this request's processing (prefill begin).
     pub started: std::time::Instant,
+    /// Prefix-cache pin held while this request occupies the slot (present
+    /// when the engine's shared-prefix KV cache is enabled).
+    pub lease: Option<Lease>,
 }
 
 /// Slot table.
 #[derive(Debug)]
 pub struct SlotTable {
     slots: Vec<Option<InFlight>>,
+    /// Free slot indices, lowest first.
+    free: BinaryHeap<Reverse<usize>>,
 }
 
 impl SlotTable {
     pub fn new(n_slots: usize) -> SlotTable {
-        SlotTable { slots: (0..n_slots).map(|_| None).collect() }
+        SlotTable {
+            slots: (0..n_slots).map(|_| None).collect(),
+            free: (0..n_slots).map(Reverse).collect(),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -36,27 +54,30 @@ impl SlotTable {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.slots.iter().all(|s| s.is_none())
+        self.free.len() == self.slots.len()
     }
 
     pub fn active_count(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.len() - self.free.len()
     }
 
     pub fn free_count(&self) -> usize {
-        self.len() - self.active_count()
+        self.free.len()
     }
 
-    /// Claim a free slot for a request. Returns the slot index.
+    /// Claim the lowest free slot for a request. Returns the slot index.
     pub fn claim(&mut self, inflight: InFlight) -> Option<usize> {
-        let idx = self.slots.iter().position(|s| s.is_none())?;
+        let Reverse(idx) = self.free.pop()?;
+        debug_assert!(self.slots[idx].is_none(), "free list handed out a live slot");
         self.slots[idx] = Some(inflight);
         Some(idx)
     }
 
     /// Release a slot, returning its in-flight state.
     pub fn release(&mut self, idx: usize) -> Option<InFlight> {
-        self.slots[idx].take()
+        let fl = self.slots[idx].take()?;
+        self.free.push(Reverse(idx));
+        Some(fl)
     }
 
     pub fn get(&self, idx: usize) -> Option<&InFlight> {
@@ -84,7 +105,14 @@ mod tests {
     use std::time::Instant;
 
     fn mk(id: u64) -> InFlight {
-        InFlight { request_id: id, prompt_len: 4, tokens: vec![], logprobs: vec![], started: Instant::now() }
+        InFlight {
+            request_id: id,
+            prompt_len: 4,
+            tokens: vec![],
+            logprobs: vec![],
+            started: Instant::now(),
+            lease: None,
+        }
     }
 
     #[test]
@@ -98,6 +126,33 @@ mod tests {
         assert_eq!(released.request_id, 1);
         assert_eq!(t.free_count(), 1);
         assert!(t.claim(mk(3)).is_some());
+    }
+
+    #[test]
+    fn claim_returns_lowest_free_index() {
+        // The free list must preserve the original linear scan's order so
+        // request→slot assignment stays bit-identical.
+        let mut t = SlotTable::new(4);
+        assert_eq!(t.claim(mk(0)), Some(0));
+        assert_eq!(t.claim(mk(1)), Some(1));
+        assert_eq!(t.claim(mk(2)), Some(2));
+        t.release(2);
+        t.release(0);
+        assert_eq!(t.claim(mk(3)), Some(0), "lowest free index first");
+        assert_eq!(t.claim(mk(4)), Some(2));
+        assert_eq!(t.claim(mk(5)), Some(3));
+    }
+
+    #[test]
+    fn double_release_is_inert() {
+        let mut t = SlotTable::new(2);
+        let a = t.claim(mk(1)).unwrap();
+        assert!(t.release(a).is_some());
+        assert!(t.release(a).is_none(), "second release finds nothing");
+        assert_eq!(t.free_count(), 2, "double release must not duplicate a free slot");
+        assert_eq!(t.claim(mk(2)), Some(a));
+        assert!(t.claim(mk(3)).is_some());
+        assert!(t.claim(mk(4)).is_none(), "conservation after double release");
     }
 
     #[test]

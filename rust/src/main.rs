@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! pa-rl train     --config configs/small.json --mode async [--spa] [--iters N]
-//! pa-rl simulate  --table 1..5|all [--iters N]
+//! pa-rl simulate  --table 1..5|prefix|all [--iters N]
 //! pa-rl inspect   --config configs/small.json
 //! pa-rl eval      --config configs/small.json --n 64 [--seed S]
 //! ```
@@ -20,7 +20,7 @@ use std::path::{Path, PathBuf};
 
 const USAGE: &str = "usage: pa-rl <train|simulate|inspect|eval> [--options]
   train     --config FILE [--mode sync|async|stale] [--spa] [--iters N] [--seed S]
-  simulate  [--table 1|2|3|4|5|all] [--iters N]
+  simulate  [--table 1|2|3|4|5|prefix|all] [--iters N]
   inspect   --config FILE
   eval      --config FILE [--n N] [--seed S]";
 
@@ -62,8 +62,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         let rep = driver.run(1)?;
         let it = &rep.iters[0];
         println!(
-            "iter {t:>3}  reward {:>6.3}  loss {:>9.5}  kl {:>8.5}  wall {:>6.2}s  tokens {:>7}",
-            it.reward_mean, it.stats.loss, it.stats.kl, it.wall_seconds, it.train_input_tokens
+            "iter {t:>3}  reward {:>6.3}  loss {:>9.5}  kl {:>8.5}  wall {:>6.2}s  tokens {:>7}  kv-hit {:>4.0}%  prefills {:>4}(-{})",
+            it.reward_mean,
+            it.stats.loss,
+            it.stats.kl,
+            it.wall_seconds,
+            it.train_input_tokens,
+            it.kv_hit_rate * 100.0,
+            it.prefills,
+            it.prefills_skipped
         );
     }
     Ok(())
@@ -107,6 +114,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             t.row(&[format!("{n}"), paper.map(f3).unwrap_or_default(), f3(sim.tpspd)]);
         }
         t.print();
+    }
+    if which == "prefix" || which == "all" {
+        print("Prefix-cache ablation", &experiments::prefix_cache_ablation(iters));
     }
     Ok(())
 }

@@ -27,6 +27,10 @@ pub struct Span {
 pub struct Trace {
     epoch: Instant,
     spans: Arc<Mutex<Vec<Span>>>,
+    /// Per-lane scalar annotations, e.g. `("infer-0", "kv_hit", 0.88)` —
+    /// latest value wins. Rendered beside the lane's timeline so throughput
+    /// lines carry the prefix-cache hit rate.
+    notes: Arc<Mutex<Vec<(String, String, f64)>>>,
 }
 
 impl Default for Trace {
@@ -37,7 +41,25 @@ impl Default for Trace {
 
 impl Trace {
     pub fn new() -> Trace {
-        Trace { epoch: Instant::now(), spans: Arc::new(Mutex::new(Vec::new())) }
+        Trace {
+            epoch: Instant::now(),
+            spans: Arc::new(Mutex::new(Vec::new())),
+            notes: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// Attach (or refresh) a named scalar on a lane.
+    pub fn annotate(&self, lane: &str, key: &str, value: f64) {
+        let mut notes = self.notes.lock().unwrap();
+        match notes.iter_mut().find(|(l, k, _)| l == lane && k == key) {
+            Some(entry) => entry.2 = value,
+            None => notes.push((lane.to_string(), key.to_string(), value)),
+        }
+    }
+
+    /// All lane annotations (lane, key, value).
+    pub fn annotations(&self) -> Vec<(String, String, f64)> {
+        self.notes.lock().unwrap().clone()
     }
 
     pub fn now(&self) -> f64 {
@@ -124,7 +146,13 @@ impl Trace {
                 }
             }
             let bar: String = cells.into_iter().collect();
-            out.push_str(&format!("{lane:<name_w$} |{bar}|\n"));
+            let notes = self
+                .annotations()
+                .into_iter()
+                .filter(|(l, _, _)| l == lane.as_str())
+                .map(|(_, k, v)| format!(" {k}={v:.2}"))
+                .collect::<String>();
+            out.push_str(&format!("{lane:<name_w$} |{bar}|{notes}\n"));
         }
         out
     }
@@ -172,5 +200,18 @@ mod tests {
     #[test]
     fn empty_trace_renders() {
         assert!(Trace::new().render_ascii(10).contains("empty"));
+    }
+
+    #[test]
+    fn annotations_render_and_refresh() {
+        let tr = Trace::new();
+        tr.record_abs("infer-0", "step", 0.0, 1.0);
+        tr.annotate("infer-0", "kv_hit", 0.5);
+        tr.annotate("infer-0", "kv_hit", 0.88); // latest value wins
+        tr.annotate("other-lane", "kv_hit", 0.1); // no spans -> not rendered
+        assert_eq!(tr.annotations().len(), 2);
+        let art = tr.render_ascii(20);
+        assert!(art.contains("kv_hit=0.88"), "{art}");
+        assert!(!art.contains("kv_hit=0.50"), "{art}");
     }
 }

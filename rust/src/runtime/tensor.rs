@@ -85,6 +85,14 @@ impl Tensor {
         }
     }
 
+    /// Mutable view of f32 data (host-side KV-cache row surgery).
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             TData::I32(v) => Ok(v),

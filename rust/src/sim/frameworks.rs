@@ -58,6 +58,10 @@ pub struct SimSetup {
     pub infer_tp: usize,
     /// Shared-prompt attention in the trainer.
     pub spa: bool,
+    /// Shared-prefix KV cache in the inference engines (the rust engine's
+    /// `engine::kvcache`): with group-affine dispatch, members 1..G of each
+    /// group skip prefill compute and pay only a KV-copy (HBM-bound) cost.
+    pub prefix_cache: bool,
     /// Samples per training micro-batch (paper's Micro-BS column; SPA packs
     /// the whole group into one launch regardless). Determines kernel-launch
     /// overhead, which is what makes micro-bs 1 at short sequence lengths so
@@ -157,9 +161,19 @@ impl SimSetup {
         flops / inst_flops
     }
 
-    /// Rollout service time (prefill + decode).
-    fn rollout_service(&self, lp: usize, lr: usize, step_s: f64) -> f64 {
-        self.prefill_s(lp) + lr as f64 * step_s
+    /// Admission cost for a group member whose prompt KV is already cached:
+    /// no prefill FLOPs, just streaming the prompt's KV rows into the slot
+    /// (HBM-bandwidth bound). Orders of magnitude below [`Self::prefill_s`].
+    fn shared_prefill_s(&self, lp: usize) -> f64 {
+        lp as f64 * self.model.kv_bytes_per_token
+            / (self.infer_tp as f64 * self.cluster.device.hbm_bw * self.eff.decode_bw_util)
+    }
+
+    /// Rollout service time (prefill + decode). `shared` = this member's
+    /// prompt KV comes from the prefix cache.
+    fn rollout_service(&self, lp: usize, lr: usize, step_s: f64, shared: bool) -> f64 {
+        let admit = if shared { self.shared_prefill_s(lp) } else { self.prefill_s(lp) };
+        admit + lr as f64 * step_s
     }
 
     /// Tokens entering training compute for one group.
@@ -303,7 +317,10 @@ impl SimSetup {
             .iter()
             .map(|&(gi, m)| {
                 let (lp, lr) = groups[gi][m];
-                self.rollout_service(lp, lr, step_s)
+                // Group-affine dispatch: member 0 prefills and populates the
+                // prefix cache; members 1.. reuse its prompt KV.
+                let shared = self.prefix_cache && m > 0;
+                self.rollout_service(lp, lr, step_s, shared)
             })
             .collect();
 
@@ -387,6 +404,7 @@ mod tests {
             infer_fraction: 0.8,
             infer_tp: 2,
             spa: false,
+            prefix_cache: false,
             train_micro_bs: 16,
             micro_launch_s: 0.5,
             iters: 5,
@@ -445,6 +463,31 @@ mod tests {
             a.trained_tokens
         );
         assert!(b.tpspd > a.tpspd, "spa {:.1} should beat no-spa {:.1}", b.tpspd, a.tpspd);
+    }
+
+    #[test]
+    fn prefix_cache_cuts_infer_time_not_trained_tokens() {
+        // Prompt-heavy short-response regime (GSM8K-like): prefill is a real
+        // fraction of rollout time, so sharing it across the group bites.
+        let mut off = base(Framework::PeriodicAsync);
+        off.workload = WorkloadSpec::gsm8k(32);
+        let mut on = off.clone();
+        on.prefix_cache = true;
+        let a = off.run();
+        let b = on.run();
+        assert!(
+            b.t_infer_mean < a.t_infer_mean,
+            "prefix cache should shorten inference: {} vs {}",
+            b.t_infer_mean,
+            a.t_infer_mean
+        );
+        assert_eq!(
+            a.trained_tokens, b.trained_tokens,
+            "prefill sharing must not change what gets trained"
+        );
+        assert!(b.tpspd >= a.tpspd, "cache cannot hurt TPSPD: {} vs {}", b.tpspd, a.tpspd);
+        // The saving is bounded by the prefill share of (G-1)/G members.
+        assert!(b.t_infer_mean > a.t_infer_mean * 0.2, "discount implausibly large");
     }
 
     #[test]

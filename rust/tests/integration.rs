@@ -52,6 +52,90 @@ fn engine_generates_and_tags_versions() {
     assert!(engine.stats.tokens_generated > 0);
 }
 
+/// Acceptance: a G-rollout group costs exactly one compiled prefill, and the
+/// shared-prefix cache reports a (G-1)/G prompt-token hit rate.
+#[test]
+fn grouped_prompts_trigger_one_prefill_per_group() {
+    let Some((cfg, dir)) = artifacts() else { return };
+    assert!(cfg.engine.prefix_cache, "tiny config should default the cache on");
+    let rt = Runtime::load_validated(&dir, &cfg).unwrap();
+    let params = rt.init_params(7).unwrap();
+    let mut engine = Engine::new(cfg.clone(), rt, 1);
+    engine.set_weights(&params).unwrap();
+
+    let mut loader = DataLoader::new(cfg.data.clone());
+    let prompts = loader.next_batch(2);
+    let g = cfg.rl.group_size;
+    let reqs: Vec<GenRequest> = prompts
+        .iter()
+        .enumerate()
+        .flat_map(|(pi, p)| {
+            let p = p.tokens.clone();
+            (0..g).map(move |s| GenRequest {
+                request_id: (pi * g + s) as u64,
+                prompt: p.clone(),
+            })
+        })
+        .collect();
+    let results = engine.generate_all(reqs).unwrap();
+    assert_eq!(results.len(), 2 * g);
+
+    assert_eq!(engine.stats.prefills, 2, "one compiled prefill per unique prompt");
+    assert_eq!(engine.stats.prefills_skipped, 2 * (g as u64 - 1));
+    let cache = engine.cache_stats().expect("cache enabled");
+    let want = (g - 1) as f64 / g as f64;
+    assert!(
+        cache.hit_rate() >= want - 1e-9,
+        "hit rate {} below (G-1)/G = {want}",
+        cache.hit_rate()
+    );
+    let total_prompt_tokens: usize = prompts.iter().map(|p| g * p.tokens.len()).sum();
+    assert_eq!(
+        cache.hit_tokens + cache.miss_tokens,
+        total_prompt_tokens as u64,
+        "every prompt token accounted hit or miss"
+    );
+}
+
+/// Acceptance: cache-off mode is the seed path, and cache-on produces
+/// value-identical rollouts (prefill is deterministic given weights+prompt,
+/// and the host sampler draws in the same order on both paths).
+#[test]
+fn cache_on_and_off_produce_identical_rollouts() {
+    let Some((cfg, dir)) = artifacts() else { return };
+    let mut outs = Vec::new();
+    for cache_on in [true, false] {
+        let mut cfg = cfg.clone();
+        cfg.engine.prefix_cache = cache_on;
+        let rt = Runtime::load_validated(&dir, &cfg).unwrap();
+        let params = rt.init_params(3).unwrap();
+        let mut engine = Engine::new(cfg.clone(), rt, 9);
+        engine.set_weights(&params).unwrap();
+        let mut loader = DataLoader::new(cfg.data.clone());
+        let p = loader.next_batch(1).remove(0);
+        let g = cfg.rl.group_size;
+        let reqs: Vec<GenRequest> = (0..g)
+            .map(|i| GenRequest { request_id: i as u64, prompt: p.tokens.clone() })
+            .collect();
+        let mut results = engine.generate_all(reqs).unwrap();
+        results.sort_by_key(|r| r.request_id);
+        if cache_on {
+            assert_eq!(engine.stats.prefills, 1);
+        } else {
+            assert!(engine.cache_stats().is_none());
+            assert_eq!(engine.stats.prefills, g as u64);
+            assert_eq!(engine.stats.prefills_skipped, 0);
+        }
+        outs.push(
+            results
+                .into_iter()
+                .map(|r| (r.tokens, r.logprobs))
+                .collect::<Vec<_>>(),
+        );
+    }
+    assert_eq!(outs[0], outs[1], "prefix cache must not change generated rollouts");
+}
+
 #[test]
 fn greedy_decode_is_deterministic() {
     let Some((cfg, dir)) = artifacts() else { return };
