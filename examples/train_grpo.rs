@@ -63,7 +63,8 @@ fn main() -> anyhow::Result<()> {
 
     let mut csv = csv_path.as_ref().map(|p| {
         CsvLog::new(p, &["iter", "reward", "loss", "kl", "entropy", "grad_norm",
-                         "wall_s", "consumer_wait_s", "train_tokens", "staleness"])
+                         "wall_s", "consumer_wait_s", "train_tokens", "staleness",
+                         "kv_hit_rate", "prefill_tokens_saved"])
     });
     let t0 = std::time::Instant::now();
     let report = {
@@ -72,9 +73,10 @@ fn main() -> anyhow::Result<()> {
             let rep = driver.run(1)?;
             let it = &rep.iters[0];
             println!(
-                "iter {t:>3}  reward {:>6.3}  loss {:>9.5}  kl {:>8.5}  wall {:>6.2}s  wait {:>5.2}s  tokens {:>7}  stale {:.2}",
+                "iter {t:>3}  reward {:>6.3}  loss {:>9.5}  kl {:>8.5}  wall {:>6.2}s  wait {:>5.2}s  tokens {:>7}  stale {:.2}  kv-hit {:>4.0}%",
                 it.reward_mean, it.stats.loss, it.stats.kl, it.wall_seconds,
                 it.consumer_wait_seconds, it.train_input_tokens, it.staleness_mean,
+                it.kv_hit_rate * 100.0,
             );
             if let Some(c) = csv.as_mut() {
                 c.add(&[
@@ -88,6 +90,8 @@ fn main() -> anyhow::Result<()> {
                     it.consumer_wait_seconds,
                     it.train_input_tokens as f64,
                     it.staleness_mean,
+                    it.kv_hit_rate,
+                    it.prefill_tokens_saved as f64,
                 ]);
             }
             iters_done.push(it.clone());

@@ -29,7 +29,7 @@ from jax._src.lib import xla_client as xc
 from . import config as cfgmod
 from . import model
 
-MANIFEST_VERSION = 3
+MANIFEST_VERSION = 4
 
 
 def to_hlo_text(lowered):
@@ -97,6 +97,12 @@ def artifact_specs(cfg, attn_impl):
         model.make_prefill(cfg),
         model.prefill_example_args(cfg),
         _param_names() + ["kv", "slot", "tokens", "length"],
+        ["kv", "logits"],
+    )
+    specs["prefill_chunk"] = (
+        model.make_prefill_chunk(cfg),
+        model.prefill_chunk_example_args(cfg),
+        _param_names() + ["kv", "slot", "tokens", "start", "length"],
         ["kv", "logits"],
     )
     specs["decode"] = (

@@ -7,6 +7,7 @@ both sides agree before touching any artifact.
 """
 
 import json
+import math
 from types import SimpleNamespace
 
 
@@ -45,8 +46,16 @@ def resolve(raw):
         temperature=e.get("temperature", 1.0),
         top_p=e.get("top_p", 1.0),
         top_k=e.get("top_k", 0),
+        # Prefix-cache block size; also the fixed token width of the
+        # `prefill_chunk` artifact. Mirrors rust's default (the largest
+        # divisor of prompt_max that is <= 16).
+        cache_block=e.get("cache_block", math.gcd(e["prompt_max"], 16)),
     )
     engine.cache_len = engine.prompt_max + engine.max_new
+    assert engine.cache_block >= 1 and engine.prompt_max % engine.cache_block == 0, (
+        f"engine.cache_block ({engine.cache_block}) must divide prompt_max "
+        f"({engine.prompt_max})"
+    )
 
     r = raw["rl"]
     rl = _ns(

@@ -438,6 +438,96 @@ def prefill_example_args(cfg):
     ]
 
 
+def make_prefill_chunk(cfg):
+    """Prefill one fixed-size chunk of a slot's prompt, resuming from cached
+    rows.
+
+    The engine's partial-prefix reuse: rows ``[0, start)`` of the slot's KV
+    cache already hold the prompt prefix (restored from the shared-prefix
+    cache, or written by earlier chunks); this artifact ingests the next
+    ``length <= cache_block`` prompt tokens at cache positions
+    ``[start, start + length)``, attending to the whole resident prefix, and
+    returns the logits at position ``start + length - 1`` (the prompt's last
+    position on the final chunk, from which the engine samples the first
+    response token).
+
+    Signature: params (12), kv [cache], slot () i32, tokens [Cb] i32,
+    start () i32, length () i32 -> (kv', last_logits [V]).
+
+    Unlike the monolithic ``prefill`` (which writes its full padded token
+    window), only the ``length`` valid rows are written — padded tail
+    positions scatter out-of-bounds and are dropped, so a chunk near the end
+    of the prompt can never clobber response rows.
+    """
+    m, e = cfg.model, cfg.engine
+    n = len(PARAM_NAMES)
+    dh = m.head_dim
+    cb = e.cache_block
+    sc = e.cache_len
+
+    def step(*args):
+        p = params_dict(args[0:n])
+        kv, slot, tokens, start, length = args[n:]
+        tokens2 = tokens[None]  # [1, Cb]
+        pos = start + jnp.arange(cb, dtype=jnp.int32)  # [Cb] cache positions
+        i = jnp.arange(cb)[:, None]  # query index within the chunk
+        j = jnp.arange(sc)[None, :]  # key cache position
+        qpos = start + i
+        # Causal over the resident prefix + this chunk's valid tokens; padded
+        # queries (i >= length) keep their own position so softmax stays
+        # finite (their outputs are never read).
+        mask = (((j <= qpos) & (j < start + length)) | (j == qpos))[None, None]
+
+        x = p["tok_emb"][tokens2]  # [1, Cb, D]
+        layer_stack = tuple(p[name] for name in LAYER_PARAMS)
+        # Valid rows scatter at [start, start + length); the padded tail is
+        # redirected out of bounds and dropped.
+        rows_idx = jnp.where(jnp.arange(cb) < length, pos, sc)
+
+        def layer(x, lp_kv):
+            lp, kv_l = lp_kv  # kv_l: [B, 2, Sc, Hk, Dh]
+            ln1, wq, wk, wv, wo, ln2, wg, wu, wd = lp
+            h = rmsnorm(x, ln1, m.rmsnorm_eps)
+            q = (h @ wq).reshape(1, cb, m.n_heads, dh)
+            k = (h @ wk).reshape(1, cb, m.n_kv_heads, dh)
+            v = (h @ wv).reshape(1, cb, m.n_kv_heads, dh)
+            q = rope(q, pos[None], m.rope_theta).transpose(0, 2, 1, 3)  # [1,Hq,Cb,Dh]
+            k_r = rope(k, pos[None], m.rope_theta)  # [1, Cb, Hk, Dh]
+            pair = jnp.stack([k_r[0], v[0]], axis=1)  # [Cb, 2, Hk, Dh]
+            kv_l = kv_l.at[slot, :, rows_idx].set(pair, mode="drop")
+            # Attend over the slot's full cache row range (masked).
+            cache = jax.lax.dynamic_slice(
+                kv_l, (slot, 0, 0, 0, 0), (1, 2, sc, m.n_kv_heads, dh)
+            )
+            k_all = cache[:, 0].transpose(0, 2, 1, 3)  # [1, Hk, Sc, Dh]
+            v_all = cache[:, 1].transpose(0, 2, 1, 3)
+            att = kref.attention_ref(q, k_all, v_all, mask)  # [1, Hq, Cb, Dh]
+            att = att.transpose(0, 2, 1, 3).reshape(1, cb, m.n_heads * dh)
+            x = x + att @ wo
+            x = x + swiglu(rmsnorm(x, ln2, m.rmsnorm_eps), wg, wu, wd)
+            return x, kv_l
+
+        x, kv_out = jax.lax.scan(layer, x, (layer_stack, kv))
+        x = rmsnorm(x, p["ln_f"], m.rmsnorm_eps)
+        last = jax.lax.dynamic_slice(x, (0, length - 1, 0), (1, 1, m.d_model))[0, 0]
+        logits = last @ p["lm_head"]
+        return kv_out, logits
+
+    return step
+
+
+def prefill_chunk_example_args(cfg):
+    shapes = param_shapes(cfg)
+    params = [jax.ShapeDtypeStruct(shapes[name], jnp.float32) for name in PARAM_NAMES]
+    return params + [
+        jax.ShapeDtypeStruct(kv_cache_shape(cfg), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.engine.cache_block,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    ]
+
+
 def sample_token(logits, key, temperature, top_p, top_k):
     """Temperature / top-p / top-k sampling (greedy when temperature ~ 0).
 

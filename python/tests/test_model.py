@@ -329,6 +329,113 @@ class TestEngineSteps:
         assert np.all(np.asarray(pos2) == 3), "pos advances only for the EOS step"
 
 
+class TestChunkedPrefill:
+    """Partial-prefix reuse: chunked prefill (any chunk size, any resume
+    point) must reproduce the monolithic prefill's KV rows and last-position
+    logits, so the engine can resume admission from a cached prefix."""
+
+    def _monolithic(self, flat, prompt_ids, slot):
+        e = CFG.engine
+        prefill = jax.jit(model.make_prefill(CFG))
+        kv = jnp.zeros(model.kv_cache_shape(CFG), jnp.float32)
+        padded = jnp.asarray(
+            prompt_ids + [model.PAD_ID] * (e.prompt_max - len(prompt_ids)), jnp.int32
+        )
+        kv, logits = prefill(
+            *flat, kv, jnp.asarray(slot, jnp.int32), padded,
+            jnp.asarray(len(prompt_ids), jnp.int32),
+        )
+        return np.asarray(kv), np.asarray(logits)
+
+    def _chunked(self, cfg, flat, prompt_ids, slot, resume, kv_seed):
+        """Run chunks of cfg.engine.cache_block from `resume` over a cache
+        whose rows [0, resume) are already populated (kv_seed)."""
+        chunk = jax.jit(model.make_prefill_chunk(cfg))
+        cb = cfg.engine.cache_block
+        kv = jnp.asarray(kv_seed)
+        logits = None
+        start = resume
+        while start < len(prompt_ids):
+            n = min(cb, len(prompt_ids) - start)
+            toks = prompt_ids[start : start + n] + [model.PAD_ID] * (cb - n)
+            kv, logits = chunk(
+                *flat, kv, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(toks, jnp.int32),
+                jnp.asarray(start, jnp.int32), jnp.asarray(n, jnp.int32),
+            )
+            start += n
+        return np.asarray(kv), np.asarray(logits)
+
+    @pytest.mark.parametrize("cache_block", [1, 2, 4, 8])
+    @pytest.mark.parametrize("resume", [0, 1, 3, 6])
+    def test_matches_monolithic_from_any_resume_point(self, cache_block, resume):
+        cfg = tiny_test_config(**{"engine.cache_block": cache_block})
+        flat = get_params(4)
+        prompt_ids = [1, 5, 9, 13, 7, 11, 3]
+        lp = len(prompt_ids)
+        if resume >= lp:
+            pytest.skip("resume past prompt end")
+        slot = 1
+
+        kv_mono, logits_mono = self._monolithic(flat, prompt_ids, slot)
+
+        # Seed the chunked run's cache with the monolithic rows [0, resume) —
+        # exactly what the engine restores from the shared-prefix cache.
+        kv_seed = np.zeros_like(kv_mono)
+        kv_seed[:, slot, :, :resume] = kv_mono[:, slot, :, :resume]
+        kv_chunk, logits_chunk = self._chunked(cfg, flat, prompt_ids, slot, resume, kv_seed)
+
+        np.testing.assert_allclose(
+            kv_chunk[:, slot, :, :lp], kv_mono[:, slot, :, :lp],
+            rtol=2e-4, atol=1e-5,
+            err_msg=f"KV rows diverge (cb={cache_block}, resume={resume})",
+        )
+        np.testing.assert_allclose(
+            logits_chunk, logits_mono, rtol=2e-4, atol=1e-5,
+            err_msg=f"last-position logits diverge (cb={cache_block}, resume={resume})",
+        )
+        # Rows past the prompt must stay untouched (monolithic writes padded
+        # junk there; chunked must not — decode owns those rows).
+        assert np.all(kv_chunk[:, slot, :, lp:] == 0.0)
+        # Other slots untouched.
+        other = [s for s in range(CFG.engine.n_slots) if s != slot]
+        assert np.all(kv_chunk[:, other] == 0.0)
+
+    def test_chunked_then_decode_matches_monolithic_path(self):
+        """End-to-end: greedy decode after chunked prefill equals greedy
+        decode after monolithic prefill."""
+        cfg = tiny_test_config(**{"engine.cache_block": 2})
+        flat = get_params(4)
+        e = cfg.engine
+        prompt_ids = [1, 5, 9, 13, 7]
+        lp = len(prompt_ids)
+        slot = 1
+
+        outs = []
+        for which in ("mono", "chunk"):
+            if which == "mono":
+                kv, logits = self._monolithic(flat, prompt_ids, slot)
+            else:
+                kv, logits = self._chunked(
+                    cfg, flat, prompt_ids, slot, 0,
+                    np.zeros(model.kv_cache_shape(cfg), np.float32),
+                )
+            first = int(np.argmax(logits))
+            decode = jax.jit(model.make_decode(cfg))
+            b = e.n_slots
+            tok = jnp.zeros((b,), jnp.int32).at[slot].set(first)
+            pos = jnp.zeros((b,), jnp.int32).at[slot].set(lp)
+            active = jnp.zeros((b,), jnp.int32).at[slot].set(1)
+            kv2, toks, _, _, _ = decode(
+                *flat, jnp.asarray(kv), tok, pos, active,
+                jnp.asarray(0, jnp.int32),
+                jnp.asarray(0.0, jnp.float32),  # greedy
+                jnp.asarray(1.0, jnp.float32),
+            )
+            outs.append([first] + [int(t) for t in toks[slot]])
+        assert outs[0] == outs[1], f"decode diverged: {outs}"
+
+
 class TestSampler:
     def test_greedy_at_zero_temperature(self):
         logits = jnp.asarray([[0.0, 3.0, 1.0], [2.0, -1.0, 0.5]])

@@ -25,6 +25,7 @@ fn sim_setup(framework: Framework) -> SimSetup {
         infer_tp: 2,
         spa: false,
         prefix_cache: false,
+        template_frac: 0.0,
         train_micro_bs: 1,
         micro_launch_s: 0.5,
         iters: 1,
@@ -58,10 +59,14 @@ fn main() -> anyhow::Result<()> {
             let opts = DriverOpts { mode, spa: false, seed: 5 };
             let mut driver = Driver::new(cfg.clone(), tiny, opts)?;
             let report = driver.run(2)?;
+            let kv_hit = report.iters.iter().map(|i| i.kv_hit_rate).sum::<f64>()
+                / report.iters.len().max(1) as f64;
             println!(
-                "[{name}] wall {:.2}s, consumer wait {:.2}s",
+                "[{name}] wall {:.2}s, consumer wait {:.2}s, kv-hit {:.0}%, prefill tokens saved {}",
                 report.wall_seconds,
-                report.iters.iter().map(|i| i.consumer_wait_seconds).sum::<f64>()
+                report.iters.iter().map(|i| i.consumer_wait_seconds).sum::<f64>(),
+                kv_hit * 100.0,
+                report.iters.iter().map(|i| i.prefill_tokens_saved).sum::<u64>()
             );
             println!("{}", report.trace.render_ascii(100));
             std::fs::write(

@@ -76,7 +76,13 @@ pub struct EngineConfig {
     /// Shared-prefix KV cache on the admission path (`engine::kvcache`).
     /// Off = bit-identical to the pre-cache engine (every request prefills).
     pub prefix_cache: bool,
-    /// Prefix-cache block size in tokens; must divide `prompt_max`.
+    /// Partial-prefix reuse: resume admission from the longest cached prefix
+    /// via the chunked `prefill_chunk` artifact. Only effective with
+    /// `prefix_cache` on and artifacts that ship the chunk program; off =
+    /// full-prompt hits only (PR-1 behavior).
+    pub chunked_prefill: bool,
+    /// Prefix-cache block size in tokens; must divide `prompt_max`. Also the
+    /// fixed token width of one `prefill_chunk` call.
     pub cache_block: usize,
     /// Prefix-cache pool capacity in blocks; must be >= `n_slots`.
     pub cache_blocks: usize,
@@ -230,6 +236,7 @@ impl Config {
             top_p: e.f64_or("top_p", 1.0),
             top_k: e.usize_or("top_k", 0),
             prefix_cache: e.bool_or("prefix_cache", true),
+            chunked_prefill: e.bool_or("chunked_prefill", true),
             cache_block,
             cache_blocks,
             cache_evict: EvictPolicy::parse(e.str_or("cache_evict", "lru"))
@@ -328,9 +335,10 @@ mod tests {
         assert_eq!(c.train.spa.pack_len, 16 + 4 * 8);
         assert_eq!(c.rl.n_engines, 2);
         assert_eq!(c.data.seed, 7);
-        // prefix-cache defaults: on, block = gcd(prompt_max, 16), capacity =
-        // 4 prompt-sets, LRU eviction
+        // prefix-cache defaults: on, chunked, block = gcd(prompt_max, 16),
+        // capacity = 4 prompt-sets, LRU eviction
         assert!(c.engine.prefix_cache);
+        assert!(c.engine.chunked_prefill);
         assert_eq!(c.engine.cache_block, 16);
         assert_eq!(c.engine.blocks_per_prompt(), 1);
         assert_eq!(c.engine.cache_blocks, 4 * 1 * 4);
@@ -342,12 +350,14 @@ mod tests {
         let j = Json::parse(
             r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
                 "engine":{"n_slots":2,"prompt_max":24,"max_new":4,"prefix_cache":false,
+                          "chunked_prefill":false,
                           "cache_block":8,"cache_blocks":9,"cache_evict":"fifo"},
                 "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
         )
         .unwrap();
         let c = Config::from_json(&j).unwrap();
         assert!(!c.engine.prefix_cache);
+        assert!(!c.engine.chunked_prefill);
         assert_eq!(c.engine.cache_block, 8);
         assert_eq!(c.engine.blocks_per_prompt(), 3);
         assert_eq!(c.engine.cache_blocks, 9);

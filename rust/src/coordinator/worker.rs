@@ -55,7 +55,16 @@ fn worker_main(
 ) -> Result<()> {
     let rt = Runtime::load_validated(&artifacts_dir, &cfg)
         .with_context(|| format!("engine-{idx}: loading artifacts"))?;
-    rt.prepare(&["prefill", "decode"])
+    let mut artifacts = vec!["prefill", "decode"];
+    if cfg.engine.prefix_cache
+        && cfg.engine.chunked_prefill
+        && rt.manifest().artifacts.contains_key("prefill_chunk")
+    {
+        // Chunked admission is on the first-iteration path: compile eagerly
+        // alongside the other engine artifacts so iteration 0 isn't skewed.
+        artifacts.push("prefill_chunk");
+    }
+    rt.prepare(&artifacts)
         .with_context(|| format!("engine-{idx}: compiling artifacts"))?;
     let mut engine = Engine::new(cfg, rt, seed ^ (idx as u64).wrapping_mul(0x9E37));
     let tokenizer = Tokenizer::new();

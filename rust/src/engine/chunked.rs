@@ -1,0 +1,347 @@
+//! Chunk planning for resumable (chunked) prefill admission.
+//!
+//! The engine's partial-prefix reuse replaces the monolithic one-shot
+//! `prefill` with a multi-step state machine: restore the longest cached
+//! prefix, then run the compiled `prefill_chunk` artifact over the uncached
+//! suffix one cache-block-sized chunk at a time, publishing every completed
+//! prefix back into the cache. This module holds the *pure* planning pieces
+//! of that state machine so they are testable without a PJRT runtime; the
+//! engine drives the same plan against the compiled artifact, and the tests
+//! here drive it against an exact mock model to prove the admission algebra
+//! (restore point, chunk boundaries, per-chunk publication, lease hand-over)
+//! is bit-preserving.
+
+/// One compiled `prefill_chunk` call: prompt positions `[start, start + len)`
+/// (`len <= chunk_tokens`; only the final chunk may be short).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Where chunked admission resumes given `matched` cached tokens: every
+/// matched row is reused, except that the prompt's last position must always
+/// run through a compiled chunk when its logits are not cached (the engine
+/// samples the first response token from them).
+pub fn resume_point(matched: usize, prompt_len: usize) -> usize {
+    matched.min(prompt_len.saturating_sub(1))
+}
+
+/// The chunk plan covering `[resume, prompt_len)` in `chunk_tokens`-sized
+/// steps. Starts are *not* required to be chunk-aligned — a cached prefix can
+/// end anywhere — only bounded by it.
+pub fn plan_chunks(prompt_len: usize, resume: usize, chunk_tokens: usize) -> Vec<Chunk> {
+    assert!(chunk_tokens > 0, "degenerate chunk size");
+    assert!(resume <= prompt_len, "resume past prompt end");
+    let mut out = Vec::with_capacity((prompt_len - resume).div_ceil(chunk_tokens));
+    let mut start = resume;
+    while start < prompt_len {
+        let len = chunk_tokens.min(prompt_len - start);
+        out.push(Chunk { start, len });
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::kvcache::{
+        gather_prompt_rows, gather_rows_range, scatter_prompt_rows, EvictPolicy, KvGeometry,
+        Lease, PrefixCache, PrefixCacheCfg,
+    };
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn plans_cover_the_suffix_exactly() {
+        for (len, resume, cb) in [(7, 0, 3), (7, 6, 3), (8, 1, 4), (1, 0, 16), (5, 5, 2)] {
+            let plan = plan_chunks(len, resume, cb);
+            let mut pos = resume;
+            for c in &plan {
+                assert_eq!(c.start, pos, "contiguous");
+                assert!(c.len >= 1 && c.len <= cb);
+                pos += c.len;
+            }
+            assert_eq!(pos, len, "plan covers [{resume}, {len}) with cb={cb}");
+        }
+        assert!(plan_chunks(5, 5, 2).is_empty());
+    }
+
+    #[test]
+    fn resume_always_leaves_the_last_position() {
+        assert_eq!(resume_point(0, 8), 0);
+        assert_eq!(resume_point(5, 8), 5);
+        assert_eq!(resume_point(8, 8), 7, "full row match still recomputes logits");
+        assert_eq!(resume_point(3, 1), 0);
+    }
+
+    // --- exact mock model ---------------------------------------------
+    //
+    // A stand-in for the compiled artifacts with *exact* (integer-valued
+    // f32) arithmetic: KV row p is a hash chain over row p-1 and token p, and
+    // the logits hash the final row. Chunk-invariant by construction, so any
+    // bit difference between chunked-with-cache admission and a monolithic
+    // run is a state-machine bug (wrong restore, wrong boundary, stale rows),
+    // not float noise.
+
+    fn seed_row(re: usize) -> Vec<f32> {
+        vec![1.0; re]
+    }
+
+    fn mock_row(prev: &[f32], tok: u32, re: usize) -> Vec<f32> {
+        let mut acc = 0x9E37_79B9_7F4A_7C15u64;
+        for &x in prev {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(x as u64);
+        }
+        acc = acc.wrapping_add(tok as u64 + 1);
+        (0..re)
+            .map(|e| {
+                acc = acc.wrapping_mul(2862933555777941757).wrapping_add(e as u64);
+                ((acc >> 33) & 0xFFFF) as f32
+            })
+            .collect()
+    }
+
+    fn mock_logits(last: &[f32]) -> Vec<f32> {
+        let mut acc = 7u64;
+        for &x in last {
+            acc = acc.wrapping_mul(0x0000_0100_0000_01B3).wrapping_add(x as u64);
+        }
+        (0..4).map(|i| ((acc >> (i * 8)) & 0xFF) as f32).collect()
+    }
+
+    /// The mock `prefill_chunk`: rows [0, start) must already be resident in
+    /// the slot; computes rows [start, start+len) and the last-row logits.
+    fn run_chunk_mock(
+        kv: &mut [f32],
+        g: &KvGeometry,
+        slot: usize,
+        prompt: &[u32],
+        start: usize,
+        len: usize,
+    ) -> Vec<f32> {
+        let re = g.row_elems();
+        let mut rows = gather_prompt_rows(kv, g, slot, start);
+        let mut prev = if start == 0 {
+            seed_row(re)
+        } else {
+            rows[(start - 1) * re..start * re].to_vec()
+        };
+        for i in 0..len {
+            let row = mock_row(&prev, prompt[start + i], re);
+            rows.extend_from_slice(&row);
+            prev = row;
+        }
+        scatter_prompt_rows(kv, g, slot, &rows);
+        mock_logits(&prev)
+    }
+
+    /// Mirror of the engine's cache-enabled admission over the mock model.
+    /// Returns (first-token logits, compiled tokens actually computed).
+    fn admit_mock(
+        cache: &mut PrefixCache,
+        kv: &mut [f32],
+        slot: usize,
+        prompt: &[u32],
+        leases: &mut Vec<Lease>,
+    ) -> (Vec<f32>, usize) {
+        let g = cache.geometry().clone();
+        let re = g.row_elems();
+        let m = cache.match_prefix(prompt);
+        if m.matched == prompt.len() {
+            if let Some(logits) = m.logits {
+                scatter_prompt_rows(kv, &g, slot, &m.rows);
+                leases.extend(m.lease);
+                return (logits, 0);
+            }
+        }
+        let resume = resume_point(m.matched, prompt.len());
+        let mut lease = m.lease;
+        if resume == 0 {
+            // Cold prompt: monolithic mock call + full insert, like the
+            // engine's seed-identical path.
+            if let Some(l) = lease.take() {
+                cache.release(l);
+            }
+            let logits = run_chunk_mock(kv, &g, slot, prompt, 0, prompt.len());
+            let rows = gather_prompt_rows(kv, &g, slot, prompt.len());
+            leases.extend(cache.insert(prompt, &rows, logits.clone()));
+            return (logits, prompt.len());
+        }
+        let mut rows_acc = m.rows[..resume * re].to_vec();
+        scatter_prompt_rows(kv, &g, slot, &rows_acc);
+        let mut computed = 0usize;
+        let mut logits = Vec::new();
+        for c in plan_chunks(prompt.len(), resume, cache.block_tokens()) {
+            logits = run_chunk_mock(kv, &g, slot, prompt, c.start, c.len);
+            computed += c.len;
+            let end = c.start + c.len;
+            rows_acc.extend_from_slice(&gather_rows_range(kv, &g, slot, c.start, end));
+            let term = (end == prompt.len()).then(|| logits.clone());
+            if let Some(nl) = cache.insert_prefix(&prompt[..end], &rows_acc, term) {
+                if let Some(old) = lease.take() {
+                    cache.release(old);
+                }
+                lease = Some(nl);
+            }
+        }
+        leases.extend(lease);
+        (logits, computed)
+    }
+
+    fn tiny_geom() -> KvGeometry {
+        KvGeometry { n_layers: 2, n_slots: 2, cache_len: 24, kv_heads: 1, head_dim: 2 }
+    }
+
+    fn mk_cache(capacity_blocks: usize, block_tokens: usize) -> PrefixCache {
+        PrefixCache::new(
+            tiny_geom(),
+            PrefixCacheCfg { block_tokens, capacity_blocks, policy: EvictPolicy::Lru },
+        )
+    }
+
+    fn kv_slab(g: &KvGeometry) -> Vec<f32> {
+        vec![0.0; g.n_layers * g.n_slots * 2 * g.cache_len * g.kv_heads * g.head_dim]
+    }
+
+    /// Oracle: monolithic mock prefill on a scratch slab.
+    fn oracle(g: &KvGeometry, prompt: &[u32]) -> (Vec<f32>, Vec<f32>) {
+        let mut kv = kv_slab(g);
+        let logits = run_chunk_mock(&mut kv, g, 0, prompt, 0, prompt.len());
+        let rows = gather_prompt_rows(&kv, g, 0, prompt.len());
+        (logits, rows)
+    }
+
+    /// A warm few-shot template is reused across differing suffixes: the
+    /// second and later prompts compute only their uncached suffix tokens.
+    #[test]
+    fn warm_template_costs_only_the_suffix() {
+        let g = tiny_geom();
+        let mut cache = mk_cache(64, 4);
+        let mut kv = kv_slab(&g);
+        let mut leases = Vec::new();
+        let template: Vec<u32> = (0..12).map(|i| 3 + (i % 5)).collect();
+
+        let mk = |q: &[u32]| [&template[..], q].concat();
+        let (_, computed) = admit_mock(&mut cache, &mut kv, 0, &mk(&[30, 31]), &mut leases);
+        assert_eq!(computed, 14, "cold prompt computes everything");
+
+        let suffixes: [&[u32]; 3] = [&[40, 41], &[50, 51, 52], &[60]];
+        for (i, q) in suffixes.into_iter().enumerate() {
+            let prompt = mk(q);
+            let (logits, computed) = admit_mock(&mut cache, &mut kv, 1, &prompt, &mut leases);
+            assert_eq!(
+                computed,
+                q.len(),
+                "warm prompt {i} must compute only its uncached suffix"
+            );
+            let (want_logits, want_rows) = oracle(&g, &prompt);
+            assert_eq!(logits, want_logits, "warm prompt {i} logits");
+            assert_eq!(
+                gather_prompt_rows(&kv, &g, 1, prompt.len()),
+                want_rows,
+                "warm prompt {i} rows"
+            );
+            cache.check().unwrap();
+        }
+        // Re-admitting an already-seen prompt is a full hit: zero compute.
+        let (_, computed) = admit_mock(&mut cache, &mut kv, 1, &mk(&[50, 51, 52]), &mut leases);
+        assert_eq!(computed, 0);
+        assert!(cache.stats.hits >= 1);
+        for l in leases {
+            cache.release(l);
+        }
+        cache.check().unwrap();
+    }
+
+    /// The acceptance proptest: for any chunk size, any prompt mix (shared
+    /// templates force partial hits at arbitrary offsets), any interleaving
+    /// of retirements and flushes, chunked admission produces logits and KV
+    /// rows bit-identical to a monolithic prefill of the same prompt, never
+    /// computes more than the uncached suffix, and keeps every cache
+    /// invariant intact.
+    #[test]
+    fn prop_chunked_equals_monolithic_bit_exact() {
+        prop::quick(
+            "chunked prefill == monolithic (bit-exact, any chunking)",
+            |rng: &mut Pcg64, size| {
+                let block_tokens = rng.range(1, 7);
+                let capacity = rng.range(6, 40);
+                let n_templates = rng.range(1, 4);
+                let templates: Vec<Vec<u32>> = (0..n_templates)
+                    .map(|_| (0..rng.range(1, 12)).map(|_| rng.range(0, 6) as u32).collect())
+                    .collect();
+                let ops: Vec<(u64, Vec<u32>)> = (0..size.scaled(40))
+                    .map(|_| {
+                        let t = &templates[rng.range(0, n_templates)];
+                        let suffix_len = rng.range(0, 6);
+                        let mut p = t.clone();
+                        p.extend((0..suffix_len).map(|_| rng.range(0, 6) as u32));
+                        if p.len() > 20 {
+                            p.truncate(20); // keep within cache_len
+                        }
+                        (rng.next_u64(), p)
+                    })
+                    .collect();
+                (block_tokens, capacity, ops)
+            },
+            |(block_tokens, capacity, ops)| {
+                let g = tiny_geom();
+                let mut cache = mk_cache(*capacity, *block_tokens);
+                let mut kv = kv_slab(&g);
+                let mut leases: Vec<Lease> = Vec::new();
+                for (op, prompt) in ops {
+                    match op % 8 {
+                        0..=5 => {
+                            let slot = (*op as usize / 8) % g.n_slots;
+                            let before = cache.stats.clone();
+                            let (logits, computed) =
+                                admit_mock(&mut cache, &mut kv, slot, prompt, &mut leases);
+                            let (want_logits, want_rows) = oracle(&g, prompt);
+                            if logits != want_logits {
+                                return Err(format!("logits diverge for {prompt:?}"));
+                            }
+                            if gather_prompt_rows(&kv, &g, slot, prompt.len()) != want_rows {
+                                return Err(format!("kv rows diverge for {prompt:?}"));
+                            }
+                            if computed > prompt.len() {
+                                return Err("computed more than the prompt".into());
+                            }
+                            // Token accounting: exactly this prompt's tokens
+                            // were split between hit and miss.
+                            let d_hit = cache.stats.hit_tokens - before.hit_tokens;
+                            let d_miss = cache.stats.miss_tokens - before.miss_tokens;
+                            if d_hit + d_miss != prompt.len() as u64 {
+                                return Err(format!(
+                                    "accounting: {d_hit}+{d_miss} != {}",
+                                    prompt.len()
+                                ));
+                            }
+                            // Exactly the tokens accounted as misses were
+                            // computed: the cache credits only rows the
+                            // admission actually restores.
+                            if computed != d_miss as usize {
+                                return Err(format!(
+                                    "computed {computed} != uncached {d_miss}"
+                                ));
+                            }
+                        }
+                        6 => {
+                            if !leases.is_empty() {
+                                let i = (*op as usize / 8) % leases.len();
+                                cache.release(leases.swap_remove(i));
+                            }
+                        }
+                        _ => {
+                            cache.clear();
+                            leases.clear();
+                        }
+                    }
+                    cache.check().map_err(|e| format!("after {prompt:?}: {e}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -12,14 +12,21 @@
 //! * **miss** — run the compiled `prefill`, then copy the prompt's KV rows
 //!   (and the last-position logits) into ref-counted pool blocks indexed by a
 //!   radix tree over token prefixes ([`radix`], [`blocks`]);
-//! * **hit** — copy the cached rows into the claimed slot (a private fork of
-//!   the shared prefix: decode appends beyond `prompt_len` without ever
-//!   touching cache memory), sample the first token from the cached logits,
-//!   and **skip the compiled `prefill` entirely**.
+//! * **full hit** — copy the cached rows into the claimed slot (a private
+//!   fork of the shared prefix: decode appends beyond `prompt_len` without
+//!   ever touching cache memory), sample the first token from the cached
+//!   logits, and **skip the compiled `prefill` entirely**;
+//! * **partial hit** ([`PrefixCache::match_prefix`]) — copy the rows of the
+//!   *longest cached prefix* into the slot and let chunked admission prefill
+//!   only the uncached suffix, publishing each completed chunk back via
+//!   [`PrefixCache::insert_prefix`] so concurrent group members and future
+//!   prompts resume from it.
 //!
 //! A G-rollout GRPO group therefore triggers exactly one compiled prefill:
 //! prefill cost scales with *unique prompts*, not total rollouts, and the
-//! prompt-token hit rate on grouped traffic approaches `(G-1)/G`.
+//! prompt-token hit rate on grouped traffic approaches `(G-1)/G`. With
+//! chunked admission the same holds across *different* prompts sharing a
+//! few-shot template: prefill compute scales with uncached suffix tokens.
 //!
 //! Consistency: cached KV/logits are functions of the weights, so
 //! [`PrefixCache::clear`] must run on every weight sync (the engine does this
@@ -77,9 +84,23 @@ impl KvGeometry {
 /// Copy the first `n_tokens` KV rows of `slot` out of the flat cache tensor,
 /// token-major (`[token][layer][k/v][kv_heads * head_dim]`).
 pub fn gather_prompt_rows(kv: &[f32], g: &KvGeometry, slot: usize, n_tokens: usize) -> Vec<f32> {
+    gather_rows_range(kv, g, slot, 0, n_tokens)
+}
+
+/// Copy KV rows for positions `[start, end)` of `slot`, token-major. Chunked
+/// admission appends each freshly prefilled chunk's rows to its running
+/// prefix buffer with this, so publication copies every row once instead of
+/// re-gathering the whole prefix per chunk.
+pub fn gather_rows_range(
+    kv: &[f32],
+    g: &KvGeometry,
+    slot: usize,
+    start: usize,
+    end: usize,
+) -> Vec<f32> {
     let chunk = g.kv_heads * g.head_dim;
-    let mut out = Vec::with_capacity(n_tokens * g.row_elems());
-    for pos in 0..n_tokens {
+    let mut out = Vec::with_capacity(end.saturating_sub(start) * g.row_elems());
+    for pos in start..end {
         for layer in 0..g.n_layers {
             for pair in 0..2 {
                 let o = g.chunk_offset(layer, slot, pair, pos);
@@ -136,6 +157,22 @@ pub struct PrefixHit {
     /// Last-position logits (sample the first response token on the host).
     pub logits: Vec<f32>,
     pub lease: Lease,
+}
+
+/// Longest-cached-prefix match ([`PrefixCache::match_prefix`]): the
+/// restorable rows plus everything chunked admission needs to resume.
+#[derive(Debug)]
+pub struct PrefixMatch {
+    /// Prompt tokens covered by cached nodes (node-boundary granularity);
+    /// 0 on a complete miss.
+    pub matched: usize,
+    /// Token-major KV rows for positions `[0, matched)`.
+    pub rows: Vec<f32>,
+    /// Last-position logits — present only when `matched == prompt_len` and
+    /// a complete cached prompt ends exactly there (a *full* hit).
+    pub logits: Option<Vec<f32>>,
+    /// Pin on the deepest matched node; `None` when nothing matched.
+    pub lease: Option<Lease>,
 }
 
 /// The prefix cache: radix index + block pool + counters.
@@ -199,11 +236,71 @@ impl PrefixCache {
         }
     }
 
+    /// Longest-prefix lookup for chunked admission. Restorable coverage is
+    /// token-granular — a match may end partway into a cached fragment; when
+    /// the whole prompt is covered *and* terminal logits are cached at that
+    /// exact boundary, the result is a full hit and no compiled call is
+    /// needed at all. Every prompt token is accounted to exactly one of
+    /// `hit_tokens` (restored from cache) / `miss_tokens` (left for the
+    /// compiled prefill).
+    pub fn match_prefix(&mut self, seq: &[u32]) -> PrefixMatch {
+        self.stats.lookups += 1;
+        let (node, matched) = self.tree.lookup_longest(seq);
+        if matched == 0 {
+            self.stats.misses += 1;
+            self.stats.miss_tokens += seq.len() as u64;
+            return PrefixMatch { matched: 0, rows: Vec::new(), logits: None, lease: None };
+        }
+        let logits = if matched == seq.len() && self.tree.path_tokens(node) == matched {
+            self.tree.logits(node).map(<[f32]>::to_vec)
+        } else {
+            None
+        };
+        // Tokens actually restored: all of them on a full hit; otherwise the
+        // prompt's last position is always recomputed (its logits are not
+        // cached), mirroring the engine's resume point — so hit/miss
+        // accounting reports real reuse, not optimistic matching.
+        let restored = if logits.is_some() { matched } else { matched.min(seq.len() - 1) };
+        if restored == 0 {
+            // Only the prompt's last position matched, and without its
+            // logits: nothing is reusable, so this is a miss for every
+            // practical purpose (no lease, no partial-hit credit).
+            self.stats.misses += 1;
+            self.stats.miss_tokens += seq.len() as u64;
+            return PrefixMatch { matched: 0, rows: Vec::new(), logits: None, lease: None };
+        }
+        let rows = self.tree.path_rows_prefix(node, matched, &self.pool);
+        if logits.is_some() {
+            self.stats.hits += 1;
+        } else {
+            self.stats.partial_hits += 1;
+        }
+        self.tree.acquire(node);
+        self.stats.hit_tokens += restored as u64;
+        self.stats.miss_tokens += (seq.len() - restored) as u64;
+        self.stats.bytes_saved +=
+            (restored * self.geom.row_elems() * std::mem::size_of::<f32>()) as u64;
+        PrefixMatch { matched, rows, logits, lease: Some(Lease { node, epoch: self.epoch }) }
+    }
+
     /// Insert a prompt after a miss (rows gathered from the slot the compiled
     /// prefill just wrote). Evicts cold leaves to make room; returns `None`
     /// (and counts an `insert_drop`) when the prompt cannot fit even after
     /// evicting everything evictable.
     pub fn insert(&mut self, seq: &[u32], rows: &[f32], logits: Vec<f32>) -> Option<Lease> {
+        self.insert_prefix(seq, rows, Some(logits))
+    }
+
+    /// Insert a prompt *prefix* — the per-chunk publication step of chunked
+    /// admission. `logits` is `Some` only on the final chunk (a complete
+    /// prompt); intermediate prefixes are resumable but not full hits, and a
+    /// `None` here never erases logits already cached at the same boundary.
+    pub fn insert_prefix(
+        &mut self,
+        seq: &[u32],
+        rows: &[f32],
+        logits: Option<Vec<f32>>,
+    ) -> Option<Lease> {
         let budget = RadixTree::insert_budget(seq.len(), self.pool.block_tokens());
         if budget > self.pool.capacity() {
             self.stats.insert_drops += 1;
@@ -221,7 +318,7 @@ impl PrefixCache {
                 }
             }
         }
-        let node = self.tree.insert(seq, rows, Some(logits), &mut self.pool, &mut self.stats);
+        let node = self.tree.insert(seq, rows, logits, &mut self.pool, &mut self.stats);
         self.tree.acquire(node);
         self.stats.inserts += 1;
         Some(Lease { node, epoch: self.epoch })
@@ -332,6 +429,70 @@ mod tests {
         assert_eq!(c.stats.prompt_tokens(), (g * prompt.len()) as u64);
         assert!((c.stats.hit_rate() - (g - 1) as f64 / g as f64).abs() < 1e-12);
         for l in leases {
+            c.release(l);
+        }
+        c.check().unwrap();
+    }
+
+    #[test]
+    fn partial_prefix_match_restores_template_rows() {
+        let mut c = cache(32, 2);
+        let re = c.geometry().row_elems();
+        let template: Vec<u32> = vec![7, 7, 5, 5, 3, 3];
+        let a: Vec<u32> = [&template[..], &[10, 11]].concat();
+
+        // Admit A cold, publishing each completed chunk like the engine does
+        // (the previous chunk's lease is dropped once the longer one holds).
+        let cold = c.match_prefix(&a);
+        assert_eq!(cold.matched, 0);
+        assert!(cold.lease.is_none());
+        let mut lease = None;
+        for end in [2, 4, 6, 8] {
+            let rows = rows_for(&a[..end], re);
+            let logits = (end == a.len()).then(|| logits_for(&a[..end]));
+            let nl = c.insert_prefix(&a[..end], &rows, logits);
+            assert!(nl.is_some(), "chunk prefix must fit");
+            if let Some(l) = lease.take() {
+                c.release(l);
+            }
+            lease = nl;
+            c.check().unwrap();
+        }
+
+        // B shares the 6-token template with a different suffix: the cached
+        // prefix is restorable at the chunk boundary, compute only the rest.
+        let b: Vec<u32> = [&template[..], &[20, 21, 22]].concat();
+        let m = c.match_prefix(&b);
+        assert_eq!(m.matched, template.len());
+        assert!(m.logits.is_none(), "partial hit has no terminal logits");
+        assert_eq!(m.rows, rows_for(&template, re));
+        assert_eq!(c.stats.partial_hits, 1);
+
+        // The template alone is fully covered but ends without logits: still
+        // a partial hit (the engine recomputes the last position for them).
+        let t = c.match_prefix(&template);
+        assert_eq!(t.matched, template.len());
+        assert!(t.logits.is_none());
+        assert_eq!(c.stats.partial_hits, 2);
+
+        // A itself is now a full hit.
+        let f = c.match_prefix(&a);
+        assert_eq!(f.matched, a.len());
+        assert_eq!(f.logits.as_deref(), Some(&logits_for(&a)[..]));
+        assert_eq!(c.stats.hits, 1);
+
+        // Token accounting: every admitted token is hit or miss, never both,
+        // and hits count only rows the engine actually restores — the
+        // full-row template match still recomputes its last position for
+        // logits, so it credits one token less.
+        let admitted = (a.len() + b.len() + template.len() + a.len()) as u64;
+        assert_eq!(c.stats.prompt_tokens(), admitted);
+        assert_eq!(
+            c.stats.hit_tokens,
+            (template.len() + (template.len() - 1) + a.len()) as u64
+        );
+
+        for l in [lease, m.lease, t.lease, f.lease].into_iter().flatten() {
             c.release(l);
         }
         c.check().unwrap();

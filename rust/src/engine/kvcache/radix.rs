@@ -2,11 +2,13 @@
 //!
 //! Each node owns one token fragment of a cached prefix plus the KV rows for
 //! that fragment, stored as segments of ref-counted pool blocks
-//! ([`super::blocks`]). The tree supports longest-prefix match, insert with
-//! node splitting (the block straddling a split point is *shared* between the
-//! two halves via the pool refcount), in-place extension of unshared leaf
-//! tails (copy-on-write forking the tail block when it is shared or no longer
-//! packed), and LRU/FIFO eviction of leaves with no active lease.
+//! ([`super::blocks`]). The tree supports longest-prefix match (both the
+//! mid-fragment form used for full-prompt hits and the node-boundary form
+//! chunked admission restores from), insert with node splitting (the block
+//! straddling a split point is *shared* between the two halves via the pool
+//! refcount), in-place extension of unshared leaf tails (copy-on-write
+//! forking the tail block when it is shared or no longer packed), and
+//! LRU/FIFO eviction of leaves with no active lease.
 //!
 //! Lease semantics: a lease pins its terminal node (`refs > 0`), which keeps
 //! that node — and, structurally, every ancestor — out of eviction's reach.
@@ -15,11 +17,20 @@
 //! copy rows out of the cache, so no reader ever holds a freed block).
 //! Safety is block-level: a shared block is freed only when its last owning
 //! segment is released, which `check` cross-verifies against the pool.
+//!
+//! Eviction is O(log n) amortised via a lazily-invalidated min-heap of
+//! candidate leaves: every transition *into* evictability (leaf created,
+//! last lease released, last child evicted) and every policy-key change while
+//! evictable pushes an entry; pops discard entries whose node has since been
+//! freed, re-pinned, re-keyed, or grown children. `check` verifies the
+//! covering invariant — every currently evictable leaf has a live entry
+//! carrying its current key — so the proptests pin eviction-order behavior.
 
 use super::blocks::{BlockId, BlockPool};
 use super::stats::CacheStats;
 use anyhow::{bail, Result};
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
 
 /// Which refcount-zero leaf to evict first.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -61,6 +72,9 @@ struct Node {
     refs: u32,
     last_use: u64,
     created: u64,
+    /// Allocation stamp distinguishing reuses of a recycled node id
+    /// (heap-entry validation).
+    stamp: u64,
     /// Last-position prefill logits when a complete cached prompt ends
     /// exactly at this node's fragment end.
     logits: Option<Vec<f32>>,
@@ -76,6 +90,11 @@ pub struct Match {
     pub terminal: Option<usize>,
 }
 
+/// A lazily-invalidated eviction candidate: `(policy key, node id, stamp)`.
+/// Min-ordered by key then id, matching the old linear scan's tie-break
+/// (first == lowest id wins on equal keys).
+type HeapEntry = Reverse<(u64, usize, u64)>;
+
 /// The prefix index. Block budget discipline: callers reserve pool capacity
 /// (via eviction) before [`RadixTree::insert`]; an alloc failure inside an
 /// insert is a caller bug and panics rather than corrupting the tree.
@@ -86,6 +105,9 @@ pub struct RadixTree {
     root: usize,
     tick: u64,
     policy: EvictPolicy,
+    /// Min-heap of eviction candidates; entries go stale instead of being
+    /// removed and are discarded at pop time (see module docs).
+    evictable: BinaryHeap<HeapEntry>,
 }
 
 impl RadixTree {
@@ -98,9 +120,17 @@ impl RadixTree {
             refs: 0,
             last_use: 0,
             created: 0,
+            stamp: 0,
             logits: None,
         };
-        RadixTree { nodes: vec![Some(root)], free_ids: Vec::new(), root: 0, tick: 1, policy }
+        RadixTree {
+            nodes: vec![Some(root)],
+            free_ids: Vec::new(),
+            root: 0,
+            tick: 1,
+            policy,
+            evictable: BinaryHeap::new(),
+        }
     }
 
     pub fn policy(&self) -> EvictPolicy {
@@ -120,14 +150,65 @@ impl RadixTree {
         self.nodes[id].as_mut().expect("dangling node id")
     }
 
+    /// The eviction-policy ordering key for a node.
+    fn evict_key(&self, n: &Node) -> u64 {
+        match self.policy {
+            EvictPolicy::Lru => n.last_use,
+            EvictPolicy::Fifo => n.created,
+        }
+    }
+
+    /// Push a heap entry if `id` is currently an evictable leaf. Cheap and
+    /// idempotent: duplicates and soon-stale entries are discarded on pop —
+    /// or swept by [`RadixTree::compact_heap`] when they pile up faster than
+    /// eviction drains them (touch-heavy workloads that never evict).
+    fn heap_push(&mut self, id: usize) {
+        if id == self.root {
+            return;
+        }
+        let entry = match self.nodes[id].as_ref() {
+            Some(n) if n.refs == 0 && n.children.is_empty() => {
+                Reverse((self.evict_key(n), id, n.stamp))
+            }
+            _ => return,
+        };
+        self.evictable.push(entry);
+        // Amortised O(1): a rebuild costs O(live nodes) and is triggered only
+        // after at least that many pushes since the last one, so the heap is
+        // bounded by ~2x the live node count even if eviction never runs.
+        let live = self.nodes.len() - self.free_ids.len();
+        if self.evictable.len() > live * 2 + 64 {
+            self.compact_heap();
+        }
+    }
+
+    /// Rebuild the candidate heap from scratch: one current-key entry per
+    /// evictable leaf, every stale entry dropped.
+    fn compact_heap(&mut self) {
+        let mut fresh = BinaryHeap::with_capacity(self.nodes.len());
+        for (id, n) in self.nodes.iter().enumerate() {
+            let Some(n) = n else { continue };
+            if id != self.root && n.refs == 0 && n.children.is_empty() {
+                fresh.push(Reverse((self.evict_key(n), id, n.stamp)));
+            }
+        }
+        self.evictable = fresh;
+    }
+
     fn touch(&mut self, id: usize) {
         let t = self.tick;
         self.tick += 1;
         self.node_mut(id).last_use = t;
+        // An LRU key change re-keys any live heap entry for this node.
+        if self.policy == EvictPolicy::Lru {
+            self.heap_push(id);
+        }
     }
 
-    fn add_node(&mut self, node: Node) -> usize {
-        match self.free_ids.pop() {
+    fn add_node(&mut self, mut node: Node) -> usize {
+        node.stamp = self.tick;
+        self.tick += 1;
+        let id = match self.free_ids.pop() {
             Some(id) => {
                 debug_assert!(self.nodes[id].is_none());
                 self.nodes[id] = Some(node);
@@ -137,7 +218,9 @@ impl RadixTree {
                 self.nodes.push(Some(node));
                 self.nodes.len() - 1
             }
-        }
+        };
+        self.heap_push(id);
+        id
     }
 
     /// Longest-prefix match; refreshes LRU stamps along fully matched nodes.
@@ -162,6 +245,64 @@ impl RadixTree {
             self.touch(child);
             cur = child;
         }
+    }
+
+    /// Longest *restorable* prefix of `seq`: like [`RadixTree::lookup`] it
+    /// counts tokens matched even partway into a diverging fragment, but it
+    /// also returns the node to pin — the diverging child itself when the
+    /// match ends mid-fragment (KV rows are row-granular inside a node, so a
+    /// fragment prefix restores fine; pinning the child keeps its blocks
+    /// live). Returns `(root, 0)` when even the first token misses.
+    /// Refreshes LRU stamps along the matched path.
+    pub fn lookup_longest(&mut self, seq: &[u32]) -> (usize, usize) {
+        let mut i = 0usize;
+        let mut cur = self.root;
+        loop {
+            if i == seq.len() {
+                return (cur, i);
+            }
+            let Some(&child) = self.node(cur).children.get(&seq[i]) else {
+                return (cur, i);
+            };
+            let frag = &self.node(child).tokens;
+            let common = frag.iter().zip(&seq[i..]).take_while(|(a, b)| a == b).count();
+            if common < frag.len() {
+                // Diverged (or query exhausted) inside the fragment: the
+                // first `common` of the child's rows are still restorable.
+                self.touch(child);
+                return (child, i + common);
+            }
+            i += common;
+            self.touch(child);
+            cur = child;
+        }
+    }
+
+    /// Concatenated KV rows for the first `take` tokens of the path
+    /// root -> `id` (the restorable prefix a [`RadixTree::lookup_longest`]
+    /// match reported; `take` may end inside `id`'s own fragment).
+    pub fn path_rows_prefix(&self, id: usize, take: usize, pool: &BlockPool) -> Vec<f32> {
+        let mut chain = Vec::new();
+        let mut cur = id;
+        while cur != self.root {
+            chain.push(cur);
+            cur = self.node(cur).parent;
+        }
+        chain.reverse();
+        let mut out = Vec::with_capacity(take * pool.row_elems());
+        let mut remaining = take;
+        for nid in chain {
+            for seg in &self.node(nid).segs {
+                if remaining == 0 {
+                    return out;
+                }
+                let n = seg.len.min(remaining);
+                out.extend_from_slice(pool.rows(seg.block, seg.start, n));
+                remaining -= n;
+            }
+        }
+        assert_eq!(remaining, 0, "take exceeds the path's rows");
+        out
     }
 
     /// Tokens covered by the path root -> `id`.
@@ -198,16 +339,21 @@ impl RadixTree {
         self.node(id).logits.as_deref()
     }
 
-    /// Pin `id` against eviction (lease acquire).
+    /// Pin `id` against eviction (lease acquire). Any live heap entry goes
+    /// stale and is discarded at pop time.
     pub fn acquire(&mut self, id: usize) {
         self.node_mut(id).refs += 1;
     }
 
-    /// Drop one lease on `id`.
+    /// Drop one lease on `id`; at zero the node (if a leaf) becomes an
+    /// eviction candidate again.
     pub fn release(&mut self, id: usize) {
-        let n = self.node_mut(id);
-        debug_assert!(n.refs > 0, "lease release without acquire");
-        n.refs = n.refs.saturating_sub(1);
+        {
+            let n = self.node_mut(id);
+            debug_assert!(n.refs > 0, "lease release without acquire");
+            n.refs = n.refs.saturating_sub(1);
+        }
+        self.heap_push(id);
     }
 
     /// Worst-case pool blocks an insert of `seq` may allocate: storage for
@@ -216,9 +362,12 @@ impl RadixTree {
         seq_len.div_ceil(block_tokens) + 1
     }
 
-    /// Insert a prompt with its KV rows (`seq.len() * row_elems` f32s) and
-    /// optional terminal logits. The caller must have reserved
-    /// [`RadixTree::insert_budget`] free blocks. Returns the terminal node.
+    /// Insert a prompt (or, for chunked admission, a prompt *prefix*) with
+    /// its KV rows (`seq.len() * row_elems` f32s) and optional terminal
+    /// logits. The caller must have reserved [`RadixTree::insert_budget`]
+    /// free blocks. Returns the terminal node. `None` logits never erase
+    /// previously cached logits at the terminal (a chunk boundary may land
+    /// exactly on a complete cached prompt).
     pub fn insert(
         &mut self,
         seq: &[u32],
@@ -234,7 +383,9 @@ impl RadixTree {
         let mut cur = self.root;
         loop {
             if i == seq.len() {
-                self.node_mut(cur).logits = logits;
+                if logits.is_some() {
+                    self.node_mut(cur).logits = logits;
+                }
                 self.touch(cur);
                 return cur;
             }
@@ -293,6 +444,7 @@ impl RadixTree {
             refs: 0,
             last_use: t,
             created: t,
+            stamp: 0, // assigned by add_node
             logits: None,
         })
     }
@@ -378,6 +530,7 @@ impl RadixTree {
             refs: 0,
             last_use,
             created,
+            stamp: 0, // assigned by add_node
             logits,
         });
         // Reparent the grandchildren onto the lower half.
@@ -391,30 +544,32 @@ impl RadixTree {
     /// Evict the best refcount-zero leaf per the policy. Returns the number
     /// of blocks actually freed, or `None` when nothing is evictable.
     ///
-    /// Linear scan over the node slab: O(nodes) per eviction. Fine at this
-    /// reproduction's cache sizes (tens to hundreds of blocks) and grouped
-    /// traffic (eviction runs off the per-group hot path, once per cold
-    /// prompt); a lazily-invalidated heap of evictable leaves is the upgrade
-    /// path if caches grow to many thousands of entries (ROADMAP).
+    /// O(log n) amortised: pops the lazily-invalidated candidate heap,
+    /// discarding entries whose node was freed, re-pinned, re-keyed (LRU
+    /// touch), or grew children since the push. Every discarded entry was
+    /// paid for by the push that created it, so the scan the seed engine did
+    /// per eviction is gone (ROADMAP open item).
     pub fn evict_one(&mut self, pool: &mut BlockPool) -> Option<usize> {
-        let mut best: Option<(u64, usize)> = None;
-        for (id, n) in self.nodes.iter().enumerate() {
-            let Some(n) = n else { continue };
-            if id == self.root || !n.children.is_empty() || n.refs > 0 {
-                continue;
+        let id = loop {
+            let Reverse((key, id, stamp)) = self.evictable.pop()?;
+            let live = self
+                .nodes
+                .get(id)
+                .and_then(|n| n.as_ref())
+                .is_some_and(|n| {
+                    n.stamp == stamp
+                        && n.refs == 0
+                        && n.children.is_empty()
+                        && self.evict_key(n) == key
+                });
+            if live && id != self.root {
+                break id;
             }
-            let key = match self.policy {
-                EvictPolicy::Lru => n.last_use,
-                EvictPolicy::Fifo => n.created,
-            };
-            if best.map(|(k, _)| key < k).unwrap_or(true) {
-                best = Some((key, id));
-            }
-        }
-        let (_, id) = best?;
-        let node = self.nodes[id].take().expect("candidate vanished");
+        };
+        let node = self.nodes[id].take().expect("validated above");
         self.free_ids.push(id);
-        let parent = self.node_mut(node.parent);
+        let parent_id = node.parent;
+        let parent = self.node_mut(parent_id);
         let removed = parent.children.remove(&node.tokens[0]);
         debug_assert_eq!(removed, Some(id), "parent/child link corrupt");
         let mut freed = 0usize;
@@ -424,6 +579,8 @@ impl RadixTree {
             }
             pool.release(seg.block);
         }
+        // Losing its last child may have turned the parent into a candidate.
+        self.heap_push(parent_id);
         Some(freed)
     }
 
@@ -498,6 +655,25 @@ impl RadixTree {
                 return Err(format!(
                     "block {b}: {count} owning segments but refcount {}",
                     pool.refs(b)
+                ));
+            }
+        }
+        // Heap covering invariant: every currently evictable leaf must have a
+        // live entry carrying its current policy key, or eviction could miss
+        // it (or pick a worse victim than the old linear scan).
+        for (id, n) in self.nodes.iter().enumerate() {
+            let Some(n) = n else { continue };
+            if id == self.root || !n.children.is_empty() || n.refs > 0 {
+                continue;
+            }
+            let key = self.evict_key(n);
+            let covered = self
+                .evictable
+                .iter()
+                .any(|Reverse((k, i, s))| *i == id && *s == n.stamp && *k == key);
+            if !covered {
+                return Err(format!(
+                    "evictable leaf {id} (key {key}) has no live heap entry"
                 ));
             }
         }
@@ -621,6 +797,89 @@ mod tests {
         assert_eq!(stats.cow_forks, 1, "shared/unpacked tail must fork");
         assert_eq!(tree.path_rows(id, &pool), rows_for(&c));
         assert_eq!(tree.node_count(), 1, "extension stayed in place");
+        tree.check(&pool).unwrap();
+    }
+
+    #[test]
+    fn lookup_longest_restores_partial_fragments() {
+        let mut pool = BlockPool::new(32, B, R);
+        let mut tree = RadixTree::new(EvictPolicy::Lru);
+        let a = vec![1, 2, 3, 4, 5, 6];
+        let b = vec![1, 2, 3, 9, 9];
+        insert(&mut tree, &mut pool, &a);
+        insert(&mut tree, &mut pool, &b); // splits: [1,2,3] + [4,5,6] + [9,9]
+
+        let (n, m) = tree.lookup_longest(&a);
+        assert_eq!(m, 6);
+        assert_eq!(tree.path_tokens(n), 6);
+        assert_eq!(tree.path_rows_prefix(n, 6, &pool), rows_for(&a));
+
+        // Diverging inside [4,5,6]: the matched rows — including the partial
+        // fragment — are exactly what chunked admission restores.
+        let (n, m) = tree.lookup_longest(&[1, 2, 3, 4, 7]);
+        assert_eq!(m, 4);
+        assert_eq!(tree.path_tokens(n), 6, "pin lands on the diverging child");
+        assert_eq!(tree.path_rows_prefix(n, m, &pool), rows_for(&[1, 2, 3, 4]));
+
+        // Query exhausted mid-fragment: restorable, but not a terminal.
+        let (n, m) = tree.lookup_longest(&[1, 2]);
+        assert_eq!(m, 2);
+        assert!(tree.path_tokens(n) > m, "no node boundary at the query end");
+        assert_eq!(tree.path_rows_prefix(n, m, &pool), rows_for(&[1, 2]));
+
+        // First-token miss.
+        assert_eq!(tree.lookup_longest(&[7]).1, 0);
+        tree.check(&pool).unwrap();
+    }
+
+    #[test]
+    fn heap_eviction_matches_policy_after_churn() {
+        let mut pool = BlockPool::new(64, B, R);
+        let mut tree = RadixTree::new(EvictPolicy::Lru);
+        insert(&mut tree, &mut pool, &[1, 1]);
+        insert(&mut tree, &mut pool, &[2, 2]);
+        insert(&mut tree, &mut pool, &[3, 3]);
+        // Refresh 1 and 2; 3 stays least-recently-used.
+        tree.lookup(&[1, 1]);
+        tree.lookup(&[2, 2]);
+        tree.evict_one(&mut pool).unwrap();
+        assert_eq!(tree.lookup(&[3, 3]).matched, 0, "oldest LRU leaf evicted");
+        tree.check(&pool).unwrap();
+        // Pin 1 (stale heap entries must be skipped); 2 is the next victim.
+        let id = tree.lookup(&[1, 1]).terminal.unwrap();
+        tree.acquire(id);
+        tree.evict_one(&mut pool).unwrap();
+        assert_eq!(tree.lookup(&[2, 2]).matched, 0);
+        assert!(tree.lookup(&[1, 1]).terminal.is_some(), "pinned leaf survives");
+        tree.check(&pool).unwrap();
+        tree.release(id);
+        assert!(tree.evict_one(&mut pool).is_some(), "released leaf evictable");
+        assert_eq!(tree.evict_one(&mut pool), None, "nothing left to evict");
+        assert_eq!(pool.live_count(), 0);
+        tree.check(&pool).unwrap();
+    }
+
+    #[test]
+    fn heap_stays_bounded_under_touch_churn() {
+        // A hit-heavy workload that never evicts must not grow the candidate
+        // heap without bound (every LRU touch pushes a re-keyed entry).
+        let mut pool = BlockPool::new(16, B, R);
+        let mut tree = RadixTree::new(EvictPolicy::Lru);
+        insert(&mut tree, &mut pool, &[1, 2, 3]);
+        insert(&mut tree, &mut pool, &[4, 5]);
+        for _ in 0..10_000 {
+            tree.lookup(&[1, 2, 3]);
+            tree.lookup(&[4, 5]);
+        }
+        let live = tree.nodes.iter().filter(|n| n.is_some()).count();
+        assert!(
+            tree.evictable.len() <= live * 2 + 64,
+            "candidate heap grew unbounded: {} entries for {live} live nodes",
+            tree.evictable.len()
+        );
+        tree.check(&pool).unwrap();
+        // Eviction order is still intact after compactions.
+        tree.evict_one(&mut pool).unwrap();
         tree.check(&pool).unwrap();
     }
 

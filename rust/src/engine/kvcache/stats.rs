@@ -1,11 +1,12 @@
 //! Prefix-cache counters.
 //!
 //! The accounting contract (pinned by proptests in the parent module): every
-//! prompt token admitted through [`super::PrefixCache::match_prompt`] lands in
-//! exactly one of `hit_tokens` (served from cached KV, compiled `prefill`
-//! skipped) or `miss_tokens` (ran through the compiled `prefill`), so
-//! `hit_tokens + miss_tokens` always equals the total prompt tokens the
-//! engine admitted. On a G-rollout group with a cold cache that yields a
+//! prompt token admitted through [`super::PrefixCache::match_prompt`] or
+//! [`super::PrefixCache::match_prefix`] lands in exactly one of `hit_tokens`
+//! (served from cached KV) or `miss_tokens` (left for the compiled prefill),
+//! so `hit_tokens + miss_tokens` always equals the total prompt tokens the
+//! engine admitted — with chunked admission the split is per-token, not
+//! all-or-nothing. On a G-rollout group with a cold cache that yields a
 //! `(G-1)/G` token hit rate — the inference-side dual of SPA's compute saving.
 
 /// Cumulative prefix-cache counters (one instance per engine).
@@ -15,6 +16,10 @@ pub struct CacheStats {
     pub lookups: u64,
     /// Full-prompt hits (compiled prefill skipped entirely).
     pub hits: u64,
+    /// Partial-prefix hits: some rows restored, the uncached suffix went
+    /// through chunked prefill (`match_prefix` only; the full-hit-only
+    /// `match_prompt` path never counts these).
+    pub partial_hits: u64,
     /// Lookups that fell through to the compiled prefill.
     pub misses: u64,
     /// Prompt tokens whose KV was restored from the cache.

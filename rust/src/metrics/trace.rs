@@ -105,15 +105,27 @@ impl Trace {
         lanes
     }
 
+    /// Machine-readable form: `{"spans": [...], "annotations": [...]}`. The
+    /// annotations carry per-lane scalars (notably each engine lane's
+    /// `kv_hit` rate) so the fig3 timeline files record cache effectiveness
+    /// alongside the spans.
     pub fn to_json(&self) -> Json {
-        Json::arr(self.spans().into_iter().map(|s| {
+        let spans = Json::arr(self.spans().into_iter().map(|s| {
             Json::obj(vec![
                 ("lane", Json::str(&s.lane)),
                 ("name", Json::str(&s.name)),
                 ("start", Json::num(s.start_s)),
                 ("end", Json::num(s.end_s)),
             ])
-        }))
+        }));
+        let notes = Json::arr(self.annotations().into_iter().map(|(lane, key, value)| {
+            Json::obj(vec![
+                ("lane", Json::str(&lane)),
+                ("key", Json::str(&key)),
+                ("value", Json::num(value)),
+            ])
+        }));
+        Json::obj(vec![("spans", spans), ("annotations", notes)])
     }
 
     /// ASCII rendering: one row per lane, `width` columns over [0, t_max].
@@ -174,9 +186,10 @@ mod tests {
         let art = tr.render_ascii(20);
         assert!(art.contains("infer-0"));
         assert!(art.contains('█'));
-        // json form parses back
+        // json form carries spans and (empty) annotations
         let j = tr.to_json();
-        assert_eq!(j.as_arr().unwrap().len(), 2);
+        assert_eq!(j.req("spans").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.req("annotations").unwrap().as_arr().unwrap().len(), 0);
     }
 
     #[test]
@@ -213,5 +226,10 @@ mod tests {
         let art = tr.render_ascii(20);
         assert!(art.contains("kv_hit=0.88"), "{art}");
         assert!(!art.contains("kv_hit=0.50"), "{art}");
+        // kv_hit reaches the machine-readable timeline output too
+        let j = tr.to_json();
+        let notes = j.req("annotations").unwrap().as_arr().unwrap();
+        assert_eq!(notes.len(), 2);
+        assert_eq!(notes[0].req_str("key").unwrap(), "kv_hit");
     }
 }

@@ -169,6 +169,11 @@ impl Manifest {
             ("prompt_max", e.req_usize("prompt_max")?, cfg.engine.prompt_max),
             ("decode_chunk", e.req_usize("decode_chunk")?, cfg.engine.decode_chunk),
             ("max_new", e.req_usize("max_new")?, cfg.engine.max_new),
+            // Baked into the `prefill_chunk` token-window shape. Manifests
+            // from before chunked prefill (version < 4) lack both the key
+            // and the artifact; default to the config's value so they stay
+            // loadable (the engine then falls back to full-prompt hits).
+            ("cache_block", e.usize_or("cache_block", cfg.engine.cache_block), cfg.engine.cache_block),
         ] {
             if mv != cv {
                 bail!("manifest/config mismatch on engine.{name}: {mv} vs {cv} — re-run `make artifacts`");

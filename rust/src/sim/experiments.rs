@@ -65,6 +65,7 @@ fn setup(
         // Off in the paper tables (the testbeds predate prefix caching);
         // `prefix_cache_ablation` quantifies the engine-side saving.
         prefix_cache: false,
+        template_frac: 0.0,
         train_micro_bs: micro_bs,
         micro_launch_s: 0.5, // NPU-stack launch cost; table4 overrides for GPU
         iters,
@@ -73,15 +74,18 @@ fn setup(
 }
 
 /// Engine prefix-cache ablation (no paper analog): periodic async on the
-/// prompt-heavy GSM8K workload, shared-prefix KV cache off vs on. With
-/// group-affine dispatch, members 1..G of every group skip prefill, so
-/// inference time drops by ~the (G-1)/G prefill share while trained tokens
-/// are untouched.
+/// prompt-heavy GSM8K workload, shared-prefix KV cache off / full-prompt
+/// hits / chunked partial-prefix reuse. With group-affine dispatch, members
+/// 1..G of every group skip prefill (inference time drops by ~the (G-1)/G
+/// prefill share); chunked admission additionally lets group *leaders*
+/// resume from the warm few-shot template (60% of a GSM8K-style prompt
+/// here), so the remaining leader prefill shrinks with the matched-prefix
+/// fraction. Trained tokens are untouched throughout.
 pub fn prefix_cache_ablation(iters: usize) -> Vec<Row> {
     let cluster = ClusterSpec::npu(16);
     let model = ModelSpec::qwen(7.0);
     let w = WorkloadSpec::gsm8k(32);
-    let mk = |prefix_cache: bool, label: &str| {
+    let mk = |prefix_cache: bool, template_frac: f64, label: &str| {
         let mut s = setup(
             Framework::PeriodicAsync,
             cluster,
@@ -94,9 +98,14 @@ pub fn prefix_cache_ablation(iters: usize) -> Vec<Row> {
             iters,
         );
         s.prefix_cache = prefix_cache;
+        s.template_frac = template_frac;
         Row { setting: label.into(), paper_tpspd: None, sim: s.run_tuned() }
     };
-    vec![mk(false, "Async ours, full prefill"), mk(true, "Async ours, prefix-cached prefill")]
+    vec![
+        mk(false, 0.0, "Async ours, full prefill"),
+        mk(true, 0.0, "Async ours, prefix-cached prefill"),
+        mk(true, 0.6, "Async ours, chunked partial-prefix prefill"),
+    ]
 }
 
 /// Table 1: Qwen3-8B on DeepScaleR, 16 NPUs, batch 32, G=32, 16K context.
@@ -357,13 +366,20 @@ mod tests {
     #[test]
     fn prefix_cache_ablation_never_hurts() {
         let rows = prefix_cache_ablation(2);
-        assert_eq!(rows.len(), 2);
-        let (off, on) = (&rows[0].sim, &rows[1].sim);
+        assert_eq!(rows.len(), 3);
+        let (off, on, chunked) = (&rows[0].sim, &rows[1].sim, &rows[2].sim);
         // Tuned independently: at any fixed ratio cache-on dominates
-        // cache-off, so the tuned optimum can only be at least as good.
-        // (t_infer itself may differ — the tuner is free to shift freed
-        // devices to training.)
+        // cache-off, and chunked partial-prefix reuse dominates full-prompt
+        // hits (leaders only get cheaper), so each tuned optimum can only be
+        // at least as good as the previous row's. (t_infer itself may differ
+        // — the tuner is free to shift freed devices to training.)
         assert!(on.tpspd >= off.tpspd, "cache on {} vs off {}", on.tpspd, off.tpspd);
+        assert!(
+            chunked.tpspd >= on.tpspd,
+            "chunked {} vs full-prompt hits {}",
+            chunked.tpspd,
+            on.tpspd
+        );
     }
 
     #[test]

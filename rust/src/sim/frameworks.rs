@@ -62,6 +62,13 @@ pub struct SimSetup {
     /// `engine::kvcache`): with group-affine dispatch, members 1..G of each
     /// group skip prefill compute and pay only a KV-copy (HBM-bound) cost.
     pub prefix_cache: bool,
+    /// Chunked partial-prefix reuse: the fraction of each *group-leader*
+    /// prompt covered by a warm cached template (few-shot prefixes shared
+    /// across prompts). Leaders prefill only the uncached remainder and pay
+    /// the KV-copy cost for the rest; 0.0 = leaders prefill from scratch
+    /// (full-prompt hits only, the pre-chunked engine). Requires
+    /// `prefix_cache`.
+    pub template_frac: f64,
     /// Samples per training micro-batch (paper's Micro-BS column; SPA packs
     /// the whole group into one launch regardless). Determines kernel-launch
     /// overhead, which is what makes micro-bs 1 at short sequence lengths so
@@ -153,27 +160,30 @@ impl SimSetup {
         bw_bound.max(compute_bound)
     }
 
-    /// Prefill time for a prompt of length `lp` on one instance.
-    fn prefill_s(&self, lp: usize) -> f64 {
-        let flops = lp as f64 * self.model.infer_flops_per_token();
+    /// Prefill time for `tokens` prompt tokens on one instance.
+    fn prefill_s(&self, tokens: f64) -> f64 {
+        let flops = tokens * self.model.infer_flops_per_token();
         let inst_flops =
             self.infer_tp as f64 * self.cluster.device.peak_flops * self.eff.prefill_mfu;
         flops / inst_flops
     }
 
-    /// Admission cost for a group member whose prompt KV is already cached:
-    /// no prefill FLOPs, just streaming the prompt's KV rows into the slot
+    /// Admission cost for `tokens` prompt tokens whose KV is already cached:
+    /// no prefill FLOPs, just streaming the KV rows into the slot
     /// (HBM-bandwidth bound). Orders of magnitude below [`Self::prefill_s`].
-    fn shared_prefill_s(&self, lp: usize) -> f64 {
-        lp as f64 * self.model.kv_bytes_per_token
+    fn shared_prefill_s(&self, tokens: f64) -> f64 {
+        tokens * self.model.kv_bytes_per_token
             / (self.infer_tp as f64 * self.cluster.device.hbm_bw * self.eff.decode_bw_util)
     }
 
-    /// Rollout service time (prefill + decode). `shared` = this member's
-    /// prompt KV comes from the prefix cache.
-    fn rollout_service(&self, lp: usize, lr: usize, step_s: f64, shared: bool) -> f64 {
-        let admit = if shared { self.shared_prefill_s(lp) } else { self.prefill_s(lp) };
-        admit + lr as f64 * step_s
+    /// Rollout service time (prefill + decode). `matched_frac` is the
+    /// fraction of the prompt restored from the prefix cache (1.0 = full
+    /// hit, the in-group case; between 0 and 1 = chunked partial-prefix
+    /// resume from a warm template): the discount scales with it.
+    fn rollout_service(&self, lp: usize, lr: usize, step_s: f64, matched_frac: f64) -> f64 {
+        let cached = lp as f64 * matched_frac.clamp(0.0, 1.0);
+        let fresh = lp as f64 - cached;
+        self.prefill_s(fresh) + self.shared_prefill_s(cached) + lr as f64 * step_s
     }
 
     /// Tokens entering training compute for one group.
@@ -318,9 +328,17 @@ impl SimSetup {
             .map(|&(gi, m)| {
                 let (lp, lr) = groups[gi][m];
                 // Group-affine dispatch: member 0 prefills and populates the
-                // prefix cache; members 1.. reuse its prompt KV.
-                let shared = self.prefix_cache && m > 0;
-                self.rollout_service(lp, lr, step_s, shared)
+                // prefix cache; members 1.. reuse its whole prompt KV. With
+                // chunked partial-prefix reuse, even the leader resumes from
+                // the warm template fraction of its prompt.
+                let matched_frac = if !self.prefix_cache {
+                    0.0
+                } else if m > 0 {
+                    1.0
+                } else {
+                    self.template_frac
+                };
+                self.rollout_service(lp, lr, step_s, matched_frac)
             })
             .collect();
 
@@ -405,6 +423,7 @@ mod tests {
             infer_tp: 2,
             spa: false,
             prefix_cache: false,
+            template_frac: 0.0,
             train_micro_bs: 16,
             micro_launch_s: 0.5,
             iters: 5,
@@ -488,6 +507,30 @@ mod tests {
         assert!(b.tpspd >= a.tpspd, "cache cannot hurt TPSPD: {} vs {}", b.tpspd, a.tpspd);
         // The saving is bounded by the prefill share of (G-1)/G members.
         assert!(b.t_infer_mean > a.t_infer_mean * 0.2, "discount implausibly large");
+    }
+
+    #[test]
+    fn partial_prefix_discount_scales_with_matched_fraction() {
+        // Prompt-heavy regime; leaders dominate the remaining prefill cost
+        // once members 1..G share the cache, so the template fraction's
+        // discount must be visible and monotone.
+        let mut base = base(Framework::PeriodicAsync);
+        base.workload = WorkloadSpec::gsm8k(32);
+        base.prefix_cache = true;
+        let t_infer = |frac: f64| {
+            let mut s = base.clone();
+            s.template_frac = frac;
+            s.run().t_infer_mean
+        };
+        let full = t_infer(0.0);
+        let half = t_infer(0.5);
+        let most = t_infer(0.9);
+        assert!(half < full, "warm template must cut leader prefill: {half} vs {full}");
+        assert!(most < half, "discount must grow with the matched fraction");
+        // Trained tokens are untouched by inference-side reuse.
+        let mut a = base.clone();
+        a.template_frac = 0.9;
+        assert_eq!(base.run().trained_tokens, a.run().trained_tokens);
     }
 
     #[test]

@@ -97,6 +97,67 @@ fn grouped_prompts_trigger_one_prefill_per_group() {
     );
 }
 
+/// Acceptance (partial-prefix reuse): a warm few-shot template survives
+/// across differing suffixes — after the first (cold, monolithic) prefill,
+/// every admission runs compiled chunk calls over its uncached suffix only,
+/// and `prefill_tokens_saved` grows by the restored template each time.
+#[test]
+fn warm_template_prefix_reused_across_suffixes() {
+    let Some((cfg, dir)) = artifacts() else { return };
+    assert!(cfg.engine.prefix_cache, "tiny config should default the cache on");
+    let rt = Runtime::load_validated(&dir, &cfg).unwrap();
+    if !rt.manifest().artifacts.contains_key("prefill_chunk") {
+        eprintln!("SKIP: artifacts predate chunked prefill — re-run `make artifacts`");
+        return;
+    }
+    let params = rt.init_params(7).unwrap();
+    let mut engine = Engine::new(cfg.clone(), rt, 1);
+    engine.set_weights(&params).unwrap();
+
+    // Shared template (most of the prompt budget), distinct 1-token suffixes.
+    let cb = cfg.engine.cache_block;
+    let tpl_len = cfg.engine.prompt_max - 1;
+    let template: Vec<u32> = (0..tpl_len as u32).map(|i| 3 + (i % 11)).collect();
+    let n = 4usize;
+    let reqs: Vec<GenRequest> = (0..n)
+        .map(|i| {
+            let mut p = template.clone();
+            p.push(20 + i as u32);
+            GenRequest { request_id: i as u64, prompt: p }
+        })
+        .collect();
+    let results = engine.generate_all(reqs).unwrap();
+    assert_eq!(results.len(), n);
+    for r in &results {
+        assert!(!r.tokens.is_empty());
+        assert_eq!(r.tokens.len(), r.logprobs.len());
+    }
+
+    // One monolithic prefill (the cold leader); every warm admission covers
+    // its 1-token uncached suffix with a single compiled chunk.
+    assert_eq!(engine.stats.prefills, 1, "only the cold prompt pays a full prefill");
+    assert_eq!(
+        engine.stats.prefill_chunks,
+        (n - 1) as u64,
+        "each warm prompt needs exactly one chunk for its suffix (cb = {cb})"
+    );
+    assert!(
+        engine.stats.prefill_tokens_saved >= ((n - 1) * tpl_len) as u64,
+        "restored tokens {} below the warm template floor {}",
+        engine.stats.prefill_tokens_saved,
+        (n - 1) * tpl_len
+    );
+    let cache = engine.cache_stats().expect("cache enabled");
+    assert_eq!(cache.partial_hits, (n - 1) as u64);
+    // Prefill compute scaled with uncached tokens only: every prompt token
+    // is accounted, and the misses are the cold prompt + (n-1) suffixes.
+    assert_eq!(
+        cache.miss_tokens,
+        (tpl_len + 1 + (n - 1)) as u64,
+        "compiled prefill compute must cover uncached tokens only"
+    );
+}
+
 /// Acceptance: cache-off mode is the seed path, and cache-on produces
 /// value-identical rollouts (prefill is deterministic given weights+prompt,
 /// and the host sampler draws in the same order on both paths).

@@ -1,0 +1,300 @@
+//! Stub of the `xla` (xla-rs) API surface pa-rl uses.
+//!
+//! The build environment has no network access and no prebuilt
+//! `xla_extension`, so this crate provides the exact types and signatures
+//! `pa_rl::runtime` compiles against:
+//!
+//! * **fully functional on the host**: [`Literal`] (typed storage + shape,
+//!   reshape, readback) and [`Shape`]/[`ArrayShape`]/[`ElementType`] — the
+//!   tensor round-trip tests in `pa_rl::runtime::tensor` exercise these;
+//! * **stubbed**: [`PjRtClient::cpu`] returns an error explaining that no
+//!   PJRT backend is linked, so every execution path fails fast with a clear
+//!   message instead of segfaulting or silently fabricating results.
+//!
+//! To run compiled artifacts for real, replace this directory with the
+//! actual xla-rs bindings (same module paths) and build with
+//! `--features pjrt`; until then that feature is a compile-time error so a
+//! half-configured build cannot look runnable.
+
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the vendored `xla` stub has no PJRT backend: replace rust/vendor/xla \
+     with the real xla-rs bindings (github.com/LaurentMazare/xla-rs, plus an \
+     xla_extension install) before enabling the `pjrt` feature"
+);
+
+use std::fmt;
+
+/// Error type mirroring xla-rs's (which also implements `std::error::Error`).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn no_backend<T>(what: &str) -> Result<T> {
+    Err(Error::msg(format!(
+        "{what} requires a PJRT backend, but pa-rl was built against the \
+         vendored xla stub (rust/vendor/xla). Vendor the real xla-rs bindings \
+         and build with --features pjrt to execute compiled artifacts"
+    )))
+}
+
+/// Element types pa-rl encounters (subset of xla-rs's `ElementType`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    F32,
+    F64,
+}
+
+/// Typed host storage behind a [`Literal`].
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum LitData {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+}
+
+impl LitData {
+    fn len(&self) -> usize {
+        match self {
+            LitData::F32(v) => v.len(),
+            LitData::S32(v) => v.len(),
+        }
+    }
+
+    fn element_type(&self) -> ElementType {
+        match self {
+            LitData::F32(_) => ElementType::F32,
+            LitData::S32(_) => ElementType::S32,
+        }
+    }
+}
+
+/// Element types storable in a stub [`Literal`].
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn wrap(data: Vec<Self>) -> LitData;
+    #[doc(hidden)]
+    fn unwrap(data: &LitData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> LitData {
+        LitData::F32(data)
+    }
+    fn unwrap(data: &LitData) -> Option<Vec<Self>> {
+        match data {
+            LitData::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> LitData {
+        LitData::S32(data)
+    }
+    fn unwrap(data: &LitData) -> Option<Vec<Self>> {
+        match data {
+            LitData::S32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side typed array with a shape (fully functional in the stub).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: LitData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { data: T::wrap(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Same data, new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count as usize != self.data.len() {
+            return Err(Error::msg(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape { element_type: self.data.element_type(), dims: self.dims.clone() })
+    }
+
+    /// Read the elements back out as a typed vec.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| {
+            Error::msg(format!("literal holds {:?}", self.data.element_type()))
+        })
+    }
+
+    /// Flatten a tuple literal. The stub never constructs tuples (they only
+    /// arise from PJRT execution results), so this is always an error here.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::msg("stub literal is not a tuple"))
+    }
+}
+
+/// An array-or-tuple shape, as returned by [`Literal::shape`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Shape {
+    element_type: ElementType,
+    dims: Vec<i64>,
+}
+
+/// The array view of a [`Shape`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrayShape {
+    element_type: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.element_type
+    }
+}
+
+impl TryFrom<&Shape> for ArrayShape {
+    type Error = Error;
+
+    fn try_from(s: &Shape) -> Result<ArrayShape> {
+        Ok(ArrayShape { element_type: s.element_type, dims: s.dims.clone() })
+    }
+}
+
+/// A parsed HLO module (opaque in the stub).
+pub struct HloModuleProto {
+    _path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let _ = path;
+        no_backend("parsing HLO text")
+    }
+}
+
+/// A computation ready to compile (opaque in the stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device buffer (host-backed in the stub).
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A compiled executable (never constructible in the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        no_backend("executing a compiled artifact")
+    }
+}
+
+/// A PJRT client (never constructible in the stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        no_backend("creating a PJRT CPU client")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        no_backend("compiling an XLA computation")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(PjRtBuffer { literal: Literal::vec1(data).reshape(&dims)? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        let shape = r.shape().unwrap();
+        let arr = ArrayShape::try_from(&shape).unwrap();
+        assert_eq!(arr.dims(), &[2, 2]);
+        assert_eq!(arr.element_type(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let lit = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(lit.shape().unwrap().dims, Vec::<i64>::new());
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn pjrt_paths_fail_loudly() {
+        let err = PjRtClient::cpu().err().expect("stub has no backend");
+        assert!(err.to_string().contains("PJRT"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
