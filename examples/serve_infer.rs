@@ -7,54 +7,122 @@
 //! enabled, only the first occurrence runs the compiled prefill and the
 //! report shows the cache hit rate and skipped prefills.
 //!
+//! `--engines E` runs E engine instances behind prompt-affinity routing with
+//! the cross-engine shared segment store attached (the coordinator's serving
+//! topology, minus the trainer): groups prefer the engine whose cache holds
+//! their template warm, spills import it from the store, and the report
+//! shows `cross-engine hits` — prompts admitted without recomputing a prefix
+//! some other engine already paid for.
+//!
 //! ```bash
 //! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64
 //! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64 --group 8
+//! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64 --group 4 --engines 2
 //! ```
 
 use pa_rl::config::Config;
+use pa_rl::coordinator::route;
 use pa_rl::data::DataLoader;
-use pa_rl::engine::{Engine, GenRequest};
+use pa_rl::engine::{Engine, GenRequest, GenResult};
 use pa_rl::runtime::Runtime;
+use pa_rl::store::{SharedKvStore, StoreCfg};
 use pa_rl::util::bench::Table;
 use pa_rl::util::cli::Args;
 use std::path::Path;
+use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let config_path = args.str_or("config", "configs/tiny.json");
     let n_requests = args.usize_or("requests", 64);
     let group = args.usize_or("group", 1).max(1);
+    let n_engines = args.usize_or("engines", 1).max(1);
     let seed = args.u64_or("seed", 0);
 
     let cfg = Config::load(Path::new(&config_path))?;
     let artifacts = cfg.artifacts_dir();
-    let rt = Runtime::load_validated(Path::new(&artifacts), &cfg)?;
     let mut eager = vec!["init", "prefill", "decode"];
-    if cfg.engine.prefix_cache
-        && cfg.engine.chunked_prefill
-        && rt.manifest().artifacts.contains_key("prefill_chunk")
-    {
-        // Compile ahead of the timed region so the first partial-prefix
-        // admission doesn't absorb a JIT compile into the latency numbers.
-        eager.push("prefill_chunk");
+    let mut engines: Vec<Engine> = Vec::with_capacity(n_engines);
+    let mut params = None;
+    for idx in 0..n_engines {
+        let rt = Runtime::load_validated(Path::new(&artifacts), &cfg)?;
+        if idx == 0
+            && cfg.engine.prefix_cache
+            && cfg.engine.chunked_prefill
+            && rt.manifest().artifacts.contains_key("prefill_chunk")
+        {
+            // Compile ahead of the timed region so the first partial-prefix
+            // admission doesn't absorb a JIT compile into the latency numbers.
+            eager.push("prefill_chunk");
+        }
+        rt.prepare(&eager)?;
+        if params.is_none() {
+            params = Some(rt.init_params(seed as i32)?);
+        }
+        let mut engine = Engine::new(cfg.clone(), rt, seed ^ (idx as u64).wrapping_mul(0x9E37));
+        engine.set_weights(params.as_ref().unwrap())?;
+        engines.push(engine);
     }
-    rt.prepare(&eager)?;
-    let params = rt.init_params(seed as i32)?;
-    let mut engine = Engine::new(cfg.clone(), rt, seed);
-    engine.set_weights(&params)?;
+
+    // Cross-engine store: the coordinator's serving topology.
+    let store = cfg.store_active(n_engines).then(|| {
+        Arc::new(SharedKvStore::new(StoreCfg {
+            block_tokens: cfg.engine.cache_block,
+            capacity_blocks: cfg.engine.store_blocks,
+            policy: cfg.engine.store_evict,
+        }))
+    });
+    if let Some(s) = &store {
+        for e in &mut engines {
+            e.set_shared_store(s.clone());
+        }
+    }
 
     let mut loader = DataLoader::new(cfg.data.clone());
     let n_unique = n_requests.div_ceil(group);
     let prompts = loader.next_batch(n_unique);
-    // Grouped traffic: a prompt's repeats are adjacent, like the
-    // coordinator's group-affine dispatch.
-    let reqs: Vec<GenRequest> = (0..n_requests)
-        .map(|i| GenRequest { request_id: i as u64, prompt: prompts[i / group].tokens.clone() })
-        .collect();
+    // Grouped traffic, group-affine: a prompt's repeats all land on one
+    // engine (like the coordinator), chosen by prompt-affinity routing —
+    // gated exactly like the driver, else the round-robin group pin.
+    let affinity = cfg.affinity_active(n_engines);
+    let mut load = vec![0usize; n_engines];
+    let mut spills = 0u64;
+    for i in 0..n_unique {
+        let (idx, preferred) = if affinity {
+            let slack = cfg.rl.affinity_slack_groups * group;
+            route::route_group(&prompts[i].tokens, cfg.engine.cache_block, &load, slack)
+        } else {
+            (i % n_engines, true)
+        };
+        if !preferred {
+            spills += 1;
+        }
+        let repeats = group.min(n_requests - i * group);
+        for s in 0..repeats {
+            engines[idx].submit(GenRequest {
+                request_id: (i * group + s) as u64,
+                prompt: prompts[i].tokens.clone(),
+            });
+        }
+        load[idx] += repeats;
+    }
 
+    // Drive every engine to completion, interleaved (so later-dispatched
+    // groups on one engine can import prefixes another engine published).
     let t0 = std::time::Instant::now();
-    let results = engine.generate_all(reqs)?;
+    let mut results: Vec<GenResult> = Vec::with_capacity(n_requests);
+    loop {
+        let mut any = false;
+        for e in &mut engines {
+            if !e.idle() {
+                results.extend(e.step()?);
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+    }
     let wall = t0.elapsed().as_secs_f64();
 
     let mut latencies: Vec<f64> = results.iter().map(|r| r.seconds).collect();
@@ -65,6 +133,9 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .filter(|r| r.tokens.last() == Some(&pa_rl::data::EOS))
         .count();
+    let sum = |f: fn(&pa_rl::engine::EngineStats) -> u64| -> u64 {
+        engines.iter().map(|e| f(&e.stats)).sum()
+    };
 
     let mut t = Table::new(
         "Inference engine: continuous batching benchmark",
@@ -72,7 +143,8 @@ fn main() -> anyhow::Result<()> {
     );
     t.row(&["requests".into(), format!("{n_requests}")]);
     t.row(&["group size".into(), format!("{group}")]);
-    t.row(&["slots".into(), format!("{}", cfg.engine.n_slots)]);
+    t.row(&["engines".into(), format!("{n_engines}")]);
+    t.row(&["slots / engine".into(), format!("{}", cfg.engine.n_slots)]);
     t.row(&["decode chunk".into(), format!("{}", cfg.engine.decode_chunk)]);
     t.row(&["wall (s)".into(), format!("{wall:.3}")]);
     t.row(&["generated tokens".into(), format!("{total_tokens}")]);
@@ -82,27 +154,54 @@ fn main() -> anyhow::Result<()> {
     t.row(&["latency p95 (s)".into(), format!("{:.3}", pct(0.95))]);
     t.row(&["latency max (s)".into(), format!("{:.3}", pct(1.0))]);
     t.row(&["EOS-terminated".into(), format!("{finished}/{n_requests}")]);
-    t.row(&["prefills (compiled)".into(), format!("{}", engine.stats.prefills)]);
-    t.row(&["prefills skipped".into(), format!("{}", engine.stats.prefills_skipped)]);
-    t.row(&["prefill chunks".into(), format!("{}", engine.stats.prefill_chunks)]);
+    t.row(&["prefills (compiled)".into(), format!("{}", sum(|s| s.prefills))]);
+    t.row(&["prefills skipped".into(), format!("{}", sum(|s| s.prefills_skipped))]);
+    t.row(&["prefill chunks".into(), format!("{}", sum(|s| s.prefill_chunks))]);
     t.row(&[
         "prefill tokens saved".into(),
-        format!("{}", engine.stats.prefill_tokens_saved),
+        format!("{}", sum(|s| s.prefill_tokens_saved)),
     ]);
-    t.row(&["decode chunks".into(), format!("{}", engine.stats.decode_chunks)]);
-    match engine.cache_stats() {
-        Some(c) => {
-            t.row(&["prefix cache".into(), "on".into()]);
-            t.row(&["kv hit rate".into(), format!("{:.1}%", c.hit_rate() * 100.0)]);
-            t.row(&[
-                "prompt tokens hit/miss".into(),
-                format!("{}/{}", c.hit_tokens, c.miss_tokens),
-            ]);
-            t.row(&["partial-prefix hits".into(), format!("{}", c.partial_hits)]);
-            t.row(&["kv bytes saved".into(), format!("{}", c.bytes_saved)]);
-            t.row(&["cache evictions".into(), format!("{}", c.evictions)]);
+    t.row(&["decode chunks".into(), format!("{}", sum(|s| s.decode_chunks))]);
+    let mut cache_on = false;
+    let (mut hit, mut miss, mut partial, mut bytes, mut evictions) = (0, 0, 0, 0, 0);
+    for e in &engines {
+        if let Some(c) = e.cache_stats() {
+            cache_on = true;
+            hit += c.hit_tokens;
+            miss += c.miss_tokens;
+            partial += c.partial_hits;
+            bytes += c.bytes_saved;
+            evictions += c.evictions;
         }
-        None => t.row(&["prefix cache".into(), "off".into()]),
+    }
+    if cache_on {
+        let rate = if hit + miss == 0 { 0.0 } else { hit as f64 / (hit + miss) as f64 };
+        t.row(&["prefix cache".into(), "on".into()]);
+        t.row(&["kv hit rate".into(), format!("{:.1}%", rate * 100.0)]);
+        t.row(&["prompt tokens hit/miss".into(), format!("{hit}/{miss}")]);
+        t.row(&["partial-prefix hits".into(), format!("{partial}")]);
+        t.row(&["kv bytes saved".into(), format!("{bytes}")]);
+        t.row(&["cache evictions".into(), format!("{evictions}")]);
+    } else {
+        t.row(&["prefix cache".into(), "off".into()]);
+    }
+    match &store {
+        Some(s) => {
+            let ss = s.stats();
+            t.row(&["shared store".into(), "on".into()]);
+            t.row(&["cross-engine hits".into(), format!("{}", sum(|st| st.cross_engine_hits))]);
+            t.row(&[
+                "cross-engine tokens".into(),
+                format!("{}", sum(|st| st.cross_engine_tokens)),
+            ]);
+            t.row(&["store publishes".into(), format!("{}", ss.publishes)]);
+            t.row(&[
+                "store blocks live/cap".into(),
+                format!("{}/{}", s.live_blocks(), s.capacity_blocks()),
+            ]);
+            t.row(&["affinity spills".into(), format!("{spills}/{n_unique}")]);
+        }
+        None => t.row(&["shared store".into(), "off".into()]),
     }
     t.print();
     Ok(())

@@ -64,7 +64,9 @@ fn main() -> anyhow::Result<()> {
     let mut csv = csv_path.as_ref().map(|p| {
         CsvLog::new(p, &["iter", "reward", "loss", "kl", "entropy", "grad_norm",
                          "wall_s", "consumer_wait_s", "train_tokens", "staleness",
-                         "kv_hit_rate", "prefill_tokens_saved"])
+                         "kv_hit_rate", "prefill_tokens_saved",
+                         "cross_engine_hits", "cross_engine_tokens",
+                         "store_publishes", "affinity_spills"])
     });
     let t0 = std::time::Instant::now();
     let report = {
@@ -92,6 +94,10 @@ fn main() -> anyhow::Result<()> {
                     it.staleness_mean,
                     it.kv_hit_rate,
                     it.prefill_tokens_saved as f64,
+                    it.cross_engine_hits as f64,
+                    it.cross_engine_tokens as f64,
+                    it.store_publishes as f64,
+                    it.affinity_spills as f64,
                 ]);
             }
             iters_done.push(it.clone());

@@ -26,6 +26,7 @@ fn sim_setup(framework: Framework) -> SimSetup {
         spa: false,
         prefix_cache: false,
         template_frac: 0.0,
+        cross_engine: false,
         train_micro_bs: 1,
         micro_launch_s: 0.5,
         iters: 1,

@@ -67,7 +67,7 @@ fn main() {
     add("host sampler (V=32k, top-p+top-k)", s, String::new());
 
     // prompt generation
-    let gen = TaskGen::new(pa_rl::config::DataConfig { few_shot: 2, max_operand: 99, seed: 0 });
+    let gen = TaskGen::new(pa_rl::config::DataConfig { few_shot: 2, shared_few_shot: false, max_operand: 99, seed: 0 });
     let mut i = 0u64;
     let s = bench("taskgen", 100, 2000, || {
         i += 1;
@@ -76,7 +76,7 @@ fn main() {
     add("prompt generation (few-shot 2)", s, String::new());
 
     // dataloader batch
-    let mut dl = DataLoader::new(pa_rl::config::DataConfig { few_shot: 1, max_operand: 99, seed: 0 });
+    let mut dl = DataLoader::new(pa_rl::config::DataConfig { few_shot: 1, shared_few_shot: false, max_operand: 99, seed: 0 });
     let s = bench("loader", 20, 200, || {
         std::hint::black_box(dl.next_batch(32));
     });
@@ -241,6 +241,152 @@ fn main() {
         );
     }
 
+    // Dispatch-policy comparison: group-pinned round-robin (per-engine
+    // caches, PR-2) vs prompt-affinity routing + cross-engine shared store.
+    // 12 groups over 3 templates on 4 engines: round-robin scatters every
+    // template cold onto every engine; affinity keeps templates warm and
+    // spilled groups import them from the store. Reports the cache-side
+    // admission cost and, per policy, `prefill_tokens_saved` and the
+    // cross-engine import count — affinity+store must save strictly more.
+    {
+        use pa_rl::coordinator::route;
+        use pa_rl::engine::chunked::{plan_chunks, resume_point};
+        use pa_rl::engine::kvcache::{EvictPolicy, KvGeometry, PrefixCache, PrefixCacheCfg};
+        use pa_rl::store::{SharedKvStore, StoreCfg};
+
+        let geom = KvGeometry { n_layers: 4, n_slots: 8, cache_len: 96, kv_heads: 2, head_dim: 16 };
+        let re = geom.row_elems();
+        let (n_engines, bt, tpl, lp, g) = (4usize, 16usize, 48usize, 64usize, 4usize);
+        let (n_templates, n_groups) = (3usize, 12usize);
+        let prompts: Vec<Vec<u32>> = (0..n_groups as u32)
+            .map(|gi| {
+                let t = gi % n_templates as u32;
+                (0..lp as u32)
+                    .map(|i| if (i as usize) < tpl { 2 + (t * 53 + i * 7) % 40 } else { 50 + gi * 17 + i })
+                    .collect()
+            })
+            .collect();
+        let fill_rows = |len: usize| vec![0.5f32; len * re];
+
+        // The engine's cache-side admission flow (import -> match -> chunked
+        // publication), minus the compiled calls; returns restored tokens.
+        let admit = |cache: &mut PrefixCache, store: Option<&SharedKvStore>, prompt: &[u32]| -> (u64, u64) {
+            let mut imports = 0u64;
+            if let Some(s) = store {
+                let local = cache.resident_tokens(prompt);
+                if local < prompt.len() {
+                    if let Some(f) = s.fetch_longest(prompt, local, 1) {
+                        if let Some(l) = cache.insert_prefix(&prompt[..f.len], &f.rows, f.logits.clone()) {
+                            cache.release(l);
+                            imports = 1;
+                        }
+                        s.release(f.lease);
+                    }
+                }
+            }
+            let m = cache.match_prefix(prompt);
+            if m.matched == prompt.len() && m.logits.is_some() {
+                if let Some(l) = m.lease {
+                    cache.release(l);
+                }
+                return (prompt.len() as u64, imports);
+            }
+            let resume = resume_point(m.matched, prompt.len());
+            let mut lease = m.lease;
+            let mut rows_acc = m.rows[..resume * re].to_vec();
+            for c in plan_chunks(prompt.len(), resume, bt) {
+                let end = c.start + c.len;
+                rows_acc.extend_from_slice(&fill_rows(c.len));
+                let term = (end == prompt.len()).then(|| vec![0.0f32; 8]);
+                if let Some(nl) = cache.insert_prefix(&prompt[..end], &rows_acc, term) {
+                    if let Some(old) = lease.take() {
+                        cache.release(old);
+                    }
+                    lease = Some(nl);
+                }
+            }
+            if let Some(l) = lease {
+                cache.release(l);
+            }
+            if let Some(s) = store {
+                s.publish_aligned(prompt, &rows_acc, Some(&[0.0f32; 8]), 1, true);
+            }
+            (resume as u64, imports)
+        };
+
+        let mk_caches = || -> Vec<PrefixCache> {
+            (0..n_engines)
+                .map(|_| {
+                    PrefixCache::new(
+                        geom.clone(),
+                        PrefixCacheCfg { block_tokens: bt, capacity_blocks: 128, policy: EvictPolicy::Lru },
+                    )
+                })
+                .collect()
+        };
+
+        let mut pinned_saved = 0u64;
+        let s = bench("dispatch_pinned", 20, 200, || {
+            let mut caches = mk_caches();
+            pinned_saved = 0;
+            for (gi, prompt) in prompts.iter().enumerate() {
+                let e = gi % n_engines; // the round-robin group pin
+                for _ in 0..g {
+                    pinned_saved += admit(&mut caches[e], None, prompt).0;
+                }
+            }
+            std::hint::black_box(&caches);
+        });
+        add(
+            "dispatch: group-pinned round-robin (12 groups x G=4)",
+            s.clone(),
+            format!("prefill_tokens_saved {pinned_saved}/{}", n_groups * g * lp),
+        );
+
+        let mut affinity_saved = 0u64;
+        let mut cross_imports = 0u64;
+        let mut spills = 0u64;
+        let s = bench("dispatch_affinity", 20, 200, || {
+            let mut caches = mk_caches();
+            let store = SharedKvStore::new(StoreCfg {
+                block_tokens: bt,
+                capacity_blocks: 256,
+                policy: EvictPolicy::Lru,
+            });
+            store.set_version(1);
+            affinity_saved = 0;
+            cross_imports = 0;
+            spills = 0;
+            let mut load = vec![0usize; n_engines];
+            for prompt in &prompts {
+                let (e, preferred) = route::route_group(prompt, bt, &load, 2 * g);
+                if !preferred {
+                    spills += 1;
+                }
+                load[e] += g;
+                for _ in 0..g {
+                    let (saved, imp) = admit(&mut caches[e], Some(&store), prompt);
+                    affinity_saved += saved;
+                    cross_imports += imp;
+                }
+            }
+            std::hint::black_box(&caches);
+        });
+        add(
+            "dispatch: affinity + cross-engine store (same workload)",
+            s.clone(),
+            format!(
+                "prefill_tokens_saved {affinity_saved}/{} ({cross_imports} cross-engine imports, {spills} spills)",
+                n_groups * g * lp
+            ),
+        );
+        assert!(
+            affinity_saved > pinned_saved,
+            "affinity+store must beat pinned dispatch: {affinity_saved} vs {pinned_saved}"
+        );
+        assert!(cross_imports > 0, "spilled groups must import from the store");
+    }
+
     // one simulator iteration (bench-harness cost)
     let sim = pa_rl::sim::SimSetup {
         cluster: pa_rl::sim::ClusterSpec::npu(16),
@@ -253,6 +399,7 @@ fn main() {
         spa: false,
         prefix_cache: false,
         template_frac: 0.0,
+        cross_engine: false,
         train_micro_bs: 1,
         micro_launch_s: 0.5,
         iters: 1,

@@ -82,12 +82,28 @@ pub struct EngineConfig {
     /// full-prompt hits only (PR-1 behavior).
     pub chunked_prefill: bool,
     /// Prefix-cache block size in tokens; must divide `prompt_max`. Also the
-    /// fixed token width of one `prefill_chunk` call.
+    /// fixed token width of one `prefill_chunk` call and the segment
+    /// granularity of the cross-engine shared store.
     pub cache_block: usize,
     /// Prefix-cache pool capacity in blocks; must be >= `n_slots`.
     pub cache_blocks: usize,
     /// Which refcount-zero leaf the prefix cache evicts first.
     pub cache_evict: EvictPolicy,
+    /// Cross-engine shared segment store (`store::SharedKvStore`): dedupe
+    /// prompt prefixes across engine instances. Effective with
+    /// `prefix_cache` on and >= 2 engines; off = PR-2 behavior (per-engine
+    /// caches only).
+    pub shared_store: bool,
+    /// Shared-store capacity in block entries of `cache_block` tokens.
+    pub store_blocks: usize,
+    /// Per-engine budget of *displacing* publishes per weight-sync interval:
+    /// only a publish that had to evict resident segments consumes a credit
+    /// (dedup and free-space growth are free), bounding how hard one engine
+    /// can churn a full store. 0 disables publishing — engines become
+    /// read-only store consumers.
+    pub store_publish: usize,
+    /// Which unleased store segment eviction removes first.
+    pub store_evict: EvictPolicy,
 }
 
 impl EngineConfig {
@@ -153,6 +169,14 @@ pub struct RlConfig {
     pub n_engines: usize,
     /// Bounded rollout-queue capacity (groups).
     pub queue_cap: usize,
+    /// Prompt-affinity group routing (`coordinator::route`): prefer the
+    /// engine whose cache holds the template warm, spill to least-loaded.
+    /// Off = the original round-robin group pin.
+    pub affinity_routing: bool,
+    /// Backlog slack for affinity routing, in groups: the preferred engine
+    /// may run this many groups ahead of the least-loaded engine before a
+    /// group spills.
+    pub affinity_slack_groups: usize,
 }
 
 /// Synthetic-task data settings.
@@ -161,6 +185,10 @@ pub struct DataConfig {
     /// Few-shot examples prepended to each prompt (lengthens prompts to reach
     /// the paper's long-prompt/short-response SPA regime).
     pub few_shot: usize,
+    /// Draw one fixed few-shot template shared by *every* prompt instead of
+    /// per-prompt examples — the template-sharing serving workload where
+    /// chunked prefill and cross-engine KV sharing bite.
+    pub shared_few_shot: bool,
     /// Operands drawn uniformly from [0, max_operand].
     pub max_operand: u64,
     pub seed: u64,
@@ -227,6 +255,17 @@ impl Config {
                 "engine.cache_blocks ({cache_blocks}) cannot hold one full prompt: need >= {min_for_one_prompt} blocks of {cache_block} tokens for prompt_max {prompt_max}"
             );
         }
+        // Shared-store default capacity: two local caches' worth of blocks —
+        // enough for several warm templates across the whole fleet without
+        // rivaling per-engine pool memory.
+        let store_blocks = e.usize_or("store_blocks", cache_blocks * 2);
+        let shared_store = e.bool_or("shared_store", true);
+        if shared_store && store_blocks < prompt_max.div_ceil(cache_block) {
+            bail!(
+                "engine.store_blocks ({store_blocks}) cannot hold one full prompt: need >= {} blocks of {cache_block} tokens for prompt_max {prompt_max}",
+                prompt_max.div_ceil(cache_block)
+            );
+        }
         let engine = EngineConfig {
             n_slots,
             prompt_max,
@@ -241,6 +280,11 @@ impl Config {
             cache_blocks,
             cache_evict: EvictPolicy::parse(e.str_or("cache_evict", "lru"))
                 .context("engine.cache_evict")?,
+            shared_store,
+            store_blocks,
+            store_publish: e.usize_or("store_publish", 256),
+            store_evict: EvictPolicy::parse(e.str_or("store_evict", "lru"))
+                .context("engine.store_evict")?,
         };
 
         let r = j.req("rl").context("config: missing 'rl'")?;
@@ -250,6 +294,8 @@ impl Config {
             iters: r.usize_or("iters", 10),
             n_engines: r.usize_or("n_engines", 1),
             queue_cap: r.usize_or("queue_cap", 64),
+            affinity_routing: r.bool_or("affinity_routing", true),
+            affinity_slack_groups: r.usize_or("affinity_slack_groups", 2),
         };
 
         let t = j.req("train").context("config: missing 'train'")?;
@@ -286,6 +332,7 @@ impl Config {
         let d = j.get("data").cloned().unwrap_or(Json::Obj(vec![]));
         let data = DataConfig {
             few_shot: d.usize_or("few_shot", 0),
+            shared_few_shot: d.bool_or("shared_few_shot", false),
             max_operand: d.f64_or("max_operand", 99.0) as u64,
             seed: d.f64_or("seed", 0.0) as u64,
         };
@@ -303,6 +350,21 @@ impl Config {
     /// Default artifacts directory for this config.
     pub fn artifacts_dir(&self) -> String {
         format!("artifacts/{}", self.name)
+    }
+
+    /// Should an `n_engines`-wide deployment run the cross-engine shared
+    /// segment store? (One engine's local radix cache already covers
+    /// everything a store could offer.) Single source of truth for the
+    /// coordinator and the serving examples.
+    pub fn store_active(&self, n_engines: usize) -> bool {
+        self.engine.prefix_cache && self.engine.shared_store && n_engines > 1
+    }
+
+    /// Should an `n_engines`-wide deployment route groups by prompt
+    /// affinity? Only pays off when there is a per-engine cache to keep
+    /// warm; otherwise the round-robin group pin applies.
+    pub fn affinity_active(&self, n_engines: usize) -> bool {
+        self.rl.affinity_routing && self.engine.prefix_cache && n_engines > 1
     }
 }
 
@@ -343,6 +405,61 @@ mod tests {
         assert_eq!(c.engine.blocks_per_prompt(), 1);
         assert_eq!(c.engine.cache_blocks, 4 * 1 * 4);
         assert_eq!(c.engine.cache_evict, EvictPolicy::Lru);
+        // cross-engine store defaults: on, 2x the local pool, LRU, budget 256
+        assert!(c.engine.shared_store);
+        assert_eq!(c.engine.store_blocks, 2 * c.engine.cache_blocks);
+        assert_eq!(c.engine.store_publish, 256);
+        assert_eq!(c.engine.store_evict, EvictPolicy::Lru);
+        // routing defaults: affinity on, 2 groups of slack
+        assert!(c.rl.affinity_routing);
+        assert_eq!(c.rl.affinity_slack_groups, 2);
+        assert!(!c.data.shared_few_shot);
+    }
+
+    #[test]
+    fn store_and_routing_knobs_parse_explicitly() {
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"n_slots":2,"prompt_max":16,"max_new":4,
+                          "shared_store":false,"store_blocks":7,"store_publish":0,
+                          "store_evict":"fifo"},
+                "train":{},
+                "rl":{"batch_prompts":1,"group_size":1,"affinity_routing":false,
+                      "affinity_slack_groups":5},
+                "data":{"shared_few_shot":true}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert!(!c.engine.shared_store);
+        assert_eq!(c.engine.store_blocks, 7);
+        assert_eq!(c.engine.store_publish, 0);
+        assert_eq!(c.engine.store_evict, EvictPolicy::Fifo);
+        assert!(!c.rl.affinity_routing);
+        assert_eq!(c.rl.affinity_slack_groups, 5);
+        assert!(c.data.shared_few_shot);
+    }
+
+    #[test]
+    fn rejects_store_too_small_for_one_prompt() {
+        // A store that cannot hold one full prompt would never produce a
+        // cross-engine hit: reject rather than limp (mirrors cache_blocks).
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4,"cache_block":4,"store_blocks":3},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        let err = Config::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("store_blocks"), "unexpected error: {err}");
+        // ...but an explicitly disabled store skips the bound.
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4,"cache_block":4,"store_blocks":3,
+                          "shared_store":false},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_json(&j).is_ok());
     }
 
     #[test]

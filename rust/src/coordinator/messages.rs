@@ -2,15 +2,22 @@
 
 use crate::engine::{CacheStats, EngineStats, GenRequest};
 use crate::runtime::HostParams;
+use crate::store::SharedKvStore;
 use std::sync::mpsc;
 use std::sync::Arc;
 
 /// Commands to an engine worker thread.
 pub enum EngineMsg {
+    /// Attach the coordinator's cross-engine shared segment store. Sent once
+    /// per worker right after spawn (channel order guarantees it lands
+    /// before any generation work); the engine then consults/feeds the
+    /// store on every chunked admission.
+    AttachStore(Arc<SharedKvStore>),
     /// Install new policy weights (iteration-boundary sync, Alg. 1 line 3).
-    /// The worker acks on the provided channel once the upload completes;
+    /// The worker acks on the provided channel once the upload completes
+    /// (`uploaded: false` = no-op sync skipped on an identical version);
     /// the coordinator blocks on all acks before dispatching the batch.
-    SetWeights(Arc<HostParams>, mpsc::Sender<()>),
+    SetWeights(Arc<HostParams>, mpsc::Sender<WeightSyncAck>),
     /// Generate one rollout.
     Gen(Box<GenJob>),
     /// Generate a whole GRPO group's rollouts on this worker. Group-affine
@@ -22,6 +29,14 @@ pub enum EngineMsg {
     QueryStats(mpsc::Sender<WorkerStats>),
     /// Drain and exit.
     Shutdown,
+}
+
+/// Acknowledgement of one worker's [`EngineMsg::SetWeights`].
+#[derive(Debug, Clone, Copy)]
+pub struct WeightSyncAck {
+    /// False when the engine skipped a no-op sync (version already
+    /// installed) and kept its prefix cache warm.
+    pub uploaded: bool,
 }
 
 /// A generation job: the request plus everything the worker needs to score

@@ -11,9 +11,10 @@ pub mod assembler;
 pub mod driver;
 pub mod eval;
 pub mod messages;
+pub mod route;
 pub mod worker;
 
 pub use assembler::Assembler;
 pub use driver::{Driver, DriverOpts, IterReport, Mode, RunReport};
 pub use eval::{evaluate, EvalReport};
-pub use messages::{EngineMsg, GenJob, ScoredRollout, WorkerStats};
+pub use messages::{EngineMsg, GenJob, ScoredRollout, WeightSyncAck, WorkerStats};

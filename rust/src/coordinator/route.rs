@@ -1,0 +1,151 @@
+//! Prompt-affinity routing — which engine gets a GRPO group.
+//!
+//! Group dispatch stays *group-affine* (all G rollouts of a prompt land on
+//! one engine; that is what collapses a group's G prefills into 1), but the
+//! choice of engine is no longer a blind round-robin pin: the dispatcher
+//! hashes the prompt's **template prefix** — its longest block-aligned
+//! proper prefix, the same boundary form the shared segment store keys on
+//! ([`crate::store::hash`]) — and prefers the engine that prefix hashes to,
+//! because earlier groups with the same template already warmed that
+//! engine's local radix cache (no store round-trip at all).
+//!
+//! Affinity alone would hot-spot: on a workload where every prompt shares
+//! one template, the preferred engine gets everything. So routing is
+//! load-bounded — when the preferred engine's backlog exceeds the
+//! least-loaded engine's by more than `slack` jobs, the group *spills* to
+//! the least-loaded engine, which imports the template from the shared
+//! store instead of recomputing it. Affinity keeps the common case free;
+//! the store makes the spill case cheap; together N engines serve
+//! template traffic as one logical cache without load imbalance.
+
+use crate::store::hash;
+
+/// Blocks of the prompt head the router hashes. Capping the routed prefix
+/// at a fixed depth (rather than "everything but the last partial block")
+/// is what keeps same-template prompts with *different question lengths*
+/// on the same engine: an uncapped block-aligned prefix would extend past
+/// the template into per-prompt question tokens whenever lengths vary, and
+/// scatter the template across engines. Two blocks discriminate distinct
+/// templates well while staying safely inside any realistic template.
+pub const AFFINITY_BLOCKS: usize = 2;
+
+/// The routed prefix: the longest block-aligned proper prefix of the
+/// prompt, capped at [`AFFINITY_BLOCKS`] blocks (the final partial block —
+/// the per-prompt question tail — never participates). Whole-prompt
+/// fallback for prompts shorter than one block.
+pub fn affinity_prefix_len(prompt_len: usize, block_tokens: usize) -> usize {
+    let bt = block_tokens.max(1);
+    let aligned = prompt_len.saturating_sub(1) / bt * bt;
+    if aligned == 0 {
+        prompt_len
+    } else {
+        aligned.min(AFFINITY_BLOCKS * bt)
+    }
+}
+
+/// Pick the engine for a group given per-engine backlogs (outstanding jobs).
+/// Returns `(engine index, took_preferred)`; `false` marks a spill to the
+/// least-loaded fallback.
+pub fn route_group(
+    prompt: &[u32],
+    block_tokens: usize,
+    load: &[usize],
+    slack: usize,
+) -> (usize, bool) {
+    debug_assert!(!load.is_empty(), "no engines to route to");
+    let n = load.len();
+    if n == 1 {
+        return (0, true);
+    }
+    let len = affinity_prefix_len(prompt.len(), block_tokens);
+    let preferred = (hash::hash_prefix(&prompt[..len]) % n as u64) as usize;
+    let min = load.iter().copied().min().unwrap_or(0);
+    if load[preferred] <= min + slack {
+        (preferred, true)
+    } else {
+        let least = load
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, l)| *l)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        (least, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affinity_prefix_drops_the_partial_tail_block() {
+        assert_eq!(affinity_prefix_len(10, 4), 8);
+        assert_eq!(affinity_prefix_len(8, 4), 4, "aligned length is itself a tail");
+        assert_eq!(affinity_prefix_len(3, 4), 3, "short prompt: whole-prompt fallback");
+        assert_eq!(affinity_prefix_len(1, 4), 1);
+        // Capped: long prompts hash a fixed head, so a 48-token template
+        // with question tails of varying length routes identically.
+        assert_eq!(affinity_prefix_len(56, 4), AFFINITY_BLOCKS * 4);
+        assert_eq!(affinity_prefix_len(62, 4), AFFINITY_BLOCKS * 4);
+    }
+
+    #[test]
+    fn variable_length_questions_share_a_template_engine() {
+        // Same 48-token template, question tails of 5..12 tokens: every
+        // prompt must prefer the same engine (the uncapped form would hash
+        // question tokens and scatter them).
+        let template: Vec<u32> = (0..48).map(|i| 3 + (i % 7)).collect();
+        let load = vec![0usize; 4];
+        let engines: std::collections::HashSet<usize> = (5..13)
+            .map(|q| {
+                let mut p = template.clone();
+                p.extend((0..q).map(|i| 60 + i));
+                route_group(&p, 4, &load, 8).0
+            })
+            .collect();
+        assert_eq!(engines.len(), 1, "template scattered across {engines:?}");
+    }
+
+    #[test]
+    fn same_template_same_engine_until_overload() {
+        let template: Vec<u32> = (0..8).collect();
+        let a: Vec<u32> = [&template[..], &[50, 51]].concat();
+        let b: Vec<u32> = [&template[..], &[60][..]].concat();
+        let mut load = vec![0usize; 4];
+        let (ea, pa) = route_group(&a, 4, &load, 8);
+        let (eb, pb) = route_group(&b, 4, &load, 8);
+        assert!(pa && pb);
+        assert_eq!(ea, eb, "shared template must prefer one engine");
+        // Back the preferred engine up past the slack: the next group spills
+        // to the least-loaded engine.
+        load[ea] = 9;
+        load[(ea + 1) % 4] = 3;
+        let (es, ps) = route_group(&a, 4, &load, 8);
+        assert!(!ps, "overloaded preferred engine must spill");
+        assert_ne!(es, ea);
+        assert_eq!(load[es], 0, "spill goes to the least-loaded engine");
+        // Within slack, affinity wins again.
+        load[ea] = 8;
+        assert_eq!(route_group(&a, 4, &load, 8), (ea, true));
+    }
+
+    #[test]
+    fn single_engine_short_circuits() {
+        assert_eq!(route_group(&[1, 2, 3], 4, &[7], 0), (0, true));
+    }
+
+    #[test]
+    fn distinct_templates_spread() {
+        // 64 distinct 8-token templates over 4 engines: no engine should be
+        // starved (the router must actually use the hash, not a constant).
+        let load = vec![0usize; 4];
+        let mut hits = [0usize; 4];
+        for t in 0..64u32 {
+            let prompt: Vec<u32> = (0..10).map(|i| t * 31 + i).collect();
+            let (e, p) = route_group(&prompt, 4, &load, 0);
+            assert!(p);
+            hits[e] += 1;
+        }
+        assert!(hits.iter().all(|&h| h > 0), "dead engine: {hits:?}");
+    }
+}

@@ -7,7 +7,7 @@
 //! backpressure toward the inference side, bounding rollout memory exactly
 //! like the paper's shared queue.
 
-use super::messages::{EngineMsg, GenJob, ScoredRollout, WorkerStats};
+use super::messages::{EngineMsg, GenJob, ScoredRollout, WeightSyncAck, WorkerStats};
 use crate::config::Config;
 use crate::data::Tokenizer;
 use crate::engine::Engine;
@@ -133,9 +133,12 @@ fn handle_msg(
     lane: &str,
 ) -> Result<bool> {
     match msg {
+        EngineMsg::AttachStore(store) => {
+            engine.set_shared_store(store);
+        }
         EngineMsg::SetWeights(params, ack) => {
-            engine.set_weights(&params)?;
-            let _ = ack.send(());
+            let uploaded = engine.set_weights(&params)?;
+            let _ = ack.send(WeightSyncAck { uploaded });
         }
         EngineMsg::Gen(job) => {
             jobs.insert(job.request.request_id, (*job).clone());
@@ -156,6 +159,10 @@ fn handle_msg(
                 // Surface the hit rate on this worker's timeline lane so the
                 // rendered trace carries it next to the TPSPD spans.
                 trace.annotate(lane, "kv_hit", c.hit_rate());
+            }
+            if engine.stats.cross_engine_hits > 0 {
+                // Cross-engine imports on this lane (fig3 trace annotation).
+                trace.annotate(lane, "xeng", engine.stats.cross_engine_hits as f64);
             }
             let _ = reply.send(WorkerStats {
                 engine_idx: idx,

@@ -68,18 +68,33 @@ impl TaskGen {
         format!("Q:{a}{op}{b}=?A:")
     }
 
+    /// Few-shot prefix: complete worked examples, '#'-separated. With
+    /// `shared_few_shot` the examples come from one fixed stream independent
+    /// of the prompt index, so every prompt shares a byte-identical template
+    /// — the template-sharing workload where chunked prefill and cross-engine
+    /// KV sharing collapse the per-prompt prefill to the question suffix.
+    fn push_few_shot(&self, text: &mut String, rng: &mut Pcg64) {
+        let mut shared;
+        let rng = if self.cfg.shared_few_shot {
+            shared = Pcg64::new(self.cfg.seed ^ 0x7E41, 1);
+            &mut shared
+        } else {
+            rng
+        };
+        for _ in 0..self.cfg.few_shot {
+            let (a, op, b, ans) = self.problem(rng);
+            text.push_str(&Self::render(a, op, b));
+            text.push_str(&ans.to_string());
+            text.push('#');
+        }
+    }
+
     /// Generate the `idx`-th prompt deterministically (same seed + idx ⇒ same
     /// prompt, independent of iteration order).
     pub fn prompt(&self, idx: u64) -> Prompt {
         let mut rng = Pcg64::new(self.cfg.seed ^ 0xDA7A, idx + 1);
         let mut text = String::new();
-        // Few-shot prefix: complete worked examples, '#'-separated.
-        for _ in 0..self.cfg.few_shot {
-            let (a, op, b, ans) = self.problem(&mut rng);
-            text.push_str(&Self::render(a, op, b));
-            text.push_str(&ans.to_string());
-            text.push('#');
-        }
+        self.push_few_shot(&mut text, &mut rng);
         let (a, op, b, answer) = self.problem(&mut rng);
         text.push_str(&Self::render(a, op, b));
         let mut tokens = vec![BOS];
@@ -91,12 +106,7 @@ impl TaskGen {
     pub fn eval_prompt(&self, idx: u64) -> Prompt {
         let mut rng = Pcg64::new(self.cfg.seed ^ 0xE7A1, (idx + 1) << 20);
         let mut text = String::new();
-        for _ in 0..self.cfg.few_shot {
-            let (a, op, b, ans) = self.problem(&mut rng);
-            text.push_str(&Self::render(a, op, b));
-            text.push_str(&ans.to_string());
-            text.push('#');
-        }
+        self.push_few_shot(&mut text, &mut rng);
         let (a, op, b, answer) = self.problem(&mut rng);
         text.push_str(&Self::render(a, op, b));
         let mut tokens = vec![BOS];
@@ -157,7 +167,7 @@ mod tests {
     use super::*;
 
     fn cfg() -> DataConfig {
-        DataConfig { few_shot: 2, max_operand: 99, seed: 11 }
+        DataConfig { few_shot: 2, shared_few_shot: false, max_operand: 99, seed: 11 }
     }
 
     #[test]
@@ -233,8 +243,34 @@ mod tests {
     }
 
     #[test]
+    fn shared_few_shot_yields_one_template() {
+        let mut c = cfg();
+        c.shared_few_shot = true;
+        let g = TaskGen::new(c);
+        let prompts: Vec<Prompt> = (0..20).map(|i| g.prompt(i)).collect();
+        // Every prompt carries the same worked-example template...
+        let tpl_of = |p: &Prompt| p.text.rsplit_once('#').unwrap().0.to_string();
+        let templates: std::collections::HashSet<String> = prompts.iter().map(tpl_of).collect();
+        assert_eq!(templates.len(), 1, "shared template must be identical across prompts");
+        // ...while the questions (and answers) still vary per index.
+        let questions: std::collections::HashSet<String> =
+            prompts.iter().map(|p| p.text.rsplit('#').next().unwrap().to_string()).collect();
+        assert!(questions.len() > 15, "questions should stay diverse: {}", questions.len());
+        // Token-level: the common prefix spans the whole template.
+        let tpl_tokens = {
+            let a = &prompts[0].tokens;
+            let b = &prompts[1].tokens;
+            a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+        };
+        assert!(
+            tpl_tokens > tpl_of(&prompts[0]).len(),
+            "shared token prefix {tpl_tokens} shorter than the template text"
+        );
+    }
+
+    #[test]
     fn few_shot_zero_is_single_question() {
-        let g = TaskGen::new(DataConfig { few_shot: 0, max_operand: 9, seed: 0 });
+        let g = TaskGen::new(DataConfig { few_shot: 0, shared_few_shot: false, max_operand: 9, seed: 0 });
         let p = g.prompt(0);
         assert!(!p.text.contains('#'));
         assert!(p.text.starts_with("Q:"));

@@ -50,6 +50,7 @@ mod tests {
         gather_prompt_rows, gather_rows_range, scatter_prompt_rows, EvictPolicy, KvGeometry,
         Lease, PrefixCache, PrefixCacheCfg,
     };
+    use crate::store::{SharedKvStore, StoreCfg, StoreLease};
     use crate::util::prop;
     use crate::util::rng::Pcg64;
 
@@ -137,17 +138,44 @@ mod tests {
         mock_logits(&prev)
     }
 
-    /// Mirror of the engine's cache-enabled admission over the mock model.
-    /// Returns (first-token logits, compiled tokens actually computed).
+    /// One "engine"'s view of the shared store in the mock admission:
+    /// the store handle, the params version it synced, and the store leases
+    /// its in-flight imports hold (released on "retirement").
+    struct StoreCtx<'a> {
+        store: &'a SharedKvStore,
+        version: u64,
+        leases: Vec<StoreLease>,
+    }
+
+    /// Mirror of the engine's cache-enabled admission over the mock model,
+    /// including the cross-engine import/publish steps when a store context
+    /// is supplied. Returns (first-token logits, compiled tokens computed).
     fn admit_mock(
         cache: &mut PrefixCache,
         kv: &mut [f32],
         slot: usize,
         prompt: &[u32],
         leases: &mut Vec<Lease>,
+        mut store: Option<&mut StoreCtx>,
     ) -> (Vec<f32>, usize) {
         let g = cache.geometry().clone();
         let re = g.row_elems();
+        // Cross-engine import (mirrors Engine::import_from_store): warm the
+        // local cache from the store before the admission match.
+        if let Some(ctx) = store.as_mut() {
+            let local = cache.resident_tokens(prompt);
+            if local < prompt.len() {
+                if let Some(f) = ctx.store.fetch_longest(prompt, local, ctx.version) {
+                    match cache.insert_prefix(&prompt[..f.len], &f.rows, f.logits.clone()) {
+                        Some(l) => {
+                            cache.release(l);
+                            ctx.leases.push(f.lease);
+                        }
+                        None => ctx.store.release(f.lease),
+                    }
+                }
+            }
+        }
         let m = cache.match_prefix(prompt);
         if m.matched == prompt.len() {
             if let Some(logits) = m.logits {
@@ -167,6 +195,9 @@ mod tests {
             let logits = run_chunk_mock(kv, &g, slot, prompt, 0, prompt.len());
             let rows = gather_prompt_rows(kv, &g, slot, prompt.len());
             leases.extend(cache.insert(prompt, &rows, logits.clone()));
+            if let Some(ctx) = store.as_mut() {
+                ctx.store.publish_aligned(prompt, &rows, Some(&logits), ctx.version, true);
+            }
             return (logits, prompt.len());
         }
         let mut rows_acc = m.rows[..resume * re].to_vec();
@@ -187,6 +218,10 @@ mod tests {
             }
         }
         leases.extend(lease);
+        // One cross-engine publication per admission, like the engine.
+        if let Some(ctx) = store.as_mut() {
+            ctx.store.publish_aligned(prompt, &rows_acc, Some(&logits), ctx.version, true);
+        }
         (logits, computed)
     }
 
@@ -224,13 +259,13 @@ mod tests {
         let template: Vec<u32> = (0..12).map(|i| 3 + (i % 5)).collect();
 
         let mk = |q: &[u32]| [&template[..], q].concat();
-        let (_, computed) = admit_mock(&mut cache, &mut kv, 0, &mk(&[30, 31]), &mut leases);
+        let (_, computed) = admit_mock(&mut cache, &mut kv, 0, &mk(&[30, 31]), &mut leases, None);
         assert_eq!(computed, 14, "cold prompt computes everything");
 
         let suffixes: [&[u32]; 3] = [&[40, 41], &[50, 51, 52], &[60]];
         for (i, q) in suffixes.into_iter().enumerate() {
             let prompt = mk(q);
-            let (logits, computed) = admit_mock(&mut cache, &mut kv, 1, &prompt, &mut leases);
+            let (logits, computed) = admit_mock(&mut cache, &mut kv, 1, &prompt, &mut leases, None);
             assert_eq!(
                 computed,
                 q.len(),
@@ -246,13 +281,122 @@ mod tests {
             cache.check().unwrap();
         }
         // Re-admitting an already-seen prompt is a full hit: zero compute.
-        let (_, computed) = admit_mock(&mut cache, &mut kv, 1, &mk(&[50, 51, 52]), &mut leases);
+        let (_, computed) = admit_mock(&mut cache, &mut kv, 1, &mk(&[50, 51, 52]), &mut leases, None);
         assert_eq!(computed, 0);
         assert!(cache.stats.hits >= 1);
         for l in leases {
             cache.release(l);
         }
         cache.check().unwrap();
+    }
+
+    /// Cross-engine acceptance (mock model): engine A admits a template
+    /// prompt cold and publishes it; engine B — its own cache, its own KV
+    /// slab, same store — admits a different prompt sharing the template and
+    /// computes only the tokens past the store's block-aligned coverage,
+    /// with logits and KV rows bit-identical to a monolithic prefill. An
+    /// identical third engine *without* the store recomputes the template,
+    /// proving the imported rows equal local compute bit-for-bit.
+    #[test]
+    fn cross_engine_import_is_bit_exact_and_saves_compute() {
+        let g = tiny_geom();
+        let bt = 4usize;
+        let store = SharedKvStore::new(StoreCfg {
+            block_tokens: bt,
+            capacity_blocks: 64,
+            policy: EvictPolicy::Lru,
+        });
+        store.set_version(1);
+        let mut ctx_a = StoreCtx { store: &store, version: 1, leases: Vec::new() };
+        let mut ctx_b = StoreCtx { store: &store, version: 1, leases: Vec::new() };
+        let template: Vec<u32> = (0..12).map(|i| 3 + (i % 5)).collect(); // 3 full blocks
+        let pa: Vec<u32> = [&template[..], &[30, 31]].concat();
+        let pb: Vec<u32> = [&template[..], &[40, 41, 42]].concat();
+
+        // Engine A: cold admission, publishes template+suffix to the store.
+        let mut cache_a = mk_cache(64, bt);
+        let mut kv_a = kv_slab(&g);
+        let mut leases_a = Vec::new();
+        let (_, computed_a) =
+            admit_mock(&mut cache_a, &mut kv_a, 0, &pa, &mut leases_a, Some(&mut ctx_a));
+        assert_eq!(computed_a, pa.len(), "cold leader computes everything");
+        assert!(store.stats().publishes >= 1);
+
+        // Engine B: local cache cold, but the store covers the template's
+        // block-aligned prefix — B computes only the remainder.
+        let mut cache_b = mk_cache(64, bt);
+        let mut kv_b = kv_slab(&g);
+        let mut leases_b = Vec::new();
+        let (logits_b, computed_b) =
+            admit_mock(&mut cache_b, &mut kv_b, 1, &pb, &mut leases_b, Some(&mut ctx_b));
+        assert_eq!(
+            computed_b,
+            pb.len() - template.len(),
+            "import must cover the whole (block-aligned) template"
+        );
+        assert_eq!(ctx_b.leases.len(), 1, "importer holds a store lease");
+        assert!(store.leased_blocks() > 0, "imported segments pinned");
+        let (want_logits, want_rows) = oracle(&g, &pb);
+        assert_eq!(logits_b, want_logits, "imported admission logits diverge");
+        assert_eq!(gather_prompt_rows(&kv_b, &g, 1, pb.len()), want_rows);
+
+        // Store-less engine C on the same prompt: rows from local compute
+        // must equal what B imported, bit for bit.
+        let mut cache_c = mk_cache(64, bt);
+        let mut kv_c = kv_slab(&g);
+        let mut leases_c = Vec::new();
+        let (logits_c, computed_c) =
+            admit_mock(&mut cache_c, &mut kv_c, 0, &pb, &mut leases_c, None);
+        assert_eq!(computed_c, pb.len());
+        assert_eq!(logits_c, logits_b);
+        assert_eq!(
+            gather_prompt_rows(&kv_c, &g, 0, pb.len()),
+            gather_prompt_rows(&kv_b, &g, 1, pb.len()),
+            "import != local compute"
+        );
+
+        // Unaligned tails are deliberately not published (dead weight for
+        // any non-identical prompt): re-admitting B's prompt on A resumes
+        // from the shared template — local in A's case — and computes only
+        // the 3-token suffix, not zero.
+        let mut leases_a2 = Vec::new();
+        let (_, computed) =
+            admit_mock(&mut cache_a, &mut kv_a, 1, &pb, &mut leases_a2, Some(&mut ctx_a));
+        assert_eq!(computed, pb.len() - template.len(), "tails must not be shared");
+
+        // A *block-aligned* prompt publishes in full, terminal logits
+        // included, so another engine's byte-identical admission is a
+        // zero-compute store hit.
+        let pc: Vec<u32> = [&template[..], &[70, 71, 72, 73]].concat(); // 16 = 4 blocks
+        let (_, computed) =
+            admit_mock(&mut cache_a, &mut kv_a, 0, &pc, &mut leases_a2, Some(&mut ctx_a));
+        assert_eq!(computed, pc.len() - template.len());
+        let (logits_c2, computed) =
+            admit_mock(&mut cache_b, &mut kv_b, 0, &pc, &mut leases_b, Some(&mut ctx_b));
+        assert_eq!(computed, 0, "aligned full-prompt store hit skips all compute");
+        assert_eq!(logits_c2, oracle(&g, &pc).0);
+
+        // Retirement releases every pin; a version bump drains the store.
+        for l in leases_a.into_iter().chain(leases_a2) {
+            cache_a.release(l);
+        }
+        for l in leases_b {
+            cache_b.release(l);
+        }
+        for l in leases_c {
+            cache_c.release(l);
+        }
+        for ctx in [ctx_a, ctx_b] {
+            for l in ctx.leases {
+                store.release(l);
+            }
+        }
+        assert_eq!(store.leased_blocks(), 0);
+        store.set_version(2);
+        assert_eq!(store.live_blocks(), 0);
+        cache_a.check().unwrap();
+        cache_b.check().unwrap();
+        store.check().unwrap();
     }
 
     /// The acceptance proptest: for any chunk size, any prompt mix (shared
@@ -297,7 +441,7 @@ mod tests {
                             let slot = (*op as usize / 8) % g.n_slots;
                             let before = cache.stats.clone();
                             let (logits, computed) =
-                                admit_mock(&mut cache, &mut kv, slot, prompt, &mut leases);
+                                admit_mock(&mut cache, &mut kv, slot, prompt, &mut leases, None);
                             let (want_logits, want_rows) = oracle(&g, prompt);
                             if logits != want_logits {
                                 return Err(format!("logits diverge for {prompt:?}"));

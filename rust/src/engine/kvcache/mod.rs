@@ -183,12 +183,23 @@ pub struct PrefixCache {
     pool: BlockPool,
     pub stats: CacheStats,
     epoch: u64,
+    /// Params version the cached KV was computed under (cache-generation
+    /// tag): [`PrefixCache::set_params_version`] flushes only on a real
+    /// bump, so a no-op weight sync keeps frozen prompt templates warm.
+    params_version: Option<u64>,
 }
 
 impl PrefixCache {
     pub fn new(geom: KvGeometry, cfg: PrefixCacheCfg) -> PrefixCache {
         let pool = BlockPool::new(cfg.capacity_blocks, cfg.block_tokens, geom.row_elems());
-        PrefixCache { geom, tree: RadixTree::new(cfg.policy), pool, stats: CacheStats::default(), epoch: 0 }
+        PrefixCache {
+            geom,
+            tree: RadixTree::new(cfg.policy),
+            pool,
+            stats: CacheStats::default(),
+            epoch: 0,
+            params_version: None,
+        }
     }
 
     pub fn geometry(&self) -> &KvGeometry {
@@ -292,19 +303,31 @@ impl PrefixCache {
     }
 
     /// Insert a prompt *prefix* — the per-chunk publication step of chunked
-    /// admission. `logits` is `Some` only on the final chunk (a complete
-    /// prompt); intermediate prefixes are resumable but not full hits, and a
-    /// `None` here never erases logits already cached at the same boundary.
+    /// admission (and the landing point of cross-engine store imports).
+    /// `logits` is `Some` only on the final chunk (a complete prompt);
+    /// intermediate prefixes are resumable but not full hits, and a `None`
+    /// here never erases logits already cached at the same boundary.
+    ///
+    /// Eviction budget: blocks are reserved only for the *non-resident tail*
+    /// (plus one copy-on-write fork), not the whole prefix — per-chunk
+    /// re-publication of a mostly-resident prefix must not over-evict under
+    /// a tight pool (ROADMAP open item). The deepest resident node is pinned
+    /// for the duration of the eviction pass so the pass cannot free the
+    /// very rows the tail budget assumes are stored.
     pub fn insert_prefix(
         &mut self,
         seq: &[u32],
         rows: &[f32],
         logits: Option<Vec<f32>>,
     ) -> Option<Lease> {
-        let budget = RadixTree::insert_budget(seq.len(), self.pool.block_tokens());
+        let (anchor, resident) = self.tree.resident_prefix(seq);
+        let budget = RadixTree::insert_budget_tail(seq.len(), resident, self.pool.block_tokens());
         if budget > self.pool.capacity() {
             self.stats.insert_drops += 1;
             return None;
+        }
+        if let Some(a) = anchor {
+            self.tree.acquire(a);
         }
         while self.pool.free_count() < budget {
             match self.tree.evict_one(&mut self.pool) {
@@ -313,15 +336,44 @@ impl PrefixCache {
                     self.stats.blocks_evicted += freed as u64;
                 }
                 None => {
+                    if let Some(a) = anchor {
+                        self.tree.release(a);
+                    }
                     self.stats.insert_drops += 1;
                     return None;
                 }
             }
         }
+        if let Some(a) = anchor {
+            // Unpin before inserting: nothing evicts between here and the
+            // insert (the engine is single-threaded per cache), and a
+            // lingering pin would block in-place leaf extension.
+            self.tree.release(a);
+        }
         let node = self.tree.insert(seq, rows, logits, &mut self.pool, &mut self.stats);
         self.tree.acquire(node);
         self.stats.inserts += 1;
         Some(Lease { node, epoch: self.epoch })
+    }
+
+    /// Tokens of `seq` whose rows are already resident, without touching LRU
+    /// state or hit/miss counters — the cross-engine import probe (only
+    /// fetch from the shared store what the local tree does not cover).
+    pub fn resident_tokens(&self, seq: &[u32]) -> usize {
+        self.tree.resident_prefix(seq).1
+    }
+
+    /// Bind the cache contents to a params version. Flushes on a real bump
+    /// (cached KV is a function of the weights); a re-announced identical
+    /// version keeps the cache warm — the point of skipping no-op weight
+    /// syncs. Returns true when a flush happened.
+    pub fn set_params_version(&mut self, version: u64) -> bool {
+        if self.params_version == Some(version) {
+            return false;
+        }
+        self.params_version = Some(version);
+        self.clear();
+        true
     }
 
     /// Release a lease (request retirement). Stale leases from before a
@@ -510,6 +562,73 @@ mod tests {
         c.check().unwrap();
         assert_eq!(c.stats.clears, 1);
         assert_eq!(c.live_blocks(), 0);
+    }
+
+    #[test]
+    fn republication_reserves_only_the_tail() {
+        // bt=2, capacity 6. Resident: A = 2 blocks, B = 1 block (3 live,
+        // 3 free). Re-publishing A extended by one chunk (2 tokens) under
+        // the old whole-prefix budget would reserve ceil(6/2)+1 = 4 > 3 free
+        // and evict B for nothing; the tail budget reserves ceil(2/2)+1 = 2,
+        // so B survives and no eviction runs.
+        let mut c = cache(6, 2);
+        let re = c.geometry().row_elems();
+        let a: Vec<u32> = vec![1, 1, 1, 1];
+        let b: Vec<u32> = vec![9, 9];
+        let la = c.insert_prefix(&a, &rows_for(&a, re), None).expect("A fits");
+        let lb = c.insert(&b, &rows_for(&b, re), logits_for(&b)).expect("B fits");
+        let ext: Vec<u32> = [&a[..], &[2, 2]].concat();
+        let le = c.insert_prefix(&ext, &rows_for(&ext, re), Some(logits_for(&ext)));
+        assert!(le.is_some(), "tail republication fits without eviction");
+        assert_eq!(c.stats.evictions, 0, "whole-prefix budget would have evicted");
+        let m = c.match_prefix(&b);
+        assert_eq!(m.matched, b.len(), "unrelated entry survived the republication");
+        assert_eq!(c.match_prefix(&ext).matched, ext.len());
+        c.check().unwrap();
+        drop((la, lb, le));
+    }
+
+    #[test]
+    fn eviction_pass_spares_the_resident_prefix_it_budgets_on() {
+        // Everything unleased, pool nearly full: extending A needs one more
+        // block than is free, and A's own (older, LRU-first) leaf would be
+        // the victim — the anchor pin must steer eviction to the churn
+        // entry instead, or the tail budget's "resident" assumption breaks.
+        let mut c = cache(5, 2);
+        let re = c.geometry().row_elems();
+        let a: Vec<u32> = vec![1, 1, 1, 1];
+        let la = c.insert_prefix(&a, &rows_for(&a, re), None).unwrap();
+        c.release(la);
+        let churn: Vec<u32> = vec![7, 7, 7, 7];
+        let lc = c.insert_prefix(&churn, &rows_for(&churn, re), None).unwrap();
+        c.release(lc);
+        assert_eq!(c.live_blocks(), 4);
+        let ext: Vec<u32> = [&a[..], &[2, 2]].concat(); // needs 2 free, has 1
+        let l = c.insert_prefix(&ext, &rows_for(&ext, re), Some(logits_for(&ext)));
+        assert!(l.is_some());
+        assert!(c.stats.evictions > 0, "churn had to go");
+        let m = c.match_prefix(&ext);
+        assert_eq!(m.matched, ext.len());
+        assert_eq!(m.rows, rows_for(&ext, re), "resident prefix survived its own insert");
+        assert_eq!(c.match_prefix(&churn).matched, 0, "churn was the victim");
+        c.check().unwrap();
+    }
+
+    #[test]
+    fn params_version_tag_skips_noop_flush() {
+        let mut c = cache(8, 4);
+        let re = c.geometry().row_elems();
+        let p = vec![1, 2, 3];
+        assert!(c.set_params_version(10), "first bind flushes (empty) state");
+        let lease = c.insert(&p, &rows_for(&p, re), logits_for(&p)).unwrap();
+        c.release(lease);
+        assert!(!c.set_params_version(10), "same version: cache stays warm");
+        let hit = c.match_prompt(&p).expect("entry survived the no-op sync");
+        c.release(hit.lease);
+        assert!(c.set_params_version(11), "real bump flushes");
+        assert!(c.match_prompt(&p).is_none());
+        assert_eq!(c.stats.clears, 2);
+        c.check().unwrap();
     }
 
     #[test]

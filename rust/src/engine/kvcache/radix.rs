@@ -278,6 +278,35 @@ impl RadixTree {
         }
     }
 
+    /// Non-mutating longest-prefix probe: `(deepest node the match reaches,
+    /// tokens of `seq` whose KV rows are already resident)`. Unlike
+    /// [`RadixTree::lookup_longest`] this refreshes no LRU stamps and pushes
+    /// no heap entries — it is the sizing pass of [`RadixTree::
+    /// insert_budget_tail`] (how much of a re-published prefix is already
+    /// stored) and the cross-engine import probe (is the shared store's
+    /// coverage longer than ours?).
+    pub fn resident_prefix(&self, seq: &[u32]) -> (Option<usize>, usize) {
+        let mut i = 0usize;
+        let mut cur = self.root;
+        let mut deepest = None;
+        loop {
+            if i == seq.len() {
+                return (deepest, i);
+            }
+            let Some(&child) = self.node(cur).children.get(&seq[i]) else {
+                return (deepest, i);
+            };
+            let frag = &self.node(child).tokens;
+            let common = frag.iter().zip(&seq[i..]).take_while(|(a, b)| a == b).count();
+            deepest = Some(child);
+            i += common;
+            if common < frag.len() {
+                return (deepest, i);
+            }
+            cur = child;
+        }
+    }
+
     /// Concatenated KV rows for the first `take` tokens of the path
     /// root -> `id` (the restorable prefix a [`RadixTree::lookup_longest`]
     /// match reported; `take` may end inside `id`'s own fragment).
@@ -359,7 +388,19 @@ impl RadixTree {
     /// Worst-case pool blocks an insert of `seq` may allocate: storage for
     /// every token plus one block for a copy-on-write tail fork.
     pub fn insert_budget(seq_len: usize, block_tokens: usize) -> usize {
-        seq_len.div_ceil(block_tokens) + 1
+        Self::insert_budget_tail(seq_len, 0, block_tokens)
+    }
+
+    /// Worst-case pool blocks an insert may allocate when `resident` of the
+    /// `seq_len` tokens already have rows in the tree (per
+    /// [`RadixTree::resident_prefix`]): the insert walk re-uses every
+    /// resident row — splits share the straddling block instead of copying —
+    /// so only the non-resident tail allocates storage, plus one block for a
+    /// copy-on-write tail fork. This is what keeps per-chunk re-publication
+    /// of a mostly-resident prefix from evicting the world under a tight
+    /// pool (ROADMAP: chunked-insert eviction budget).
+    pub fn insert_budget_tail(seq_len: usize, resident: usize, block_tokens: usize) -> usize {
+        (seq_len - resident.min(seq_len)).div_ceil(block_tokens) + 1
     }
 
     /// Insert a prompt (or, for chunked admission, a prompt *prefix*) with
@@ -889,5 +930,45 @@ mod tests {
         assert_eq!(RadixTree::insert_budget(6, 4), 3);
         assert_eq!(RadixTree::insert_budget(8, 4), 3);
         assert_eq!(RadixTree::insert_budget(1, 4), 2);
+        // Tail budget: only the non-resident suffix allocates.
+        assert_eq!(RadixTree::insert_budget_tail(8, 0, 4), 3);
+        assert_eq!(RadixTree::insert_budget_tail(8, 6, 4), 2);
+        assert_eq!(RadixTree::insert_budget_tail(8, 8, 4), 1, "fully resident: cow fork only");
+        assert_eq!(RadixTree::insert_budget_tail(4, 9, 4), 1, "over-resident clamps");
+    }
+
+    #[test]
+    fn resident_prefix_probe_is_non_mutating() {
+        let mut pool = BlockPool::new(32, B, R);
+        let mut tree = RadixTree::new(EvictPolicy::Lru);
+        let a = vec![1, 2, 3, 4, 5, 6];
+        insert(&mut tree, &mut pool, &a);
+        insert(&mut tree, &mut pool, &[1, 2, 3, 9, 9]); // split at 3
+
+        let (n, m) = tree.resident_prefix(&a);
+        assert_eq!(m, 6);
+        assert_eq!(tree.path_tokens(n.unwrap()), 6);
+        // Mid-fragment divergence still counts the restorable rows.
+        let (n, m) = tree.resident_prefix(&[1, 2, 3, 4, 7]);
+        assert_eq!(m, 4);
+        assert!(n.is_some());
+        // Cold query: nothing resident, no node.
+        assert_eq!(tree.resident_prefix(&[7, 7]), (None, 0));
+        // No LRU refresh happened: the probe must not have re-keyed any
+        // evictable leaf (heap covering invariant would catch a push with a
+        // changed key; `check` also verifies no stamp drifted).
+        tree.check(&pool).unwrap();
+        // Probing must not change eviction order: refresh a's branch with a
+        // real lookup (so b's tail is the LRU victim), then probe b's branch
+        // many times — a mutating lookup would refresh it and flip the
+        // victim back to a's tail.
+        tree.lookup(&a);
+        for _ in 0..8 {
+            tree.resident_prefix(&[1, 2, 3, 9, 9]);
+        }
+        tree.evict_one(&mut pool).unwrap();
+        assert_eq!(tree.lookup(&[1, 2, 3, 9, 9]).matched, 3, "probe refreshed LRU");
+        assert_eq!(tree.lookup(&a).matched, 6, "probed branch survives");
+        tree.check(&pool).unwrap();
     }
 }

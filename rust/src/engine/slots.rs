@@ -31,6 +31,10 @@ pub struct InFlight {
     /// Prefix-cache pin held while this request occupies the slot (present
     /// when the engine's shared-prefix KV cache is enabled).
     pub lease: Option<Lease>,
+    /// Cross-engine store pin held when this request imported a prefix from
+    /// the shared segment store; released at retirement so hot templates
+    /// stay resident store-wide while any importer is in flight.
+    pub store_lease: Option<crate::store::StoreLease>,
 }
 
 /// Slot table.
@@ -112,6 +116,7 @@ mod tests {
             logprobs: vec![],
             started: Instant::now(),
             lease: None,
+            store_lease: None,
         }
     }
 

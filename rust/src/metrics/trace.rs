@@ -166,6 +166,22 @@ impl Trace {
                 .collect::<String>();
             out.push_str(&format!("{lane:<name_w$} |{bar}|{notes}\n"));
         }
+        // Lanes that carry only scalar annotations, no spans — e.g. the
+        // cross-engine store's fill/hit gauges — render as a trailing line
+        // each so the gauges aren't JSON-only.
+        let mut bare: Vec<String> = Vec::new();
+        for (l, k, v) in self.annotations() {
+            if !lanes.contains(&l) {
+                match bare.iter_mut().find(|s| s.starts_with(&format!("{l}:"))) {
+                    Some(s) => s.push_str(&format!(" {k}={v:.2}")),
+                    None => bare.push(format!("{l}: {k}={v:.2}")),
+                }
+            }
+        }
+        for line in bare {
+            out.push_str(&line);
+            out.push('\n');
+        }
         out
     }
 }
@@ -221,11 +237,13 @@ mod tests {
         tr.record_abs("infer-0", "step", 0.0, 1.0);
         tr.annotate("infer-0", "kv_hit", 0.5);
         tr.annotate("infer-0", "kv_hit", 0.88); // latest value wins
-        tr.annotate("other-lane", "kv_hit", 0.1); // no spans -> not rendered
+        tr.annotate("store", "fetch_hits", 12.0); // span-less gauge lane
         assert_eq!(tr.annotations().len(), 2);
         let art = tr.render_ascii(20);
         assert!(art.contains("kv_hit=0.88"), "{art}");
         assert!(!art.contains("kv_hit=0.50"), "{art}");
+        // Annotation-only lanes render as trailing gauge lines.
+        assert!(art.contains("store: fetch_hits=12.00"), "{art}");
         // kv_hit reaches the machine-readable timeline output too
         let j = tr.to_json();
         let notes = j.req("annotations").unwrap().as_arr().unwrap();

@@ -66,6 +66,7 @@ fn setup(
         // `prefix_cache_ablation` quantifies the engine-side saving.
         prefix_cache: false,
         template_frac: 0.0,
+        cross_engine: false,
         train_micro_bs: micro_bs,
         micro_launch_s: 0.5, // NPU-stack launch cost; table4 overrides for GPU
         iters,
@@ -80,12 +81,15 @@ fn setup(
 /// prefill share); chunked admission additionally lets group *leaders*
 /// resume from the warm few-shot template (60% of a GSM8K-style prompt
 /// here), so the remaining leader prefill shrinks with the matched-prefix
-/// fraction. Trained tokens are untouched throughout.
+/// fraction. The fourth row adds cross-engine KV sharing (the host-side
+/// shared segment store + affinity routing): the template is cold once
+/// fleet-wide instead of once per inference instance. Trained tokens are
+/// untouched throughout.
 pub fn prefix_cache_ablation(iters: usize) -> Vec<Row> {
     let cluster = ClusterSpec::npu(16);
     let model = ModelSpec::qwen(7.0);
     let w = WorkloadSpec::gsm8k(32);
-    let mk = |prefix_cache: bool, template_frac: f64, label: &str| {
+    let mk = |prefix_cache: bool, template_frac: f64, cross_engine: bool, label: &str| {
         let mut s = setup(
             Framework::PeriodicAsync,
             cluster,
@@ -99,12 +103,14 @@ pub fn prefix_cache_ablation(iters: usize) -> Vec<Row> {
         );
         s.prefix_cache = prefix_cache;
         s.template_frac = template_frac;
+        s.cross_engine = cross_engine;
         Row { setting: label.into(), paper_tpspd: None, sim: s.run_tuned() }
     };
     vec![
-        mk(false, 0.0, "Async ours, full prefill"),
-        mk(true, 0.0, "Async ours, prefix-cached prefill"),
-        mk(true, 0.6, "Async ours, chunked partial-prefix prefill"),
+        mk(false, 0.0, false, "Async ours, full prefill"),
+        mk(true, 0.0, false, "Async ours, prefix-cached prefill"),
+        mk(true, 0.6, false, "Async ours, chunked partial-prefix prefill"),
+        mk(true, 0.6, true, "Async ours, + cross-engine shared store"),
     ]
 }
 
@@ -366,19 +372,28 @@ mod tests {
     #[test]
     fn prefix_cache_ablation_never_hurts() {
         let rows = prefix_cache_ablation(2);
-        assert_eq!(rows.len(), 3);
-        let (off, on, chunked) = (&rows[0].sim, &rows[1].sim, &rows[2].sim);
+        assert_eq!(rows.len(), 4);
+        let (off, on, chunked, cross) =
+            (&rows[0].sim, &rows[1].sim, &rows[2].sim, &rows[3].sim);
         // Tuned independently: at any fixed ratio cache-on dominates
-        // cache-off, and chunked partial-prefix reuse dominates full-prompt
-        // hits (leaders only get cheaper), so each tuned optimum can only be
-        // at least as good as the previous row's. (t_infer itself may differ
-        // — the tuner is free to shift freed devices to training.)
+        // cache-off, chunked partial-prefix reuse dominates full-prompt
+        // hits, and fleet-wide template sharing dominates per-engine warmth
+        // (leaders only get cheaper at each step), so each tuned optimum can
+        // only be at least as good as the previous row's. (t_infer itself
+        // may differ — the tuner is free to shift freed devices to
+        // training.)
         assert!(on.tpspd >= off.tpspd, "cache on {} vs off {}", on.tpspd, off.tpspd);
         assert!(
             chunked.tpspd >= on.tpspd,
             "chunked {} vs full-prompt hits {}",
             chunked.tpspd,
             on.tpspd
+        );
+        assert!(
+            cross.tpspd >= chunked.tpspd,
+            "cross-engine {} vs per-engine {}",
+            cross.tpspd,
+            chunked.tpspd
         );
     }
 

@@ -69,6 +69,12 @@ pub struct SimSetup {
     /// (full-prompt hits only, the pre-chunked engine). Requires
     /// `prefix_cache`.
     pub template_frac: f64,
+    /// Cross-engine KV sharing (the host-side shared segment store): the
+    /// template is warm *fleet-wide* after one cold leader, instead of per
+    /// inference instance — with it off, the first leader on each instance
+    /// pays the cold template (the PR-2, per-engine-cache reality).
+    /// Meaningful only with `prefix_cache` and a nonzero `template_frac`.
+    pub cross_engine: bool,
     /// Samples per training micro-batch (paper's Micro-BS column; SPA packs
     /// the whole group into one launch regardless). Determines kernel-launch
     /// overhead, which is what makes micro-bs 1 at short sequence lengths so
@@ -323,18 +329,26 @@ impl SimSetup {
                 order.push((gi, m));
             }
         }
+        // Template warm-up horizon: with cross-engine sharing one cold
+        // leader warms the whole fleet; without it, the first leader landing
+        // on each inference instance pays the cold template.
+        let n_instances = (self.infer_devices() / self.infer_tp).max(1);
+        let cold_leaders = if self.cross_engine { 1 } else { n_instances };
         let service: Vec<f64> = order
             .iter()
             .map(|&(gi, m)| {
                 let (lp, lr) = groups[gi][m];
                 // Group-affine dispatch: member 0 prefills and populates the
                 // prefix cache; members 1.. reuse its whole prompt KV. With
-                // chunked partial-prefix reuse, even the leader resumes from
-                // the warm template fraction of its prompt.
+                // chunked partial-prefix reuse, the leader resumes from the
+                // warm template fraction of its prompt once the template is
+                // warm on (or importable by) its engine.
                 let matched_frac = if !self.prefix_cache {
                     0.0
                 } else if m > 0 {
                     1.0
+                } else if gi < cold_leaders {
+                    0.0
                 } else {
                     self.template_frac
                 };
@@ -424,6 +438,7 @@ mod tests {
             spa: false,
             prefix_cache: false,
             template_frac: 0.0,
+            cross_engine: false,
             train_micro_bs: 16,
             micro_launch_s: 0.5,
             iters: 5,
@@ -531,6 +546,48 @@ mod tests {
         let mut a = base.clone();
         a.template_frac = 0.9;
         assert_eq!(base.run().trained_tokens, a.run().trained_tokens);
+    }
+
+    #[test]
+    fn cross_engine_store_discount_never_hurts_and_is_wired() {
+        // Prompt-heavy template workload across several instances: sharing
+        // the template fleet-wide can only reduce inference time (fewer cold
+        // leaders), never change what is trained.
+        let mut per_engine = base(Framework::PeriodicAsync);
+        per_engine.workload = WorkloadSpec::gsm8k(32);
+        per_engine.prefix_cache = true;
+        per_engine.template_frac = 0.6;
+        let mut cross = per_engine.clone();
+        cross.cross_engine = true;
+        let a = per_engine.run();
+        let b = cross.run();
+        assert!(
+            b.t_infer_mean <= a.t_infer_mean,
+            "cross-engine sharing must not lengthen inference: {} vs {}",
+            b.t_infer_mean,
+            a.t_infer_mean
+        );
+        assert_eq!(a.trained_tokens, b.trained_tokens);
+        assert!(b.tpspd >= a.tpspd, "cross-engine {} vs per-engine {}", b.tpspd, a.tpspd);
+        // The knob is actually wired: with several instances and G=1 (every
+        // job is a leader) the per-engine model pays n_instances cold
+        // templates per iteration vs one fleet-wide, so inference must be
+        // strictly slower without the store.
+        assert!(
+            per_engine.infer_devices() / per_engine.infer_tp > 1,
+            "setup must have >1 instance for the distinction to exist"
+        );
+        per_engine.workload.group_size = 1;
+        let mut cross = per_engine.clone();
+        cross.cross_engine = true;
+        let a = per_engine.run();
+        let b = cross.run();
+        assert!(
+            b.t_infer_mean < a.t_infer_mean,
+            "cross_engine knob had no effect on a leaders-only template workload: {} vs {}",
+            b.t_infer_mean,
+            a.t_infer_mean
+        );
     }
 
     #[test]

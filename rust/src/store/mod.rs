@@ -1,0 +1,518 @@
+//! Cross-engine KV sharing: a host-side shared prefix-segment store.
+//!
+//! The per-engine radix cache ([`crate::engine::kvcache`]) collapses a GRPO
+//! group's G prefills into 1 and resumes template-sharing prompts from their
+//! longest locally cached prefix — but it stops at the engine boundary: with
+//! N engines, a few-shot template shared across groups is still prefilled
+//! once *per engine*. This module is the missing plane (the decoupled KV/data
+//! layer AsyncFlow and Laminar argue for): a host-resident, content-addressed
+//! store of block-granular KV segments shared by every engine in the
+//! coordinator, turning N per-engine caches into one logical cache.
+//!
+//! Structure:
+//!
+//! * [`segments`] — the core map: one entry per *block* of a published
+//!   prefix, keyed by the hash of the whole prefix through that block
+//!   ([`hash`]), with a block-budget capacity and LRU/FIFO eviction of
+//!   unleased entries;
+//! * [`SharedKvStore`] — the `Mutex` facade engine worker threads share via
+//!   `Arc` ([`crate::coordinator::EngineMsg::AttachStore`]); fetches hand
+//!   out ref-counted, epoch-tagged [`StoreLease`]s that pin the matched
+//!   segments against eviction until the importing request retires;
+//! * [`stats`] — global counters the coordinator reports per iteration.
+//!
+//! Engine integration (see `engine::admit_chunked`): on admission, when the
+//! local radix match is short, the engine fetches the longest published
+//! prefix from the store, *imports* it into its local cache
+//! (`PrefixCache::insert_prefix`), and proceeds exactly as if the prefix had
+//! always been local — so restore, chunk planning, token accounting and the
+//! bit-exactness story are unchanged, and the import shows up as
+//! `cross_engine_hits` / `cross_engine_tokens` in [`crate::engine::
+//! EngineStats`]. Completed prefixes are published back once per admission,
+//! bounded by a per-engine, per-sync-interval publish budget
+//! (`engine.store_publish`) so a churny workload cannot thrash the store.
+//!
+//! Consistency: segments are functions of the policy weights. The store is
+//! bound to a params version ([`SharedKvStore::set_version`], called by
+//! every engine inside `set_weights`): a real version bump flushes the store
+//! and bumps the lease epoch (stale releases are ignored); publishes and
+//! fetches carrying a mismatched version are rejected, so KV computed under
+//! old weights can never cross into a new iteration.
+
+pub mod hash;
+pub mod segments;
+pub mod stats;
+
+pub use segments::Publish;
+pub use stats::StoreStats;
+
+use crate::engine::kvcache::EvictPolicy;
+use segments::StoreCore;
+use std::sync::Mutex;
+
+/// Store sizing/eviction knobs (validated by `config::Config`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreCfg {
+    /// Tokens per segment block — the engines' `cache_block`, so store keys
+    /// land on the same boundaries the engines publish and match at.
+    pub block_tokens: usize,
+    /// Capacity in block entries.
+    pub capacity_blocks: usize,
+    pub policy: EvictPolicy,
+}
+
+/// Ref-counted pin on the segments a fetch matched; held by the importing
+/// request until retirement, released through [`SharedKvStore::release`].
+/// Epoch-tagged: releases that outlive a version flush are ignored. Not
+/// `Clone` — the type system enforces at most one release per acquire, which
+/// is what keeps the refcounts non-negative by construction.
+#[derive(Debug)]
+pub struct StoreLease {
+    keys: Vec<u64>,
+    epoch: u64,
+}
+
+/// A successful cross-engine fetch: the longest published prefix of the
+/// query, ready to import into a local [`crate::engine::PrefixCache`].
+#[derive(Debug)]
+pub struct Fetched {
+    /// Tokens covered (block-granular; may equal the full prompt).
+    pub len: usize,
+    /// Token-major KV rows for `[0, len)`.
+    pub rows: Vec<f32>,
+    /// Terminal logits when a complete published prompt ends at `len`.
+    pub logits: Option<Vec<f32>>,
+    pub lease: StoreLease,
+}
+
+/// The shared store: one instance per coordinator, `Arc`-shared with every
+/// engine worker thread. All methods lock internally; each call copies rows
+/// in or out under the lock, so no reader ever observes an evicted segment.
+#[derive(Debug)]
+pub struct SharedKvStore {
+    inner: Mutex<StoreCore>,
+    block_tokens: usize,
+}
+
+impl SharedKvStore {
+    pub fn new(cfg: StoreCfg) -> SharedKvStore {
+        SharedKvStore {
+            inner: Mutex::new(StoreCore::new(cfg.block_tokens, cfg.capacity_blocks, cfg.policy)),
+            block_tokens: cfg.block_tokens,
+        }
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, StoreCore> {
+        self.inner.lock().expect("store mutex poisoned")
+    }
+
+    /// Bind the store to a params version; flushes on a real bump. Engines
+    /// call this from `set_weights`, so the first engine to install a new
+    /// version invalidates every stale segment for all of them.
+    pub fn set_version(&self, version: u64) -> bool {
+        self.lock().set_version(version)
+    }
+
+    /// Publish a completed prefix (KV rows + optional terminal logits)
+    /// computed under `version`, evicting unleased segments to make room.
+    /// Idempotent per block; see [`Publish`].
+    pub fn publish(
+        &self,
+        tokens: &[u32],
+        rows: &[f32],
+        logits: Option<&[f32]>,
+        version: u64,
+    ) -> Publish {
+        self.lock().publish(tokens, rows, logits, version, true)
+    }
+
+    /// Publish only the *block-aligned head* of a completed prefix — the
+    /// form engines (and their mocks/benches) use. An unaligned tail block
+    /// is keyed by the whole prompt's hash, fetchable only by a byte-exact
+    /// duplicate on another engine, so sharing it is dead weight; terminal
+    /// logits therefore attach only when the prefix is already aligned.
+    /// Prefixes shorter than one block have nothing shareable and return
+    /// [`Publish::Duplicate`]. `allow_evict = false` publishes into free
+    /// capacity and dedup-refreshes only — the budget-exhausted engine mode.
+    pub fn publish_aligned(
+        &self,
+        tokens: &[u32],
+        rows: &[f32],
+        logits: Option<&[f32]>,
+        version: u64,
+        allow_evict: bool,
+    ) -> Publish {
+        let aligned = tokens.len() / self.block_tokens * self.block_tokens;
+        if aligned == 0 {
+            return Publish::Duplicate;
+        }
+        if aligned == tokens.len() {
+            self.lock().publish(tokens, rows, logits, version, allow_evict)
+        } else {
+            let re = rows.len() / tokens.len();
+            self.lock()
+                .publish(&tokens[..aligned], &rows[..aligned * re], None, version, allow_evict)
+        }
+    }
+
+    /// Longest published prefix of `tokens` covering strictly more than
+    /// `min_len` tokens, under `version`. Acquires a lease on the matched
+    /// segments.
+    pub fn fetch_longest(&self, tokens: &[u32], min_len: usize, version: u64) -> Option<Fetched> {
+        let mut core = self.lock();
+        let f = core.fetch_longest(tokens, min_len, version)?;
+        let epoch = core.epoch;
+        Some(Fetched {
+            len: f.len,
+            rows: f.rows,
+            logits: f.logits,
+            lease: StoreLease { keys: f.keys, epoch },
+        })
+    }
+
+    /// Release a fetch lease (importing request retired). Stale leases from
+    /// before a version flush are ignored.
+    pub fn release(&self, lease: StoreLease) {
+        let mut core = self.lock();
+        if lease.epoch == core.epoch {
+            core.release(&lease.keys);
+        }
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.lock().stats.clone()
+    }
+
+    pub fn live_blocks(&self) -> usize {
+        self.lock().live_blocks()
+    }
+
+    pub fn leased_blocks(&self) -> usize {
+        self.lock().leased_blocks()
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.lock().capacity()
+    }
+
+    /// Structural invariants (for the proptests).
+    pub fn check(&self) -> Result<(), String> {
+        self.lock().check()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    const RE: usize = 3; // row elems
+
+    fn store(capacity: usize, bt: usize) -> SharedKvStore {
+        SharedKvStore::new(StoreCfg {
+            block_tokens: bt,
+            capacity_blocks: capacity,
+            policy: EvictPolicy::Lru,
+        })
+    }
+
+    /// Deterministic prefix-dependent rows, mirroring real KV: row p depends
+    /// on tokens[..=p] only — so any correctly assembled prefix import is
+    /// bit-identical to what a local prefill would have computed.
+    fn rows_for(seq: &[u32]) -> Vec<f32> {
+        let mut acc = 11u64;
+        let mut out = Vec::with_capacity(seq.len() * RE);
+        for &t in seq {
+            acc = acc.wrapping_mul(2862933555777941757).wrapping_add(u64::from(t) + 1);
+            for e in 0..RE {
+                out.push(((acc >> (e * 7 % 50)) & 0xFF) as f32);
+            }
+        }
+        out
+    }
+
+    fn logits_for(seq: &[u32]) -> Vec<f32> {
+        vec![seq.iter().sum::<u32>() as f32, seq.len() as f32]
+    }
+
+    #[test]
+    fn publish_fetch_roundtrip_block_granular() {
+        let s = store(16, 4);
+        let a: Vec<u32> = (0..10).collect(); // 2 full blocks + 2-token tail
+        assert!(matches!(
+            s.publish(&a, &rows_for(&a), Some(&logits_for(&a)), 7),
+            Publish::StaleVersion
+        ));
+        s.set_version(7);
+        assert_eq!(s.publish(&a, &rows_for(&a), Some(&logits_for(&a)), 7), Publish::Stored { blocks: 3, evicted: 0 });
+        assert_eq!(s.live_blocks(), 3);
+
+        // Exact query: full coverage including terminal logits.
+        let f = s.fetch_longest(&a, 0, 7).expect("full hit");
+        assert_eq!(f.len, 10);
+        assert_eq!(f.rows, rows_for(&a));
+        assert_eq!(f.logits.as_deref(), Some(&logits_for(&a)[..]));
+        assert_eq!(s.leased_blocks(), 3);
+        s.release(f.lease);
+        assert_eq!(s.leased_blocks(), 0);
+
+        // A different suffix shares the template at block granularity: the
+        // tail block diverges, so coverage is the aligned 8 tokens.
+        let b: Vec<u32> = [&a[..8], &[90, 91, 92][..]].concat();
+        let f = s.fetch_longest(&b, 0, 7).expect("template hit");
+        assert_eq!(f.len, 8);
+        assert_eq!(f.rows, rows_for(&a[..8]));
+        assert!(f.logits.is_none(), "partial coverage has no terminal logits");
+        s.release(f.lease);
+
+        // min_len at or above coverage is a miss (nothing new to import).
+        assert!(s.fetch_longest(&b, 8, 7).is_none());
+        assert!(s.fetch_longest(&[55, 56], 0, 7).is_none(), "cold prefix misses");
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn republication_dedupes_and_upgrades_logits() {
+        let s = store(16, 4);
+        s.set_version(1);
+        let a: Vec<u32> = (0..8).collect();
+        // Intermediate (chunk-boundary) publication without logits...
+        assert_eq!(
+            s.publish(&a[..4], &rows_for(&a[..4]), None, 1),
+            Publish::Stored { blocks: 1, evicted: 0 }
+        );
+        // ...then the full prompt: only the new block is stored, and the
+        // terminal boundary gains logits.
+        assert_eq!(
+            s.publish(&a, &rows_for(&a), Some(&logits_for(&a)), 1),
+            Publish::Stored { blocks: 1, evicted: 0 }
+        );
+        assert_eq!(s.publish(&a, &rows_for(&a), Some(&logits_for(&a)), 1), Publish::Duplicate);
+        assert_eq!(s.live_blocks(), 2);
+        let f = s.fetch_longest(&a, 0, 1).unwrap();
+        assert_eq!(f.logits.as_deref(), Some(&logits_for(&a)[..]));
+        s.release(f.lease);
+    }
+
+    #[test]
+    fn version_bump_flushes_and_invalidates_leases() {
+        let s = store(8, 2);
+        s.set_version(1);
+        let a = vec![1, 2, 3, 4];
+        s.publish(&a, &rows_for(&a), Some(&logits_for(&a)), 1);
+        let f = s.fetch_longest(&a, 0, 1).unwrap();
+        assert!(s.set_version(2), "real bump flushes");
+        assert_eq!(s.live_blocks(), 0);
+        assert!(s.fetch_longest(&a, 0, 2).is_none());
+        // Stale-version traffic is rejected outright.
+        assert!(matches!(s.publish(&a, &rows_for(&a), None, 1), Publish::StaleVersion));
+        // Stale lease release is ignored, and must not corrupt the store.
+        s.release(f.lease);
+        assert!(!s.set_version(2), "re-announcing the same version keeps the store");
+        s.publish(&a, &rows_for(&a), None, 2);
+        assert_eq!(s.live_blocks(), 2);
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn leases_pin_against_eviction_and_capacity_holds() {
+        let s = store(2, 2);
+        s.set_version(1);
+        let hot = vec![1, 1];
+        let cold = vec![2, 2];
+        s.publish(&hot, &rows_for(&hot), Some(&logits_for(&hot)), 1);
+        s.publish(&cold, &rows_for(&cold), Some(&logits_for(&cold)), 1);
+        let f = s.fetch_longest(&hot, 0, 1).expect("hot resident");
+        // A third publish must evict the unleased cold entry, not hot.
+        let c = vec![3, 3];
+        assert_eq!(s.publish(&c, &rows_for(&c), None, 1), Publish::Stored { blocks: 1, evicted: 1 });
+        assert_eq!(s.live_blocks(), 2);
+        assert!(s.fetch_longest(&cold, 0, 1).is_none(), "cold evicted");
+        let f2 = s.fetch_longest(&hot, 0, 1).expect("leased entry survived");
+        assert_eq!(f2.rows, rows_for(&hot));
+        // With both residents leased, a further publish drops.
+        let f3 = s.fetch_longest(&c, 0, 1).unwrap();
+        let d = vec![4, 4];
+        assert_eq!(s.publish(&d, &rows_for(&d), None, 1), Publish::Dropped);
+        assert_eq!(s.stats().publish_drops, 1);
+        for l in [f, f2, f3] {
+            s.release(l.lease);
+        }
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn publish_never_evicts_its_own_chain() {
+        // Capacity 2, three 1-token blocks: the third block finds only the
+        // first two (just stored, part of this very chain) as candidates —
+        // evicting them would orphan the chain, so the publish must drop
+        // the tail block instead and leave a fetchable 2-block prefix.
+        let s = store(2, 1);
+        s.set_version(1);
+        let p = vec![1, 2, 3];
+        assert_eq!(
+            s.publish(&p, &rows_for(&p), Some(&logits_for(&p)), 1),
+            Publish::Stored { blocks: 2, evicted: 0 }
+        );
+        assert_eq!(s.stats().publish_drops, 1);
+        assert_eq!(s.stats().evictions, 0, "own chain must never be the victim");
+        let f = s.fetch_longest(&p, 0, 1).expect("chain prefix stays fetchable");
+        assert_eq!(f.len, 2);
+        assert_eq!(f.rows, rows_for(&p[..2]));
+        s.release(f.lease);
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn publish_aligned_shares_heads_not_tails() {
+        let s = store(16, 4);
+        s.set_version(1);
+        let a: Vec<u32> = (0..10).collect(); // 2 blocks + 2-token tail
+        assert_eq!(
+            s.publish_aligned(&a, &rows_for(&a), Some(&logits_for(&a)), 1, true),
+            Publish::Stored { blocks: 2, evicted: 0 },
+            "only the aligned head is stored"
+        );
+        assert_eq!(s.live_blocks(), 2);
+        let f = s.fetch_longest(&a, 0, 1).expect("head fetchable");
+        assert_eq!(f.len, 8);
+        assert!(f.logits.is_none(), "tail logits must not leak onto the head");
+        s.release(f.lease);
+        // Sub-block prefixes have nothing shareable.
+        assert_eq!(s.publish_aligned(&a[..3], &rows_for(&a[..3]), None, 1, true), Publish::Duplicate);
+        // Aligned prefixes publish in full, logits included.
+        let b: Vec<u32> = (20..28).collect();
+        assert_eq!(
+            s.publish_aligned(&b, &rows_for(&b), Some(&logits_for(&b)), 1, true),
+            Publish::Stored { blocks: 2, evicted: 0 }
+        );
+        let f = s.fetch_longest(&b, 0, 1).unwrap();
+        assert_eq!(f.logits.as_deref(), Some(&logits_for(&b)[..]));
+        s.release(f.lease);
+        s.check().unwrap();
+    }
+
+    /// The acceptance invariants under random cross-engine traffic: publishes
+    /// and fetches over template-sharing prompts, random lease retirement,
+    /// eviction pressure and version bumps. After every op:
+    /// * every fetch is bit-exact against the prefix-dependent row oracle and
+    ///   covers more than `min_len`;
+    /// * the block budget is respected;
+    /// * every outstanding (epoch-valid) lease's segments are still resident
+    ///   (leases pin; refcounts can never go negative — release is
+    ///   move-consuming);
+    /// * after releasing everything and bumping the version, the store drains
+    ///   to empty.
+    #[test]
+    fn prop_store_traffic_invariants() {
+        prop::quick(
+            "shared store: cross-engine traffic invariants",
+            |rng: &mut Pcg64, size| {
+                let bt = rng.range(1, 5);
+                let capacity = rng.range(2, 24);
+                let n_templates = rng.range(1, 4);
+                let templates: Vec<Vec<u32>> = (0..n_templates)
+                    .map(|_| (0..rng.range(1, 10)).map(|_| rng.range(0, 5) as u32).collect())
+                    .collect();
+                let ops: Vec<(u64, Vec<u32>)> = (0..size.scaled(50))
+                    .map(|_| {
+                        let t = &templates[rng.range(0, n_templates)];
+                        let mut p = t.clone();
+                        p.extend((0..rng.range(0, 5)).map(|_| rng.range(0, 5) as u32));
+                        (rng.next_u64(), p)
+                    })
+                    .collect();
+                (bt, capacity, ops)
+            },
+            |(bt, capacity, ops)| {
+                let s = SharedKvStore::new(StoreCfg {
+                    block_tokens: *bt,
+                    capacity_blocks: *capacity,
+                    policy: EvictPolicy::Lru,
+                });
+                let mut version = 1u64;
+                s.set_version(version);
+                let mut leases: Vec<StoreLease> = Vec::new();
+                for (op, prompt) in ops {
+                    match op % 8 {
+                        0..=2 => {
+                            // an engine publishes a completed prefix
+                            let logits = logits_for(prompt);
+                            s.publish(prompt, &rows_for(prompt), Some(&logits), version);
+                        }
+                        3..=5 => {
+                            // an engine consults the store on admission
+                            let min_len = (*op as usize / 8) % (prompt.len() + 1);
+                            if let Some(f) = s.fetch_longest(prompt, min_len, version) {
+                                if f.len <= min_len {
+                                    return Err(format!(
+                                        "fetch covered {} <= min_len {min_len}",
+                                        f.len
+                                    ));
+                                }
+                                if f.rows != rows_for(&prompt[..f.len]) {
+                                    return Err(format!(
+                                        "imported rows diverge from local compute for {:?}",
+                                        &prompt[..f.len]
+                                    ));
+                                }
+                                if let Some(l) = &f.logits {
+                                    if f.len != prompt.len() || *l != logits_for(prompt) {
+                                        return Err("terminal logits corrupt".into());
+                                    }
+                                }
+                                leases.push(f.lease);
+                            }
+                        }
+                        6 => {
+                            // an importing request retires
+                            if !leases.is_empty() {
+                                let i = (*op as usize / 8) % leases.len();
+                                s.release(leases.swap_remove(i));
+                            }
+                        }
+                        _ => {
+                            // weight sync: version bump flushes; leases stale
+                            version += 1;
+                            s.set_version(version);
+                        }
+                    }
+                    s.check()?;
+                    if s.live_blocks() > *capacity {
+                        return Err("capacity budget violated".into());
+                    }
+                    // Every epoch-valid lease still pins resident segments.
+                    let held: usize = leases
+                        .iter()
+                        .filter(|l| l.epoch == s.lock().epoch)
+                        .flat_map(|l| l.keys.iter())
+                        .collect::<std::collections::HashSet<_>>()
+                        .len();
+                    if s.leased_blocks() != held {
+                        return Err(format!(
+                            "{} leased blocks vs {held} distinct held keys",
+                            s.leased_blocks()
+                        ));
+                    }
+                }
+                for l in leases.drain(..) {
+                    s.release(l);
+                }
+                if s.leased_blocks() != 0 {
+                    return Err("refcounts leaked after full release".into());
+                }
+                version += 1;
+                s.set_version(version);
+                if s.live_blocks() != 0 {
+                    return Err("store not empty after flush".into());
+                }
+                s.check()
+            },
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! Shared-store counters.
+//!
+//! One [`StoreStats`] instance lives inside the store (global across engines,
+//! unlike the per-engine [`crate::engine::CacheStats`]); the coordinator
+//! snapshots it per iteration and reports deltas next to the per-engine
+//! cache metrics, so the cross-engine contribution is separable from local
+//! radix hits in the CSV / trace outputs.
+
+/// Cumulative counters of the cross-engine segment store.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StoreStats {
+    /// Publish calls that stored at least one new block entry.
+    pub publishes: u64,
+    /// Block entries inserted by publishes.
+    pub publish_blocks: u64,
+    /// Publish calls whose every block was already resident (pure dedup —
+    /// the common case once a template is warm store-wide).
+    pub publish_dups: u64,
+    /// Block entries not stored because eviction could not free capacity
+    /// (every resident entry leased).
+    pub publish_drops: u64,
+    /// Fetch probes (one per admission that consulted the store).
+    pub fetches: u64,
+    /// Fetches that returned a prefix longer than the caller's local match.
+    pub fetch_hits: u64,
+    /// Fetches that could not beat the caller's local match.
+    pub fetch_misses: u64,
+    /// Prompt tokens handed to importers *beyond* their local radix match —
+    /// the store's own contribution to `prefill_tokens_saved`.
+    pub fetch_tokens: u64,
+    /// Publishes/fetches rejected because the caller's params version did
+    /// not match the store's (engines mid-sync; stale KV must never cross).
+    pub version_rejects: u64,
+    /// Unleased block entries evicted to make room.
+    pub evictions: u64,
+    /// Whole-store flushes (a real params-version bump).
+    pub clears: u64,
+}
+
+impl StoreStats {
+    /// Fraction of fetches that imported something, in [0, 1].
+    pub fn fetch_hit_rate(&self) -> f64 {
+        if self.fetches == 0 {
+            0.0
+        } else {
+            self.fetch_hits as f64 / self.fetches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fetch_hit_rate_edges() {
+        let mut s = StoreStats::default();
+        assert_eq!(s.fetch_hit_rate(), 0.0);
+        s.fetches = 4;
+        s.fetch_hits = 3;
+        assert!((s.fetch_hit_rate() - 0.75).abs() < 1e-12);
+    }
+}

@@ -158,9 +158,183 @@ fn warm_template_prefix_reused_across_suffixes() {
     );
 }
 
-/// Acceptance: cache-off mode is the seed path, and cache-on produces
-/// value-identical rollouts (prefill is deterministic given weights+prompt,
-/// and the host sampler draws in the same order on both paths).
+/// Acceptance (cross-engine KV sharing): two engine instances sharing the
+/// host-side segment store on a template-sharing workload — the second
+/// engine imports the first engine's published template instead of
+/// recomputing it (`cross_engine_hits > 0`, strictly more
+/// `prefill_tokens_saved` than the same engine without a store), and its
+/// rollouts are value-identical to a store-less engine with the same seed.
+#[test]
+fn cross_engine_store_shares_templates_across_engines() {
+    use pa_rl::store::{SharedKvStore, StoreCfg};
+    use std::sync::Arc;
+    let Some((cfg, dir)) = artifacts() else { return };
+    assert!(cfg.engine.prefix_cache, "tiny config should default the cache on");
+    let rt_probe = Runtime::load_validated(&dir, &cfg).unwrap();
+    if !rt_probe.manifest().artifacts.contains_key("prefill_chunk") {
+        eprintln!("SKIP: artifacts predate chunked prefill — re-run `make artifacts`");
+        return;
+    }
+    drop(rt_probe);
+
+    // Shared template filling most of the prompt; distinct 1-token suffixes.
+    // The store shares at block granularity: skip when the template doesn't
+    // span a full block (degenerate single-block geometry).
+    let tpl_len = cfg.engine.prompt_max - 1;
+    let aligned_tpl = tpl_len / cfg.engine.cache_block * cfg.engine.cache_block;
+    if aligned_tpl == 0 {
+        eprintln!("SKIP: template shorter than one store block (cache_block too large)");
+        return;
+    }
+    let template: Vec<u32> = (0..tpl_len as u32).map(|i| 3 + (i % 11)).collect();
+    let n = 3usize;
+    let prompts: Vec<Vec<u32>> = (0..n)
+        .map(|i| {
+            let mut p = template.clone();
+            p.push(20 + i as u32);
+            p
+        })
+        .collect();
+    let reqs = |prompts: &[Vec<u32>]| -> Vec<GenRequest> {
+        prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| GenRequest { request_id: i as u64, prompt: p.clone() })
+            .collect()
+    };
+
+    let store = Arc::new(SharedKvStore::new(StoreCfg {
+        block_tokens: cfg.engine.cache_block,
+        capacity_blocks: cfg.engine.store_blocks,
+        policy: cfg.engine.store_evict,
+    }));
+    let mk_engine = |seed: u64, store: Option<Arc<SharedKvStore>>| {
+        let rt = Runtime::load_validated(&dir, &cfg).unwrap();
+        let params = rt.init_params(7).unwrap();
+        let mut e = Engine::new(cfg.clone(), rt, seed);
+        e.set_weights(&params).unwrap();
+        if let Some(s) = store {
+            e.set_shared_store(s);
+        }
+        e
+    };
+
+    // Engine A warms the store with the template prompts.
+    let mut a = mk_engine(1, Some(store.clone()));
+    a.generate_all(reqs(&prompts)).unwrap();
+    assert_eq!(a.stats.cross_engine_hits, 0, "nothing published before A ran");
+    assert!(a.stats.store_publishes > 0, "A must publish its prefixes");
+
+    // Engine B (different instance, same store) admits different suffixes of
+    // the same template: every admission imports instead of recomputing.
+    let b_prompts: Vec<Vec<u32>> = (0..n)
+        .map(|i| {
+            let mut p = template.clone();
+            p.push(40 + i as u32);
+            p
+        })
+        .collect();
+    let mut b = mk_engine(2, Some(store.clone()));
+    let mut with_store = b.generate_all(reqs(&b_prompts)).unwrap();
+    with_store.sort_by_key(|r| r.request_id);
+    assert!(
+        b.stats.cross_engine_hits > 0,
+        "B never imported from the store on a template-sharing workload"
+    );
+    assert!(b.stats.cross_engine_tokens > 0);
+    assert_eq!(b.stats.prefills, 0, "the template import leaves only chunked suffixes");
+
+    // Same seed, no store: identical rollouts, strictly fewer tokens saved.
+    let mut c = mk_engine(2, None);
+    let mut without = c.generate_all(reqs(&b_prompts)).unwrap();
+    without.sort_by_key(|r| r.request_id);
+    let strip = |rs: Vec<pa_rl::engine::GenResult>| {
+        rs.into_iter().map(|r| (r.tokens, r.logprobs)).collect::<Vec<_>>()
+    };
+    assert_eq!(
+        strip(with_store),
+        strip(without),
+        "cross-engine import must not change generated rollouts"
+    );
+    assert!(
+        b.stats.prefill_tokens_saved > c.stats.prefill_tokens_saved,
+        "store must save strictly more prefill tokens ({} vs {})",
+        b.stats.prefill_tokens_saved,
+        c.stats.prefill_tokens_saved
+    );
+}
+
+/// A no-op weight sync (identical params version) keeps the prefix cache
+/// warm; a real bump flushes it — the cache-generation tag end-to-end.
+#[test]
+fn noop_weight_sync_keeps_cache_warm() {
+    let Some((cfg, dir)) = artifacts() else { return };
+    assert!(cfg.engine.prefix_cache);
+    let rt = Runtime::load_validated(&dir, &cfg).unwrap();
+    let mut params = rt.init_params(7).unwrap();
+    params.version = 5;
+    let mut engine = Engine::new(cfg.clone(), rt, 3);
+    assert!(engine.set_weights(&params).unwrap(), "first install uploads");
+    let mut loader = DataLoader::new(cfg.data.clone());
+    let p = loader.next_batch(1).remove(0);
+    engine
+        .generate_all(vec![GenRequest { request_id: 0, prompt: p.tokens.clone() }])
+        .unwrap();
+    assert_eq!(engine.stats.prefills, 1);
+
+    // Identical version: skipped, and the cached prompt still full-hits.
+    assert!(!engine.set_weights(&params).unwrap(), "no-op sync must be skipped");
+    assert_eq!(engine.stats.weight_syncs_skipped, 1);
+    engine
+        .generate_all(vec![GenRequest { request_id: 1, prompt: p.tokens.clone() }])
+        .unwrap();
+    assert_eq!(engine.stats.prefills, 1, "warm cache must survive the no-op sync");
+    assert_eq!(engine.stats.prefills_skipped, 1);
+
+    // Real bump: flushed, the same prompt prefills again.
+    params.version = 6;
+    assert!(engine.set_weights(&params).unwrap());
+    engine
+        .generate_all(vec![GenRequest { request_id: 2, prompt: p.tokens }])
+        .unwrap();
+    assert_eq!(engine.stats.prefills, 2, "version bump must flush the cache");
+}
+
+/// Driver-level smoke: >= 2 engines with affinity routing and the shared
+/// store on a shared-template workload — the run stays on-policy and the
+/// new IterReport fields are populated and self-consistent.
+#[test]
+fn driver_multi_engine_affinity_and_store() {
+    let Some((mut cfg, dir)) = artifacts() else { return };
+    {
+        let rt = Runtime::load_validated(&dir, &cfg).unwrap();
+        if !rt.manifest().artifacts.contains_key("prefill_chunk") {
+            eprintln!("SKIP: artifacts predate chunked prefill — re-run `make artifacts`");
+            return;
+        }
+    }
+    cfg.rl.n_engines = 2;
+    cfg.data.shared_few_shot = true;
+    let opts = DriverOpts { mode: Mode::Async, spa: false, seed: 23 };
+    let mut driver = Driver::new(cfg.clone(), &dir, opts).unwrap();
+    let report = driver.run(2).unwrap();
+    for it in &report.iters {
+        assert_eq!(it.staleness_mean, 0.0, "multi-engine async stays on-policy");
+        assert_eq!(
+            it.affinity_hits + it.affinity_spills,
+            cfg.rl.batch_prompts as u64,
+            "every group routes exactly once"
+        );
+    }
+    let stats = driver.store_stats().expect("store active with 2 engines");
+    assert!(stats.fetches > 0, "admissions must consult the store");
+    // Engines publish only block-aligned heads; with sub-block prompts
+    // there is nothing shareable to publish.
+    let probe = DataLoader::new(cfg.data.clone()).next_batch(1).remove(0);
+    if probe.tokens.len() >= cfg.engine.cache_block {
+        assert!(stats.publishes > 0, "engines must publish to the store");
+    }
+}
 #[test]
 fn cache_on_and_off_produce_identical_rollouts() {
     let Some((cfg, dir)) = artifacts() else { return };
