@@ -7,17 +7,27 @@
 //! enabled, only the first occurrence runs the compiled prefill and the
 //! report shows the cache hit rate and skipped prefills.
 //!
-//! `--engines E` runs E engine instances behind prompt-affinity routing with
+//! `--engines E` runs E engine instances behind residency-aware routing with
 //! the cross-engine shared segment store attached (the coordinator's serving
-//! topology, minus the trainer): groups prefer the engine whose cache holds
-//! their template warm, spills import it from the store, and the report
-//! shows `cross-engine hits` — prompts admitted without recomputing a prefix
-//! some other engine already paid for.
+//! topology, minus the trainer): groups prefer the engine whose cache
+//! verifiably holds their template warm, spills import it from the store,
+//! and the report shows `cross-engine hits` — prompts admitted without
+//! recomputing a prefix some other engine already paid for.
+//!
+//! `--store-shards S` overrides the store's shard count (default: the
+//! config's `engine.store_shards`) — S independent locks over the hash
+//! ranges instead of one global mutex.
+//!
+//! `--leave N` drops the last N engines *mid-run* (after half the groups
+//! have been served): the router's warmth map forgets them and the second
+//! half of the traffic redistributes over the survivors, importing
+//! store-covered templates instead of recomputing them — the fleet-resize
+//! story end-to-end.
 //!
 //! ```bash
 //! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64
 //! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64 --group 8
-//! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64 --group 4 --engines 2
+//! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64 --group 4 --engines 3 --store-shards 4 --leave 1
 //! ```
 
 use pa_rl::config::Config;
@@ -37,6 +47,8 @@ fn main() -> anyhow::Result<()> {
     let n_requests = args.usize_or("requests", 64);
     let group = args.usize_or("group", 1).max(1);
     let n_engines = args.usize_or("engines", 1).max(1);
+    let store_shards = args.usize_or("store-shards", 0); // 0 = config default
+    let leave = args.usize_or("leave", 0).min(n_engines.saturating_sub(1));
     let seed = args.u64_or("seed", 0);
 
     let cfg = Config::load(Path::new(&config_path))?;
@@ -64,12 +76,18 @@ fn main() -> anyhow::Result<()> {
         engines.push(engine);
     }
 
-    // Cross-engine store: the coordinator's serving topology.
+    // Cross-engine store: the coordinator's serving topology. Shard count
+    // from the config unless overridden, clamped so every shard's capacity
+    // slice still holds one full prompt's chain (chains are shard-affine).
+    let max_shards = (cfg.engine.store_blocks / cfg.engine.blocks_per_prompt().max(1)).max(1);
+    let shards =
+        if store_shards == 0 { cfg.engine.store_shards } else { store_shards }.clamp(1, max_shards);
     let store = cfg.store_active(n_engines).then(|| {
         Arc::new(SharedKvStore::new(StoreCfg {
             block_tokens: cfg.engine.cache_block,
             capacity_blocks: cfg.engine.store_blocks,
             policy: cfg.engine.store_evict,
+            shards,
         }))
     });
     if let Some(s) = &store {
@@ -81,47 +99,95 @@ fn main() -> anyhow::Result<()> {
     let mut loader = DataLoader::new(cfg.data.clone());
     let n_unique = n_requests.div_ceil(group);
     let prompts = loader.next_batch(n_unique);
-    // Grouped traffic, group-affine: a prompt's repeats all land on one
-    // engine (like the coordinator), chosen by prompt-affinity routing —
-    // gated exactly like the driver, else the round-robin group pin.
     let affinity = cfg.affinity_active(n_engines);
-    let mut load = vec![0usize; n_engines];
+    let slack = cfg.rl.affinity_slack_groups * group;
+    let mut warmth = route::WarmthMap::new();
     let mut spills = 0u64;
-    for i in 0..n_unique {
-        let (idx, preferred) = if affinity {
-            let slack = cfg.rl.affinity_slack_groups * group;
-            route::route_group(&prompts[i].tokens, cfg.engine.cache_block, &load, slack)
-        } else {
-            (i % n_engines, true)
-        };
-        if !preferred {
-            spills += 1;
-        }
-        let repeats = group.min(n_requests - i * group);
-        for s in 0..repeats {
-            engines[idx].submit(GenRequest {
-                request_id: (i * group + s) as u64,
-                prompt: prompts[i].tokens.clone(),
-            });
-        }
-        load[idx] += repeats;
-    }
+    let mut routed = 0usize;
 
-    // Drive every engine to completion, interleaved (so later-dispatched
-    // groups on one engine can import prefixes another engine published).
-    let t0 = std::time::Instant::now();
-    let mut results: Vec<GenResult> = Vec::with_capacity(n_requests);
-    loop {
-        let mut any = false;
-        for e in &mut engines {
-            if !e.idle() {
-                results.extend(e.step()?);
-                any = true;
+    // Drive every live engine to completion, interleaved (so later groups on
+    // one engine can import prefixes another engine published).
+    let drive = |engines: &mut [Engine], results: &mut Vec<GenResult>| -> anyhow::Result<()> {
+        loop {
+            let mut any = false;
+            for e in engines.iter_mut() {
+                if !e.idle() {
+                    results.extend(e.step()?);
+                    any = true;
+                }
+            }
+            if !any {
+                return Ok(());
             }
         }
-        if !any {
-            break;
+    };
+
+    // Grouped traffic, group-affine: a prompt's repeats all land on one
+    // engine (like the coordinator), chosen by residency-aware routing —
+    // gated exactly like the driver, else the round-robin group pin.
+    let dispatch = |engines: &mut Vec<Engine>,
+                        warmth: &mut route::WarmthMap,
+                        spills: &mut u64,
+                        lo: usize,
+                        hi: usize| {
+        let mut load = vec![0usize; engines.len()];
+        for i in lo..hi {
+            let (idx, spilled) = if affinity {
+                let resident = store
+                    .as_ref()
+                    .map_or(0, |s| s.residency_blocks(&prompts[i].tokens));
+                let (idx, kind) = route::route_group_residency(
+                    &prompts[i].tokens,
+                    cfg.engine.cache_block,
+                    &load,
+                    slack,
+                    warmth,
+                    resident,
+                );
+                let (key, alen) = route::affinity_key(&prompts[i].tokens, cfg.engine.cache_block);
+                warmth.note(key, idx, alen);
+                (idx, kind.is_spill())
+            } else {
+                (i % engines.len(), false)
+            };
+            if spilled {
+                *spills += 1;
+            }
+            let repeats = group.min(n_requests - i * group);
+            for s in 0..repeats {
+                engines[idx].submit(GenRequest {
+                    request_id: (i * group + s) as u64,
+                    prompt: prompts[i].tokens.clone(),
+                });
+            }
+            load[idx] += repeats;
         }
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut results: Vec<GenResult> = Vec::with_capacity(n_requests);
+    let split = if leave > 0 { n_unique / 2 } else { n_unique };
+
+    // Phase 1: the full fleet serves the first half of the groups.
+    dispatch(&mut engines, &mut warmth, &mut spills, 0, split);
+    routed += split;
+    drive(&mut engines, &mut results)?;
+
+    // Mid-run fleet resize: the last `leave` engines drain and depart. Their
+    // warmth beliefs are dropped; their templates re-route over the
+    // survivors by hash and re-import from the shared store (which still
+    // holds everything they published) instead of recomputing.
+    let mut departed = 0usize;
+    if leave > 0 && split < n_unique {
+        for _ in 0..leave {
+            let idx = engines.len() - 1;
+            let _gone = engines.pop().expect("leave < n_engines");
+            warmth.remove_engine(idx, engines.len());
+        }
+        departed = leave;
+        dispatch(&mut engines, &mut warmth, &mut spills, split, n_unique);
+        routed += n_unique - split;
+        drive(&mut engines, &mut results)?;
     }
     let wall = t0.elapsed().as_secs_f64();
 
@@ -144,6 +210,9 @@ fn main() -> anyhow::Result<()> {
     t.row(&["requests".into(), format!("{n_requests}")]);
     t.row(&["group size".into(), format!("{group}")]);
     t.row(&["engines".into(), format!("{n_engines}")]);
+    if departed > 0 {
+        t.row(&["engines departed mid-run".into(), format!("{departed}")]);
+    }
     t.row(&["slots / engine".into(), format!("{}", cfg.engine.n_slots)]);
     t.row(&["decode chunk".into(), format!("{}", cfg.engine.decode_chunk)]);
     t.row(&["wall (s)".into(), format!("{wall:.3}")]);
@@ -189,17 +258,20 @@ fn main() -> anyhow::Result<()> {
         Some(s) => {
             let ss = s.stats();
             t.row(&["shared store".into(), "on".into()]);
+            t.row(&["store shards".into(), format!("{}", s.shard_count())]);
             t.row(&["cross-engine hits".into(), format!("{}", sum(|st| st.cross_engine_hits))]);
             t.row(&[
                 "cross-engine tokens".into(),
                 format!("{}", sum(|st| st.cross_engine_tokens)),
             ]);
             t.row(&["store publishes".into(), format!("{}", ss.publishes)]);
+            t.row(&["store evictions (heap probes)".into(), format!("{} ({})", ss.evictions, ss.evict_probes)]);
             t.row(&[
                 "store blocks live/cap".into(),
                 format!("{}/{}", s.live_blocks(), s.capacity_blocks()),
             ]);
-            t.row(&["affinity spills".into(), format!("{spills}/{n_unique}")]);
+            t.row(&["affinity spills".into(), format!("{spills}/{routed}")]);
+            t.row(&["warm templates tracked".into(), format!("{}", warmth.len())]);
         }
         None => t.row(&["shared store".into(), "off".into()]),
     }

@@ -27,6 +27,7 @@ fn sim_setup(framework: Framework) -> SimSetup {
         prefix_cache: false,
         template_frac: 0.0,
         cross_engine: false,
+        store_shards: 1,
         train_micro_bs: 1,
         micro_launch_s: 0.5,
         iters: 1,

@@ -96,6 +96,12 @@ pub struct EngineConfig {
     pub shared_store: bool,
     /// Shared-store capacity in block entries of `cache_block` tokens.
     pub store_blocks: usize,
+    /// Independent hash-range shards of the shared store, each behind its
+    /// own lock with its own capacity slice and eviction heap. 1 (the
+    /// default) is bit-identical to the unsharded store; raise it for
+    /// many-engine fleets so publishes/fetches of unrelated templates stop
+    /// serializing on one mutex.
+    pub store_shards: usize,
     /// Per-engine budget of *displacing* publishes per weight-sync interval:
     /// only a publish that had to evict resident segments consumes a credit
     /// (dedup and free-space growth are free), bounding how hard one engine
@@ -266,6 +272,22 @@ impl Config {
                 prompt_max.div_ceil(cache_block)
             );
         }
+        let store_shards = e.usize_or("store_shards", 1);
+        if store_shards == 0 {
+            bail!("engine.store_shards must be >= 1 (1 = the unsharded store)");
+        }
+        // A prefix's whole block chain lives in ONE shard (chain-affine
+        // partitioning), so the store-holds-one-full-prompt bound above must
+        // hold per *slice*, not just in aggregate — a thinner slice would
+        // silently truncate every chain in its hash range instead of being
+        // rejected like an undersized unsharded store.
+        if shared_store && store_blocks / store_shards < prompt_max.div_ceil(cache_block) {
+            bail!(
+                "engine.store_shards ({store_shards}) leaves shard slices of {} blocks, below the {} blocks one full prompt needs (store_blocks {store_blocks}, cache_block {cache_block}, prompt_max {prompt_max})",
+                store_blocks / store_shards,
+                prompt_max.div_ceil(cache_block)
+            );
+        }
         let engine = EngineConfig {
             n_slots,
             prompt_max,
@@ -282,6 +304,7 @@ impl Config {
                 .context("engine.cache_evict")?,
             shared_store,
             store_blocks,
+            store_shards,
             store_publish: e.usize_or("store_publish", 256),
             store_evict: EvictPolicy::parse(e.str_or("store_evict", "lru"))
                 .context("engine.store_evict")?,
@@ -405,11 +428,13 @@ mod tests {
         assert_eq!(c.engine.blocks_per_prompt(), 1);
         assert_eq!(c.engine.cache_blocks, 4 * 1 * 4);
         assert_eq!(c.engine.cache_evict, EvictPolicy::Lru);
-        // cross-engine store defaults: on, 2x the local pool, LRU, budget 256
+        // cross-engine store defaults: on, 2x the local pool, LRU, budget
+        // 256, a single shard (bit-identical to the unsharded store)
         assert!(c.engine.shared_store);
         assert_eq!(c.engine.store_blocks, 2 * c.engine.cache_blocks);
         assert_eq!(c.engine.store_publish, 256);
         assert_eq!(c.engine.store_evict, EvictPolicy::Lru);
+        assert_eq!(c.engine.store_shards, 1);
         // routing defaults: affinity on, 2 groups of slack
         assert!(c.rl.affinity_routing);
         assert_eq!(c.rl.affinity_slack_groups, 2);
@@ -422,7 +447,7 @@ mod tests {
             r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
                 "engine":{"n_slots":2,"prompt_max":16,"max_new":4,
                           "shared_store":false,"store_blocks":7,"store_publish":0,
-                          "store_evict":"fifo"},
+                          "store_evict":"fifo","store_shards":3},
                 "train":{},
                 "rl":{"batch_prompts":1,"group_size":1,"affinity_routing":false,
                       "affinity_slack_groups":5},
@@ -434,9 +459,54 @@ mod tests {
         assert_eq!(c.engine.store_blocks, 7);
         assert_eq!(c.engine.store_publish, 0);
         assert_eq!(c.engine.store_evict, EvictPolicy::Fifo);
+        assert_eq!(c.engine.store_shards, 3);
         assert!(!c.rl.affinity_routing);
         assert_eq!(c.rl.affinity_slack_groups, 5);
         assert!(c.data.shared_few_shot);
+    }
+
+    #[test]
+    fn rejects_degenerate_store_shards() {
+        // shards = 0 is meaningless.
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4,"store_shards":0},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        let err = Config::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("store_shards"), "unexpected error: {err}");
+        // Chains are shard-affine: a slice that cannot hold one full prompt
+        // (8 blocks / 4 shards = 2-block slices vs a 4-block prompt) would
+        // silently truncate every chain in its range — reject, mirroring the
+        // unsharded store_blocks bound.
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4,"cache_block":4,
+                          "store_blocks":8,"store_shards":4},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        let err = Config::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("shard slices"), "unexpected error: {err}");
+        // Sized so every slice holds a prompt, the same shard count is fine.
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4,"cache_block":4,
+                          "store_blocks":16,"store_shards":4},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        assert_eq!(Config::from_json(&j).unwrap().engine.store_shards, 4);
+        // ...and a disabled store skips the capacity bound (shape-only knob).
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4,"cache_block":4,
+                          "store_blocks":4,"store_shards":9,"shared_store":false},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_json(&j).is_ok());
     }
 
     #[test]

@@ -74,4 +74,10 @@ pub struct WorkerStats {
     pub engine: EngineStats,
     /// Present when the worker's shared-prefix KV cache is enabled.
     pub cache: Option<CacheStats>,
+    /// Warm-template advertisement: `(affinity key, resident tokens)` for
+    /// each template prefix this engine's radix cache currently holds
+    /// (probed non-mutatingly at query time). The coordinator folds these
+    /// into its routing warmth map, so dispatch consults *actual* per-engine
+    /// residency instead of hashing blindly.
+    pub warm: Vec<(u64, usize)>,
 }

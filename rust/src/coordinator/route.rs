@@ -2,66 +2,172 @@
 //!
 //! Group dispatch stays *group-affine* (all G rollouts of a prompt land on
 //! one engine; that is what collapses a group's G prefills into 1), but the
-//! choice of engine is no longer a blind round-robin pin: the dispatcher
-//! hashes the prompt's **template prefix** — its longest block-aligned
-//! proper prefix, the same boundary form the shared segment store keys on
-//! ([`crate::store::hash`]) — and prefers the engine that prefix hashes to,
-//! because earlier groups with the same template already warmed that
-//! engine's local radix cache (no store round-trip at all).
+//! choice of engine is no longer a blind hash: the dispatcher identifies the
+//! prompt's **template prefix** — its longest block-aligned proper prefix,
+//! capped at [`AFFINITY_BLOCKS`] blocks, the same boundary form the shared
+//! segment store keys on ([`crate::store::hash`]) — and asks *where that
+//! template is actually warm*:
 //!
-//! Affinity alone would hot-spot: on a workload where every prompt shares
-//! one template, the preferred engine gets everything. So routing is
-//! load-bounded — when the preferred engine's backlog exceeds the
-//! least-loaded engine's by more than `slack` jobs, the group *spills* to
-//! the least-loaded engine, which imports the template from the shared
-//! store instead of recomputing it. Affinity keeps the common case free;
-//! the store makes the spill case cheap; together N engines serve
-//! template traffic as one logical cache without load imbalance.
+//! 1. **Warmth map** ([`WarmthMap`]): the coordinator remembers which engine
+//!    it last sent each template to, and refreshes those beliefs from the
+//!    engines' own warm-template advertisements on the existing stats
+//!    channel (`WorkerStats::warm` — each engine reports the affinity keys
+//!    whose prefixes are *currently resident* in its radix cache, probed
+//!    non-mutatingly at query time). A warm hit routes to the engine that
+//!    verifiably holds the prefix — even when that engine is not the one the
+//!    hash would have picked (e.g. after a spill or an engine leaving).
+//! 2. **Hash fallback**: an unknown template routes by hashing the prefix
+//!    over the live engines — deterministic spread, the PR-3 behavior.
+//! 3. **Load bound with residency-aware slack**: when the chosen engine's
+//!    backlog exceeds the least-loaded engine's by more than the slack, the
+//!    group *spills* to the least-loaded engine. The slack itself consults
+//!    the shared store's residency probe
+//!    ([`crate::store::SharedKvStore::residency_blocks`]): if the store
+//!    already covers the template, a spill is cheap (the target imports
+//!    instead of recomputing) and the normal slack applies; if the store
+//!    does *not* cover it but an engine holds it warm, the router tolerates
+//!    a deeper backlog before spilling, because a spill would recompute the
+//!    template from scratch on a cold engine.
+//!
+//! Engines joining or leaving mid-run need no special protocol: the warmth
+//! map drops a leaving engine's claims ([`WarmthMap::remove_engine`]) and
+//! its templates re-route by hash over the remaining fleet — store-covered
+//! templates stay cheap wherever they land, which is the whole point of the
+//! host-side store. A grown fleet simply exposes more hash targets; warm
+//! templates keep routing to their resident engines by warmth, not by hash.
 
 use crate::store::hash;
+use std::collections::HashMap;
 
-/// Blocks of the prompt head the router hashes. Capping the routed prefix
-/// at a fixed depth (rather than "everything but the last partial block")
-/// is what keeps same-template prompts with *different question lengths*
-/// on the same engine: an uncapped block-aligned prefix would extend past
-/// the template into per-prompt question tokens whenever lengths vary, and
-/// scatter the template across engines. Two blocks discriminate distinct
-/// templates well while staying safely inside any realistic template.
-pub const AFFINITY_BLOCKS: usize = 2;
+pub use crate::store::hash::{affinity_key, affinity_prefix_len, AFFINITY_BLOCKS};
 
-/// The routed prefix: the longest block-aligned proper prefix of the
-/// prompt, capped at [`AFFINITY_BLOCKS`] blocks (the final partial block —
-/// the per-prompt question tail — never participates). Whole-prompt
-/// fallback for prompts shorter than one block.
-pub fn affinity_prefix_len(prompt_len: usize, block_tokens: usize) -> usize {
-    let bt = block_tokens.max(1);
-    let aligned = prompt_len.saturating_sub(1) / bt * bt;
-    if aligned == 0 {
-        prompt_len
-    } else {
-        aligned.min(AFFINITY_BLOCKS * bt)
+/// Why the router picked an engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteKind {
+    /// The warmth map named an engine that holds the template resident.
+    Warm,
+    /// Unknown template: deterministic hash spread over the live engines.
+    Hashed,
+    /// The preferred engine was overloaded; spilled to the least-loaded.
+    Spill,
+}
+
+impl RouteKind {
+    /// Spills are the only dispatch that abandons template affinity.
+    pub fn is_spill(&self) -> bool {
+        matches!(self, RouteKind::Spill)
     }
 }
 
-/// Pick the engine for a group given per-engine backlogs (outstanding jobs).
-/// Returns `(engine index, took_preferred)`; `false` marks a spill to the
-/// least-loaded fallback.
-pub fn route_group(
+/// The coordinator's per-template warmth beliefs: affinity key ->
+/// `(engine, resident tokens)`. Optimistically updated on dispatch
+/// ([`WarmthMap::note`]) and corrected from engine advertisements on the
+/// stats channel ([`WarmthMap::refresh_engine`]); flushed whenever a real
+/// weight sync flushes every cache.
+#[derive(Debug, Default)]
+pub struct WarmthMap {
+    map: HashMap<u64, (usize, usize)>,
+}
+
+impl WarmthMap {
+    pub fn new() -> WarmthMap {
+        WarmthMap::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Engine believed to hold `key` warm, with its resident token count.
+    pub fn lookup(&self, key: u64) -> Option<(usize, usize)> {
+        self.map.get(&key).copied()
+    }
+
+    /// Record a dispatch: `engine` is about to admit this template, so it
+    /// becomes the template's warm home (most recent dispatch wins — that is
+    /// also what the engines' LRU caches will believe).
+    pub fn note(&mut self, key: u64, engine: usize, resident: usize) {
+        self.map.insert(key, (engine, resident));
+    }
+
+    /// Merge one engine's advertised warm templates (stats-channel refresh).
+    /// Absence is authoritative: the engine advertises *every* template it
+    /// still holds resident, so a belief naming this engine for a key it no
+    /// longer advertises is stale (evicted under pressure) and is dropped —
+    /// otherwise the router would keep steering that template to a cold
+    /// engine, at the *stretched* slack no less (the warm+uncovered case).
+    /// For advertised keys, the engine's own claims replace beliefs about
+    /// itself; claims about a template currently attributed to another
+    /// engine win only when they cover a strictly longer prefix (a longer
+    /// resident prefix saves more prefill; ties keep the routing stable).
+    pub fn refresh_engine(&mut self, engine: usize, warm: &[(u64, usize)]) {
+        let advertised: std::collections::HashSet<u64> =
+            warm.iter().map(|&(key, _)| key).collect();
+        self.map.retain(|key, &mut (e, _)| e != engine || advertised.contains(key));
+        for &(key, resident) in warm {
+            match self.map.get(&key) {
+                Some(&(e, len)) if e != engine && len >= resident => {}
+                _ => {
+                    self.map.insert(key, (engine, resident));
+                }
+            }
+        }
+    }
+
+    /// A real weight sync flushed every engine cache: nothing is warm.
+    pub fn flush(&mut self) {
+        self.map.clear();
+    }
+
+    /// Engine `engine` left the fleet: drop every belief naming it, and any
+    /// belief naming an index at or past the new fleet size `n_engines`
+    /// (callers that compact indices). Its templates re-route by hash until
+    /// a surviving engine re-warms them — store-covered templates at import
+    /// cost, not recompute cost.
+    pub fn remove_engine(&mut self, engine: usize, n_engines: usize) {
+        self.map.retain(|_, &mut (e, _)| e != engine && e < n_engines);
+    }
+}
+
+/// Pick the engine for a group by residency: prefer the engine the warmth
+/// map proves warm, fall back to the hash spread, and spill to the
+/// least-loaded engine when the preferred backlog runs past the (residency
+/// -aware) slack. `store_resident` is the shared store's coverage of this
+/// prompt ([`crate::store::SharedKvStore::residency_blocks`]; pass 0 with no
+/// store): a store-covered template spills at the normal slack, an uncovered
+/// warm template tolerates twice the backlog before abandoning its engine.
+pub fn route_group_residency(
     prompt: &[u32],
     block_tokens: usize,
     load: &[usize],
     slack: usize,
-) -> (usize, bool) {
+    warmth: &WarmthMap,
+    store_resident: usize,
+) -> (usize, RouteKind) {
     debug_assert!(!load.is_empty(), "no engines to route to");
     let n = load.len();
     if n == 1 {
-        return (0, true);
+        return (0, RouteKind::Hashed);
     }
-    let len = affinity_prefix_len(prompt.len(), block_tokens);
-    let preferred = (hash::hash_prefix(&prompt[..len]) % n as u64) as usize;
+    let (key, len) = hash::affinity_key(prompt, block_tokens);
+    let (preferred, kind) = match warmth.lookup(key) {
+        Some((e, _)) if e < n => (e, RouteKind::Warm),
+        _ => ((hash::hash_prefix(&prompt[..len]) % n as u64) as usize, RouteKind::Hashed),
+    };
     let min = load.iter().copied().min().unwrap_or(0);
-    if load[preferred] <= min + slack {
-        (preferred, true)
+    // Residency-aware slack: spilling an uncovered warm template means a
+    // cold recompute on the target, so tolerate a deeper backlog first.
+    let eff_slack = if kind == RouteKind::Warm && store_resident == 0 {
+        slack.saturating_mul(2)
+    } else {
+        slack
+    };
+    if load[preferred] <= min + eff_slack {
+        (preferred, kind)
     } else {
         let least = load
             .iter()
@@ -69,42 +175,29 @@ pub fn route_group(
             .min_by_key(|&(_, l)| *l)
             .map(|(i, _)| i)
             .unwrap_or(0);
-        (least, false)
+        (least, RouteKind::Spill)
     }
+}
+
+/// Pick the engine for a group given per-engine backlogs (outstanding jobs)
+/// by blind prefix hashing — the warmth-free baseline. Returns
+/// `(engine index, took_preferred)`; `false` marks a spill to the
+/// least-loaded fallback. Kept for benches and as the degenerate form of
+/// [`route_group_residency`] with an empty warmth map and no store.
+pub fn route_group(
+    prompt: &[u32],
+    block_tokens: usize,
+    load: &[usize],
+    slack: usize,
+) -> (usize, bool) {
+    let warmth = WarmthMap::new();
+    let (idx, kind) = route_group_residency(prompt, block_tokens, load, slack, &warmth, 0);
+    (idx, !kind.is_spill())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn affinity_prefix_drops_the_partial_tail_block() {
-        assert_eq!(affinity_prefix_len(10, 4), 8);
-        assert_eq!(affinity_prefix_len(8, 4), 4, "aligned length is itself a tail");
-        assert_eq!(affinity_prefix_len(3, 4), 3, "short prompt: whole-prompt fallback");
-        assert_eq!(affinity_prefix_len(1, 4), 1);
-        // Capped: long prompts hash a fixed head, so a 48-token template
-        // with question tails of varying length routes identically.
-        assert_eq!(affinity_prefix_len(56, 4), AFFINITY_BLOCKS * 4);
-        assert_eq!(affinity_prefix_len(62, 4), AFFINITY_BLOCKS * 4);
-    }
-
-    #[test]
-    fn variable_length_questions_share_a_template_engine() {
-        // Same 48-token template, question tails of 5..12 tokens: every
-        // prompt must prefer the same engine (the uncapped form would hash
-        // question tokens and scatter them).
-        let template: Vec<u32> = (0..48).map(|i| 3 + (i % 7)).collect();
-        let load = vec![0usize; 4];
-        let engines: std::collections::HashSet<usize> = (5..13)
-            .map(|q| {
-                let mut p = template.clone();
-                p.extend((0..q).map(|i| 60 + i));
-                route_group(&p, 4, &load, 8).0
-            })
-            .collect();
-        assert_eq!(engines.len(), 1, "template scattered across {engines:?}");
-    }
 
     #[test]
     fn same_template_same_engine_until_overload() {
@@ -147,5 +240,124 @@ mod tests {
             hits[e] += 1;
         }
         assert!(hits.iter().all(|&h| h > 0), "dead engine: {hits:?}");
+    }
+
+    #[test]
+    fn warm_engine_preferred_over_least_loaded() {
+        // Engine 2 verifiably holds the template; engine 0 is idle. The
+        // router must still pick 2 (importing saves the whole template), not
+        // the least-loaded engine, as long as 2 is within slack.
+        let template: Vec<u32> = (0..8).collect();
+        let prompt: Vec<u32> = [&template[..], &[50, 51]].concat();
+        let (key, len) = affinity_key(&prompt, 4);
+        assert_eq!(len, 8);
+        let mut warmth = WarmthMap::new();
+        warmth.note(key, 2, len);
+        let load = vec![0usize, 1, 2, 1];
+        let (e, kind) = route_group_residency(&prompt, 4, &load, 4, &warmth, 0);
+        assert_eq!((e, kind), (2, RouteKind::Warm));
+        // An unknown template on the same fleet falls back to the hash.
+        let cold: Vec<u32> = (100..110).collect();
+        let (_, kind) = route_group_residency(&cold, 4, &load, 4, &warmth, 0);
+        assert_eq!(kind, RouteKind::Hashed);
+    }
+
+    #[test]
+    fn spill_past_slack_still_works_and_respects_store_residency() {
+        let template: Vec<u32> = (0..8).collect();
+        let prompt: Vec<u32> = [&template[..], &[50, 51]].concat();
+        let (key, len) = affinity_key(&prompt, 4);
+        let mut warmth = WarmthMap::new();
+        warmth.note(key, 1, len);
+        let slack = 2usize;
+        let mut load = vec![0usize; 4];
+        // Backlog within slack: stays warm.
+        load[1] = 2;
+        let (e, k) = route_group_residency(&prompt, 4, &load, slack, &warmth, 0);
+        assert_eq!((e, k), (1, RouteKind::Warm));
+        // Backlog past slack but within the stretched (2x) slack and the
+        // store does NOT cover the template: a spill would recompute it
+        // cold, so the router sticks with the warm engine.
+        load[1] = 4;
+        let (e, k) = route_group_residency(&prompt, 4, &load, slack, &warmth, 0);
+        assert_eq!((e, k), (1, RouteKind::Warm), "uncovered template spilled too eagerly");
+        // Same backlog with the template resident in the shared store: the
+        // spill is an import, so the normal slack applies and the group
+        // moves to the least-loaded engine.
+        let (e, k) = route_group_residency(&prompt, 4, &load, slack, &warmth, len);
+        assert_eq!(k, RouteKind::Spill);
+        assert_eq!(load[e], 0, "spill goes to the least-loaded engine");
+        // Past even the stretched slack, an uncovered template spills too —
+        // load bounding always wins eventually.
+        load[1] = 5;
+        let (_, k) = route_group_residency(&prompt, 4, &load, slack, &warmth, 0);
+        assert_eq!(k, RouteKind::Spill);
+    }
+
+    #[test]
+    fn leaving_engine_redistributes_without_losing_store_coverage() {
+        // Three templates warm on three engines; engine 2 leaves. Its
+        // template must re-route decisively (no panic, an in-range engine),
+        // and the other engines' warmth survives untouched.
+        let mk = |t: u32| -> Vec<u32> {
+            (0..10).map(|i| t * 53 + i).collect()
+        };
+        let mut warmth = WarmthMap::new();
+        let keys: Vec<u64> = (0..3)
+            .map(|t| {
+                let (key, len) = affinity_key(&mk(t), 4);
+                warmth.note(key, t as usize, len);
+                key
+            })
+            .collect();
+        // Fleet shrinks 3 -> 2: engine index 2 is gone.
+        warmth.remove_engine(2, 2);
+        assert_eq!(warmth.lookup(keys[2]), None, "leaver's warmth must be dropped");
+        assert!(warmth.lookup(keys[0]).is_some());
+        assert!(warmth.lookup(keys[1]).is_some());
+        let load = vec![0usize; 2];
+        // The orphaned template re-routes by hash over the live fleet; the
+        // store still covers it, so the landing engine imports rather than
+        // recomputes — the router itself only needs to stay in range.
+        let (e, kind) = route_group_residency(&mk(2), 4, &load, 2, &warmth, 8);
+        assert!(e < 2);
+        assert_eq!(kind, RouteKind::Hashed);
+        // Surviving warmth keeps routing by residency.
+        let (e, kind) = route_group_residency(&mk(1), 4, &load, 2, &warmth, 8);
+        assert_eq!((e, kind), (1, RouteKind::Warm));
+        // A stale advertisement naming an out-of-range engine is ignored
+        // even if it somehow survives (double safety in the router).
+        warmth.note(keys[2], 7, 8);
+        let (e, _) = route_group_residency(&mk(2), 4, &load, 2, &warmth, 8);
+        assert!(e < 2);
+    }
+
+    #[test]
+    fn stats_refresh_corrects_beliefs_toward_longer_residency() {
+        let mut warmth = WarmthMap::new();
+        warmth.note(42, 0, 8);
+        // Another engine advertises a shorter prefix: belief unchanged.
+        warmth.refresh_engine(1, &[(42, 4)]);
+        assert_eq!(warmth.lookup(42), Some((0, 8)));
+        // A strictly longer residency elsewhere wins the template.
+        warmth.refresh_engine(1, &[(42, 12)]);
+        assert_eq!(warmth.lookup(42), Some((1, 12)));
+        // An engine's claim about itself always refreshes (eviction shrank
+        // its coverage).
+        warmth.refresh_engine(1, &[(42, 6)]);
+        assert_eq!(warmth.lookup(42), Some((1, 6)));
+        // Absence is authoritative: a template the owning engine stopped
+        // advertising (evicted) loses its belief instead of attracting
+        // traffic to a cold engine at stretched slack — while beliefs about
+        // *other* engines survive this engine's refresh untouched.
+        warmth.note(7, 1, 4);
+        warmth.note(9, 0, 4);
+        warmth.refresh_engine(1, &[(42, 6)]);
+        assert_eq!(warmth.lookup(7), None, "stale belief must drop");
+        assert_eq!(warmth.lookup(42), Some((1, 6)));
+        assert_eq!(warmth.lookup(9), Some((0, 4)), "other engines' beliefs survive");
+        // Flush on a real weight sync: nothing is warm anywhere.
+        warmth.flush();
+        assert!(warmth.is_empty());
     }
 }

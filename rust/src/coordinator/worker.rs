@@ -168,6 +168,9 @@ fn handle_msg(
                 engine_idx: idx,
                 engine: engine.stats.clone(),
                 cache,
+                // Advertise which template prefixes are verifiably resident
+                // here — the router's per-engine warmth refresh.
+                warm: engine.warm_templates(),
             });
         }
         EngineMsg::Shutdown => return Ok(true),

@@ -305,6 +305,7 @@ mod tests {
             block_tokens: bt,
             capacity_blocks: 64,
             policy: EvictPolicy::Lru,
+            shards: 2,
         });
         store.set_version(1);
         let mut ctx_a = StoreCtx { store: &store, version: 1, leases: Vec::new() };

@@ -75,6 +75,13 @@ pub struct SimSetup {
     /// pays the cold template (the PR-2, per-engine-cache reality).
     /// Meaningful only with `prefix_cache` and a nonzero `template_frac`.
     pub cross_engine: bool,
+    /// Hash-range shards of the host-side store (`engine.store_shards`).
+    /// Every group-leader admission does a store round-trip (fetch +
+    /// publish) that serializes on its shard's lock; with one shard the
+    /// whole fleet contends on a single mutex, with `min(shards,
+    /// instances)` lanes the aggregate store time divides accordingly.
+    /// Only meaningful with `cross_engine`; >= 1.
+    pub store_shards: usize,
     /// Samples per training micro-batch (paper's Micro-BS column; SPA packs
     /// the whole group into one launch regardless). Determines kernel-launch
     /// overhead, which is what makes micro-bs 1 at short sequence lengths so
@@ -180,6 +187,31 @@ impl SimSetup {
     fn shared_prefill_s(&self, tokens: f64) -> f64 {
         tokens * self.model.kv_bytes_per_token
             / (self.infer_tp as f64 * self.cluster.device.hbm_bw * self.eff.decode_bw_util)
+    }
+
+    /// Host-side DRAM copy bandwidth for store round-trips (publish/fetch
+    /// copy template KV under a shard lock). Conservative single-socket
+    /// memcpy figure; the point is contention structure, not absolutes.
+    const HOST_COPY_BW: f64 = 25e9;
+
+    /// Excess lock-serialization time the fleet spends queueing on the
+    /// shared store this iteration. Each of the `groups` leaders fetches and
+    /// publishes its template once (two copies of the template's KV bytes at
+    /// host bandwidth); unrelated templates spread over
+    /// `min(store_shards, instances)` independent locks. The copy itself
+    /// overlaps admission compute when every instance has its own lane — so
+    /// the model charges only the queueing *beyond* that parallel floor:
+    /// zero for a fully sharded store (or a single instance), and the full
+    /// fleet-minus-one serialization for the pre-shard single mutex.
+    fn store_serial_s(&self, groups: usize, mean_lp: f64) -> f64 {
+        if !self.cross_engine || !self.prefix_cache {
+            return 0.0;
+        }
+        let n_instances = (self.infer_devices() / self.infer_tp).max(1) as f64;
+        let lanes = (self.store_shards.max(1) as f64).min(n_instances);
+        let tpl_bytes = mean_lp * self.template_frac.clamp(0.0, 1.0) * self.model.kv_bytes_per_token;
+        let op_s = 2.0 * tpl_bytes / Self::HOST_COPY_BW; // fetch + publish
+        groups as f64 * op_s * (1.0 / lanes - 1.0 / n_instances)
     }
 
     /// Rollout service time (prefill + decode). `matched_frac` is the
@@ -371,7 +403,12 @@ impl SimSetup {
         for (idx, &(gi, _)) in order.iter().enumerate() {
             ready[gi] = ready[gi].max(completions[idx]);
         }
-        let t_infer = completions.iter().cloned().fold(0.0f64, f64::max);
+        // Host-store lock serialization: leaders' fetch+publish round-trips
+        // stall admission; the stall shrinks with the shard lane count.
+        let mean_lp = groups.iter().map(|grp| grp[0].0 as f64).sum::<f64>()
+            / groups.len().max(1) as f64;
+        let t_store = self.store_serial_s(groups.len(), mean_lp);
+        let t_infer = completions.iter().cloned().fold(0.0f64, f64::max) + t_store;
         let t_train: f64 = train_each.iter().sum();
 
         if let Some(tr) = trace {
@@ -439,6 +476,7 @@ mod tests {
             prefix_cache: false,
             template_frac: 0.0,
             cross_engine: false,
+            store_shards: 1,
             train_micro_bs: 16,
             micro_launch_s: 0.5,
             iters: 5,
@@ -557,6 +595,10 @@ mod tests {
         per_engine.workload = WorkloadSpec::gsm8k(32);
         per_engine.prefix_cache = true;
         per_engine.template_frac = 0.6;
+        // Fully sharded store: this test isolates the *warmth* benefit. The
+        // single-mutex contention cost is covered (and must be strictly
+        // positive) in `store_shards_cut_host_serialization_and_nothing_else`.
+        per_engine.store_shards = 8;
         let mut cross = per_engine.clone();
         cross.cross_engine = true;
         let a = per_engine.run();
@@ -588,6 +630,42 @@ mod tests {
             b.t_infer_mean,
             a.t_infer_mean
         );
+    }
+
+    #[test]
+    fn store_shards_cut_host_serialization_and_nothing_else() {
+        // Cross-engine sharing on a template workload pays a host-store
+        // serialization term per leader; sharding the lock divides it by the
+        // lane count and must touch nothing else (trained tokens identical).
+        let mut single = base(Framework::PeriodicAsync);
+        single.workload = WorkloadSpec::gsm8k(32);
+        single.prefix_cache = true;
+        single.template_frac = 0.6;
+        single.cross_engine = true;
+        single.store_shards = 1;
+        assert!(
+            single.infer_devices() / single.infer_tp > 1,
+            "setup must have >1 instance for lock lanes to matter"
+        );
+        let mut sharded = single.clone();
+        sharded.store_shards = 8;
+        let a = single.run();
+        let b = sharded.run();
+        assert!(
+            b.t_infer_mean < a.t_infer_mean,
+            "sharding must strictly cut the store serialization: {} vs {}",
+            b.t_infer_mean,
+            a.t_infer_mean
+        );
+        assert_eq!(a.trained_tokens, b.trained_tokens);
+        assert!(b.tpspd >= a.tpspd);
+        // Without the store there is nothing to serialize on: the knob is
+        // inert (guards against the term leaking into store-less configs).
+        let mut no_store = single.clone();
+        no_store.cross_engine = false;
+        let mut no_store_sharded = no_store.clone();
+        no_store_sharded.store_shards = 8;
+        assert_eq!(no_store.run().t_infer_mean, no_store_sharded.run().t_infer_mean);
     }
 
     #[test]

@@ -56,6 +56,89 @@ pub fn hash_prefix(tokens: &[u32]) -> u64 {
     h.value()
 }
 
+/// One link of a prefix's block chain: the token fragment `[start, end)` and
+/// the store key — the hash of the *whole prefix* through `end`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChainLink {
+    pub start: usize,
+    pub end: usize,
+    pub key: u64,
+}
+
+/// Iterator over the block-boundary chain of a token prefix: one
+/// [`ChainLink`] per `block_tokens` boundary, plus the unaligned tail when
+/// present, each carrying the rolling-hash key of the prefix through it.
+///
+/// This is the single source of truth for "where do a prefix's block
+/// boundaries fall and what are their keys" — the shard's publish walk, the
+/// fetch walk and the residency probe all iterate it, so they can never
+/// disagree about boundaries or keys (they used to duplicate the walk).
+/// O(n) total hashing for an n-token prefix.
+#[derive(Debug, Clone)]
+pub struct ChainKeys<'a> {
+    tokens: &'a [u32],
+    block_tokens: usize,
+    hasher: PrefixHasher,
+    pos: usize,
+}
+
+/// Walk the block chain of `tokens` (see [`ChainKeys`]).
+pub fn chain_keys(tokens: &[u32], block_tokens: usize) -> ChainKeys<'_> {
+    assert!(block_tokens > 0, "degenerate block size");
+    ChainKeys { tokens, block_tokens, hasher: PrefixHasher::new(), pos: 0 }
+}
+
+impl Iterator for ChainKeys<'_> {
+    type Item = ChainLink;
+
+    fn next(&mut self) -> Option<ChainLink> {
+        if self.pos >= self.tokens.len() {
+            return None;
+        }
+        let start = self.pos;
+        let end = (start + self.block_tokens).min(self.tokens.len());
+        for &t in &self.tokens[start..end] {
+            self.hasher.push(t);
+        }
+        self.pos = end;
+        Some(ChainLink { start, end, key: self.hasher.value() })
+    }
+}
+
+/// Blocks of the prompt head the affinity router hashes. Capping the routed
+/// prefix at a fixed depth (rather than "everything but the last partial
+/// block") is what keeps same-template prompts with *different question
+/// lengths* on the same engine: an uncapped block-aligned prefix would
+/// extend past the template into per-prompt question tokens whenever lengths
+/// vary, and scatter the template across engines. Two blocks discriminate
+/// distinct templates well while staying safely inside any realistic
+/// template. (Lives here, next to the store keys it must agree with, so the
+/// engine's warmth advertisements and the coordinator's router share one
+/// definition without the engine depending on coordinator code.)
+pub const AFFINITY_BLOCKS: usize = 2;
+
+/// The routed prefix: the longest block-aligned proper prefix of the prompt,
+/// capped at [`AFFINITY_BLOCKS`] blocks (the final partial block — the
+/// per-prompt question tail — never participates). Whole-prompt fallback for
+/// prompts shorter than one block.
+pub fn affinity_prefix_len(prompt_len: usize, block_tokens: usize) -> usize {
+    let bt = block_tokens.max(1);
+    let aligned = prompt_len.saturating_sub(1) / bt * bt;
+    if aligned == 0 {
+        prompt_len
+    } else {
+        aligned.min(AFFINITY_BLOCKS * bt)
+    }
+}
+
+/// `(key, prefix length)` of a prompt's affinity prefix — the identity the
+/// router, the warmth map and the engines' warm-template advertisements all
+/// agree on.
+pub fn affinity_key(prompt: &[u32], block_tokens: usize) -> (u64, usize) {
+    let len = affinity_prefix_len(prompt.len(), block_tokens);
+    (hash_prefix(&prompt[..len]), len)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,6 +166,54 @@ mod tests {
         assert_ne!(hash_prefix(&[1]), hash_prefix(&[1, 0]));
         assert_ne!(hash_prefix(&[0]), hash_prefix(&[0, 0]));
         assert_ne!(hash_prefix(&[]), hash_prefix(&[0]));
+    }
+
+    #[test]
+    fn chain_keys_match_boundary_hashes() {
+        // The chain walk must produce exactly the boundaries the old
+        // publish/fetch loops computed: every block_tokens multiple plus the
+        // unaligned tail, each keyed by the whole prefix through it.
+        let seq: Vec<u32> = (0..11).collect();
+        let links: Vec<ChainLink> = chain_keys(&seq, 4).collect();
+        assert_eq!(
+            links.iter().map(|l| (l.start, l.end)).collect::<Vec<_>>(),
+            vec![(0, 4), (4, 8), (8, 11)]
+        );
+        for l in &links {
+            assert_eq!(l.key, hash_prefix(&seq[..l.end]));
+        }
+        // Aligned prefix: no tail link. Empty prefix: no links at all.
+        assert_eq!(chain_keys(&seq[..8], 4).count(), 2);
+        assert_eq!(chain_keys(&[], 4).count(), 0);
+        // Sub-block prefix: a single tail link covering everything.
+        let short: Vec<ChainLink> = chain_keys(&seq[..3], 4).collect();
+        assert_eq!(short.len(), 1);
+        assert_eq!((short[0].start, short[0].end), (0, 3));
+    }
+
+    #[test]
+    fn affinity_prefix_drops_the_partial_tail_block() {
+        assert_eq!(affinity_prefix_len(10, 4), 8);
+        assert_eq!(affinity_prefix_len(8, 4), 4, "aligned length is itself a tail");
+        assert_eq!(affinity_prefix_len(3, 4), 3, "short prompt: whole-prompt fallback");
+        assert_eq!(affinity_prefix_len(1, 4), 1);
+        // Capped: long prompts hash a fixed head, so a 48-token template
+        // with question tails of varying length routes identically.
+        assert_eq!(affinity_prefix_len(56, 4), AFFINITY_BLOCKS * 4);
+        assert_eq!(affinity_prefix_len(62, 4), AFFINITY_BLOCKS * 4);
+    }
+
+    #[test]
+    fn affinity_key_is_stable_across_question_lengths() {
+        let template: Vec<u32> = (0..48).map(|i| 3 + (i % 7)).collect();
+        let keys: std::collections::HashSet<u64> = (5..13)
+            .map(|q| {
+                let mut p = template.clone();
+                p.extend((0..q).map(|i| 60 + i));
+                affinity_key(&p, 4).0
+            })
+            .collect();
+        assert_eq!(keys.len(), 1, "template identity scattered: {keys:?}");
     }
 
     #[test]

@@ -9,17 +9,52 @@
 //! store of block-granular KV segments shared by every engine in the
 //! coordinator, turning N per-engine caches into one logical cache.
 //!
-//! Structure:
+//! # Shard topology
 //!
-//! * [`segments`] — the core map: one entry per *block* of a published
-//!   prefix, keyed by the hash of the whole prefix through that block
-//!   ([`hash`]), with a block-budget capacity and LRU/FIFO eviction of
-//!   unleased entries;
-//! * [`SharedKvStore`] — the `Mutex` facade engine worker threads share via
-//!   `Arc` ([`crate::coordinator::EngineMsg::AttachStore`]); fetches hand
-//!   out ref-counted, epoch-tagged [`StoreLease`]s that pin the matched
-//!   segments against eviction until the importing request retires;
-//! * [`stats`] — global counters the coordinator reports per iteration.
+//! The store is `S` independent [`shard::Shard`]s (`engine.store_shards` in
+//! the config; default 1), each behind its own `Mutex` and owning a disjoint
+//! slice of the block budget. A *chain* — every block entry of one published
+//! prefix — lives entirely in one shard: the facade range-partitions on the
+//! hash of the chain's **first block** ([`hash`]), so two prompts sharing a
+//! template land in the same shard (and dedupe there), while unrelated
+//! templates spread across shards and never contend on one lock. Every
+//! operation therefore locks exactly one shard; only `set_version`,
+//! `stats()` and the gauges touch all of them (sequentially — never nested,
+//! so no lock-order concerns). With `S = 1` the store is bit-identical to
+//! the previous single-`Mutex<StoreCore>` design.
+//!
+//! # Heap laziness
+//!
+//! Each shard replaces the old O(n) eviction scan with a lazily-invalidated
+//! min-heap of `(policy key, entry key)` candidates: transitions *into*
+//! evictability push, nothing ever removes — pops discard entries that have
+//! since been evicted, re-leased or re-keyed, and a size-bounded compaction
+//! keeps the heap O(live entries) under touch-heavy workloads. Ticks are
+//! monotone and never reused, so a stale entry can never masquerade as
+//! current. The pop order over current keys equals the old scan's
+//! `min_by_key` order, which is what makes `shards = 1` victim-for-victim
+//! identical (enforced by the differential proptest in [`shard`]).
+//!
+//! # Invariants the tests enforce
+//!
+//! * **Capacity**: a shard never holds more entries than its slice; the
+//!   facade's `live_blocks() <= capacity_blocks()` at all times, including
+//!   under multi-threaded contention (`tests/store_stress.rs`).
+//! * **Lease pinning**: a fetched chain's entries cannot be evicted while
+//!   any lease pins them; re-fetching a leased prefix is bit-exact.
+//! * **Bit-exact fetch**: fetched rows always equal what a local prefill
+//!   would have computed (prefix-dependent row oracle in the proptests).
+//! * **Heap covering**: every currently evictable entry has a live heap
+//!   entry carrying its current policy key (`Shard::check`).
+//! * **Version gating**: a real params bump flushes every shard in lockstep
+//!   and bumps the lease epochs; stale publishes/fetches/releases are
+//!   rejected or ignored.
+//!
+//! Structure: [`segments`] — the entry/result types; [`shard`] — the
+//! per-shard map, heap eviction and residency probe; [`SharedKvStore`] — the
+//! sharded facade engine worker threads share via `Arc`
+//! ([`crate::coordinator::EngineMsg::AttachStore`]); [`stats`] — per-shard
+//! counters the facade aggregates.
 //!
 //! Engine integration (see `engine::admit_chunked`): on admission, when the
 //! local radix match is short, the engine fetches the longest published
@@ -31,23 +66,28 @@
 //! EngineStats`]. Completed prefixes are published back once per admission,
 //! bounded by a per-engine, per-sync-interval publish budget
 //! (`engine.store_publish`) so a churny workload cannot thrash the store.
+//! The coordinator additionally consults [`SharedKvStore::residency_blocks`]
+//! when routing groups: store residency makes a spill cheap (the target
+//! imports instead of recomputing), so the router can trade backlog slack
+//! against actual warmth instead of hashing blindly.
 //!
 //! Consistency: segments are functions of the policy weights. The store is
 //! bound to a params version ([`SharedKvStore::set_version`], called by
-//! every engine inside `set_weights`): a real version bump flushes the store
-//! and bumps the lease epoch (stale releases are ignored); publishes and
-//! fetches carrying a mismatched version are rejected, so KV computed under
-//! old weights can never cross into a new iteration.
+//! every engine inside `set_weights`): a real version bump flushes every
+//! shard and bumps the lease epochs (stale releases are ignored); publishes
+//! and fetches carrying a mismatched version are rejected, so KV computed
+//! under old weights can never cross into a new iteration.
 
 pub mod hash;
 pub mod segments;
+pub mod shard;
 pub mod stats;
 
 pub use segments::Publish;
 pub use stats::StoreStats;
 
 use crate::engine::kvcache::EvictPolicy;
-use segments::StoreCore;
+use shard::Shard;
 use std::sync::Mutex;
 
 /// Store sizing/eviction knobs (validated by `config::Config`).
@@ -56,19 +96,23 @@ pub struct StoreCfg {
     /// Tokens per segment block — the engines' `cache_block`, so store keys
     /// land on the same boundaries the engines publish and match at.
     pub block_tokens: usize,
-    /// Capacity in block entries.
+    /// Capacity in block entries, split across the shards.
     pub capacity_blocks: usize,
     pub policy: EvictPolicy,
+    /// Independent hash-range shards (>= 1); 1 = the single-mutex store.
+    pub shards: usize,
 }
 
 /// Ref-counted pin on the segments a fetch matched; held by the importing
 /// request until retirement, released through [`SharedKvStore::release`].
 /// Epoch-tagged: releases that outlive a version flush are ignored. Not
 /// `Clone` — the type system enforces at most one release per acquire, which
-/// is what keeps the refcounts non-negative by construction.
+/// is what keeps the refcounts non-negative by construction. A chain lives
+/// in exactly one shard, so the lease remembers which.
 #[derive(Debug)]
 pub struct StoreLease {
     keys: Vec<u64>,
+    shard: usize,
     epoch: u64,
 }
 
@@ -86,35 +130,69 @@ pub struct Fetched {
 }
 
 /// The shared store: one instance per coordinator, `Arc`-shared with every
-/// engine worker thread. All methods lock internally; each call copies rows
-/// in or out under the lock, so no reader ever observes an evicted segment.
+/// engine worker thread. Each call locks exactly one shard (chosen by the
+/// query's first-block hash) and copies rows in or out under that lock, so
+/// no reader ever observes an evicted segment.
 #[derive(Debug)]
 pub struct SharedKvStore {
-    inner: Mutex<StoreCore>,
+    shards: Vec<Mutex<Shard>>,
     block_tokens: usize,
 }
 
 impl SharedKvStore {
     pub fn new(cfg: StoreCfg) -> SharedKvStore {
-        SharedKvStore {
-            inner: Mutex::new(StoreCore::new(cfg.block_tokens, cfg.capacity_blocks, cfg.policy)),
-            block_tokens: cfg.block_tokens,
-        }
+        let s = cfg.shards.max(1);
+        assert!(
+            cfg.capacity_blocks >= s,
+            "store capacity {} cannot give {s} shards a nonzero slice",
+            cfg.capacity_blocks
+        );
+        let shards = (0..s)
+            .map(|i| {
+                // Shard i's capacity slice; slices sum to capacity_blocks.
+                let cap = cfg.capacity_blocks / s + usize::from(i < cfg.capacity_blocks % s);
+                Mutex::new(Shard::new(cfg.block_tokens, cap, cfg.policy))
+            })
+            .collect();
+        SharedKvStore { shards, block_tokens: cfg.block_tokens }
     }
 
     pub fn block_tokens(&self) -> usize {
         self.block_tokens
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, StoreCore> {
-        self.inner.lock().expect("store mutex poisoned")
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
     }
 
-    /// Bind the store to a params version; flushes on a real bump. Engines
+    fn lock(&self, idx: usize) -> std::sync::MutexGuard<'_, Shard> {
+        self.shards[idx].lock().expect("store shard mutex poisoned")
+    }
+
+    /// Shard owning `tokens`' chain: range partition on the first block's
+    /// hash. The whole chain shares the first block's key prefix-dependently
+    /// — every deeper key extends the same first block — so publish, fetch
+    /// and residency for one prompt family always land on one shard.
+    fn shard_for(&self, tokens: &[u32]) -> usize {
+        if self.shards.len() == 1 || tokens.is_empty() {
+            return 0;
+        }
+        let head = &tokens[..tokens.len().min(self.block_tokens)];
+        let key = hash::hash_prefix(head);
+        // Multiply-shift range partition of the 64-bit key space.
+        ((key as u128 * self.shards.len() as u128) >> 64) as usize
+    }
+
+    /// Bind the store to a params version; flushes every shard on a real
+    /// bump (lockstep — shards never disagree about the version). Engines
     /// call this from `set_weights`, so the first engine to install a new
     /// version invalidates every stale segment for all of them.
     pub fn set_version(&self, version: u64) -> bool {
-        self.lock().set_version(version)
+        let mut flushed = false;
+        for i in 0..self.shards.len() {
+            flushed |= self.lock(i).set_version(version);
+        }
+        flushed
     }
 
     /// Publish a completed prefix (KV rows + optional terminal logits)
@@ -127,7 +205,8 @@ impl SharedKvStore {
         logits: Option<&[f32]>,
         version: u64,
     ) -> Publish {
-        self.lock().publish(tokens, rows, logits, version, true)
+        let idx = self.shard_for(tokens);
+        self.lock(idx).publish(tokens, rows, logits, version, true)
     }
 
     /// Publish only the *block-aligned head* of a completed prefix — the
@@ -150,11 +229,12 @@ impl SharedKvStore {
         if aligned == 0 {
             return Publish::Duplicate;
         }
+        let idx = self.shard_for(tokens);
         if aligned == tokens.len() {
-            self.lock().publish(tokens, rows, logits, version, allow_evict)
+            self.lock(idx).publish(tokens, rows, logits, version, allow_evict)
         } else {
             let re = rows.len() / tokens.len();
-            self.lock()
+            self.lock(idx)
                 .publish(&tokens[..aligned], &rows[..aligned * re], None, version, allow_evict)
         }
     }
@@ -163,45 +243,71 @@ impl SharedKvStore {
     /// `min_len` tokens, under `version`. Acquires a lease on the matched
     /// segments.
     pub fn fetch_longest(&self, tokens: &[u32], min_len: usize, version: u64) -> Option<Fetched> {
-        let mut core = self.lock();
-        let f = core.fetch_longest(tokens, min_len, version)?;
-        let epoch = core.epoch;
+        let idx = self.shard_for(tokens);
+        let mut shard = self.lock(idx);
+        let f = shard.fetch_longest(tokens, min_len, version)?;
+        let epoch = shard.epoch;
         Some(Fetched {
             len: f.len,
             rows: f.rows,
             logits: f.logits,
-            lease: StoreLease { keys: f.keys, epoch },
+            lease: StoreLease { keys: f.keys, shard: idx, epoch },
         })
+    }
+
+    /// Tokens of `tokens` covered by resident segments (block-granular) —
+    /// the coordinator's residency probe for routing decisions. Non-mutating
+    /// and lease-free: no LRU refresh, no fetch counters, so probing a
+    /// candidate prompt cannot perturb eviction order or hit rates.
+    pub fn residency_blocks(&self, tokens: &[u32]) -> usize {
+        let idx = self.shard_for(tokens);
+        self.lock(idx).residency(tokens)
     }
 
     /// Release a fetch lease (importing request retired). Stale leases from
     /// before a version flush are ignored.
     pub fn release(&self, lease: StoreLease) {
-        let mut core = self.lock();
-        if lease.epoch == core.epoch {
-            core.release(&lease.keys);
+        let mut shard = self.lock(lease.shard);
+        if lease.epoch == shard.epoch {
+            shard.release(&lease.keys);
         }
     }
 
+    /// Aggregate counters across shards.
     pub fn stats(&self) -> StoreStats {
-        self.lock().stats.clone()
+        let mut total = StoreStats::default();
+        for i in 0..self.shards.len() {
+            total.absorb(&self.lock(i).stats);
+        }
+        total
     }
 
     pub fn live_blocks(&self) -> usize {
-        self.lock().live_blocks()
+        (0..self.shards.len()).map(|i| self.lock(i).live_blocks()).sum()
     }
 
     pub fn leased_blocks(&self) -> usize {
-        self.lock().leased_blocks()
+        (0..self.shards.len()).map(|i| self.lock(i).leased_blocks()).sum()
     }
 
     pub fn capacity_blocks(&self) -> usize {
-        self.lock().capacity()
+        (0..self.shards.len()).map(|i| self.lock(i).capacity()).sum()
     }
 
-    /// Structural invariants (for the proptests).
+    /// Structural invariants (for the proptests): every shard's map, heap
+    /// covering and capacity slice.
     pub fn check(&self) -> Result<(), String> {
-        self.lock().check()
+        for i in 0..self.shards.len() {
+            self.lock(i).check().map_err(|e| format!("shard {i}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Lease epoch (shards advance in lockstep; any shard's value is the
+    /// store's). Test-only visibility for the lease-validity proptests.
+    #[cfg(test)]
+    pub(crate) fn current_epoch(&self) -> u64 {
+        self.lock(0).epoch
     }
 }
 
@@ -214,10 +320,15 @@ mod tests {
     const RE: usize = 3; // row elems
 
     fn store(capacity: usize, bt: usize) -> SharedKvStore {
+        store_sharded(capacity, bt, 1)
+    }
+
+    fn store_sharded(capacity: usize, bt: usize, shards: usize) -> SharedKvStore {
         SharedKvStore::new(StoreCfg {
             block_tokens: bt,
             capacity_blocks: capacity,
             policy: EvictPolicy::Lru,
+            shards,
         })
     }
 
@@ -397,9 +508,39 @@ mod tests {
         s.check().unwrap();
     }
 
+    #[test]
+    fn chains_stay_shard_local_and_capacity_splits() {
+        let s = store_sharded(17, 2, 4);
+        // Slices sum to the configured capacity (17 = 5 + 4 + 4 + 4).
+        assert_eq!(s.capacity_blocks(), 17);
+        assert_eq!(s.shard_count(), 4);
+        s.set_version(1);
+        // Many distinct templates: every chain fetches back intact (its
+        // blocks were not scattered across shards), and at least two shards
+        // end up populated (the partition actually spreads).
+        let mut populated = std::collections::HashSet::new();
+        for t in 0..12u32 {
+            let p: Vec<u32> = (0..6).map(|i| t * 37 + i).collect();
+            s.publish(&p, &rows_for(&p), Some(&logits_for(&p)), 1);
+            populated.insert(s.shard_for(&p));
+            if let Some(f) = s.fetch_longest(&p, 0, 1) {
+                assert_eq!(f.rows, rows_for(&p[..f.len]), "chain torn across shards");
+                s.release(f.lease);
+            }
+        }
+        assert!(populated.len() >= 2, "partition never spread: {populated:?}");
+        // Same template, different suffixes: one shard, so dedup still works.
+        let tpl: Vec<u32> = (100..104).collect();
+        let p1: Vec<u32> = [&tpl[..], &[1, 1][..]].concat();
+        let p2: Vec<u32> = [&tpl[..], &[2, 2][..]].concat();
+        assert_eq!(s.shard_for(&p1), s.shard_for(&p2));
+        s.check().unwrap();
+    }
+
     /// The acceptance invariants under random cross-engine traffic: publishes
     /// and fetches over template-sharing prompts, random lease retirement,
-    /// eviction pressure and version bumps. After every op:
+    /// eviction pressure and version bumps — at arbitrary shard counts.
+    /// After every op:
     /// * every fetch is bit-exact against the prefix-dependent row oracle and
     ///   covers more than `min_len`;
     /// * the block budget is respected;
@@ -414,7 +555,8 @@ mod tests {
             "shared store: cross-engine traffic invariants",
             |rng: &mut Pcg64, size| {
                 let bt = rng.range(1, 5);
-                let capacity = rng.range(2, 24);
+                let shards = rng.range(1, 5);
+                let capacity = rng.range(shards.max(2), 24 + shards);
                 let n_templates = rng.range(1, 4);
                 let templates: Vec<Vec<u32>> = (0..n_templates)
                     .map(|_| (0..rng.range(1, 10)).map(|_| rng.range(0, 5) as u32).collect())
@@ -427,13 +569,14 @@ mod tests {
                         (rng.next_u64(), p)
                     })
                     .collect();
-                (bt, capacity, ops)
+                (bt, capacity, shards, ops)
             },
-            |(bt, capacity, ops)| {
+            |(bt, capacity, shards, ops)| {
                 let s = SharedKvStore::new(StoreCfg {
                     block_tokens: *bt,
                     capacity_blocks: *capacity,
                     policy: EvictPolicy::Lru,
+                    shards: *shards,
                 });
                 let mut version = 1u64;
                 s.set_version(version);
@@ -489,7 +632,7 @@ mod tests {
                     // Every epoch-valid lease still pins resident segments.
                     let held: usize = leases
                         .iter()
-                        .filter(|l| l.epoch == s.lock().epoch)
+                        .filter(|l| l.epoch == s.current_epoch())
                         .flat_map(|l| l.keys.iter())
                         .collect::<std::collections::HashSet<_>>()
                         .len();

@@ -1,6 +1,6 @@
-//! The store core: a content-addressed map of block-granular KV segments.
+//! Shared definitions of the store's content-addressed segment entries.
 //!
-//! One entry covers the KV rows of one *block* of a published prefix —
+//! One [`Entry`] covers the KV rows of one *block* of a published prefix —
 //! token positions `[start, end)` where `end` is a `block_tokens` multiple
 //! (or the prefix's full, unaligned length for the terminal tail) — keyed by
 //! the hash of the **whole prefix through `end`** ([`super::hash`]). Chained
@@ -11,39 +11,28 @@
 //! key), which is exactly the cross-engine dedup: two engines that prefilled
 //! the same few-shot template store its blocks once.
 //!
-//! Capacity is a block budget with LRU/FIFO eviction of **unleased** entries
-//! (a linear scan — the store is host-side and modest-sized; the per-engine
-//! radix cache is where the O(log n) heap lives). Evicting a mid-chain block
-//! orphans its deeper blocks for matching — fetches stop at the hole — but a
-//! later re-publication heals the hole in place; orphans age out by policy.
-//!
-//! Consistency: entries are valid only for the params version that produced
-//! them. [`StoreCore::set_version`] flushes on a real version bump and bumps
-//! the lease epoch so releases from before the flush are ignored (the same
-//! discipline as [`crate::engine::PrefixCache::clear`]).
-
-use super::hash::PrefixHasher;
-use super::stats::StoreStats;
-use crate::engine::kvcache::EvictPolicy;
-use std::collections::HashMap;
+//! The map itself — capacity, eviction, leases, versioning — lives in
+//! [`super::shard`]: the store is a set of independent [`super::shard::
+//! Shard`]s, each owning one hash range of chains. These types are what the
+//! shards and the [`super::SharedKvStore`] facade exchange.
 
 /// One block-granular segment: KV rows for `[end - tokens.len(), end)` of
 /// some published prefix.
 #[derive(Debug)]
-struct Entry {
+pub(crate) struct Entry {
     /// Prefix length this entry completes.
-    end: usize,
+    pub(crate) end: usize,
     /// The block's own token fragment (hash-collision guard).
-    tokens: Vec<u32>,
+    pub(crate) tokens: Vec<u32>,
     /// Token-major KV rows for the fragment (`tokens.len() * row_elems`).
-    rows: Vec<f32>,
+    pub(crate) rows: Vec<f32>,
     /// Last-position prefill logits when a complete published prompt ends
     /// exactly at `end`.
-    logits: Option<Vec<f32>>,
+    pub(crate) logits: Option<Vec<f32>>,
     /// Active cross-engine leases pinning this entry against eviction.
-    refs: u32,
-    last_use: u64,
-    created: u64,
+    pub(crate) refs: u32,
+    pub(crate) last_use: u64,
+    pub(crate) created: u64,
 }
 
 /// What a publish call did (the engine consumes its per-sync publish budget
@@ -69,324 +58,4 @@ pub(crate) struct FetchedCore {
     pub rows: Vec<f32>,
     pub logits: Option<Vec<f32>>,
     pub keys: Vec<u64>,
-}
-
-/// The store state behind the facade's mutex.
-#[derive(Debug)]
-pub(crate) struct StoreCore {
-    block_tokens: usize,
-    capacity: usize,
-    policy: EvictPolicy,
-    /// f32 elements per token row; learned from the first publish and
-    /// enforced afterwards (all engines share one KV geometry).
-    row_elems: Option<usize>,
-    entries: HashMap<u64, Entry>,
-    /// Params version the resident segments were computed under.
-    version: Option<u64>,
-    /// Lease epoch; bumped on every flush so stale releases are ignored.
-    pub(crate) epoch: u64,
-    tick: u64,
-    pub(crate) stats: StoreStats,
-}
-
-impl StoreCore {
-    pub fn new(block_tokens: usize, capacity: usize, policy: EvictPolicy) -> StoreCore {
-        assert!(block_tokens > 0 && capacity > 0, "degenerate store geometry");
-        StoreCore {
-            block_tokens,
-            capacity,
-            policy,
-            row_elems: None,
-            entries: HashMap::new(),
-            version: None,
-            epoch: 0,
-            tick: 0,
-            stats: StoreStats::default(),
-        }
-    }
-
-    pub fn capacity(&self) -> usize {
-        self.capacity
-    }
-
-    pub fn live_blocks(&self) -> usize {
-        self.entries.len()
-    }
-
-    pub fn leased_blocks(&self) -> usize {
-        self.entries.values().filter(|e| e.refs > 0).count()
-    }
-
-    fn tick(&mut self) -> u64 {
-        self.tick += 1;
-        self.tick
-    }
-
-    /// Block boundaries of an `len`-token prefix, ascending: every
-    /// `block_tokens` multiple, then the unaligned tail end when present.
-    fn boundaries(&self, len: usize) -> Vec<usize> {
-        let bt = self.block_tokens;
-        let mut out: Vec<usize> = (1..=len / bt).map(|j| j * bt).collect();
-        if len % bt != 0 {
-            out.push(len);
-        }
-        out
-    }
-
-    /// Fragment start for a boundary `end`.
-    fn frag_start(&self, end: usize) -> usize {
-        if end % self.block_tokens == 0 {
-            end - self.block_tokens
-        } else {
-            end / self.block_tokens * self.block_tokens
-        }
-    }
-
-    /// Bind the store to a params version. A real bump flushes every segment
-    /// (cached KV is a function of the weights) and invalidates outstanding
-    /// leases; re-announcing the current version keeps the store warm.
-    /// Returns true when a flush happened.
-    pub fn set_version(&mut self, v: u64) -> bool {
-        if self.version == Some(v) {
-            return false;
-        }
-        if self.version.is_some() {
-            self.stats.clears += 1;
-        }
-        self.entries.clear();
-        self.epoch += 1;
-        self.version = Some(v);
-        true
-    }
-
-    /// Publish a completed prefix: one entry per block boundary (existing
-    /// blocks are deduped and LRU-refreshed; `logits` attach to the final
-    /// boundary and never get erased by a later `None`). With `allow_evict`,
-    /// unleased entries are evicted to make room (never this prefix's own
-    /// chain — that would orphan the blocks just stored); without it, a full
-    /// store drops the remainder instead, so dedup refreshes and free-space
-    /// growth stay available to budget-exhausted engines. Stops at the
-    /// first un-storable block, since deeper blocks would be unreachable
-    /// through the hole anyway.
-    pub fn publish(
-        &mut self,
-        tokens: &[u32],
-        rows: &[f32],
-        logits: Option<&[f32]>,
-        version: u64,
-        allow_evict: bool,
-    ) -> Publish {
-        assert!(!tokens.is_empty(), "cannot publish an empty prefix");
-        assert_eq!(rows.len() % tokens.len(), 0, "ragged rows");
-        if self.version != Some(version) {
-            self.stats.version_rejects += 1;
-            return Publish::StaleVersion;
-        }
-        let re = rows.len() / tokens.len();
-        match self.row_elems {
-            None => self.row_elems = Some(re),
-            Some(r) => assert_eq!(r, re, "row geometry changed across engines"),
-        }
-        let mut hasher = PrefixHasher::new();
-        let mut hashed = 0usize;
-        let mut stored = 0usize;
-        let mut evicted = 0usize;
-        let mut dropped = false;
-        // Keys of this prefix's chain verified or stored so far: the
-        // eviction pass must never pick them, or storing a later block
-        // would orphan the earlier ones (a fetch stops at the hole).
-        let mut chain: Vec<u64> = Vec::new();
-        for end in self.boundaries(tokens.len()) {
-            while hashed < end {
-                hasher.push(tokens[hashed]);
-                hashed += 1;
-            }
-            let key = hasher.value();
-            let start = self.frag_start(end);
-            let is_last = end == tokens.len();
-            let t = self.tick();
-            if let Some(e) = self.entries.get_mut(&key) {
-                if e.end == end && e.tokens == tokens[start..end] {
-                    // Dedup hit: refresh recency, upgrade terminal logits.
-                    e.last_use = t;
-                    if is_last && e.logits.is_none() {
-                        if let Some(l) = logits {
-                            e.logits = Some(l.to_vec());
-                        }
-                    }
-                    chain.push(key);
-                    continue;
-                }
-                // 64-bit key collision with a different prefix: leave the
-                // resident entry alone; deeper blocks of ours would be
-                // unreachable past the mismatch, so stop here.
-                dropped = true;
-                break;
-            }
-            while self.entries.len() >= self.capacity {
-                if !allow_evict || !self.evict_one(&chain) {
-                    break;
-                }
-                evicted += 1;
-            }
-            if self.entries.len() >= self.capacity {
-                self.stats.publish_drops += 1;
-                dropped = true;
-                break;
-            }
-            self.entries.insert(
-                key,
-                Entry {
-                    end,
-                    tokens: tokens[start..end].to_vec(),
-                    rows: rows[start * re..end * re].to_vec(),
-                    logits: if is_last { logits.map(<[f32]>::to_vec) } else { None },
-                    refs: 0,
-                    last_use: t,
-                    created: t,
-                },
-            );
-            chain.push(key);
-            stored += 1;
-        }
-        if stored > 0 {
-            self.stats.publishes += 1;
-            self.stats.publish_blocks += stored as u64;
-            Publish::Stored { blocks: stored, evicted }
-        } else if dropped {
-            Publish::Dropped
-        } else {
-            self.stats.publish_dups += 1;
-            Publish::Duplicate
-        }
-    }
-
-    /// Longest published prefix of `tokens` reconstructable from consecutive
-    /// block entries. Returns `None` unless it covers strictly more than
-    /// `min_len` tokens (the caller's local radix match — shorter coverage
-    /// would import nothing new). On a hit, every matched entry gains a
-    /// lease reference; the caller must release them via the facade.
-    pub fn fetch_longest(
-        &mut self,
-        tokens: &[u32],
-        min_len: usize,
-        version: u64,
-    ) -> Option<FetchedCore> {
-        self.stats.fetches += 1;
-        if self.version != Some(version) {
-            self.stats.version_rejects += 1;
-            self.stats.fetch_misses += 1;
-            return None;
-        }
-        let Some(re) = self.row_elems else {
-            // Nothing has ever been published.
-            self.stats.fetch_misses += 1;
-            return None;
-        };
-        let mut hasher = PrefixHasher::new();
-        let mut hashed = 0usize;
-        let mut covered = 0usize;
-        let mut keys: Vec<u64> = Vec::new();
-        let mut rows: Vec<f32> = Vec::new();
-        let mut logits: Option<Vec<f32>> = None;
-        for end in self.boundaries(tokens.len()) {
-            while hashed < end {
-                hasher.push(tokens[hashed]);
-                hashed += 1;
-            }
-            let key = hasher.value();
-            let Some(e) = self.entries.get(&key) else { break };
-            // `covered` is exactly this entry's fragment start when the chain
-            // is contiguous; verify tokens to reject hash collisions.
-            if e.end != end || e.tokens != tokens[covered..end] {
-                break;
-            }
-            rows.extend_from_slice(&e.rows);
-            keys.push(key);
-            covered = end;
-            if covered == tokens.len() {
-                logits = e.logits.clone();
-            }
-        }
-        if covered <= min_len {
-            self.stats.fetch_misses += 1;
-            return None;
-        }
-        let t = self.tick();
-        for k in &keys {
-            let e = self.entries.get_mut(k).expect("matched above");
-            e.refs += 1;
-            e.last_use = t;
-        }
-        self.stats.fetch_hits += 1;
-        self.stats.fetch_tokens += (covered - min_len) as u64;
-        debug_assert_eq!(rows.len(), covered * re);
-        Some(FetchedCore { len: covered, rows, logits, keys })
-    }
-
-    /// Drop one lease reference per key (facade guarantees epoch validity).
-    pub fn release(&mut self, keys: &[u64]) {
-        for k in keys {
-            if let Some(e) = self.entries.get_mut(k) {
-                debug_assert!(e.refs > 0, "store lease release without acquire");
-                e.refs = e.refs.saturating_sub(1);
-            }
-        }
-    }
-
-    /// Evict the best unleased entry per the policy, never touching
-    /// `protect` (the publish-in-progress chain). False when every entry is
-    /// leased or protected (or the store is empty).
-    fn evict_one(&mut self, protect: &[u64]) -> bool {
-        let victim = self
-            .entries
-            .iter()
-            .filter(|(k, e)| e.refs == 0 && !protect.contains(*k))
-            .min_by_key(|(k, e)| {
-                let key = match self.policy {
-                    EvictPolicy::Lru => e.last_use,
-                    EvictPolicy::Fifo => e.created,
-                };
-                (key, **k)
-            })
-            .map(|(k, _)| *k);
-        match victim {
-            Some(k) => {
-                self.entries.remove(&k);
-                self.stats.evictions += 1;
-                true
-            }
-            None => false,
-        }
-    }
-
-    /// Structural invariants for the proptests.
-    pub fn check(&self) -> Result<(), String> {
-        if self.entries.len() > self.capacity {
-            return Err(format!(
-                "{} entries exceed capacity {}",
-                self.entries.len(),
-                self.capacity
-            ));
-        }
-        for (k, e) in &self.entries {
-            if e.tokens.is_empty() || e.tokens.len() > self.block_tokens {
-                return Err(format!("entry {k:#x}: fragment of {} tokens", e.tokens.len()));
-            }
-            let start = self.frag_start(e.end);
-            if e.end - start != e.tokens.len() {
-                return Err(format!(
-                    "entry {k:#x}: fragment {} tokens for range [{start}, {})",
-                    e.tokens.len(),
-                    e.end
-                ));
-            }
-            if let Some(re) = self.row_elems {
-                if e.rows.len() != e.tokens.len() * re {
-                    return Err(format!("entry {k:#x}: row bookkeeping corrupt"));
-                }
-            }
-        }
-        Ok(())
-    }
 }

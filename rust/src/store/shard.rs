@@ -1,0 +1,648 @@
+//! One shard of the cross-engine segment store.
+//!
+//! The store is partitioned into `S` independent shards, each behind its own
+//! lock in the [`super::SharedKvStore`] facade. A whole *chain* (every block
+//! of one published prefix) lives in exactly one shard — the facade routes
+//! by the hash of the chain's first block ([`super::hash`]), so publish,
+//! fetch and the residency probe each lock a single shard and the chain
+//! invariants (contiguity, publish-never-evicts-own-chain, lease pinning)
+//! stay shard-local. Capacity is a per-shard slice of the configured block
+//! budget; version/epoch bookkeeping is replicated per shard and advanced in
+//! lockstep by the facade, so `shards = 1` is bit-identical to the old
+//! single-`StoreCore` store.
+//!
+//! Eviction is O(log n) amortised via a lazily-invalidated min-heap of
+//! candidate entries, replacing the old O(n) scan under the (then-global)
+//! mutex: every transition *into* evictability (entry stored, last lease
+//! released, LRU key refreshed) pushes a `(policy key, entry key)` heap
+//! entry; pops discard entries whose segment has since been evicted,
+//! re-leased or re-keyed. The heap orders by `(policy key, entry key)` —
+//! exactly the old scan's `min_by_key` tie-break — so the victim *sequence*
+//! is identical to the linear scan's (the differential proptest below drives
+//! both against the same workloads and requires identical post-states). The
+//! `check()` covering invariant — every currently evictable entry has a live
+//! heap entry carrying its current key — is what keeps laziness sound.
+
+use super::hash::chain_keys;
+use super::segments::{Entry, FetchedCore, Publish};
+use super::stats::StoreStats;
+use crate::engine::kvcache::EvictPolicy;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+/// A lazily-invalidated eviction candidate: `(policy key, entry key)`,
+/// min-ordered. Ticks are never reused, so a re-published entry always
+/// carries fresh policy keys and stale heap entries can never match it.
+type HeapEntry = Reverse<(u64, u64)>;
+
+/// The state behind one facade lock: a content-addressed map of
+/// block-granular KV segments covering one hash range of chains.
+#[derive(Debug)]
+pub(crate) struct Shard {
+    block_tokens: usize,
+    capacity: usize,
+    policy: EvictPolicy,
+    /// f32 elements per token row; learned from the first publish and
+    /// enforced afterwards (all engines share one KV geometry).
+    row_elems: Option<usize>,
+    entries: HashMap<u64, Entry>,
+    /// Params version the resident segments were computed under.
+    version: Option<u64>,
+    /// Lease epoch; bumped on every flush so stale releases are ignored.
+    pub(crate) epoch: u64,
+    tick: u64,
+    /// Min-heap of eviction candidates (see module docs).
+    evictable: BinaryHeap<HeapEntry>,
+    pub(crate) stats: StoreStats,
+    /// Differential testing only: route evictions through the old O(n)
+    /// linear scan instead of the heap.
+    #[cfg(test)]
+    pub(crate) use_scan_evict: bool,
+}
+
+impl Shard {
+    pub fn new(block_tokens: usize, capacity: usize, policy: EvictPolicy) -> Shard {
+        assert!(block_tokens > 0 && capacity > 0, "degenerate shard geometry");
+        Shard {
+            block_tokens,
+            capacity,
+            policy,
+            row_elems: None,
+            entries: HashMap::new(),
+            version: None,
+            epoch: 0,
+            tick: 0,
+            evictable: BinaryHeap::new(),
+            stats: StoreStats::default(),
+            #[cfg(test)]
+            use_scan_evict: false,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn live_blocks(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn leased_blocks(&self) -> usize {
+        self.entries.values().filter(|e| e.refs > 0).count()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// The eviction-policy ordering key for an entry.
+    fn evict_key(&self, e: &Entry) -> u64 {
+        match self.policy {
+            EvictPolicy::Lru => e.last_use,
+            EvictPolicy::Fifo => e.created,
+        }
+    }
+
+    /// Push a heap entry if `key` currently names an unleased entry. Cheap
+    /// and idempotent: duplicates and soon-stale entries are discarded at
+    /// pop time, and [`Shard::compact_heap`] bounds pile-up on touch-heavy
+    /// workloads that never evict.
+    fn heap_push(&mut self, key: u64) {
+        let entry = match self.entries.get(&key) {
+            Some(e) if e.refs == 0 => Reverse((self.evict_key(e), key)),
+            _ => return,
+        };
+        self.evictable.push(entry);
+        // Amortised O(1): a rebuild costs O(live entries) and is triggered
+        // only after at least that many pushes since the last one.
+        if self.evictable.len() > self.entries.len() * 2 + 64 {
+            self.compact_heap();
+        }
+    }
+
+    /// Rebuild the candidate heap from scratch: one current-key entry per
+    /// unleased segment, every stale entry dropped.
+    fn compact_heap(&mut self) {
+        let mut fresh = BinaryHeap::with_capacity(self.entries.len());
+        for (k, e) in &self.entries {
+            if e.refs == 0 {
+                fresh.push(Reverse((self.evict_key(e), *k)));
+            }
+        }
+        self.evictable = fresh;
+    }
+
+    /// Bind the shard to a params version. A real bump flushes every segment
+    /// (cached KV is a function of the weights) and invalidates outstanding
+    /// leases; re-announcing the current version keeps the shard warm.
+    /// Returns true when a flush happened.
+    pub fn set_version(&mut self, v: u64) -> bool {
+        if self.version == Some(v) {
+            return false;
+        }
+        if self.version.is_some() {
+            self.stats.clears += 1;
+        }
+        self.entries.clear();
+        self.evictable.clear();
+        self.epoch += 1;
+        self.version = Some(v);
+        true
+    }
+
+    /// Publish a completed prefix: one entry per block boundary (existing
+    /// blocks are deduped and LRU-refreshed; `logits` attach to the final
+    /// boundary and never get erased by a later `None`). With `allow_evict`,
+    /// unleased entries are evicted to make room (never this prefix's own
+    /// chain — that would orphan the blocks just stored); without it, a full
+    /// shard drops the remainder instead, so dedup refreshes and free-space
+    /// growth stay available to budget-exhausted engines. Stops at the
+    /// first un-storable block, since deeper blocks would be unreachable
+    /// through the hole anyway.
+    pub fn publish(
+        &mut self,
+        tokens: &[u32],
+        rows: &[f32],
+        logits: Option<&[f32]>,
+        version: u64,
+        allow_evict: bool,
+    ) -> Publish {
+        assert!(!tokens.is_empty(), "cannot publish an empty prefix");
+        assert_eq!(rows.len() % tokens.len(), 0, "ragged rows");
+        if self.version != Some(version) {
+            self.stats.version_rejects += 1;
+            return Publish::StaleVersion;
+        }
+        let re = rows.len() / tokens.len();
+        match self.row_elems {
+            None => self.row_elems = Some(re),
+            Some(r) => assert_eq!(r, re, "row geometry changed across engines"),
+        }
+        let mut stored = 0usize;
+        let mut evicted = 0usize;
+        let mut dropped = false;
+        // Keys of this prefix's chain verified or stored so far: the
+        // eviction pass must never pick them, or storing a later block
+        // would orphan the earlier ones (a fetch stops at the hole).
+        let mut chain: Vec<u64> = Vec::new();
+        for link in chain_keys(tokens, self.block_tokens) {
+            let (start, end, key) = (link.start, link.end, link.key);
+            let is_last = end == tokens.len();
+            let t = self.tick();
+            if let Some(e) = self.entries.get_mut(&key) {
+                if e.end == end && e.tokens == tokens[start..end] {
+                    // Dedup hit: refresh recency, upgrade terminal logits.
+                    e.last_use = t;
+                    if is_last && e.logits.is_none() {
+                        if let Some(l) = logits {
+                            e.logits = Some(l.to_vec());
+                        }
+                    }
+                    chain.push(key);
+                    // An LRU key change goes through the heap like any
+                    // other transition (the old entry goes stale in place).
+                    if self.policy == EvictPolicy::Lru {
+                        self.heap_push(key);
+                    }
+                    continue;
+                }
+                // 64-bit key collision with a different prefix: leave the
+                // resident entry alone; deeper blocks of ours would be
+                // unreachable past the mismatch, so stop here.
+                dropped = true;
+                break;
+            }
+            while self.entries.len() >= self.capacity {
+                if !allow_evict || !self.evict_one(&chain) {
+                    break;
+                }
+                evicted += 1;
+            }
+            if self.entries.len() >= self.capacity {
+                self.stats.publish_drops += 1;
+                dropped = true;
+                break;
+            }
+            self.entries.insert(
+                key,
+                Entry {
+                    end,
+                    tokens: tokens[start..end].to_vec(),
+                    rows: rows[start * re..end * re].to_vec(),
+                    logits: if is_last { logits.map(<[f32]>::to_vec) } else { None },
+                    refs: 0,
+                    last_use: t,
+                    created: t,
+                },
+            );
+            chain.push(key);
+            stored += 1;
+            self.heap_push(key);
+        }
+        if stored > 0 {
+            self.stats.publishes += 1;
+            self.stats.publish_blocks += stored as u64;
+            Publish::Stored { blocks: stored, evicted }
+        } else if dropped {
+            Publish::Dropped
+        } else {
+            self.stats.publish_dups += 1;
+            Publish::Duplicate
+        }
+    }
+
+    /// Longest published prefix of `tokens` reconstructable from consecutive
+    /// block entries. Returns `None` unless it covers strictly more than
+    /// `min_len` tokens (the caller's local radix match — shorter coverage
+    /// would import nothing new). On a hit, every matched entry gains a
+    /// lease reference; the caller must release them via the facade.
+    pub fn fetch_longest(
+        &mut self,
+        tokens: &[u32],
+        min_len: usize,
+        version: u64,
+    ) -> Option<FetchedCore> {
+        self.stats.fetches += 1;
+        if self.version != Some(version) {
+            self.stats.version_rejects += 1;
+            self.stats.fetch_misses += 1;
+            return None;
+        }
+        let Some(re) = self.row_elems else {
+            // Nothing has ever been published into this shard.
+            self.stats.fetch_misses += 1;
+            return None;
+        };
+        let mut covered = 0usize;
+        let mut keys: Vec<u64> = Vec::new();
+        let mut rows: Vec<f32> = Vec::new();
+        let mut logits: Option<Vec<f32>> = None;
+        for link in chain_keys(tokens, self.block_tokens) {
+            let Some(e) = self.entries.get(&link.key) else { break };
+            // `link.start` is exactly `covered` while the chain is
+            // contiguous; verify tokens to reject hash collisions.
+            if e.end != link.end || e.tokens != tokens[link.start..link.end] {
+                break;
+            }
+            rows.extend_from_slice(&e.rows);
+            keys.push(link.key);
+            covered = link.end;
+            if covered == tokens.len() {
+                logits = e.logits.clone();
+            }
+        }
+        if covered <= min_len {
+            self.stats.fetch_misses += 1;
+            return None;
+        }
+        let t = self.tick();
+        for k in &keys {
+            let e = self.entries.get_mut(k).expect("matched above");
+            e.refs += 1;
+            e.last_use = t;
+            // Acquiring the lease removed it from evictability; any live
+            // heap entry goes stale and is discarded at pop time.
+        }
+        self.stats.fetch_hits += 1;
+        self.stats.fetch_tokens += (covered - min_len) as u64;
+        debug_assert_eq!(rows.len(), covered * re);
+        Some(FetchedCore { len: covered, rows, logits, keys })
+    }
+
+    /// Tokens of `tokens` covered by resident segments, block-granular —
+    /// the router's warmth probe. Non-mutating: refreshes no LRU stamps,
+    /// acquires no lease, counts no fetch stats (mirrors the radix cache's
+    /// `resident_prefix`). Whatever is resident is by construction valid for
+    /// the shard's current version — a version bump flushes everything.
+    pub fn residency(&self, tokens: &[u32]) -> usize {
+        let mut covered = 0usize;
+        for link in chain_keys(tokens, self.block_tokens) {
+            match self.entries.get(&link.key) {
+                Some(e) if e.end == link.end && e.tokens == tokens[link.start..link.end] => {
+                    covered = link.end;
+                }
+                _ => break,
+            }
+        }
+        covered
+    }
+
+    /// Drop one lease reference per key (facade guarantees epoch validity).
+    pub fn release(&mut self, keys: &[u64]) {
+        for k in keys {
+            if let Some(e) = self.entries.get_mut(k) {
+                debug_assert!(e.refs > 0, "store lease release without acquire");
+                e.refs = e.refs.saturating_sub(1);
+            }
+            // Back at zero refs the entry is evictable again: re-cover it.
+            self.heap_push(*k);
+        }
+    }
+
+    /// Evict the best unleased entry per the policy, never touching
+    /// `protect` (the publish-in-progress chain). False when every entry is
+    /// leased or protected (or the shard is empty).
+    ///
+    /// O(log n) amortised: pops the lazily-invalidated candidate heap,
+    /// discarding entries whose segment was evicted, re-leased or re-keyed
+    /// since the push. Valid-but-protected candidates are set aside and
+    /// re-pushed after the selection so later evictions still see them. The
+    /// pop order over *current* keys is `(policy key, entry key)` — the old
+    /// linear scan's exact ordering, so victims are identical.
+    fn evict_one(&mut self, protect: &[u64]) -> bool {
+        #[cfg(test)]
+        if self.use_scan_evict {
+            return self.evict_one_scan(protect);
+        }
+        let mut deferred: Vec<HeapEntry> = Vec::new();
+        let victim = loop {
+            let Some(Reverse((pkey, key))) = self.evictable.pop() else { break None };
+            self.stats.evict_probes += 1;
+            let live = self
+                .entries
+                .get(&key)
+                .is_some_and(|e| e.refs == 0 && self.evict_key(e) == pkey);
+            if !live {
+                continue; // stale: evicted, re-leased or re-keyed since push
+            }
+            if protect.contains(&key) {
+                deferred.push(Reverse((pkey, key)));
+                continue;
+            }
+            break Some(key);
+        };
+        // Protected candidates stay evictable for later passes.
+        for d in deferred {
+            self.evictable.push(d);
+        }
+        match victim {
+            Some(k) => {
+                self.entries.remove(&k);
+                self.stats.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// The old O(n) eviction scan, kept verbatim as the differential-test
+    /// oracle: the heap path must pick byte-identical victim sequences.
+    #[cfg(test)]
+    pub(crate) fn evict_one_scan(&mut self, protect: &[u64]) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(k, e)| e.refs == 0 && !protect.contains(*k))
+            .min_by_key(|(k, e)| (self.evict_key(e), **k))
+            .map(|(k, _)| *k);
+        match victim {
+            Some(k) => {
+                self.entries.remove(&k);
+                self.stats.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Resident entry keys, sorted (differential-test state comparison).
+    #[cfg(test)]
+    pub(crate) fn resident_keys(&self) -> Vec<u64> {
+        let mut ks: Vec<u64> = self.entries.keys().copied().collect();
+        ks.sort_unstable();
+        ks
+    }
+
+    /// Structural invariants for the proptests.
+    pub fn check(&self) -> Result<(), String> {
+        if self.entries.len() > self.capacity {
+            return Err(format!(
+                "{} entries exceed shard capacity {}",
+                self.entries.len(),
+                self.capacity
+            ));
+        }
+        for (k, e) in &self.entries {
+            if e.tokens.is_empty() || e.tokens.len() > self.block_tokens {
+                return Err(format!("entry {k:#x}: fragment of {} tokens", e.tokens.len()));
+            }
+            let start = if e.end % self.block_tokens == 0 {
+                e.end - self.block_tokens
+            } else {
+                e.end / self.block_tokens * self.block_tokens
+            };
+            if e.end - start != e.tokens.len() {
+                return Err(format!(
+                    "entry {k:#x}: fragment {} tokens for range [{start}, {})",
+                    e.tokens.len(),
+                    e.end
+                ));
+            }
+            if let Some(re) = self.row_elems {
+                if e.rows.len() != e.tokens.len() * re {
+                    return Err(format!("entry {k:#x}: row bookkeeping corrupt"));
+                }
+            }
+        }
+        // Heap covering invariant: every currently evictable entry must have
+        // a live heap entry carrying its current policy key, or eviction
+        // could miss it (or pick a worse victim than the linear scan).
+        #[cfg(test)]
+        if self.use_scan_evict {
+            return Ok(());
+        }
+        for (k, e) in &self.entries {
+            if e.refs > 0 {
+                continue;
+            }
+            let key = self.evict_key(e);
+            let covered = self.evictable.iter().any(|Reverse((pk, ek))| *ek == *k && *pk == key);
+            if !covered {
+                return Err(format!(
+                    "evictable entry {k:#x} (key {key}) has no live heap entry"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg64;
+
+    const RE: usize = 3;
+
+    fn rows_for(seq: &[u32]) -> Vec<f32> {
+        let mut acc = 11u64;
+        let mut out = Vec::with_capacity(seq.len() * RE);
+        for &t in seq {
+            acc = acc.wrapping_mul(2862933555777941757).wrapping_add(u64::from(t) + 1);
+            for e in 0..RE {
+                out.push(((acc >> (e * 7 % 50)) & 0xFF) as f32);
+            }
+        }
+        out
+    }
+
+    fn logits_for(seq: &[u32]) -> Vec<f32> {
+        vec![seq.iter().sum::<u32>() as f32, seq.len() as f32]
+    }
+
+    #[test]
+    fn residency_probe_is_non_mutating_and_block_granular() {
+        let mut s = Shard::new(4, 16, EvictPolicy::Lru);
+        s.set_version(1);
+        let a: Vec<u32> = (0..10).collect(); // 2 full blocks + 2-token tail
+        s.publish(&a, &rows_for(&a), Some(&logits_for(&a)), 1, true);
+        assert_eq!(s.residency(&a), 10, "fully published prefix is fully resident");
+        // A diverging suffix shares the aligned template head only.
+        let b: Vec<u32> = [&a[..8], &[90, 91][..]].concat();
+        assert_eq!(s.residency(&b), 8);
+        assert_eq!(s.residency(&[70, 71]), 0, "cold prefix has no residency");
+        // The probe refreshed nothing: stats and heap state untouched, so
+        // the LRU victim order is exactly what the publishes established.
+        assert_eq!(s.stats.fetches, 0);
+        assert_eq!(s.stats.fetch_hits, 0);
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn heap_stays_bounded_under_dedup_churn() {
+        // Republishing the same prefix refreshes its LRU keys each time;
+        // without compaction the heap would grow one entry per block per
+        // publish, forever.
+        let mut s = Shard::new(2, 8, EvictPolicy::Lru);
+        s.set_version(1);
+        let a: Vec<u32> = (0..8).collect();
+        for _ in 0..10_000 {
+            s.publish(&a, &rows_for(&a), None, 1, true);
+        }
+        assert!(
+            s.evictable.len() <= s.entries.len() * 2 + 64,
+            "candidate heap grew unbounded: {} entries for {} segments",
+            s.evictable.len(),
+            s.entries.len()
+        );
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn eviction_probes_stay_sublinear_in_entry_count() {
+        // Steady-state churn over a large shard: with the old scan every
+        // eviction cost O(entries); the heap path must examine a bounded
+        // number of candidates per eviction.
+        let cap = 512usize;
+        let mut s = Shard::new(1, cap, EvictPolicy::Lru);
+        s.set_version(1);
+        for i in 0..(cap as u32 * 4) {
+            s.publish(&[i, i + 1], &rows_for(&[i, i + 1]), None, 1, true);
+        }
+        let evictions = s.stats.evictions;
+        assert!(evictions as usize > cap, "workload must actually churn");
+        assert!(
+            s.stats.evict_probes < evictions * 4 + 64,
+            "{} probes for {} evictions looks linear in {} entries",
+            s.stats.evict_probes,
+            evictions,
+            cap
+        );
+        s.check().unwrap();
+    }
+
+    /// The differential satellite: identical proptest-generated workloads
+    /// drive the heap path and the old O(n) scan; victim sets and post-state
+    /// must be identical after every operation.
+    #[test]
+    fn prop_heap_eviction_matches_linear_scan() {
+        prop::quick(
+            "shard eviction: heap == linear scan",
+            |rng: &mut Pcg64, size| {
+                let bt = rng.range(1, 5);
+                let capacity = rng.range(2, 16);
+                let fifo = rng.range(0, 2) == 0;
+                let n_templates = rng.range(1, 4);
+                let templates: Vec<Vec<u32>> = (0..n_templates)
+                    .map(|_| (0..rng.range(1, 10)).map(|_| rng.range(0, 5) as u32).collect())
+                    .collect();
+                let ops: Vec<(u64, Vec<u32>)> = (0..size.scaled(60))
+                    .map(|_| {
+                        let t = &templates[rng.range(0, n_templates)];
+                        let mut p = t.clone();
+                        p.extend((0..rng.range(0, 5)).map(|_| rng.range(0, 5) as u32));
+                        (rng.next_u64(), p)
+                    })
+                    .collect();
+                (bt, capacity, fifo, ops)
+            },
+            |(bt, capacity, fifo, ops)| {
+                let policy = if *fifo { EvictPolicy::Fifo } else { EvictPolicy::Lru };
+                let mut heap = Shard::new(*bt, *capacity, policy);
+                let mut scan = Shard::new(*bt, *capacity, policy);
+                scan.use_scan_evict = true;
+                heap.set_version(1);
+                scan.set_version(1);
+                // Parallel lease books: the same ops acquire/release the
+                // same keys on both shards.
+                let mut leases_h: Vec<Vec<u64>> = Vec::new();
+                let mut leases_s: Vec<Vec<u64>> = Vec::new();
+                for (op, prompt) in ops {
+                    match op % 8 {
+                        0..=3 => {
+                            let logits = logits_for(prompt);
+                            let a = heap.publish(prompt, &rows_for(prompt), Some(&logits), 1, op % 2 == 0);
+                            let b = scan.publish(prompt, &rows_for(prompt), Some(&logits), 1, op % 2 == 0);
+                            if a != b {
+                                return Err(format!("publish diverged: {a:?} vs {b:?}"));
+                            }
+                        }
+                        4..=5 => {
+                            let min_len = (*op as usize / 8) % (prompt.len() + 1);
+                            let a = heap.fetch_longest(prompt, min_len, 1);
+                            let b = scan.fetch_longest(prompt, min_len, 1);
+                            match (a, b) {
+                                (None, None) => {}
+                                (Some(a), Some(b)) => {
+                                    if a.len != b.len || a.rows != b.rows || a.keys != b.keys {
+                                        return Err("fetch results diverged".into());
+                                    }
+                                    leases_h.push(a.keys);
+                                    leases_s.push(b.keys);
+                                }
+                                _ => return Err("fetch hit/miss diverged".into()),
+                            }
+                        }
+                        _ => {
+                            if !leases_h.is_empty() {
+                                let i = (*op as usize / 8) % leases_h.len();
+                                heap.release(&leases_h.swap_remove(i));
+                                scan.release(&leases_s.swap_remove(i));
+                            }
+                        }
+                    }
+                    if heap.resident_keys() != scan.resident_keys() {
+                        return Err(format!(
+                            "resident sets diverged after {prompt:?}: heap {} vs scan {} entries",
+                            heap.live_blocks(),
+                            scan.live_blocks()
+                        ));
+                    }
+                    if heap.stats.evictions != scan.stats.evictions {
+                        return Err(format!(
+                            "victim counts diverged: heap {} vs scan {}",
+                            heap.stats.evictions, scan.stats.evictions
+                        ));
+                    }
+                    if heap.leased_blocks() != scan.leased_blocks() {
+                        return Err("lease pinning diverged".into());
+                    }
+                    heap.check()?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

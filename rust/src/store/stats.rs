@@ -1,10 +1,11 @@
 //! Shared-store counters.
 //!
-//! One [`StoreStats`] instance lives inside the store (global across engines,
-//! unlike the per-engine [`crate::engine::CacheStats`]); the coordinator
-//! snapshots it per iteration and reports deltas next to the per-engine
-//! cache metrics, so the cross-engine contribution is separable from local
-//! radix hits in the CSV / trace outputs.
+//! One [`StoreStats`] instance lives inside *each shard* (global across
+//! engines, unlike the per-engine [`crate::engine::CacheStats`]); the facade
+//! folds the shards together with [`StoreStats::absorb`] on every snapshot.
+//! The coordinator snapshots the aggregate per iteration and reports deltas
+//! next to the per-engine cache metrics, so the cross-engine contribution is
+//! separable from local radix hits in the CSV / trace outputs.
 
 /// Cumulative counters of the cross-engine segment store.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -33,6 +34,12 @@ pub struct StoreStats {
     pub version_rejects: u64,
     /// Unleased block entries evicted to make room.
     pub evictions: u64,
+    /// Candidate-heap entries examined (popped) across evictions — the
+    /// heap-path cost counter. With the lazily-invalidated min-heap this
+    /// stays O(1) amortised per eviction; the old linear scan would have
+    /// cost O(live entries) per eviction instead, so benches assert
+    /// `evict_probes` stays far below `evictions * live_entries`.
+    pub evict_probes: u64,
     /// Whole-store flushes (a real params-version bump).
     pub clears: u64,
 }
@@ -45,6 +52,24 @@ impl StoreStats {
         } else {
             self.fetch_hits as f64 / self.fetches as f64
         }
+    }
+
+    /// Fold another shard's counters into this one (facade aggregation).
+    pub fn absorb(&mut self, o: &StoreStats) {
+        self.publishes += o.publishes;
+        self.publish_blocks += o.publish_blocks;
+        self.publish_dups += o.publish_dups;
+        self.publish_drops += o.publish_drops;
+        self.fetches += o.fetches;
+        self.fetch_hits += o.fetch_hits;
+        self.fetch_misses += o.fetch_misses;
+        self.fetch_tokens += o.fetch_tokens;
+        self.version_rejects += o.version_rejects;
+        self.evictions += o.evictions;
+        self.evict_probes += o.evict_probes;
+        // Shards flush in lockstep (the facade drives every set_version), so
+        // the whole-store flush count is any one shard's — not the sum.
+        self.clears = self.clears.max(o.clears);
     }
 }
 
@@ -59,5 +84,27 @@ mod tests {
         s.fetches = 4;
         s.fetch_hits = 3;
         assert!((s.fetch_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorb_sums_counters_but_not_lockstep_clears() {
+        let mut total = StoreStats::default();
+        for _ in 0..3 {
+            let shard = StoreStats {
+                publishes: 2,
+                fetches: 5,
+                fetch_hits: 1,
+                evictions: 4,
+                evict_probes: 6,
+                clears: 7,
+                ..StoreStats::default()
+            };
+            total.absorb(&shard);
+        }
+        assert_eq!(total.publishes, 6);
+        assert_eq!(total.fetches, 15);
+        assert_eq!(total.evictions, 12);
+        assert_eq!(total.evict_probes, 18);
+        assert_eq!(total.clears, 7, "lockstep flushes must not triple-count");
     }
 }

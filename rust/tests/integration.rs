@@ -207,6 +207,7 @@ fn cross_engine_store_shares_templates_across_engines() {
         block_tokens: cfg.engine.cache_block,
         capacity_blocks: cfg.engine.store_blocks,
         policy: cfg.engine.store_evict,
+        shards: cfg.engine.store_shards,
     }));
     let mk_engine = |seed: u64, store: Option<Arc<SharedKvStore>>| {
         let rt = Runtime::load_validated(&dir, &cfg).unwrap();

@@ -1,0 +1,196 @@
+//! Multi-threaded stress harness for the sharded cross-engine KV store.
+//!
+//! N publisher / fetcher / evictor threads (plain `std::thread`, no extra
+//! deps) hammer a deliberately small-capacity [`SharedKvStore`] and assert,
+//! *under real contention*, the invariants the single-threaded proptests pin:
+//!
+//! * **bit-exact fetch** — every fetched prefix equals the deterministic
+//!   prefix-dependent row oracle, always (rows are copied under the shard
+//!   lock, so no reader can observe a torn or evicted segment);
+//! * **lease pinning** — while a fetch lease is held, re-fetching the same
+//!   prefix returns the identical coverage and bytes (the leased chain
+//!   cannot be evicted underneath the holder);
+//! * **capacity budget** — `live_blocks() <= capacity_blocks()` at every
+//!   observation point (each shard enforces its slice under its own lock);
+//! * **drain** — after all threads join and release, no leases leak and the
+//!   structural `check()` (including the heap covering invariant) passes.
+//!
+//! Deterministic per-thread seeds (`SEED` + thread index) make a failure
+//! reproducible; the *interleaving* is of course free to vary — that is the
+//! point. CI runs this in `--release` with `RUST_TEST_THREADS` unpinned so
+//! the scheduler genuinely interleaves the workers.
+
+use pa_rl::engine::kvcache::EvictPolicy;
+use pa_rl::store::{SharedKvStore, StoreCfg};
+use pa_rl::util::rng::Pcg64;
+use std::sync::Arc;
+
+const SEED: u64 = 0x57AE55;
+const RE: usize = 8; // f32 row elements per token
+const OPS_PER_THREAD: usize = 600;
+const N_THREADS: usize = 9; // 3 publishers + 3 fetchers + 3 evictors
+
+/// Deterministic prefix-dependent rows (row p depends on tokens[..=p] only),
+/// mirroring real KV — the bit-exactness oracle.
+fn rows_for(seq: &[u32]) -> Vec<f32> {
+    let mut acc = 11u64;
+    let mut out = Vec::with_capacity(seq.len() * RE);
+    for &t in seq {
+        acc = acc.wrapping_mul(2862933555777941757).wrapping_add(u64::from(t) + 1);
+        for e in 0..RE {
+            out.push(((acc >> (e * 7 % 50)) & 0xFF) as f32);
+        }
+    }
+    out
+}
+
+fn logits_for(seq: &[u32]) -> Vec<f32> {
+    vec![seq.iter().sum::<u32>() as f32, seq.len() as f32]
+}
+
+/// Template-sharing prompt: a shared few-shot head plus a short random tail.
+fn prompt_for(rng: &mut Pcg64, templates: &[Vec<u32>]) -> Vec<u32> {
+    let mut p = templates[rng.range(0, templates.len())].clone();
+    p.extend((0..rng.range(0, 6)).map(|_| rng.range(0, 9) as u32));
+    p
+}
+
+fn stress(shards: usize) {
+    let bt = 4usize;
+    let store = Arc::new(SharedKvStore::new(StoreCfg {
+        block_tokens: bt,
+        capacity_blocks: 48, // small on purpose: constant eviction pressure
+        policy: EvictPolicy::Lru,
+        shards,
+    }));
+    store.set_version(1);
+    let templates: Arc<Vec<Vec<u32>>> =
+        Arc::new((0..6u32).map(|t| (0..8).map(|i| t * 16 + i).collect()).collect());
+
+    let mut handles = Vec::new();
+    for th in 0..N_THREADS {
+        let store = store.clone();
+        let templates = templates.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(SEED, th as u64 + 1);
+            for op in 0..OPS_PER_THREAD {
+                match th % 3 {
+                    0 => {
+                        // Publisher: template-sharing prefixes, terminal
+                        // logits included — the cross-engine publish path.
+                        let p = prompt_for(&mut rng, &templates);
+                        let logits = logits_for(&p);
+                        store.publish(&p, &rows_for(&p), Some(&logits), 1);
+                    }
+                    1 => {
+                        // Fetcher: verify bit-exactness, then exercise lease
+                        // pinning — a held lease must keep the chain intact
+                        // against the evictors on the other threads.
+                        let p = prompt_for(&mut rng, &templates);
+                        if let Some(f) = store.fetch_longest(&p, 0, 1) {
+                            assert_eq!(
+                                f.rows,
+                                rows_for(&p[..f.len]),
+                                "fetched rows diverge from the oracle under contention"
+                            );
+                            if let Some(l) = &f.logits {
+                                assert_eq!(f.len, p.len(), "logits without full coverage");
+                                assert_eq!(*l, logits_for(&p), "terminal logits corrupt");
+                            }
+                            let again = store
+                                .fetch_longest(&p[..f.len], 0, 1)
+                                .expect("leased chain must stay fetchable");
+                            assert_eq!(again.len, f.len, "leased coverage shrank");
+                            assert_eq!(again.rows, f.rows, "leased chain mutated");
+                            store.release(again.lease);
+                            store.release(f.lease);
+                        }
+                    }
+                    _ => {
+                        // Evictor: distinct cold prefixes churn the heap and
+                        // force victim selection under every interleaving.
+                        let len = rng.range(1, 10);
+                        let cold: Vec<u32> =
+                            (0..len).map(|_| 100 + rng.range(0, 60) as u32).collect();
+                        store.publish(&cold, &rows_for(&cold), None, 1);
+                    }
+                }
+                // The block budget must hold at every observation point.
+                assert!(
+                    store.live_blocks() <= store.capacity_blocks(),
+                    "capacity budget violated mid-run"
+                );
+                if op % 128 == 0 {
+                    store.check().expect("structural invariants broke mid-run");
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("stress thread panicked");
+    }
+    assert_eq!(store.leased_blocks(), 0, "leases leaked past thread exit");
+    assert!(store.live_blocks() <= store.capacity_blocks());
+    store.check().expect("post-run structural invariants");
+    let stats = store.stats();
+    assert!(stats.publishes > 0 && stats.fetches > 0, "workload degenerated");
+    assert!(stats.evictions > 0, "small capacity must force eviction churn");
+}
+
+#[test]
+fn sharded_store_survives_publisher_fetcher_evictor_contention() {
+    // The same harness at the unsharded baseline and two shard widths: the
+    // invariants are topology-independent.
+    for shards in [1usize, 4, 8] {
+        stress(shards);
+    }
+}
+
+/// Version bumps racing generation traffic: flushes mid-stream must never
+/// corrupt state — stale-version publishes/fetches are rejected, stale
+/// leases are ignored, and whatever *is* fetched is still bit-exact.
+#[test]
+fn version_churn_under_contention_stays_consistent() {
+    let store = Arc::new(SharedKvStore::new(StoreCfg {
+        block_tokens: 4,
+        capacity_blocks: 32,
+        policy: EvictPolicy::Lru,
+        shards: 4,
+    }));
+    store.set_version(1);
+    let templates: Arc<Vec<Vec<u32>>> =
+        Arc::new((0..4u32).map(|t| (0..8).map(|i| t * 16 + i).collect()).collect());
+    let mut handles = Vec::new();
+    for th in 0..6usize {
+        let store = store.clone();
+        let templates = templates.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(SEED ^ 0xBEEF, th as u64 + 1);
+            for _ in 0..300 {
+                let p = prompt_for(&mut rng, &templates);
+                if th == 0 {
+                    // The "coordinator": occasionally announce a version in
+                    // a small window, so flushes interleave with traffic.
+                    let v = 1 + rng.range(0, 3) as u64;
+                    store.set_version(v);
+                } else if th % 2 == 0 {
+                    // Publish under a guessed version: rejected when stale.
+                    let v = 1 + rng.range(0, 3) as u64;
+                    let logits = logits_for(&p);
+                    store.publish(&p, &rows_for(&p), Some(&logits), v);
+                } else {
+                    let v = 1 + rng.range(0, 3) as u64;
+                    if let Some(f) = store.fetch_longest(&p, 0, v) {
+                        assert_eq!(f.rows, rows_for(&p[..f.len]), "stale bytes leaked");
+                        store.release(f.lease);
+                    }
+                }
+                assert!(store.live_blocks() <= store.capacity_blocks());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("version-churn thread panicked");
+    }
+    store.check().expect("post-run invariants");
+}
