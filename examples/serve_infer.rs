@@ -22,12 +22,22 @@
 //! have been served): the router's warmth map forgets them and the second
 //! half of the traffic redistributes over the survivors, importing
 //! store-covered templates instead of recomputing them — the fleet-resize
-//! story end-to-end.
+//! story end-to-end. `--join N` is the mirror image: N cold engines join at
+//! the same midpoint, weight-synced and store-attached before they see
+//! traffic, exactly like the coordinator's `Driver::spawn_engine`. Joins
+//! apply before leaves, so `--join 1 --leave 1` is a rolling replacement.
+//!
+//! With `rl.warmth_ttl` set in the config, the router's warmth beliefs
+//! decay: every dispatched group advances the decay clock one epoch, and a
+//! template not re-dispatched (there are no stats refreshes in this loop)
+//! within its TTL window falls back to the hash spread — how a long-running
+//! server forgets departed or rarely-used templates.
 //!
 //! ```bash
 //! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64
 //! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64 --group 8
 //! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64 --group 4 --engines 3 --store-shards 4 --leave 1
+//! cargo run --release --example serve_infer -- --config configs/tiny.json --requests 64 --group 4 --engines 2 --join 2
 //! ```
 
 use pa_rl::config::Config;
@@ -48,41 +58,51 @@ fn main() -> anyhow::Result<()> {
     let group = args.usize_or("group", 1).max(1);
     let n_engines = args.usize_or("engines", 1).max(1);
     let store_shards = args.usize_or("store-shards", 0); // 0 = config default
-    let leave = args.usize_or("leave", 0).min(n_engines.saturating_sub(1));
+    let join = args.usize_or("join", 0);
+    let leave = args.usize_or("leave", 0).min((n_engines + join).saturating_sub(1));
     let seed = args.u64_or("seed", 0);
 
     let cfg = Config::load(Path::new(&config_path))?;
     let artifacts = cfg.artifacts_dir();
     let mut eager = vec!["init", "prefill", "decode"];
-    let mut engines: Vec<Engine> = Vec::with_capacity(n_engines);
-    let mut params = None;
-    for idx in 0..n_engines {
-        let rt = Runtime::load_validated(Path::new(&artifacts), &cfg)?;
-        if idx == 0
-            && cfg.engine.prefix_cache
-            && cfg.engine.chunked_prefill
-            && rt.manifest().artifacts.contains_key("prefill_chunk")
-        {
-            // Compile ahead of the timed region so the first partial-prefix
-            // admission doesn't absorb a JIT compile into the latency numbers.
+    if cfg.engine.prefix_cache && cfg.engine.chunked_prefill {
+        // Compile ahead of the timed region so the first partial-prefix
+        // admission doesn't absorb a JIT compile into the latency numbers.
+        // (prepare() skips it gracefully if the manifest predates chunking.)
+        let probe = Runtime::load_validated(Path::new(&artifacts), &cfg)?;
+        if probe.manifest().artifacts.contains_key("prefill_chunk") {
             eager.push("prefill_chunk");
         }
+    }
+    let mut params = None;
+    // One engine instance, weight-synced — shared by the startup fleet and
+    // by mid-run joiners (same seed convention as the coordinator).
+    let mk_engine = |idx: usize,
+                     params: &mut Option<pa_rl::runtime::HostParams>|
+     -> anyhow::Result<Engine> {
+        let rt = Runtime::load_validated(Path::new(&artifacts), &cfg)?;
         rt.prepare(&eager)?;
         if params.is_none() {
-            params = Some(rt.init_params(seed as i32)?);
+            *params = Some(rt.init_params(seed as i32)?);
         }
         let mut engine = Engine::new(cfg.clone(), rt, seed ^ (idx as u64).wrapping_mul(0x9E37));
         engine.set_weights(params.as_ref().unwrap())?;
-        engines.push(engine);
+        Ok(engine)
+    };
+    let mut engines: Vec<Engine> = Vec::with_capacity(n_engines + join);
+    for idx in 0..n_engines {
+        engines.push(mk_engine(idx, &mut params)?);
     }
 
-    // Cross-engine store: the coordinator's serving topology. Shard count
-    // from the config unless overridden, clamped so every shard's capacity
-    // slice still holds one full prompt's chain (chains are shard-affine).
+    // Cross-engine store: the coordinator's serving topology, sized for the
+    // peak fleet (`--join` engines import from it the moment they arrive).
+    // Shard count from the config unless overridden, clamped so every
+    // shard's capacity slice still holds one full prompt's chain (chains
+    // are shard-affine).
     let max_shards = (cfg.engine.store_blocks / cfg.engine.blocks_per_prompt().max(1)).max(1);
     let shards =
         if store_shards == 0 { cfg.engine.store_shards } else { store_shards }.clamp(1, max_shards);
-    let store = cfg.store_active(n_engines).then(|| {
+    let store = cfg.store_active(n_engines + join).then(|| {
         Arc::new(SharedKvStore::new(StoreCfg {
             block_tokens: cfg.engine.cache_block,
             capacity_blocks: cfg.engine.store_blocks,
@@ -99,9 +119,10 @@ fn main() -> anyhow::Result<()> {
     let mut loader = DataLoader::new(cfg.data.clone());
     let n_unique = n_requests.div_ceil(group);
     let prompts = loader.next_batch(n_unique);
-    let affinity = cfg.affinity_active(n_engines);
+    let affinity = cfg.affinity_active(n_engines + join);
     let slack = cfg.rl.affinity_slack_groups * group;
-    let mut warmth = route::WarmthMap::new();
+    // Belief decay per the config: one dispatched group = one decay epoch.
+    let mut warmth = route::WarmthMap::with_ttl(cfg.rl.warmth_ttl);
     let mut spills = 0u64;
     let mut routed = 0usize;
 
@@ -153,6 +174,9 @@ fn main() -> anyhow::Result<()> {
             if spilled {
                 *spills += 1;
             }
+            // One dispatched group = one decay epoch for the warmth beliefs
+            // (no-op at the default `rl.warmth_ttl` of 0).
+            warmth.advance();
             let repeats = group.min(n_requests - i * group);
             for s in 0..repeats {
                 engines[idx].submit(GenRequest {
@@ -166,22 +190,34 @@ fn main() -> anyhow::Result<()> {
 
     let t0 = std::time::Instant::now();
     let mut results: Vec<GenResult> = Vec::with_capacity(n_requests);
-    let split = if leave > 0 { n_unique / 2 } else { n_unique };
+    let resize = join > 0 || leave > 0;
+    let split = if resize { n_unique / 2 } else { n_unique };
 
-    // Phase 1: the full fleet serves the first half of the groups.
+    // Phase 1: the starting fleet serves the first half of the groups.
     dispatch(&mut engines, &mut warmth, &mut spills, 0, split);
     routed += split;
     drive(&mut engines, &mut results)?;
 
-    // Mid-run fleet resize: the last `leave` engines drain and depart. Their
-    // warmth beliefs are dropped; their templates re-route over the
-    // survivors by hash and re-import from the shared store (which still
-    // holds everything they published) instead of recomputing.
+    // Mid-run fleet resize. Joins first (a `--join N --leave N` run is a
+    // rolling replacement): new engines arrive weight-synced and
+    // store-attached, cold but able to import every template the store
+    // holds. Then the last `leave` engines depart: their warmth beliefs are
+    // dropped and their templates re-route over the survivors by hash,
+    // re-importing from the shared store instead of recomputing.
+    let mut joined = 0usize;
     let mut departed = 0usize;
-    if leave > 0 && split < n_unique {
+    if resize && split < n_unique {
+        for j in 0..join {
+            let mut e = mk_engine(n_engines + j, &mut params)?;
+            if let Some(s) = &store {
+                e.set_shared_store(s.clone());
+            }
+            engines.push(e);
+        }
+        joined = join;
         for _ in 0..leave {
             let idx = engines.len() - 1;
-            let _gone = engines.pop().expect("leave < n_engines");
+            let _gone = engines.pop().expect("leave < peak fleet");
             warmth.remove_engine(idx, engines.len());
         }
         departed = leave;
@@ -210,6 +246,9 @@ fn main() -> anyhow::Result<()> {
     t.row(&["requests".into(), format!("{n_requests}")]);
     t.row(&["group size".into(), format!("{group}")]);
     t.row(&["engines".into(), format!("{n_engines}")]);
+    if joined > 0 {
+        t.row(&["engines joined mid-run".into(), format!("{joined}")]);
+    }
     if departed > 0 {
         t.row(&["engines departed mid-run".into(), format!("{departed}")]);
     }

@@ -7,14 +7,23 @@
 //! cargo run --release --example train_grpo -- \
 //!     --config configs/small.json --mode async --iters 50 \
 //!     --sft-warmup 30 --eval 64 --csv runs/async.csv
+//! # Elastic fleet: one engine joins at iteration 2, one drains at 4.
+//! cargo run --release --example train_grpo -- \
+//!     --config configs/small.json --iters 8 --join iter:2 --leave iter:4
 //! ```
 //!
 //! Stages: (1) optional SFT warmup on target answers so the policy emits
 //! digits at all; (2) T iterations of Algorithm 1 in the chosen mode
 //! (sync | async | stale); (3) held-out exact-match evaluation. Per-iteration
 //! metrics stream to stdout and to the CSV.
+//!
+//! `--join iter:N[,iter:M...]` / `--leave iter:N[,...]` merge one-engine
+//! fleet events into the config's `rl.fleet_schedule`: joins are
+//! weight-synced before they can receive work, drains finish in-flight
+//! rollouts and re-route the rest — the run stays strictly on-policy and
+//! loses nothing.
 
-use pa_rl::config::Config;
+use pa_rl::config::{Config, FleetEvent};
 use pa_rl::coordinator::{evaluate, Driver, DriverOpts, Mode};
 use pa_rl::data::{DataLoader, TaskGen, EOS};
 use pa_rl::grpo::{build_standard, Sample};
@@ -35,13 +44,35 @@ fn main() -> anyhow::Result<()> {
     let seed = args.u64_or("seed", 0);
     let csv_path = args.get("csv").map(PathBuf::from);
 
-    let cfg = Config::load(Path::new(&config_path))?;
+    let mut cfg = Config::load(Path::new(&config_path))?;
+    // --join iter:N / --leave iter:N (comma-separated for several) merge
+    // into the config's fleet schedule, one engine per entry.
+    for (flag, is_join) in [("join", true), ("leave", false)] {
+        let Some(spec) = args.get(flag) else { continue };
+        for part in spec.split(',') {
+            let iter: u64 = part
+                .trim()
+                .strip_prefix("iter:")
+                .and_then(|n| n.parse().ok())
+                .ok_or_else(|| anyhow::anyhow!("--{flag} expects iter:N, got '{part}'"))?;
+            cfg.rl.fleet_schedule.push(FleetEvent {
+                iter,
+                join: usize::from(is_join),
+                leave: usize::from(!is_join),
+            });
+        }
+    }
+    cfg.rl.fleet_schedule.sort_by_key(|e| e.iter);
+    cfg.rl.validate_fleet_schedule()?;
     let artifacts = PathBuf::from(cfg.artifacts_dir());
     eprintln!(
         "[train_grpo] config={} mode={mode:?} spa={spa} iters={iters} sft={sft_warmup} params={}",
         cfg.name,
         cfg.model.param_count()
     );
+    if !cfg.rl.fleet_schedule.is_empty() {
+        eprintln!("[train_grpo] fleet schedule: {:?}", cfg.rl.fleet_schedule);
+    }
 
     // ---- optional SFT warmup -------------------------------------------
     let warm = if sft_warmup > 0 {
@@ -66,7 +97,7 @@ fn main() -> anyhow::Result<()> {
                          "wall_s", "consumer_wait_s", "train_tokens", "staleness",
                          "kv_hit_rate", "prefill_tokens_saved",
                          "cross_engine_hits", "cross_engine_tokens",
-                         "store_publishes", "affinity_spills"])
+                         "store_publishes", "affinity_spills", "engines"])
     });
     let t0 = std::time::Instant::now();
     let report = {
@@ -75,11 +106,17 @@ fn main() -> anyhow::Result<()> {
             let rep = driver.run(1)?;
             let it = &rep.iters[0];
             println!(
-                "iter {t:>3}  reward {:>6.3}  loss {:>9.5}  kl {:>8.5}  wall {:>6.2}s  wait {:>5.2}s  tokens {:>7}  stale {:.2}  kv-hit {:>4.0}%",
+                "iter {t:>3}  reward {:>6.3}  loss {:>9.5}  kl {:>8.5}  wall {:>6.2}s  wait {:>5.2}s  tokens {:>7}  stale {:.2}  kv-hit {:>4.0}%  engines {:>2}",
                 it.reward_mean, it.stats.loss, it.stats.kl, it.wall_seconds,
                 it.consumer_wait_seconds, it.train_input_tokens, it.staleness_mean,
-                it.kv_hit_rate * 100.0,
+                it.kv_hit_rate * 100.0, it.engines,
             );
+            if it.engines_joined + it.engines_left > 0 {
+                println!(
+                    "         fleet resize: +{} joined, -{} drained -> {} engines",
+                    it.engines_joined, it.engines_left, it.engines
+                );
+            }
             if let Some(c) = csv.as_mut() {
                 c.add(&[
                     t as f64,
@@ -98,6 +135,7 @@ fn main() -> anyhow::Result<()> {
                     it.cross_engine_tokens as f64,
                     it.store_publishes as f64,
                     it.affinity_spills as f64,
+                    it.engines as f64,
                 ]);
             }
             iters_done.push(it.clone());
@@ -106,7 +144,8 @@ fn main() -> anyhow::Result<()> {
     };
     let wall = t0.elapsed().as_secs_f64();
     let tokens: usize = report.iter().map(|i| i.train_input_tokens).sum();
-    let devices = cfg.rl.n_engines + 1;
+    // Peak fleet + trainer (equals the static fleet when no schedule ran).
+    let devices = report.iter().map(|i| i.engines).max().unwrap_or(cfg.rl.n_engines) + 1;
     println!(
         "\nTOTAL: {tokens} train tokens in {wall:.1}s on {devices} instances -> TPSPD {:.3}",
         tokens as f64 / (wall * devices as f64)

@@ -28,6 +28,7 @@ fn sim_setup(framework: Framework) -> SimSetup {
         template_frac: 0.0,
         cross_engine: false,
         store_shards: 1,
+        elastic_warmup_frac: 0.0,
         train_micro_bs: 1,
         micro_launch_s: 0.5,
         iters: 1,

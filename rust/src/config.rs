@@ -162,6 +162,21 @@ pub struct TrainConfig {
     pub clip_eps_high: f64,
 }
 
+/// One scheduled fleet resize, applied at the iteration boundary *before*
+/// iteration `iter` syncs weights and dispatches: `join` engines spawn
+/// (each weight-synced at the current params version before it can receive
+/// work), then `leave` engines drain from the tail of the fleet (in-flight
+/// rollouts finish, never-admitted jobs re-route over the survivors).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetEvent {
+    /// Iteration whose boundary this event fires at (0 = before the first).
+    pub iter: u64,
+    /// Engines to spawn at this boundary.
+    pub join: usize,
+    /// Engines to drain at this boundary (applied after `join`).
+    pub leave: usize,
+}
+
 /// RL loop shape (Algorithm 1).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RlConfig {
@@ -171,7 +186,8 @@ pub struct RlConfig {
     pub group_size: usize,
     /// Training iterations (T).
     pub iters: usize,
-    /// Inference engine instances (the paper's training:rollout ratio).
+    /// Inference engine instances at construction (the paper's
+    /// training:rollout ratio). The starting point of `fleet_schedule`.
     pub n_engines: usize,
     /// Bounded rollout-queue capacity (groups).
     pub queue_cap: usize,
@@ -183,6 +199,42 @@ pub struct RlConfig {
     /// may run this many groups ahead of the least-loaded engine before a
     /// group spills.
     pub affinity_slack_groups: usize,
+    /// Scheduled elastic fleet resizes (sorted by iteration; empty = the
+    /// static fleet). `train_grpo --join iter:N` / `--leave iter:N` merge
+    /// into this list.
+    pub fleet_schedule: Vec<FleetEvent>,
+    /// Routing warmth-belief TTL in decay epochs (an iteration in the
+    /// driver, a dispatched group in `serve_infer`); a belief unconfirmed
+    /// for longer — scaled up for long resident prefixes — expires and its
+    /// template re-routes by hash. 0 (default) disables decay, bit-identical
+    /// to the PR-4 router.
+    pub warmth_ttl: u64,
+}
+
+impl RlConfig {
+    /// Check the fleet schedule never drains the fleet below one engine
+    /// (within an event, joins apply before leaves) and that every event
+    /// does something. Called at parse time; callers that merge CLI flags
+    /// into the schedule (e.g. `train_grpo`) must re-validate.
+    pub fn validate_fleet_schedule(&self) -> Result<()> {
+        let mut sched = self.fleet_schedule.clone();
+        sched.sort_by_key(|e| e.iter);
+        let mut n = self.n_engines as i64;
+        for e in &sched {
+            if e.join == 0 && e.leave == 0 {
+                bail!("rl.fleet_schedule event at iter {} neither joins nor leaves", e.iter);
+            }
+            n += e.join as i64;
+            n -= e.leave as i64;
+            if n < 1 {
+                bail!(
+                    "rl.fleet_schedule drains the fleet below one engine at iter {} (size would be {n})",
+                    e.iter
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Synthetic-task data settings.
@@ -311,6 +363,17 @@ impl Config {
         };
 
         let r = j.req("rl").context("config: missing 'rl'")?;
+        let mut fleet_schedule = Vec::new();
+        if let Some(events) = r.get("fleet_schedule").and_then(Json::as_arr) {
+            for ev in events {
+                fleet_schedule.push(FleetEvent {
+                    iter: ev.req_usize("iter").context("rl.fleet_schedule entry")? as u64,
+                    join: ev.usize_or("join", 0),
+                    leave: ev.usize_or("leave", 0),
+                });
+            }
+        }
+        fleet_schedule.sort_by_key(|e| e.iter);
         let rl = RlConfig {
             batch_prompts: r.req_usize("batch_prompts")?,
             group_size: r.req_usize("group_size")?,
@@ -319,7 +382,10 @@ impl Config {
             queue_cap: r.usize_or("queue_cap", 64),
             affinity_routing: r.bool_or("affinity_routing", true),
             affinity_slack_groups: r.usize_or("affinity_slack_groups", 2),
+            fleet_schedule,
+            warmth_ttl: r.usize_or("warmth_ttl", 0) as u64,
         };
+        rl.validate_fleet_schedule()?;
 
         let t = j.req("train").context("config: missing 'train'")?;
         let default_seq = engine.prompt_max + engine.max_new;
@@ -439,6 +505,77 @@ mod tests {
         assert!(c.rl.affinity_routing);
         assert_eq!(c.rl.affinity_slack_groups, 2);
         assert!(!c.data.shared_few_shot);
+        // elastic-fleet defaults: static fleet, no warmth decay
+        assert!(c.rl.fleet_schedule.is_empty());
+        assert_eq!(c.rl.warmth_ttl, 0);
+    }
+
+    #[test]
+    fn fleet_schedule_parses_sorted_and_warmth_ttl() {
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4},
+                "train":{},
+                "rl":{"batch_prompts":1,"group_size":1,"n_engines":2,"warmth_ttl":4,
+                      "fleet_schedule":[{"iter":5,"leave":1},{"iter":2,"join":2}]}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.rl.warmth_ttl, 4);
+        assert_eq!(
+            c.rl.fleet_schedule,
+            vec![
+                FleetEvent { iter: 2, join: 2, leave: 0 },
+                FleetEvent { iter: 5, join: 0, leave: 1 },
+            ],
+            "schedule must parse and sort by iteration"
+        );
+    }
+
+    #[test]
+    fn rejects_degenerate_fleet_schedules() {
+        // Draining below one engine: leave 1 of 1 at iter 0.
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4},
+                "train":{},
+                "rl":{"batch_prompts":1,"group_size":1,"n_engines":1,
+                      "fleet_schedule":[{"iter":0,"leave":1}]}}"#,
+        )
+        .unwrap();
+        let err = Config::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("below one engine"), "unexpected error: {err}");
+        // The running size counts earlier joins: join 1 then leave 2 later.
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4},
+                "train":{},
+                "rl":{"batch_prompts":1,"group_size":1,"n_engines":1,
+                      "fleet_schedule":[{"iter":1,"join":1},{"iter":3,"leave":2}]}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_json(&j).is_err());
+        // An event that does nothing is a config mistake, not a no-op.
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4},
+                "train":{},
+                "rl":{"batch_prompts":1,"group_size":1,"n_engines":2,
+                      "fleet_schedule":[{"iter":1}]}}"#,
+        )
+        .unwrap();
+        let err = Config::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("neither joins nor leaves"), "unexpected error: {err}");
+        // A join-then-matched-leave schedule on a 2-engine fleet is fine.
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4},
+                "train":{},
+                "rl":{"batch_prompts":1,"group_size":1,"n_engines":2,
+                      "fleet_schedule":[{"iter":1,"join":1},{"iter":2,"leave":1}]}}"#,
+        )
+        .unwrap();
+        assert!(Config::from_json(&j).is_ok());
     }
 
     #[test]

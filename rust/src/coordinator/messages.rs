@@ -13,6 +13,11 @@ pub enum EngineMsg {
     /// before any generation work); the engine then consults/feeds the
     /// store on every chunked admission.
     AttachStore(Arc<SharedKvStore>),
+    /// Drop the shared store: the fleet shrank to one engine, whose local
+    /// radix cache already covers everything the store could offer — the
+    /// per-admission store round-trips would be pure overhead. A later
+    /// join re-creates and re-attaches a store fleet-wide.
+    DetachStore,
     /// Install new policy weights (iteration-boundary sync, Alg. 1 line 3).
     /// The worker acks on the provided channel once the upload completes
     /// (`uploaded: false` = no-op sync skipped on an identical version);
@@ -27,8 +32,28 @@ pub enum EngineMsg {
     GenGroup(Vec<GenJob>),
     /// Report engine + prefix-cache counters on the provided channel.
     QueryStats(mpsc::Sender<WorkerStats>),
-    /// Drain and exit.
+    /// Leave the fleet gracefully: stop admitting, finish the in-flight
+    /// sequences (their scored rollouts still flow through the shared
+    /// queue), then reply with everything never admitted plus the final
+    /// counters and exit. The coordinator re-routes the returned jobs over
+    /// the surviving engines ([`super::Driver::drain_engine`]), so a mid-run
+    /// departure loses no rollout.
+    Drain(mpsc::Sender<DrainAck>),
+    /// Exit immediately (end of run; any pending work is abandoned).
     Shutdown,
+}
+
+/// Reply to [`EngineMsg::Drain`], sent once the engine is idle.
+pub struct DrainAck {
+    /// Jobs the departing engine had queued but never admitted — still owed
+    /// to the run; the coordinator re-dispatches them group-affine.
+    pub pending: Vec<GenJob>,
+    /// Final cumulative engine counters, folded into the coordinator's
+    /// retired-engine baseline so per-iteration metric deltas stay exact
+    /// after the engine stops reporting.
+    pub stats: EngineStats,
+    /// Final prefix-cache counters, when the cache was enabled.
+    pub cache: Option<CacheStats>,
 }
 
 /// Acknowledgement of one worker's [`EngineMsg::SetWeights`].

@@ -6,6 +6,13 @@
 //! order; model weights synchronise at iteration boundaries only, keeping
 //! every batch strictly on-policy (Prop. 1) while inference and training
 //! overlap inside the iteration (periodic asynchrony).
+//!
+//! The inference fleet is **elastic**: engines join and drain mid-run
+//! through the driver ([`Driver::spawn_engine`] / [`Driver::drain_engine`],
+//! scheduled via `rl.fleet_schedule`), with joiners weight-synced before
+//! they receive work and drains losing no rollout; dispatch is
+//! group-affine and residency-aware ([`route`]), with optional TTL decay
+//! on the router's warmth beliefs.
 
 pub mod assembler;
 pub mod driver;
@@ -17,4 +24,4 @@ pub mod worker;
 pub use assembler::Assembler;
 pub use driver::{Driver, DriverOpts, IterReport, Mode, RunReport};
 pub use eval::{evaluate, EvalReport};
-pub use messages::{EngineMsg, GenJob, ScoredRollout, WeightSyncAck, WorkerStats};
+pub use messages::{DrainAck, EngineMsg, GenJob, ScoredRollout, WeightSyncAck, WorkerStats};

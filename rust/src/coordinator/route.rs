@@ -35,6 +35,22 @@
 //! templates stay cheap wherever they land, which is the whole point of the
 //! host-side store. A grown fleet simply exposes more hash targets; warm
 //! templates keep routing to their resident engines by warmth, not by hash.
+//! The [`Driver`](crate::coordinator::Driver) exercises both directions
+//! through `spawn_engine` / `drain_engine` and the `rl.fleet_schedule`.
+//!
+//! **Belief decay** ([`WarmthMap::advance`]): on a long-running fleet that
+//! rarely (or never) syncs weights, beliefs would otherwise live until an
+//! engine's advertisement refresh contradicted them — and a server loop that
+//! never queries stats (like `serve_infer`'s dispatch path) would pin every
+//! template to its first engine forever. With a nonzero TTL
+//! ([`WarmthMap::with_ttl`]), each belief must be re-confirmed — by a routed
+//! dispatch ([`WarmthMap::note`]) or an engine advertisement
+//! ([`WarmthMap::refresh_engine`]) — within its TTL window of decay epochs
+//! or it expires and the template falls back to the hash spread. The window
+//! scales with the advertised resident length ([`RESIDENT_TTL_UNIT`]): a
+//! long few-shot template is worth far more prefill than a short one, so
+//! its belief is kept alive proportionally longer. TTL 0 (the default)
+//! disables decay — bit-identical to the pre-decay router.
 
 use crate::store::hash;
 use std::collections::HashMap;
@@ -59,19 +75,49 @@ impl RouteKind {
     }
 }
 
+/// One warmth belief: which engine holds a template resident, how many of
+/// its tokens, and the decay-clock epoch at which the belief was last
+/// confirmed (dispatched to, or advertised by, that engine).
+#[derive(Debug, Clone, Copy)]
+struct Belief {
+    engine: usize,
+    resident: usize,
+    last_seen: u64,
+}
+
+/// Resident-length unit of the decay TTL: every `RESIDENT_TTL_UNIT` tokens
+/// of advertised residency extend a belief's lifetime by one base-TTL
+/// window. Longer templates save more prefill per correct routing decision,
+/// so their beliefs are worth holding onto proportionally longer.
+pub const RESIDENT_TTL_UNIT: usize = 256;
+
 /// The coordinator's per-template warmth beliefs: affinity key ->
 /// `(engine, resident tokens)`. Optimistically updated on dispatch
 /// ([`WarmthMap::note`]) and corrected from engine advertisements on the
 /// stats channel ([`WarmthMap::refresh_engine`]); flushed whenever a real
-/// weight sync flushes every cache.
+/// weight sync flushes every cache; optionally decayed per routing epoch
+/// ([`WarmthMap::advance`]) so unconfirmed beliefs expire.
 #[derive(Debug, Default)]
 pub struct WarmthMap {
-    map: HashMap<u64, (usize, usize)>,
+    map: HashMap<u64, Belief>,
+    /// Decay clock, advanced once per routing epoch (an RL iteration in the
+    /// driver, a dispatched group in `serve_infer`).
+    clock: u64,
+    /// Base TTL in decay epochs; 0 disables decay entirely.
+    ttl: u64,
 }
 
 impl WarmthMap {
+    /// A map without belief decay (TTL 0) — the PR-4 router's behavior.
     pub fn new() -> WarmthMap {
         WarmthMap::default()
+    }
+
+    /// A map whose beliefs expire unless re-confirmed within `ttl` decay
+    /// epochs (scaled up for long resident prefixes — see
+    /// [`RESIDENT_TTL_UNIT`]). `ttl` 0 disables decay.
+    pub fn with_ttl(ttl: u64) -> WarmthMap {
+        WarmthMap { ttl, ..WarmthMap::default() }
     }
 
     pub fn len(&self) -> usize {
@@ -84,14 +130,14 @@ impl WarmthMap {
 
     /// Engine believed to hold `key` warm, with its resident token count.
     pub fn lookup(&self, key: u64) -> Option<(usize, usize)> {
-        self.map.get(&key).copied()
+        self.map.get(&key).map(|b| (b.engine, b.resident))
     }
 
     /// Record a dispatch: `engine` is about to admit this template, so it
     /// becomes the template's warm home (most recent dispatch wins — that is
     /// also what the engines' LRU caches will believe).
     pub fn note(&mut self, key: u64, engine: usize, resident: usize) {
-        self.map.insert(key, (engine, resident));
+        self.map.insert(key, Belief { engine, resident, last_seen: self.clock });
     }
 
     /// Merge one engine's advertised warm templates (stats-channel refresh).
@@ -104,15 +150,17 @@ impl WarmthMap {
     /// itself; claims about a template currently attributed to another
     /// engine win only when they cover a strictly longer prefix (a longer
     /// resident prefix saves more prefill; ties keep the routing stable).
+    /// Every advertisement counts as confirmation for the decay clock.
     pub fn refresh_engine(&mut self, engine: usize, warm: &[(u64, usize)]) {
         let advertised: std::collections::HashSet<u64> =
             warm.iter().map(|&(key, _)| key).collect();
-        self.map.retain(|key, &mut (e, _)| e != engine || advertised.contains(key));
+        self.map.retain(|key, b| b.engine != engine || advertised.contains(key));
+        let clock = self.clock;
         for &(key, resident) in warm {
             match self.map.get(&key) {
-                Some(&(e, len)) if e != engine && len >= resident => {}
+                Some(b) if b.engine != engine && b.resident >= resident => {}
                 _ => {
-                    self.map.insert(key, (engine, resident));
+                    self.map.insert(key, Belief { engine, resident, last_seen: clock });
                 }
             }
         }
@@ -129,7 +177,26 @@ impl WarmthMap {
     /// a surviving engine re-warms them — store-covered templates at import
     /// cost, not recompute cost.
     pub fn remove_engine(&mut self, engine: usize, n_engines: usize) {
-        self.map.retain(|_, &mut (e, _)| e != engine && e < n_engines);
+        self.map.retain(|_, b| b.engine != engine && b.engine < n_engines);
+    }
+
+    /// Advance the decay clock one routing epoch and expire every belief
+    /// that has gone unconfirmed longer than its TTL window. The window is
+    /// the base TTL scaled by the advertised resident length (one extra
+    /// base window per [`RESIDENT_TTL_UNIT`] resident tokens), so a
+    /// rarely-used short template stops pinning routing quickly while a
+    /// large shared few-shot prefix keeps its home. No-op when the map was
+    /// built without a TTL ([`WarmthMap::new`]).
+    pub fn advance(&mut self) {
+        self.clock += 1;
+        if self.ttl == 0 {
+            return;
+        }
+        let (clock, ttl) = (self.clock, self.ttl);
+        self.map.retain(|_, b| {
+            let window = ttl.saturating_mul(1 + (b.resident / RESIDENT_TTL_UNIT) as u64);
+            clock.saturating_sub(b.last_seen) <= window
+        });
     }
 }
 
@@ -359,5 +426,54 @@ mod tests {
         // Flush on a real weight sync: nothing is warm anywhere.
         warmth.flush();
         assert!(warmth.is_empty());
+    }
+
+    #[test]
+    fn warmth_decay_expires_stale_beliefs_and_keeps_fresh_ones() {
+        let mut w = WarmthMap::with_ttl(2);
+        w.note(1, 0, 8); // never confirmed again: must expire
+        w.note(2, 1, 8); // re-dispatched every epoch: must survive
+        for _ in 0..4 {
+            w.advance();
+            w.note(2, 1, 8);
+        }
+        assert_eq!(w.lookup(1), None, "unconfirmed belief must expire past the TTL");
+        assert_eq!(w.lookup(2), Some((1, 8)), "a re-confirmed belief must survive");
+        // Advertisements on the stats channel count as confirmation too.
+        w.note(3, 0, 8);
+        for _ in 0..4 {
+            w.advance();
+            w.refresh_engine(0, &[(3, 8)]);
+        }
+        assert_eq!(w.lookup(3), Some((0, 8)), "advertised belief must survive decay");
+    }
+
+    #[test]
+    fn warmth_decay_ttl_scales_with_resident_length() {
+        let mut w = WarmthMap::with_ttl(1);
+        w.note(1, 0, 4); // short template: one base window
+        w.note(2, 1, RESIDENT_TTL_UNIT * 3); // long template: four windows
+        w.advance();
+        w.advance();
+        assert_eq!(w.lookup(1), None, "short resident prefix expires at the base TTL");
+        assert_eq!(
+            w.lookup(2),
+            Some((1, RESIDENT_TTL_UNIT * 3)),
+            "long resident prefix must outlive the base TTL"
+        );
+        for _ in 0..3 {
+            w.advance();
+        }
+        assert_eq!(w.lookup(2), None, "even long beliefs expire eventually");
+    }
+
+    #[test]
+    fn warmth_ttl_zero_never_decays() {
+        let mut w = WarmthMap::new();
+        w.note(1, 0, 4);
+        for _ in 0..100 {
+            w.advance();
+        }
+        assert_eq!(w.lookup(1), Some((0, 4)), "TTL 0 must be the PR-4 no-decay router");
     }
 }

@@ -6,18 +6,26 @@
 //! the shared bounded queue. The send blocks when the queue is full —
 //! backpressure toward the inference side, bounding rollout memory exactly
 //! like the paper's shared queue.
+//!
+//! Workers join and leave the fleet mid-run: the coordinator spawns a new
+//! worker at any iteration boundary ([`super::Driver::spawn_engine`]) and
+//! retires one gracefully via [`EngineMsg::Drain`] — the drained worker
+//! stops admitting, pulls never-admitted jobs back out of its engine, runs
+//! the in-flight sequences to completion (their rollouts still flow through
+//! the shared queue), and hands the leftover jobs plus its final counters
+//! back so nothing is lost and the fleet-wide metrics stay exact.
 
-use super::messages::{EngineMsg, GenJob, ScoredRollout, WeightSyncAck, WorkerStats};
+use super::messages::{DrainAck, EngineMsg, GenJob, ScoredRollout, WeightSyncAck, WorkerStats};
 use crate::config::Config;
 use crate::data::Tokenizer;
-use crate::engine::Engine;
+use crate::engine::{Engine, GenResult};
 use crate::grpo::reward;
 use crate::metrics::Trace;
 use crate::runtime::Runtime;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
+use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError};
 use std::thread::JoinHandle;
 
 /// Handle to a spawned worker.
@@ -42,6 +50,15 @@ pub fn spawn_worker(
         .spawn(move || worker_main(idx, cfg, artifacts_dir, seed, rx, queue, trace))
         .expect("spawning engine worker");
     WorkerHandle { thread, inbox: tx }
+}
+
+/// What the message handler told the main loop to do next.
+enum Flow {
+    Continue,
+    /// [`EngineMsg::Shutdown`]: exit now.
+    Shutdown,
+    /// [`EngineMsg::Drain`]: finish in-flight work, ack, then exit.
+    Drain(mpsc::Sender<DrainAck>),
 }
 
 fn worker_main(
@@ -76,21 +93,25 @@ fn worker_main(
         // Block when idle; otherwise drain without blocking.
         if engine.idle() {
             match inbox.recv() {
-                Ok(msg) => {
-                    if handle_msg(msg, idx, &mut engine, &mut jobs, &trace, &lane)? {
-                        return Ok(());
+                Ok(msg) => match handle_msg(msg, idx, &mut engine, &mut jobs, &trace, &lane)? {
+                    Flow::Continue => {}
+                    Flow::Shutdown => return Ok(()),
+                    Flow::Drain(ack) => {
+                        return drain_exit(ack, idx, &mut engine, &mut jobs, &tokenizer, &queue)
                     }
-                }
+                },
                 Err(_) => return Ok(()), // coordinator dropped
             }
         }
         loop {
             match inbox.try_recv() {
-                Ok(msg) => {
-                    if handle_msg(msg, idx, &mut engine, &mut jobs, &trace, &lane)? {
-                        return Ok(());
+                Ok(msg) => match handle_msg(msg, idx, &mut engine, &mut jobs, &trace, &lane)? {
+                    Flow::Continue => {}
+                    Flow::Shutdown => return Ok(()),
+                    Flow::Drain(ack) => {
+                        return drain_exit(ack, idx, &mut engine, &mut jobs, &tokenizer, &queue)
                     }
-                }
+                },
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => return Ok(()),
             }
@@ -99,31 +120,82 @@ fn worker_main(
             let t0 = trace.now();
             let finished = engine.step().with_context(|| format!("engine-{idx}: step"))?;
             trace.record(&lane, "step", t0);
-            for r in finished {
-                let job = jobs
-                    .remove(&r.request_id)
-                    .context("engine returned unknown request id")?;
-                let score = reward::score(&tokenizer, &r.tokens, job.answer);
-                let rollout = ScoredRollout {
-                    prompt_id: job.prompt_id,
-                    sample_idx: job.sample_idx,
-                    weight_version: r.weight_version,
-                    tokens: r.tokens,
-                    logprobs: r.logprobs,
-                    reward: score,
-                    gen_seconds: r.seconds,
-                    engine_idx: idx,
-                };
-                // Blocking send = backpressure when the trainer lags.
-                if queue.send(rollout).is_err() {
-                    return Ok(()); // consumer gone; shut down quietly
-                }
+            if !score_and_send(finished, idx, &mut jobs, &tokenizer, &queue)? {
+                return Ok(()); // consumer gone; shut down quietly
             }
         }
     }
 }
 
-/// Returns true on shutdown.
+/// Score finished rollouts and push them into the shared queue ("each
+/// coroutine independently evaluates the reward", paper §4.2.1). A full
+/// queue blocks — backpressure when the trainer lags. Returns `false` when
+/// the consumer is gone and the worker should exit quietly.
+fn score_and_send(
+    finished: Vec<GenResult>,
+    idx: usize,
+    jobs: &mut HashMap<u64, GenJob>,
+    tokenizer: &Tokenizer,
+    queue: &SyncSender<ScoredRollout>,
+) -> Result<bool> {
+    for r in finished {
+        let job = jobs
+            .remove(&r.request_id)
+            .context("engine returned unknown request id")?;
+        let score = reward::score(tokenizer, &r.tokens, job.answer);
+        let rollout = ScoredRollout {
+            prompt_id: job.prompt_id,
+            sample_idx: job.sample_idx,
+            weight_version: r.weight_version,
+            tokens: r.tokens,
+            logprobs: r.logprobs,
+            reward: score,
+            gen_seconds: r.seconds,
+            engine_idx: idx,
+        };
+        if queue.send(rollout).is_err() {
+            return Ok(false);
+        }
+    }
+    Ok(true)
+}
+
+/// Graceful fleet departure: pull the never-admitted jobs back out of the
+/// engine, run the in-flight sequences to completion (their rollouts flow to
+/// the consumer through the shared queue like any other completion), then
+/// hand the leftover jobs and the final counters back and exit.
+fn drain_exit(
+    ack: mpsc::Sender<DrainAck>,
+    idx: usize,
+    engine: &mut Engine,
+    jobs: &mut HashMap<u64, GenJob>,
+    tokenizer: &Tokenizer,
+    queue: &SyncSender<ScoredRollout>,
+) -> Result<()> {
+    let mut pending = Vec::new();
+    for req in engine.take_pending() {
+        pending.push(
+            jobs.remove(&req.request_id)
+                .context("draining engine held an unknown request id")?,
+        );
+    }
+    while !engine.idle() {
+        let finished = engine
+            .step()
+            .with_context(|| format!("engine-{idx}: step while draining"))?;
+        if !score_and_send(finished, idx, jobs, tokenizer, queue)? {
+            break; // consumer gone: nobody is owed the leftovers either
+        }
+    }
+    let _ = ack.send(DrainAck {
+        pending,
+        stats: engine.stats.clone(),
+        cache: engine.cache_stats().cloned(),
+    });
+    Ok(())
+}
+
+/// Handle one coordinator message; returns what the main loop does next.
 fn handle_msg(
     msg: EngineMsg,
     idx: usize,
@@ -131,10 +203,13 @@ fn handle_msg(
     jobs: &mut HashMap<u64, GenJob>,
     trace: &Trace,
     lane: &str,
-) -> Result<bool> {
+) -> Result<Flow> {
     match msg {
         EngineMsg::AttachStore(store) => {
             engine.set_shared_store(store);
+        }
+        EngineMsg::DetachStore => {
+            engine.clear_shared_store();
         }
         EngineMsg::SetWeights(params, ack) => {
             let uploaded = engine.set_weights(&params)?;
@@ -173,7 +248,8 @@ fn handle_msg(
                 warm: engine.warm_templates(),
             });
         }
-        EngineMsg::Shutdown => return Ok(true),
+        EngineMsg::Drain(ack) => return Ok(Flow::Drain(ack)),
+        EngineMsg::Shutdown => return Ok(Flow::Shutdown),
     }
-    Ok(false)
+    Ok(Flow::Continue)
 }

@@ -281,10 +281,10 @@ impl RadixTree {
     /// Non-mutating longest-prefix probe: `(deepest node the match reaches,
     /// tokens of `seq` whose KV rows are already resident)`. Unlike
     /// [`RadixTree::lookup_longest`] this refreshes no LRU stamps and pushes
-    /// no heap entries — it is the sizing pass of [`RadixTree::
-    /// insert_budget_tail`] (how much of a re-published prefix is already
-    /// stored) and the cross-engine import probe (is the shared store's
-    /// coverage longer than ours?).
+    /// no heap entries — it is the sizing pass of
+    /// [`RadixTree::insert_budget_tail`] (how much of a re-published prefix
+    /// is already stored) and the cross-engine import probe (is the shared
+    /// store's coverage longer than ours?).
     pub fn resident_prefix(&self, seq: &[u32]) -> (Option<usize>, usize) {
         let mut i = 0usize;
         let mut cur = self.root;

@@ -62,7 +62,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         let rep = driver.run(1)?;
         let it = &rep.iters[0];
         println!(
-            "iter {t:>3}  reward {:>6.3}  loss {:>9.5}  kl {:>8.5}  wall {:>6.2}s  tokens {:>7}  kv-hit {:>4.0}%  prefills {:>4}(-{})  chunks {:>4}  saved {:>6}  xeng {:>3}(+{})  spill {:>3}",
+            "iter {t:>3}  reward {:>6.3}  loss {:>9.5}  kl {:>8.5}  wall {:>6.2}s  tokens {:>7}  kv-hit {:>4.0}%  prefills {:>4}(-{})  chunks {:>4}  saved {:>6}  xeng {:>3}(+{})  spill {:>3}  eng {:>2}",
             it.reward_mean,
             it.stats.loss,
             it.stats.kl,
@@ -75,7 +75,8 @@ fn cmd_train(args: &Args) -> Result<()> {
             it.prefill_tokens_saved,
             it.cross_engine_hits,
             it.cross_engine_tokens,
-            it.affinity_spills
+            it.affinity_spills,
+            it.engines
         );
     }
     Ok(())

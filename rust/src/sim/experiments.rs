@@ -68,6 +68,7 @@ fn setup(
         template_frac: 0.0,
         cross_engine: false,
         store_shards: 1,
+        elastic_warmup_frac: 0.0,
         train_micro_bs: micro_bs,
         micro_launch_s: 0.5, // NPU-stack launch cost; table4 overrides for GPU
         iters,
@@ -87,12 +88,22 @@ fn setup(
 /// fleet-wide instead of once per inference instance. The fifth row shards
 /// the host store's lock (`engine.store_shards`), removing the fleet-wide
 /// serialization every leader's fetch+publish round-trip pays on the single
-/// mutex. Trained tokens are untouched throughout.
+/// mutex. The sixth row runs the *elastic fleet* (the driver's
+/// `spawn_engine`/`drain_engine` path, modeled): the first half of the run
+/// is served with half the inference instances, the rest join at the
+/// boundary weight-synced, and TPSPD bills device-seconds actually deployed
+/// — elasticity earns its keep when the small fleet suffices. Trained
+/// tokens are untouched throughout.
 pub fn prefix_cache_ablation(iters: usize) -> Vec<Row> {
     let cluster = ClusterSpec::npu(16);
     let model = ModelSpec::qwen(7.0);
     let w = WorkloadSpec::gsm8k(32);
-    let mk = |prefix_cache: bool, template_frac: f64, cross_engine: bool, shards: usize, label: &str| {
+    let mk = |prefix_cache: bool,
+              template_frac: f64,
+              cross_engine: bool,
+              shards: usize,
+              elastic: f64,
+              label: &str| {
         let mut s = setup(
             Framework::PeriodicAsync,
             cluster,
@@ -108,14 +119,16 @@ pub fn prefix_cache_ablation(iters: usize) -> Vec<Row> {
         s.template_frac = template_frac;
         s.cross_engine = cross_engine;
         s.store_shards = shards;
+        s.elastic_warmup_frac = elastic;
         Row { setting: label.into(), paper_tpspd: None, sim: s.run_tuned() }
     };
     vec![
-        mk(false, 0.0, false, 1, "Async ours, full prefill"),
-        mk(true, 0.0, false, 1, "Async ours, prefix-cached prefill"),
-        mk(true, 0.6, false, 1, "Async ours, chunked partial-prefix prefill"),
-        mk(true, 0.6, true, 1, "Async ours, + cross-engine shared store"),
-        mk(true, 0.6, true, 8, "Async ours, + sharded store (S=8)"),
+        mk(false, 0.0, false, 1, 0.0, "Async ours, full prefill"),
+        mk(true, 0.0, false, 1, 0.0, "Async ours, prefix-cached prefill"),
+        mk(true, 0.6, false, 1, 0.0, "Async ours, chunked partial-prefix prefill"),
+        mk(true, 0.6, true, 1, 0.0, "Async ours, + cross-engine shared store"),
+        mk(true, 0.6, true, 8, 0.0, "Async ours, + sharded store (S=8)"),
+        mk(true, 0.6, true, 8, 0.5, "Async ours, + elastic fleet (half joins mid-run)"),
     ]
 }
 
@@ -377,7 +390,7 @@ mod tests {
     #[test]
     fn prefix_cache_ablation_never_hurts() {
         let rows = prefix_cache_ablation(2);
-        assert_eq!(rows.len(), 5);
+        assert_eq!(rows.len(), 6);
         let (off, on, chunked, cross, sharded) =
             (&rows[0].sim, &rows[1].sim, &rows[2].sim, &rows[3].sim, &rows[4].sim);
         // Tuned independently: at any fixed ratio cache-on dominates
@@ -411,6 +424,14 @@ mod tests {
             sharded.tpspd,
             cross.tpspd
         );
+        // Elastic fleet: identical training outcome (joins are on-policy and
+        // the workload stream is shared), billed by deployed device-seconds.
+        let elastic = &rows[5].sim;
+        assert_eq!(
+            elastic.trained_tokens, sharded.trained_tokens,
+            "an elastic fleet must not change what is trained"
+        );
+        assert!(elastic.tpspd > 0.0);
     }
 
     #[test]

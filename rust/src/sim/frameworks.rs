@@ -82,6 +82,17 @@ pub struct SimSetup {
     /// instances)` lanes the aggregate store time divides accordingly.
     /// Only meaningful with `cross_engine`; >= 1.
     pub store_shards: usize,
+    /// Elastic fleet (the driver's `spawn_engine` path, modeled): this
+    /// fraction of the run's iterations, from the start, is served with only
+    /// half the inference instances — the other half join at the warmup
+    /// boundary, weight-synced, so nothing about the trained tokens changes
+    /// (periodic asynchrony keeps joins on-policy by construction). 0.0 =
+    /// static fleet, bit-identical to the pre-elastic simulator. With a
+    /// nonzero warmup, TPSPD divides by *device-seconds actually deployed*
+    /// instead of peak devices × wall: the elasticity dividend is not paying
+    /// for engines before they join. Decoupled frameworks only (colocated
+    /// designs have no separate inference fleet to resize).
+    pub elastic_warmup_frac: f64,
     /// Samples per training micro-batch (paper's Micro-BS column; SPA packs
     /// the whole group into one launch regardless). Determines kernel-launch
     /// overhead, which is what makes micro-bs 1 at short sequence lengths so
@@ -301,16 +312,55 @@ impl SimSetup {
         }
     }
 
+    /// The pre-join fleet for the elastic-warmup ablation: the same training
+    /// sub-cluster, half the inference instances. `None` for static runs and
+    /// for colocated frameworks (no separate fleet to resize).
+    fn elastic_reduced_setup(&self) -> Option<SimSetup> {
+        if self.elastic_warmup_frac <= 0.0
+            || matches!(
+                self.framework,
+                Framework::ColocatedSync | Framework::ColocatedContinuous
+            )
+        {
+            return None;
+        }
+        let train = self.train_devices();
+        let half_infer = (self.infer_devices() / 2).max(self.infer_tp);
+        let mut s = self.clone();
+        s.elastic_warmup_frac = 0.0;
+        // Shrink the *cluster* to the deployed devices: the not-yet-joined
+        // engines do not exist during warmup (they are not reassigned to
+        // training), and the fraction is set so the instance math lands on
+        // exactly `half_infer` inference devices.
+        s.cluster.n_devices = train + half_infer;
+        s.infer_fraction = half_infer as f64 / (train + half_infer) as f64;
+        Some(s)
+    }
+
     /// Simulate, optionally recording one iteration's timeline (Fig. 3).
     pub fn run_traced(&self, mut trace: Option<&Trace>) -> SimResult {
         let mut rng = Pcg64::new(self.seed, 0x51A7);
+        let reduced = self.elastic_reduced_setup();
+        let warmup_iters =
+            (self.iters as f64 * self.elastic_warmup_frac.clamp(0.0, 1.0)).round() as usize;
         let mut wall = 0.0;
         let mut tokens = 0.0;
+        let mut device_seconds = 0.0;
         let mut t_inf_sum = 0.0;
         let mut t_train_sum = 0.0;
         let mut idle_sum = 0.0;
         for it in 0..self.iters {
-            // Sample the batch: N groups of G rollouts.
+            // Pre-join iterations run on the reduced fleet; the full fleet
+            // takes over at the warmup boundary (the joiners' weight sync is
+            // part of the ordinary iteration-boundary sync, so it costs
+            // nothing extra here).
+            let setup: &SimSetup = match &reduced {
+                Some(r) if it < warmup_iters => r,
+                _ => self,
+            };
+            // Sample the batch: N groups of G rollouts. Always drawn from
+            // `self` so the workload stream is identical whether or not the
+            // fleet is elastic — joins must not change what is trained.
             let groups: Vec<Vec<(usize, usize)>> = (0..self.workload.batch_prompts)
                 .map(|_| {
                     let (lp, _) = self.workload.sample(&mut rng);
@@ -322,9 +372,10 @@ impl SimSetup {
                         .collect()
                 })
                 .collect();
-            let out = self.run_iteration(&groups, trace.take().filter(|_| it == 0));
+            let out = setup.run_iteration(&groups, trace.take().filter(|_| it == 0));
             wall += out.wall;
             tokens += out.tokens;
+            device_seconds += out.wall * (setup.train_devices() + setup.infer_devices()) as f64;
             t_inf_sum += out.t_infer;
             t_train_sum += out.t_train;
             idle_sum += out.idle;
@@ -334,11 +385,19 @@ impl SimSetup {
             Framework::FullyAsync => 1.0,
             _ => 0.0,
         };
+        // Elastic runs bill the devices actually deployed per iteration;
+        // static runs keep the exact peak-devices formula (bit-identical to
+        // the pre-elastic simulator).
+        let tpspd = if reduced.is_some() {
+            tokens / device_seconds
+        } else {
+            tokens / (wall * self.cluster.n_devices as f64)
+        };
         SimResult {
             framework: self.framework,
             wall_seconds: wall,
             trained_tokens: tokens,
-            tpspd: tokens / (wall * self.cluster.n_devices as f64),
+            tpspd,
             t_infer_mean: t_inf_sum / n,
             t_train_mean: t_train_sum / n,
             consumer_idle_mean: idle_sum / n,
@@ -477,6 +536,7 @@ mod tests {
             template_frac: 0.0,
             cross_engine: false,
             store_shards: 1,
+            elastic_warmup_frac: 0.0,
             train_micro_bs: 16,
             micro_launch_s: 0.5,
             iters: 5,
@@ -666,6 +726,58 @@ mod tests {
         let mut no_store_sharded = no_store.clone();
         no_store_sharded.store_shards = 8;
         assert_eq!(no_store.run().t_infer_mean, no_store_sharded.run().t_infer_mean);
+    }
+
+    #[test]
+    fn elastic_fleet_bills_deployed_device_seconds_only() {
+        // Training-bound regime (micro-bs 1 inflates launch overhead): the
+        // consumer is always behind, so serving the warmup half of the run
+        // with half the inference fleet barely moves the wall clock while
+        // billing strictly fewer device-seconds — the elasticity dividend.
+        let mut s = base(Framework::PeriodicAsync);
+        s.workload = WorkloadSpec::gsm8k(32);
+        s.train_micro_bs = 1;
+        let static_run = s.run();
+        let mut e = s.clone();
+        e.elastic_warmup_frac = 0.5;
+        let elastic = e.run();
+        assert_eq!(
+            static_run.trained_tokens, elastic.trained_tokens,
+            "joining engines must not change what is trained"
+        );
+        assert!(
+            elastic.wall_seconds >= static_run.wall_seconds,
+            "a smaller warmup fleet cannot be faster: {} vs {}",
+            elastic.wall_seconds,
+            static_run.wall_seconds
+        );
+        // Billing deployed devices can only raise TPSPD relative to billing
+        // the peak fleet for the same walls...
+        let peak_billed = elastic.trained_tokens / (elastic.wall_seconds * 16.0);
+        assert!(
+            elastic.tpspd >= peak_billed * 0.999,
+            "device-second billing must not undercut peak billing: {} vs {peak_billed}",
+            elastic.tpspd
+        );
+        // ...and in the training-bound regime the elastic run beats the
+        // static fleet outright: same wall (training dominates), fewer
+        // device-seconds.
+        assert!(
+            elastic.tpspd > static_run.tpspd,
+            "elastic {} should beat static {} when training-bound",
+            elastic.tpspd,
+            static_run.tpspd
+        );
+        // frac 0 takes the static path, bit-identically.
+        let mut z = s.clone();
+        z.elastic_warmup_frac = 0.0;
+        assert_eq!(z.run().tpspd, static_run.tpspd);
+        // Colocated designs have no separate fleet: the knob is inert there.
+        let mut c = base(Framework::ColocatedSync);
+        c.workload = WorkloadSpec::gsm8k(32);
+        let colo = c.run();
+        c.elastic_warmup_frac = 0.5;
+        assert_eq!(c.run().tpspd, colo.tpspd);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //!
 //! # Shard topology
 //!
-//! The store is `S` independent [`shard::Shard`]s (`engine.store_shards` in
+//! The store is `S` independent `Shard`s ([`shard`]; `engine.store_shards` in
 //! the config; default 1), each behind its own `Mutex` and owning a disjoint
 //! slice of the block budget. A *chain* — every block entry of one published
 //! prefix — lives entirely in one shard: the facade range-partitions on the
@@ -62,8 +62,9 @@
 //! (`PrefixCache::insert_prefix`), and proceeds exactly as if the prefix had
 //! always been local — so restore, chunk planning, token accounting and the
 //! bit-exactness story are unchanged, and the import shows up as
-//! `cross_engine_hits` / `cross_engine_tokens` in [`crate::engine::
-//! EngineStats`]. Completed prefixes are published back once per admission,
+//! `cross_engine_hits` / `cross_engine_tokens` in
+//! [`crate::engine::EngineStats`]. Completed prefixes are published back
+//! once per admission,
 //! bounded by a per-engine, per-sync-interval publish budget
 //! (`engine.store_publish`) so a churny workload cannot thrash the store.
 //! The coordinator additionally consults [`SharedKvStore::residency_blocks`]

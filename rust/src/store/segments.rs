@@ -1,6 +1,6 @@
 //! Shared definitions of the store's content-addressed segment entries.
 //!
-//! One [`Entry`] covers the KV rows of one *block* of a published prefix —
+//! One `Entry` covers the KV rows of one *block* of a published prefix —
 //! token positions `[start, end)` where `end` is a `block_tokens` multiple
 //! (or the prefix's full, unaligned length for the terminal tail) — keyed by
 //! the hash of the **whole prefix through `end`** ([`super::hash`]). Chained
@@ -12,9 +12,9 @@
 //! the same few-shot template store its blocks once.
 //!
 //! The map itself — capacity, eviction, leases, versioning — lives in
-//! [`super::shard`]: the store is a set of independent [`super::shard::
-//! Shard`]s, each owning one hash range of chains. These types are what the
-//! shards and the [`super::SharedKvStore`] facade exchange.
+//! [`super::shard`]: the store is a set of independent `Shard`s, each owning
+//! one hash range of chains. These types are what the shards and the
+//! [`super::SharedKvStore`] facade exchange.
 
 /// One block-granular segment: KV rows for `[end - tokens.len(), end)` of
 /// some published prefix.

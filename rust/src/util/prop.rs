@@ -2,7 +2,7 @@
 //!
 //! The offline environment has no `proptest`/`quickcheck`, so pa-rl provides a
 //! small seeded property harness: a generator closure produces random cases
-//! from a [`Pcg64`](super::rng::Pcg64), a checker validates each case, and on
+//! from a [`Pcg64`], a checker validates each case, and on
 //! failure the harness retries a bounded number of "shrink" passes by asking
 //! the generator for *smaller* cases (via a shrink hint), then reports the
 //! failing seed so the case is exactly reproducible.

@@ -640,6 +640,101 @@ fn checkpoint_roundtrip_through_trainer() {
     assert_eq!(t2.policy().version, 1);
 }
 
+/// Acceptance (elastic fleet): a training run that joins an engine at one
+/// boundary and drains one at a later boundary completes with zero lost
+/// rollouts and produces **bit-identical per-iteration rewards** to a static
+/// fleet of the final size, while the trace's fleet lane records both
+/// resizes.
+///
+/// Greedy sampling makes every rollout a function of (prompt, weights)
+/// alone — independent of which engine serves it, in which slot, next to
+/// which batch-mates — so fleet elasticity is equivalence-checkable
+/// bit-for-bit. Sync mode then trains the collected groups in prompt order,
+/// making the weight trajectory deterministic too.
+#[test]
+fn elastic_join_and_drain_matches_static_fleet() {
+    use pa_rl::config::FleetEvent;
+    let Some((mut cfg, dir)) = artifacts() else { return };
+    cfg.engine.temperature = 0.0;
+    cfg.rl.n_engines = 2;
+    let iters = 3u64;
+
+    let run = |cfg: &Config| {
+        let opts = DriverOpts { mode: Mode::Sync, spa: false, seed: 41 };
+        let mut driver = Driver::new(cfg.clone(), &dir, opts).unwrap();
+        let rep = driver.run(iters).unwrap();
+        // Zero lost rollouts: every batch fully assembled and trained.
+        assert_eq!(rep.iters.len(), iters as usize);
+        assert_eq!(driver.trainer().policy_version(), iters);
+        let rewards: Vec<f64> = rep.iters.iter().map(|i| i.reward_mean).collect();
+        let engines: Vec<usize> = rep.iters.iter().map(|i| i.engines).collect();
+        (rewards, engines, rep.trace)
+    };
+
+    let (static_rewards, static_engines, _) = run(&cfg);
+    assert_eq!(static_engines, vec![2, 2, 2]);
+
+    let mut elastic = cfg.clone();
+    elastic.rl.fleet_schedule = vec![
+        FleetEvent { iter: 1, join: 1, leave: 0 },
+        FleetEvent { iter: 2, join: 0, leave: 1 },
+    ];
+    let (rewards, engines, trace) = run(&elastic);
+    assert_eq!(engines, vec![2, 3, 2], "fleet must resize at the scheduled boundaries");
+    assert_eq!(
+        rewards, static_rewards,
+        "elastic fleet must be bit-identical to the static fleet of the final size"
+    );
+    // The fig3 trace carries the fleet-size change on its own lane.
+    let spans = trace.spans();
+    assert!(
+        spans.iter().any(|s| s.lane == "fleet" && s.name.contains("join")),
+        "trace must record the join"
+    );
+    assert!(
+        spans.iter().any(|s| s.lane == "fleet" && s.name.contains("drain")),
+        "trace must record the drain"
+    );
+    let fleet_gauge = trace
+        .annotations()
+        .into_iter()
+        .find(|(lane, key, _)| lane == "fleet" && key == "engines")
+        .expect("fleet-size gauge annotated");
+    assert_eq!(fleet_gauge.2, 2.0, "gauge ends at the final fleet size");
+}
+
+/// Elastic async smoke: join + drain mid-run under periodic asynchrony keeps
+/// the run strictly on-policy (the joiner is weight-synced before work) and
+/// the per-iteration engine counts and metric deltas stay self-consistent —
+/// in particular cumulative counters must not run backwards when the drained
+/// engine stops reporting (its history moves to the retired baseline).
+#[test]
+fn elastic_async_run_stays_on_policy_and_consistent() {
+    use pa_rl::config::FleetEvent;
+    let Some((mut cfg, dir)) = artifacts() else { return };
+    cfg.rl.n_engines = 1; // the join crosses the store-activation threshold
+    cfg.rl.fleet_schedule = vec![
+        FleetEvent { iter: 1, join: 2, leave: 0 },
+        FleetEvent { iter: 2, join: 0, leave: 1 },
+    ];
+    let opts = DriverOpts { mode: Mode::Async, spa: false, seed: 29 };
+    let mut driver = Driver::new(cfg.clone(), &dir, opts).unwrap();
+    assert_eq!(driver.n_engines(), 1);
+    let report = driver.run(3).unwrap();
+    assert_eq!(driver.n_engines(), 2);
+    let engines: Vec<usize> = report.iters.iter().map(|i| i.engines).collect();
+    assert_eq!(engines, vec![1, 3, 2]);
+    assert_eq!(report.iters[1].engines_joined, 2);
+    assert_eq!(report.iters[2].engines_left, 1);
+    for it in &report.iters {
+        assert_eq!(it.staleness_mean, 0.0, "elastic async must stay on-policy");
+        assert!(it.train_input_tokens > 0);
+    }
+    // The 1 -> 3 join activated the shared store mid-run.
+    let stats = driver.store_stats().expect("store active after the join");
+    assert!(stats.fetches > 0, "post-join admissions must consult the store");
+}
+
 #[test]
 fn spa_driver_matches_standard_training_direction() {
     // SPA and standard async runs from the same seed should produce similar
