@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
     let mut reqs = Vec::new();
     for (pi, p) in prompts.iter().enumerate() {
         for s in 0..g {
-            reqs.push(GenRequest { request_id: (pi * g + s) as u64, prompt: p.tokens.clone() });
+            reqs.push(GenRequest { request_id: (pi * g + s) as u64, prompt: p.tokens.clone(), ..Default::default() });
         }
     }
     let results = engine.generate_all(reqs)?;
@@ -70,6 +70,7 @@ fn main() -> anyhow::Result<()> {
                 tokens: r.tokens.clone(),
                 logprobs: r.logprobs.clone(),
                 reward: pa_rl::grpo::reward::score(&tokenizer, &r.tokens, p.answer),
+                timeline: r.timeline,
             })
             .collect();
         rollouts.sort_by_key(|r| r.sample_idx);

@@ -44,6 +44,7 @@ use pa_rl::config::Config;
 use pa_rl::coordinator::route;
 use pa_rl::data::DataLoader;
 use pa_rl::engine::{Engine, GenRequest, GenResult};
+use pa_rl::metrics::{Clock, MetricsLevel, RequestMetrics};
 use pa_rl::runtime::Runtime;
 use pa_rl::store::{SharedKvStore, StoreCfg};
 use pa_rl::util::bench::Table;
@@ -63,6 +64,15 @@ fn main() -> anyhow::Result<()> {
     let seed = args.u64_or("seed", 0);
 
     let cfg = Config::load(Path::new(&config_path))?;
+    // --metrics basic|full (default: the config's `metrics.level`). Full
+    // stamps per-request lifecycle timelines and adds TTFT / queue-wait
+    // percentile rows to the report; basic output is unchanged.
+    let metrics_level = match args.get("metrics") {
+        Some(l) => MetricsLevel::parse(&l)
+            .ok_or_else(|| anyhow::anyhow!("--metrics expects basic|full, got '{l}'"))?,
+        None => cfg.metrics.level,
+    };
+    let clock = metrics_level.is_full().then(Clock::new);
     let artifacts = cfg.artifacts_dir();
     let mut eager = vec!["init", "prefill", "decode"];
     if cfg.engine.prefix_cache && cfg.engine.chunked_prefill {
@@ -86,6 +96,9 @@ fn main() -> anyhow::Result<()> {
             *params = Some(rt.init_params(seed as i32)?);
         }
         let mut engine = Engine::new(cfg.clone(), rt, seed ^ (idx as u64).wrapping_mul(0x9E37));
+        if let Some(c) = &clock {
+            engine.set_telemetry(*c);
+        }
         engine.set_weights(params.as_ref().unwrap())?;
         Ok(engine)
     };
@@ -179,10 +192,19 @@ fn main() -> anyhow::Result<()> {
             warmth.advance();
             let repeats = group.min(n_requests - i * group);
             for s in 0..repeats {
-                engines[idx].submit(GenRequest {
+                let mut req = GenRequest {
                     request_id: (i * group + s) as u64,
                     prompt: prompts[i].tokens.clone(),
-                });
+                    ..Default::default()
+                };
+                if let Some(c) = &clock {
+                    // Submission is both enqueue and dispatch here — there
+                    // is no coordinator queue between client and engine.
+                    let now = c.now();
+                    req.timeline.enqueue_s = now;
+                    req.timeline.dispatch_s = now;
+                }
+                engines[idx].submit(req);
             }
             load[idx] += repeats;
         }
@@ -261,6 +283,26 @@ fn main() -> anyhow::Result<()> {
     t.row(&["latency p50 (s)".into(), format!("{:.3}", pct(0.5))]);
     t.row(&["latency p95 (s)".into(), format!("{:.3}", pct(0.95))]);
     t.row(&["latency max (s)".into(), format!("{:.3}", pct(1.0))]);
+    if clock.is_some() {
+        // Full telemetry: fold the stamped timelines into the standard
+        // request-metrics histograms (same aggregation as the coordinator).
+        let mut rm = RequestMetrics::default();
+        for r in &results {
+            rm.observe(&r.timeline, 0);
+        }
+        t.row(&[
+            "ttft p50/p99 (s)".into(),
+            format!("{:.3}/{:.3}", rm.ttft.quantile(0.50), rm.ttft.quantile(0.99)),
+        ]);
+        t.row(&[
+            "queue wait p50/p99 (s)".into(),
+            format!("{:.3}/{:.3}", rm.queue_wait.quantile(0.50), rm.queue_wait.quantile(0.99)),
+        ]);
+        t.row(&[
+            "decode tok/s p50".into(),
+            format!("{:.0}", rm.decode_tps.quantile(0.50)),
+        ]);
+    }
     t.row(&["EOS-terminated".into(), format!("{finished}/{n_requests}")]);
     t.row(&["prefills (compiled)".into(), format!("{}", sum(|s| s.prefills))]);
     t.row(&["prefills skipped".into(), format!("{}", sum(|s| s.prefills_skipped))]);

@@ -45,6 +45,13 @@ fn main() -> anyhow::Result<()> {
     let csv_path = args.get("csv").map(PathBuf::from);
 
     let mut cfg = Config::load(Path::new(&config_path))?;
+    // --metrics basic|full overrides the config's telemetry level (full
+    // stamps request timelines and writes per-iteration snapshots under
+    // artifacts/runs/<name>/ — see docs/OBSERVABILITY.md).
+    if let Some(level) = args.get("metrics") {
+        cfg.metrics.level = pa_rl::metrics::MetricsLevel::parse(&level)
+            .ok_or_else(|| anyhow::anyhow!("--metrics expects basic|full, got '{level}'"))?;
+    }
     // --join iter:N / --leave iter:N (comma-separated for several) merge
     // into the config's fleet schedule, one engine per entry.
     for (flag, is_join) in [("join", true), ("leave", false)] {
@@ -117,6 +124,11 @@ fn main() -> anyhow::Result<()> {
                     it.engines_joined, it.engines_left, it.engines
                 );
             }
+            // Full-telemetry runs carry per-request latency distributions;
+            // basic runs have None here and print exactly the seed's lines.
+            if let Some(req) = &it.requests {
+                println!("         requests: {}", req.summary());
+            }
             if let Some(c) = csv.as_mut() {
                 c.add(&[
                     t as f64,
@@ -150,7 +162,7 @@ fn main() -> anyhow::Result<()> {
         "\nTOTAL: {tokens} train tokens in {wall:.1}s on {devices} instances -> TPSPD {:.3}",
         tokens as f64 / (wall * devices as f64)
     );
-    if let Some(c) = &csv {
+    if let Some(c) = csv.as_mut() {
         c.flush()?;
         println!("curve written to {}", csv_path.unwrap().display());
     }

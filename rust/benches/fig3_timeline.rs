@@ -10,7 +10,7 @@
 
 use pa_rl::config::Config;
 use pa_rl::coordinator::{Driver, DriverOpts, Mode};
-use pa_rl::metrics::Trace;
+use pa_rl::metrics::{RequestMetrics, Trace};
 use pa_rl::sim::{ClusterSpec, EfficiencySpec, Framework, ModelSpec, SimSetup, WorkloadSpec};
 use std::path::Path;
 
@@ -42,11 +42,19 @@ fn main() -> anyhow::Result<()> {
     println!("== Fig. 3 (simulated, paper scale: 8B / 16 NPUs / one iteration) ==\n");
     for (name, fw) in [("synchronous", Framework::DecoupledSync), ("async", Framework::PeriodicAsync)] {
         let trace = Trace::new();
-        let result = sim_setup(fw).run_traced(Some(&trace));
+        let mut requests = RequestMetrics::default();
+        let result = sim_setup(fw).run_traced_metrics(Some(&trace), Some(&mut requests));
         println!(
             "[{name}] iteration wall {:.0}s  (T_inf {:.0}s, T_train {:.0}s, consumer idle {:.0}s)",
             result.wall_seconds, result.t_infer_mean, result.t_train_mean, result.consumer_idle_mean
         );
+        println!("[{name}] requests: {}", requests.summary());
+        // Same "requests" lane annotations the real driver attaches in full
+        // telemetry mode, so sim and real fig3 JSON share one schema.
+        trace.annotate("requests", "ttft_p50", requests.ttft.quantile(0.50));
+        trace.annotate("requests", "ttft_p99", requests.ttft.quantile(0.99));
+        trace.annotate("requests", "queue_p99", requests.queue_wait.quantile(0.99));
+        trace.annotate("requests", "stale_p99", requests.staleness.quantile(0.99));
         println!("{}", trace.render_ascii(100));
         std::fs::write(
             format!("target/bench-out/fig3_sim_{name}.json"),

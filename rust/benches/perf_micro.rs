@@ -6,7 +6,7 @@ use pa_rl::data::{DataLoader, TaskGen, Tokenizer};
 use pa_rl::engine::{sample, SamplerCfg};
 use pa_rl::grpo::{build_spa, build_standard, group_advantages, reward, Sample};
 use pa_rl::metrics::Trace;
-use pa_rl::util::bench::{bench, Table};
+use pa_rl::util::bench::{bench, BenchRecorder, Table};
 use pa_rl::util::json::Json;
 use pa_rl::util::rng::Pcg64;
 
@@ -15,6 +15,9 @@ fn main() {
         "L3 microbenchmarks (per-op cost on the request path)",
         &["Operation", "mean", "p95", "per-unit"],
     );
+    // Machine-readable record committed at the repo root (BENCH_micro.json):
+    // the perf trajectory optimisation PRs refresh and CI schema-validates.
+    let mut rec = BenchRecorder::new("micro", "benches/perf_micro.rs");
     let mut add = |name: &str, stats: pa_rl::util::bench::Stats, unit: String| {
         t.row(&[
             name.to_string(),
@@ -36,6 +39,7 @@ fn main() {
         std::hint::black_box(build_spa(&samples, 640).unwrap());
     });
     add("SPA pack (G=32 group)", s.clone(), format!("{:.0} ns/token", s.mean_secs() * 1e9 / tokens as f64));
+    rec.push("spa_pack_ns_per_token", s.mean_secs() * 1e9 / tokens as f64, "ns/token", s.n);
 
     let s = bench("std_pack", 50, 500, || {
         std::hint::black_box(build_standard(&samples[..8], 8, 96));
@@ -61,10 +65,11 @@ fn main() {
     let logits: Vec<f32> = (0..32_000).map(|i| ((i * 2654435761u64 as usize) % 1000) as f32 / 100.0).collect();
     let cfg = SamplerCfg { temperature: 1.0, top_p: 0.95, top_k: 20 };
     let mut srng = Pcg64::seeded(2);
-    let s = bench("sampler32k", 20, 200, || {
+    let sampler = bench("sampler32k", 20, 200, || {
         std::hint::black_box(sample(&logits, &cfg, &mut srng));
     });
-    add("host sampler (V=32k, top-p+top-k)", s, String::new());
+    add("host sampler (V=32k, top-p+top-k)", sampler.clone(), String::new());
+    rec.push("sampler_32k_p50_us", sampler.p50.as_secs_f64() * 1e6, "us/call", sampler.n);
 
     // prompt generation
     let gen = TaskGen::new(pa_rl::config::DataConfig { few_shot: 2, shared_few_shot: false, max_operand: 99, seed: 0 });
@@ -87,6 +92,7 @@ fn main() {
     let s = bench("trace", 100, 5000, || {
         trace.record("lane", "x", 0.0);
     });
+    rec.push("trace_record_p50_ns", s.p50.as_secs_f64() * 1e9, "ns/span", s.n);
     add("trace span record", s, String::new());
 
     // queue send/recv roundtrip
@@ -111,6 +117,7 @@ fn main() {
     let s = bench("json", 20, 500, || {
         std::hint::black_box(Json::parse(&doc).unwrap());
     });
+    rec.push("json_parse_manifest_p50_us", s.p50.as_secs_f64() * 1e6, "us/parse", s.n);
     add(&format!("json parse ({} B)", doc.len()), s, String::new());
 
     // prefill sharing: G=8 identical prompts admitted through the prefix
@@ -158,6 +165,7 @@ fn main() {
                 g * lp
             ),
         );
+        rec.push("prefix_admit_us_per_rollout", s.mean_secs() * 1e6 / g as f64, "us/rollout", s.n);
     }
 
     // chunked partial-prefix admission: a warm 48-token few-shot template
@@ -239,6 +247,7 @@ fn main() {
                 n_prompts * lp
             ),
         );
+        rec.push("chunked_admit_us_per_prompt", s.mean_secs() * 1e6 / n_prompts as f64, "us/prompt", s.n);
     }
 
     // Dispatch-policy comparison: group-pinned round-robin (per-engine
@@ -411,6 +420,7 @@ fn main() {
     let s = bench("sim_iter", 5, 50, || {
         std::hint::black_box(sim.run());
     });
+    rec.push("sim_iteration_p50_ms", s.p50.as_secs_f64() * 1e3, "ms/iteration", s.n);
     add("simulator iteration (1024 rollouts)", s, String::new());
 
     // Store contention: 8 worker threads hammer publish+fetch on one shared
@@ -425,7 +435,8 @@ fn main() {
         use pa_rl::store::{SharedKvStore, StoreCfg, StoreStats};
         use std::sync::Arc;
 
-        let (n_threads, ops, bt, re) = (8usize, 300usize, 16usize, 256usize);
+        let quick = pa_rl::util::bench::quick_mode();
+        let (n_threads, ops, bt, re) = (8usize, if quick { 60 } else { 300 }, 16usize, 256usize);
         let run_once = |shards: usize| -> (f64, StoreStats) {
             let store = Arc::new(SharedKvStore::new(StoreCfg {
                 block_tokens: bt,
@@ -463,9 +474,10 @@ fn main() {
             }
             (t0.elapsed().as_secs_f64(), store.stats())
         };
-        // Best-of-3 wall clock per topology smooths scheduler noise.
+        // Best-of-3 wall clock per topology smooths scheduler noise (one
+        // run in quick mode — the smoke only exercises the harness).
         let best = |shards: usize| -> (f64, StoreStats) {
-            (0..3)
+            (0..if quick { 1 } else { 3 })
                 .map(|_| run_once(shards))
                 .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
                 .unwrap()
@@ -474,14 +486,18 @@ fn main() {
         let (wall8, stats8) = best(8);
         let total_ops = (n_threads * ops) as f64;
         let (tput1, tput8) = (total_ops / wall1, total_ops / wall8);
+        rec.push("store_contention_ops_per_s_s1", tput1, "ops/s", 3);
+        rec.push("store_contention_ops_per_s_s8", tput8, "ops/s", 3);
         t.row(&[
             "store contention: publish+fetch, 8 threads".to_string(),
             format!("{:.2} ms (S=1)", wall1 * 1e3),
             format!("{:.2} ms (S=8)", wall8 * 1e3),
             format!("{:.0} vs {:.0} ops/s ({:.2}x)", tput1, tput8, tput8 / tput1),
         ]);
+        // Timing-sensitive gate: skipped in quick mode, where the shrunken
+        // workload is too small for the shard advantage to rise above noise.
         assert!(
-            tput8 > tput1,
+            quick || tput8 > tput1,
             "sharded store must out-run the single mutex at 8 threads: {tput8:.0} vs {tput1:.0} ops/s"
         );
         assert!(
@@ -529,5 +545,47 @@ fn main() {
         );
     }
 
+    // Full-telemetry overhead: the entire per-request cost of
+    // `metrics.level = "full"` is six clock stamps plus one RequestMetrics
+    // fold. Measured against the cheapest compiled-free work any request
+    // already pays — a single 32k-vocab sampler call (every request samples
+    // at least one token, and real requests pay far more: admission, one
+    // sampler call per decoded token, scoring). Telemetry under 3% of that
+    // floor is under 3% of any real request — the acceptance bound.
+    {
+        use pa_rl::metrics::{Clock, RequestMetrics, RequestTimeline};
+        let clock = Clock::new();
+        let mut rm = RequestMetrics::default();
+        let s = bench("telemetry", 200, 5000, || {
+            let tl = RequestTimeline {
+                enqueue_s: clock.now(),
+                dispatch_s: clock.now(),
+                admit_s: clock.now(),
+                first_token_s: clock.now(),
+                finish_s: clock.now(),
+                consume_s: clock.now(),
+                decode_tokens: 32,
+            };
+            rm.observe(std::hint::black_box(&tl), 1);
+        });
+        std::hint::black_box(rm.completed);
+        let per_req_us = s.p50.as_secs_f64() * 1e6;
+        let floor_us = sampler.p50.as_secs_f64() * 1e6;
+        let pct = 100.0 * per_req_us / floor_us;
+        add(
+            "full-telemetry request cost (6 stamps + histogram fold)",
+            s.clone(),
+            format!("{pct:.2}% of one sampler call"),
+        );
+        rec.push("telemetry_per_request_p50_us", per_req_us, "us/request", s.n);
+        rec.push("telemetry_overhead_pct_of_sampler_call", pct, "%", s.n);
+        assert!(
+            pct < 3.0,
+            "full telemetry costs {pct:.2}% of a single sampler call — the <3% overhead bound regressed"
+        );
+    }
+
     t.print();
+    let path = rec.write().expect("write BENCH_micro.json at the repo root");
+    println!("bench record ({} metrics) written to {}", rec.len(), path.display());
 }

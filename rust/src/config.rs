@@ -7,6 +7,7 @@
 //! with the artifact shapes — checked against `manifest.json` at load time).
 
 use crate::engine::kvcache::EvictPolicy;
+use crate::metrics::MetricsLevel;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -252,6 +253,18 @@ pub struct DataConfig {
     pub seed: u64,
 }
 
+/// Telemetry settings (`metrics::Registry` / request timelines — see
+/// `docs/OBSERVABILITY.md`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsConfig {
+    /// `"basic"` (default) keeps the seed output surfaces bit-identical;
+    /// `"full"` stamps per-request lifecycle timelines, aggregates
+    /// TTFT / queue-wait / decode-throughput / staleness histograms into
+    /// `IterReport` + the fig3 JSON, and writes per-iteration registry
+    /// snapshots (JSON + Prometheus text) under `artifacts/runs/`.
+    pub level: MetricsLevel,
+}
+
 /// Full run configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
@@ -261,6 +274,7 @@ pub struct Config {
     pub train: TrainConfig,
     pub rl: RlConfig,
     pub data: DataConfig,
+    pub metrics: MetricsConfig,
 }
 
 impl Config {
@@ -426,7 +440,15 @@ impl Config {
             seed: d.f64_or("seed", 0.0) as u64,
         };
 
-        Ok(Config { name, model, engine, train, rl, data })
+        let mt = j.get("metrics").cloned().unwrap_or(Json::Obj(vec![]));
+        let level_str = mt.str_or("level", "basic");
+        let metrics = MetricsConfig {
+            level: MetricsLevel::parse(level_str).with_context(|| {
+                format!("metrics.level '{level_str}' is not one of: basic, full")
+            })?,
+        };
+
+        Ok(Config { name, model, engine, train, rl, data, metrics })
     }
 
     pub fn load(path: &Path) -> Result<Config> {
@@ -508,6 +530,32 @@ mod tests {
         // elastic-fleet defaults: static fleet, no warmth decay
         assert!(c.rl.fleet_schedule.is_empty());
         assert_eq!(c.rl.warmth_ttl, 0);
+        // telemetry defaults to basic (bit-identical surfaces)
+        assert_eq!(c.metrics.level, MetricsLevel::Basic);
+    }
+
+    #[test]
+    fn metrics_level_knob_parses_and_validates() {
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1},
+                "metrics":{"level":"full"}}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.metrics.level, MetricsLevel::Full);
+        assert!(c.metrics.level.is_full());
+        // unknown levels are config mistakes, not silent basics
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1},
+                "metrics":{"level":"verbose"}}"#,
+        )
+        .unwrap();
+        let err = Config::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("metrics.level"), "unexpected error: {err}");
     }
 
     #[test]

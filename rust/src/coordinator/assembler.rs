@@ -72,6 +72,7 @@ impl Assembler {
             tokens: r.tokens,
             logprobs: r.logprobs,
             reward: r.reward,
+            timeline: r.timeline,
         });
         p.received += 1;
         if p.received < p.expected {
@@ -111,6 +112,7 @@ mod tests {
             reward,
             gen_seconds: 0.1,
             engine_idx: 0,
+            timeline: Default::default(),
         }
     }
 

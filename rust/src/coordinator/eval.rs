@@ -42,7 +42,7 @@ pub fn evaluate(
     let reqs: Vec<GenRequest> = prompts
         .iter()
         .enumerate()
-        .map(|(i, p)| GenRequest { request_id: i as u64, prompt: p.tokens.clone() })
+        .map(|(i, p)| GenRequest { request_id: i as u64, prompt: p.tokens.clone(), ..Default::default() })
         .collect();
     let results = engine.generate_all(reqs)?;
     for r in &results {

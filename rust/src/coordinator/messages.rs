@@ -1,6 +1,7 @@
 //! Messages flowing between the coordinator's threads.
 
 use crate::engine::{CacheStats, EngineStats, GenRequest};
+use crate::metrics::RequestTimeline;
 use crate::runtime::HostParams;
 use crate::store::SharedKvStore;
 use std::sync::mpsc;
@@ -89,6 +90,9 @@ pub struct ScoredRollout {
     pub gen_seconds: f64,
     /// Which engine instance produced it (timeline lanes).
     pub engine_idx: usize,
+    /// Lifecycle stamps accumulated along the request's path (all-unset in
+    /// basic metrics mode); the consumer adds the train-consume stamp.
+    pub timeline: RequestTimeline,
 }
 
 /// Cumulative counters snapshot from one engine worker (response to

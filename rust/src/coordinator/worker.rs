@@ -83,7 +83,13 @@ fn worker_main(
     }
     rt.prepare(&artifacts)
         .with_context(|| format!("engine-{idx}: compiling artifacts"))?;
+    let full_metrics = cfg.metrics.level.is_full();
     let mut engine = Engine::new(cfg, rt, seed ^ (idx as u64).wrapping_mul(0x9E37));
+    if full_metrics {
+        // Full telemetry: the engine stamps admit / first-token / finish on
+        // every request timeline, on the same clock as the trace spans.
+        engine.set_telemetry(trace.clock());
+    }
     let tokenizer = Tokenizer::new();
     let lane = format!("infer-{idx}");
     // request_id -> job metadata for scoring
@@ -152,6 +158,7 @@ fn score_and_send(
             reward: score,
             gen_seconds: r.seconds,
             engine_idx: idx,
+            timeline: r.timeline,
         };
         if queue.send(rollout).is_err() {
             return Ok(false);

@@ -35,6 +35,9 @@ pub struct InFlight {
     /// the shared segment store; released at retirement so hot templates
     /// stay resident store-wide while any importer is in flight.
     pub store_lease: Option<crate::store::StoreLease>,
+    /// Lifecycle stamps carried from the [`crate::engine::GenRequest`]; the
+    /// engine adds admit / first-token / finish when telemetry is on.
+    pub timeline: crate::metrics::RequestTimeline,
 }
 
 /// Slot table.
@@ -117,6 +120,7 @@ mod tests {
             started: Instant::now(),
             lease: None,
             store_lease: None,
+            timeline: Default::default(),
         }
     }
 

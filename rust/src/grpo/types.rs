@@ -1,6 +1,7 @@
 //! Core GRPO data types flowing through the producer–consumer pipeline.
 
 use crate::data::Prompt;
+use crate::metrics::RequestTimeline;
 
 /// One generated response for a prompt, tagged with the policy version that
 /// produced it. The version tag makes the paper's on-policy invariant
@@ -19,6 +20,9 @@ pub struct Rollout {
     pub logprobs: Vec<f32>,
     /// Rule-based reward.
     pub reward: f32,
+    /// Lifecycle stamps gathered on the request's way here (all-unset in
+    /// basic metrics mode); the consumer adds the final train-consume stamp.
+    pub timeline: RequestTimeline,
 }
 
 /// A complete GRPO group: one prompt with its G scored rollouts and

@@ -1,0 +1,483 @@
+//! Deterministic log-bucketed histograms for latency / throughput
+//! distributions (p50/p99 TTFT, queue wait, decode tokens/s, staleness).
+//!
+//! Values are bucketed by their binary exponent plus the top `SUB_BITS`
+//! mantissa bits — `2^SUB_BITS` buckets per power of two, derived directly
+//! from the IEEE-754 bit pattern, so bucketing is exact, monotone, and
+//! identical on every platform and under every thread interleaving. Counts
+//! are exact integers; quantile estimates come from bucket midpoints, so the
+//! relative error of a quantile is bounded by one bucket's relative width
+//! (`2^(1/32) − 1 ≈ 2.2%`) for in-range values. The proptests in this module
+//! check exactly that bound against a sorted-vector oracle.
+//!
+//! Two forms share the bucketing scheme:
+//!
+//! * [`Histogram`] — plain single-owner form used for snapshots, merging
+//!   (multi-engine aggregation is associative on counts) and JSON export.
+//! * [`AtomicHistogram`] — lock-free concurrent form behind the registry's
+//!   cloneable handles; `observe` is a couple of relaxed atomic RMWs.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Sub-octave resolution: 2^SUB_BITS buckets per power of two.
+const SUB_BITS: u32 = 5;
+/// Buckets per octave (32).
+const SUBS: usize = 1 << SUB_BITS;
+/// Smallest resolved exponent; values in `(0, 2^MIN_EXP)` clamp to bucket 0.
+const MIN_EXP: i32 = -40;
+/// One-past-largest resolved exponent; values `>= 2^MAX_EXP` clamp to the
+/// last bucket. The range `[2^-40, 2^40)` spans picoseconds to ~1.1e12,
+/// comfortably covering seconds-scale latencies and tokens/s throughputs.
+const MAX_EXP: i32 = 40;
+/// Total bucket count (80 octaves x 32 sub-buckets).
+pub const BUCKETS: usize = ((MAX_EXP - MIN_EXP) as usize) * SUBS;
+
+/// The exact lower bound of bucket `(exp, sub)`: `2^exp * (1 + sub/32)`.
+fn bucket_floor(exp: i32, sub: usize) -> f64 {
+    debug_assert!((MIN_EXP..=MAX_EXP).contains(&exp) && sub < SUBS);
+    f64::from_bits((((1023 + exp) as u64) << 52) | ((sub as u64) << (52 - SUB_BITS)))
+}
+
+fn min_value() -> f64 {
+    bucket_floor(MIN_EXP, 0)
+}
+
+fn max_value() -> f64 {
+    bucket_floor(MAX_EXP, 0)
+}
+
+/// Histograms record non-negative measurements; NaN / negative observations
+/// clamp to 0.0 so min/max can use bit-ordered atomic comparisons.
+fn clamp_observation(v: f64) -> f64 {
+    if v.is_finite() && v > 0.0 {
+        v
+    } else {
+        0.0
+    }
+}
+
+/// Map a (clamped) value to its bucket index. Exact and monotone: derived
+/// from the float's bit pattern, no transcendental math involved.
+pub fn bucket_index(v: f64) -> usize {
+    let v = clamp_observation(v);
+    if v < min_value() {
+        return 0;
+    }
+    if v >= max_value() {
+        return BUCKETS - 1;
+    }
+    let bits = v.to_bits();
+    let exp = ((bits >> 52) & 0x7FF) as i32 - 1023;
+    let sub = ((bits >> (52 - SUB_BITS)) & (SUBS as u64 - 1)) as usize;
+    ((exp - MIN_EXP) as usize) * SUBS + sub
+}
+
+/// Inclusive-lower / exclusive-upper value bounds of bucket `idx`. Bucket 0
+/// additionally absorbs `[0, 2^MIN_EXP)`; the last bucket absorbs
+/// `[top, +inf)` but reports its nominal one-sub-bucket width.
+pub fn bucket_bounds(idx: usize) -> (f64, f64) {
+    assert!(idx < BUCKETS);
+    let exp = MIN_EXP + (idx / SUBS) as i32;
+    let sub = idx % SUBS;
+    let lo = if idx == 0 { 0.0 } else { bucket_floor(exp, sub) };
+    let hi = if sub + 1 < SUBS {
+        bucket_floor(exp, sub + 1)
+    } else {
+        bucket_floor(exp + 1, 0)
+    };
+    (lo, hi)
+}
+
+/// Exact-count log-bucketed histogram (single-owner / snapshot form).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: 0.0,
+        }
+    }
+
+    /// Record one observation (clamped to `>= 0`; see module docs).
+    pub fn observe(&mut self, v: f64) {
+        let v = clamp_observation(v);
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v < self.min {
+            self.min = v;
+        }
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Fold `other` into `self`. Bucket counts add exactly, so merging is
+    /// associative and commutative on counts and min/max; the `sum` field is
+    /// a float accumulation and exact whenever the observations are (e.g.
+    /// integer-valued staleness).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Quantile estimate from bucket counts, nearest-rank convention
+    /// (`rank = round((n−1)·q)`, matching `util::bench::Stats`). The returned
+    /// bucket midpoint is clamped into `[min, max]`, so `q=0` / `q=1` are
+    /// exact and every estimate stays inside the observed range.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((self.count - 1) as f64 * q).round() as u64;
+        let mut cum = 0u64;
+        for (idx, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                let (lo, hi) = bucket_bounds(idx);
+                return (0.5 * (lo + hi)).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Summary form: count, sum, min/max and the headline quantiles. Kept
+    /// flat (no raw bucket dump) so per-iteration snapshots stay small.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum)),
+            ("min", Json::num(self.min())),
+            ("max", Json::num(self.max())),
+            ("mean", Json::num(self.mean())),
+            ("p50", Json::num(self.quantile(0.50))),
+            ("p90", Json::num(self.quantile(0.90))),
+            ("p99", Json::num(self.quantile(0.99))),
+        ])
+    }
+}
+
+/// Lock-free histogram for concurrent observation: bucket increments and
+/// min/max are single relaxed RMWs (f64 bit patterns of non-negative values
+/// order like the values themselves), the running sum is a CAS loop.
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            max_bits: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+
+    /// Record one observation. Wait-free except for the sum's CAS loop.
+    pub fn observe(&self, v: f64) {
+        let v = clamp_observation(v);
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let bits = v.to_bits();
+        self.min_bits.fetch_min(bits, Ordering::Relaxed);
+        self.max_bits.fetch_max(bits, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self
+                .sum_bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Copy the current state into a plain [`Histogram`]. Quiescent reads
+    /// (no concurrent writers) are exact; concurrent reads are a consistent
+    /// "at least what was fully recorded" view.
+    pub fn snapshot(&self) -> Histogram {
+        Histogram {
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: f64::from_bits(self.sum_bits.load(Ordering::Relaxed)),
+            min: f64::from_bits(self.min_bits.load(Ordering::Relaxed)),
+            max: f64::from_bits(self.max_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::quick;
+    use crate::util::rng::Pcg64;
+
+    /// Max relative quantile error: one bucket's relative width
+    /// (2^(1/32) − 1 ≈ 2.2%) plus slack for the midpoint convention.
+    const QUANTILE_REL_ERR: f64 = 0.03;
+
+    fn oracle_quantile(sorted: &[f64], q: f64) -> f64 {
+        let rank = ((sorted.len() - 1) as f64 * q).round() as usize;
+        sorted[rank]
+    }
+
+    #[test]
+    fn bucket_bounds_contain_their_values() {
+        let mut rng = Pcg64::seeded(11);
+        for _ in 0..10_000 {
+            // log-uniform across the full resolved range
+            let v = (rng.range_f64(-39.9, 39.9)).exp2();
+            let idx = bucket_index(v);
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(lo <= v && v < hi, "v={v} not in bucket {idx} [{lo}, {hi})");
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_clamped() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-3.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(1e300), BUCKETS - 1);
+        let mut rng = Pcg64::seeded(12);
+        for _ in 0..10_000 {
+            let a = rng.range_f64(1e-9, 1e9);
+            let b = rng.range_f64(1e-9, 1e9);
+            let (a, b) = if a <= b { (a, b) } else { (b, a) };
+            assert!(bucket_index(a) <= bucket_index(b));
+        }
+    }
+
+    #[test]
+    fn prop_quantiles_match_sorted_oracle() {
+        quick(
+            "histogram-quantile-oracle",
+            |rng, size| {
+                let n = rng.range(1, size.scaled(512) + 2);
+                (0..n)
+                    .map(|_| rng.range_f64(-6.0, 6.0) * std::f64::consts::LN_10)
+                    .map(f64::exp) // log-uniform over [1e-6, 1e6]
+                    .collect::<Vec<f64>>()
+            },
+            |xs| {
+                let mut h = Histogram::new();
+                for &x in xs {
+                    h.observe(x);
+                }
+                let mut sorted = xs.clone();
+                sorted.sort_by(f64::total_cmp);
+                for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                    let est = h.quantile(q);
+                    let actual = oracle_quantile(&sorted, q);
+                    let rel = (est - actual).abs() / actual;
+                    if rel > QUANTILE_REL_ERR {
+                        return Err(format!(
+                            "q={q}: est {est} vs oracle {actual} (rel err {rel:.4})"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_merge_is_associative() {
+        quick(
+            "histogram-merge-associative",
+            |rng, size| {
+                // dyadic-exact values (k/8 for small k) so f64 sums are exact
+                // in any association and the comparison can be bitwise.
+                let mk = |rng: &mut Pcg64, n: usize| {
+                    (0..n).map(|_| rng.range(0, 4096) as f64 / 8.0).collect::<Vec<f64>>()
+                };
+                let n = size.scaled(128);
+                let (na, nb, nc) =
+                    (rng.range(0, n + 1), rng.range(0, n + 1), rng.range(0, n + 1));
+                let a = mk(rng, na);
+                let b = mk(rng, nb);
+                let c = mk(rng, nc);
+                (a, b, c)
+            },
+            |(a, b, c)| {
+                let hist = |xs: &[f64]| {
+                    let mut h = Histogram::new();
+                    for &x in xs {
+                        h.observe(x);
+                    }
+                    h
+                };
+                let (ha, hb, hc) = (hist(a), hist(b), hist(c));
+                // (a ∪ b) ∪ c
+                let mut left = ha.clone();
+                left.merge(&hb);
+                left.merge(&hc);
+                // a ∪ (b ∪ c)
+                let mut bc = hb.clone();
+                bc.merge(&hc);
+                let mut right = ha.clone();
+                right.merge(&bc);
+                if left != right {
+                    return Err("merge associativity violated".into());
+                }
+                // merging is also equivalent to observing the concatenation
+                let mut all: Vec<f64> = a.clone();
+                all.extend_from_slice(b);
+                all.extend_from_slice(c);
+                if left != hist(&all) {
+                    return Err("merge differs from direct observation".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn atomic_snapshot_is_deterministic_across_interleavings() {
+        // Fixed per-thread value sets, integer-valued so the CAS-looped f64
+        // sum is exact in every addition order: any interleaving must yield
+        // the identical snapshot.
+        let values: Vec<Vec<f64>> = (0..4)
+            .map(|t| (0..256).map(|k| ((t * 256 + k) % 97 + 1) as f64).collect())
+            .collect();
+        let run = |chunk: usize| {
+            let h = std::sync::Arc::new(AtomicHistogram::new());
+            std::thread::scope(|s| {
+                for vs in &values {
+                    let h = h.clone();
+                    s.spawn(move || {
+                        for batch in vs.chunks(chunk) {
+                            for &v in batch {
+                                h.observe(v);
+                            }
+                            std::thread::yield_now();
+                        }
+                    });
+                }
+            });
+            h.snapshot()
+        };
+        // different chunk sizes force different interleavings
+        let a = run(1);
+        let b = run(64);
+        assert_eq!(a, b);
+        assert_eq!(a.count(), 1024);
+        // and the concurrent result equals the sequential one
+        let mut seq = Histogram::new();
+        for vs in &values {
+            for &v in vs {
+                seq.observe(v);
+            }
+        }
+        assert_eq!(a, seq);
+    }
+
+    #[test]
+    fn empty_and_degenerate_histograms() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+
+        let mut z = Histogram::new();
+        z.observe(0.0);
+        z.observe(-5.0); // clamps to 0
+        assert_eq!(z.count(), 2);
+        assert_eq!(z.quantile(0.99), 0.0);
+        assert_eq!(z.max(), 0.0);
+    }
+
+    #[test]
+    fn json_summary_has_headline_fields() {
+        let mut h = Histogram::new();
+        for k in 1..=100 {
+            h.observe(k as f64 / 1000.0);
+        }
+        let j = h.to_json();
+        assert_eq!(j.req_f64("count").unwrap(), 100.0);
+        let p50 = j.req_f64("p50").unwrap();
+        assert!((p50 - 0.0505).abs() / 0.0505 < QUANTILE_REL_ERR, "p50 {p50}");
+        assert!(j.req_f64("p99").unwrap() <= j.req_f64("max").unwrap());
+    }
+}

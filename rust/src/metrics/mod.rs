@@ -1,12 +1,67 @@
 //! Measurement plane: wall-clock timeline traces (paper Fig. 3), TPSPD
-//! throughput accounting (the paper's headline metric), and CSV curve logs
-//! (paper Fig. 5).
+//! throughput accounting (the paper's headline metric), CSV curve logs
+//! (paper Fig. 5), and the unified telemetry subsystem — a named-metric
+//! [`Registry`] with counter/gauge/histogram handles, per-request lifecycle
+//! [`timeline`]s aggregated into deterministic log-bucketed [`histogram`]s,
+//! and JSON / Prometheus exporters (see `docs/OBSERVABILITY.md`).
+//!
+//! Telemetry depth is governed by [`MetricsLevel`] (`metrics.level` in the
+//! config): `Basic` keeps every output surface bit-identical to the
+//! pre-telemetry tree; `Full` additionally stamps request timelines and
+//! emits per-iteration snapshots.
 
+pub mod histogram;
+pub mod registry;
+pub mod timeline;
 pub mod trace;
 
+pub use histogram::Histogram;
+pub use registry::{Counter, Gauge, HistogramHandle, Registry, RegistrySnapshot};
+pub use timeline::{Clock, RequestMetrics, RequestTimeline};
 pub use trace::{Span, Trace};
 
+use std::io::Write;
 use std::time::Instant;
+
+/// How much telemetry a run records.
+///
+/// * `Basic` (default) — the seed surfaces only: trace spans, per-iteration
+///   counters, train CSV. Output stays bit-identical to a build without the
+///   telemetry subsystem; request timelines are never stamped.
+/// * `Full` — additionally stamps per-request lifecycle timelines
+///   (enqueue → dispatch → admit → first-token → finish → train-consume),
+///   aggregates TTFT / queue-wait / decode-throughput / staleness
+///   histograms, and writes per-iteration registry snapshots under
+///   `artifacts/runs/`. Overhead is a few relaxed atomic ops per request,
+///   asserted < 3% of request cost in `perf_micro`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricsLevel {
+    #[default]
+    Basic,
+    Full,
+}
+
+impl MetricsLevel {
+    /// Parse a config string (`"basic"` / `"full"`).
+    pub fn parse(s: &str) -> Option<MetricsLevel> {
+        match s {
+            "basic" => Some(MetricsLevel::Basic),
+            "full" => Some(MetricsLevel::Full),
+            _ => None,
+        }
+    }
+
+    pub fn is_full(self) -> bool {
+        self == MetricsLevel::Full
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricsLevel::Basic => "basic",
+            MetricsLevel::Full => "full",
+        }
+    }
+}
 
 /// Tokens-trained-per-second-per-device — the paper's primary metric
 /// ("end-to-end training throughput, measured by tokens trained per second
@@ -42,12 +97,22 @@ impl Tpspd {
     }
 }
 
-/// Append-only CSV logger for training curves (reward/loss/kl per step —
+/// Crash-safe CSV logger for training curves (reward/loss/kl per step —
 /// regenerates paper Fig. 5).
+///
+/// Rows are persisted incrementally: the first [`CsvLog::add`] creates the
+/// file and writes the header, every subsequent `add` appends its row
+/// through a buffered writer and flushes it, so a killed run keeps its
+/// partial training curve. [`CsvLog::flush`] retries anything a best-effort
+/// `add` could not persist (and surfaces the I/O error); the final file is
+/// byte-identical to the old whole-file-at-end writer.
 pub struct CsvLog {
     path: std::path::PathBuf,
     header: Vec<String>,
     rows: Vec<Vec<f64>>,
+    /// Rows already persisted to disk.
+    written: usize,
+    out: Option<std::io::BufWriter<std::fs::File>>,
 }
 
 impl CsvLog {
@@ -56,26 +121,47 @@ impl CsvLog {
             path: path.to_path_buf(),
             header: header.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            written: 0,
+            out: None,
         }
     }
 
+    /// Append a row and persist it (best-effort: an I/O failure here is
+    /// retried and reported by the next [`CsvLog::flush`]).
     pub fn add(&mut self, row: &[f64]) {
         assert_eq!(row.len(), self.header.len(), "csv row width");
         self.rows.push(row.to_vec());
+        let _ = self.persist();
     }
 
-    pub fn flush(&self) -> std::io::Result<()> {
-        if let Some(parent) = self.path.parent() {
-            std::fs::create_dir_all(parent)?;
+    /// Ensure header and all rows are on disk.
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.persist()
+    }
+
+    fn persist(&mut self) -> std::io::Result<()> {
+        if self.out.is_none() {
+            if let Some(parent) = self.path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            let file = std::fs::File::create(&self.path)?;
+            let mut w = std::io::BufWriter::new(file);
+            let mut head = self.header.join(",");
+            head.push('\n');
+            w.write_all(head.as_bytes())?;
+            self.out = Some(w);
         }
-        let mut s = self.header.join(",");
-        s.push('\n');
-        for row in &self.rows {
+        let mut pending = String::new();
+        for row in &self.rows[self.written..] {
             let cells: Vec<String> = row.iter().map(|x| format!("{x}")).collect();
-            s.push_str(&cells.join(","));
-            s.push('\n');
+            pending.push_str(&cells.join(","));
+            pending.push('\n');
         }
-        std::fs::write(&self.path, s)
+        let w = self.out.as_mut().expect("csv writer opened above");
+        w.write_all(pending.as_bytes())?;
+        w.flush()?;
+        self.written = self.rows.len();
+        Ok(())
     }
 
     pub fn rows(&self) -> &[Vec<f64>] {
@@ -107,5 +193,43 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("step,reward\n"));
         assert_eq!(text.lines().count(), 3);
+    }
+
+    #[test]
+    fn csv_log_persists_each_add_without_flush() {
+        // crash-safety: rows must reach disk even if flush() is never
+        // called and the log is dropped mid-run.
+        let dir = std::env::temp_dir().join("pa_rl_csv_crash_test");
+        let path = dir.join("curve.csv");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut log = CsvLog::new(&path, &["step", "reward"]);
+            log.add(&[0.0, 0.5]);
+            log.add(&[1.0, 0.25]);
+            // read back while the writer is still alive: both rows flushed
+            let text = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(text, "step,reward\n0,0.5\n1,0.25\n");
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,reward\n0,0.5\n1,0.25\n");
+    }
+
+    #[test]
+    fn csv_flush_with_no_rows_writes_header() {
+        let dir = std::env::temp_dir().join("pa_rl_csv_header_test");
+        let path = dir.join("curve.csv");
+        let mut log = CsvLog::new(&path, &["a", "b"]);
+        log.flush().unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a,b\n");
+    }
+
+    #[test]
+    fn metrics_level_parses() {
+        assert_eq!(MetricsLevel::parse("basic"), Some(MetricsLevel::Basic));
+        assert_eq!(MetricsLevel::parse("full"), Some(MetricsLevel::Full));
+        assert_eq!(MetricsLevel::parse("verbose"), None);
+        assert_eq!(MetricsLevel::default(), MetricsLevel::Basic);
+        assert!(!MetricsLevel::Basic.is_full());
+        assert_eq!(MetricsLevel::Full.as_str(), "full");
     }
 }

@@ -1,0 +1,331 @@
+//! Named metric registry: counters, gauges and histograms behind cheap
+//! cloneable handles, with a snapshot/delta mechanism and two exporters.
+//!
+//! Components register series by name (`registry.counter("engine.prefills")`)
+//! and keep the returned handle; registration is get-or-create, so the same
+//! name always resolves to the same underlying cell and independent
+//! components (or the several engines of a fleet) accumulate into one
+//! fleet-wide series. Handles are `Arc`-backed and lock-free to update —
+//! a recorded counter bump is one relaxed `fetch_add`.
+//!
+//! A [`RegistrySnapshot`] freezes every series at a point in time (sorted by
+//! name, so output is deterministic); [`RegistrySnapshot::counter_delta`]
+//! subtracts a baseline snapshot, which is how per-iteration movement is
+//! derived without threading individual counter fields through report
+//! structs. Exporters: [`RegistrySnapshot::to_json`] (the per-iteration
+//! `artifacts/runs/` snapshot files) and [`RegistrySnapshot::to_prometheus`]
+//! (Prometheus text exposition, histograms as summaries).
+
+use super::histogram::{AtomicHistogram, Histogram};
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic counter handle (clone = same underlying cell).
+#[derive(Debug, Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value-wins gauge handle (stores f64 bits atomically).
+#[derive(Debug, Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Concurrent histogram handle (see [`AtomicHistogram`]).
+#[derive(Debug, Clone)]
+pub struct HistogramHandle(Arc<AtomicHistogram>);
+
+impl HistogramHandle {
+    pub fn observe(&self, v: f64) {
+        self.0.observe(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count()
+    }
+
+    pub fn snapshot(&self) -> Histogram {
+        self.0.snapshot()
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: Mutex<Vec<(String, Arc<AtomicU64>)>>,
+    gauges: Mutex<Vec<(String, Arc<AtomicU64>)>>,
+    hists: Mutex<Vec<(String, Arc<AtomicHistogram>)>>,
+}
+
+/// The unified metric plane. Cloning shares the same registry; the mutexes
+/// guard only the name→cell tables (registration and snapshotting), never
+/// the hot update path.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    inner: Arc<Inner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create the counter named `name`.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut tab = self.inner.counters.lock().unwrap();
+        if let Some((_, c)) = tab.iter().find(|(n, _)| n == name) {
+            return Counter(c.clone());
+        }
+        let c = Arc::new(AtomicU64::new(0));
+        tab.push((name.to_string(), c.clone()));
+        Counter(c)
+    }
+
+    /// Get-or-create the gauge named `name` (initial value 0.0).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut tab = self.inner.gauges.lock().unwrap();
+        if let Some((_, g)) = tab.iter().find(|(n, _)| n == name) {
+            return Gauge(g.clone());
+        }
+        let g = Arc::new(AtomicU64::new(0.0f64.to_bits()));
+        tab.push((name.to_string(), g.clone()));
+        Gauge(g)
+    }
+
+    /// Get-or-create the histogram named `name`.
+    pub fn histogram(&self, name: &str) -> HistogramHandle {
+        let mut tab = self.inner.hists.lock().unwrap();
+        if let Some((_, h)) = tab.iter().find(|(n, _)| n == name) {
+            return HistogramHandle(h.clone());
+        }
+        let h = Arc::new(AtomicHistogram::new());
+        tab.push((name.to_string(), h.clone()));
+        HistogramHandle(h)
+    }
+
+    /// Freeze every registered series, sorted by name.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let mut counters: Vec<(String, u64)> = self
+            .inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, c)| (n.clone(), c.load(Ordering::Relaxed)))
+            .collect();
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut gauges: Vec<(String, f64)> = self
+            .inner
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, g)| (n.clone(), f64::from_bits(g.load(Ordering::Relaxed))))
+            .collect();
+        gauges.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut hists: Vec<(String, Histogram)> = self
+            .inner
+            .hists
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, h)| (n.clone(), h.snapshot()))
+            .collect();
+        hists.sort_by(|a, b| a.0.cmp(&b.0));
+        RegistrySnapshot { counters, gauges, hists }
+    }
+}
+
+/// A point-in-time freeze of a [`Registry`], sorted by series name.
+#[derive(Debug, Clone, Default)]
+pub struct RegistrySnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, Histogram)>,
+}
+
+impl RegistrySnapshot {
+    /// Counter movement since `baseline`. Names absent from the baseline
+    /// count from zero; subtraction saturates so a swapped pair of
+    /// arguments can never underflow.
+    pub fn counter_delta(&self, baseline: &RegistrySnapshot) -> Vec<(String, u64)> {
+        self.counters
+            .iter()
+            .map(|(name, v)| {
+                let base = baseline
+                    .counters
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .map(|(_, b)| *b)
+                    .unwrap_or(0);
+                (name.clone(), v.saturating_sub(base))
+            })
+            .collect()
+    }
+
+    /// Snapshot as JSON: `{"counters": {...}, "gauges": {...},
+    /// "histograms": {name: summary-object}}`.
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(n, v)| (n.clone(), Json::num(*v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges.iter().map(|(n, v)| (n.clone(), Json::num(*v))).collect(),
+        );
+        let hists = Json::Obj(
+            self.hists.iter().map(|(n, h)| (n.clone(), h.to_json())).collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", hists),
+        ])
+    }
+
+    /// Prometheus text exposition: counters and gauges as-is, histograms as
+    /// summaries (`{quantile="..."}` samples plus `_sum` / `_count`). Series
+    /// names are prefixed `pa_rl_` and sanitized to `[a-zA-Z0-9_]`.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+        }
+        for (name, h) in &self.hists {
+            let n = prom_name(name);
+            out.push_str(&format!("# TYPE {n} summary\n"));
+            for q in [0.5, 0.9, 0.99] {
+                out.push_str(&format!("{n}{{quantile=\"{q}\"}} {}\n", h.quantile(q)));
+            }
+            out.push_str(&format!("{n}_sum {}\n", h.sum()));
+            out.push_str(&format!("{n}_count {}\n", h.count()));
+        }
+        out
+    }
+}
+
+fn prom_name(name: &str) -> String {
+    let mut s = String::with_capacity(name.len() + 6);
+    s.push_str("pa_rl_");
+    for ch in name.chars() {
+        s.push(if ch.is_ascii_alphanumeric() { ch } else { '_' });
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_name_resolves_to_same_cell() {
+        let reg = Registry::new();
+        let a = reg.counter("engine.prefills");
+        let b = reg.counter("engine.prefills");
+        a.add(3);
+        b.inc();
+        assert_eq!(a.get(), 4);
+        // a clone of the registry shares the tables
+        let c = reg.clone().counter("engine.prefills");
+        c.inc();
+        assert_eq!(b.get(), 5);
+        assert_eq!(reg.snapshot().counters, vec![("engine.prefills".to_string(), 5)]);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_delta_saturates() {
+        let reg = Registry::new();
+        reg.counter("b.second").add(10);
+        reg.counter("a.first").add(1);
+        reg.gauge("z.gauge").set(2.5);
+        let base = reg.snapshot();
+        assert_eq!(base.counters[0].0, "a.first");
+        assert_eq!(base.counters[1].0, "b.second");
+
+        reg.counter("b.second").add(5);
+        reg.counter("c.new").add(7);
+        let now = reg.snapshot();
+        let delta = now.counter_delta(&base);
+        let get = |name: &str| delta.iter().find(|(n, _)| n == name).unwrap().1;
+        assert_eq!(get("a.first"), 0);
+        assert_eq!(get("b.second"), 5);
+        assert_eq!(get("c.new"), 7); // absent from baseline counts from zero
+        // swapped arguments saturate instead of underflowing
+        assert!(base.counter_delta(&now).iter().all(|(_, v)| *v == 0));
+    }
+
+    #[test]
+    fn concurrent_counter_updates_sum_exactly() {
+        let reg = Registry::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = reg.counter("hot");
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(reg.counter("hot").get(), 40_000);
+    }
+
+    #[test]
+    fn exporters_cover_all_series() {
+        let reg = Registry::new();
+        reg.counter("store.publishes").add(12);
+        reg.gauge("fleet.engines").set(3.0);
+        let h = reg.histogram("request.ttft_s");
+        for k in 1..=50 {
+            h.observe(k as f64 / 100.0);
+        }
+        let snap = reg.snapshot();
+
+        let j = snap.to_json();
+        assert_eq!(
+            j.path(&["counters", "store.publishes"]).unwrap().as_f64(),
+            Some(12.0)
+        );
+        assert_eq!(j.path(&["gauges", "fleet.engines"]).unwrap().as_f64(), Some(3.0));
+        let ttft = j.path(&["histograms", "request.ttft_s"]).unwrap();
+        assert_eq!(ttft.req_f64("count").unwrap(), 50.0);
+
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("# TYPE pa_rl_store_publishes counter"), "{prom}");
+        assert!(prom.contains("pa_rl_store_publishes 12"), "{prom}");
+        assert!(prom.contains("# TYPE pa_rl_fleet_engines gauge"), "{prom}");
+        assert!(prom.contains("# TYPE pa_rl_request_ttft_s summary"), "{prom}");
+        assert!(prom.contains("pa_rl_request_ttft_s{quantile=\"0.99\"}"), "{prom}");
+        assert!(prom.contains("pa_rl_request_ttft_s_count 50"), "{prom}");
+        // round-trips through the JSON parser (schema sanity)
+        assert!(Json::parse(&j.to_pretty()).is_ok());
+    }
+}

@@ -1,0 +1,288 @@
+//! Per-request lifecycle timelines.
+//!
+//! A [`RequestTimeline`] rides along with each generation request and is
+//! stamped at the stage boundaries the paper's pipeline analysis cares
+//! about: **enqueue** (driver creates the request) → **dispatch** (sent to a
+//! worker inbox) → **admit** (engine claims a decode slot) → **first token**
+//! (prefill sampled its token) → **finish** (sequence retired) →
+//! **train-consume** (the trainer folds the rollout into a micro-batch).
+//! All stamps come from one shared [`Clock`] (the trace epoch), so
+//! differences are meaningful across threads.
+//!
+//! [`RequestMetrics`] aggregates finished timelines into the deterministic
+//! log-bucketed histograms of [`super::histogram`]: TTFT, queue wait, decode
+//! tokens/s, and staleness-at-consumption. Aggregation merges associatively,
+//! so per-engine or per-iteration partials can be folded fleet-wide.
+
+use super::histogram::Histogram;
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// Cheap copyable monotonic clock anchored at a shared epoch. All telemetry
+/// stamps in one run share the [`crate::metrics::Trace`] epoch so span and
+/// timeline timestamps live on the same axis.
+#[derive(Debug, Clone, Copy)]
+pub struct Clock {
+    epoch: Instant,
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::new()
+    }
+}
+
+impl Clock {
+    /// A clock anchored at "now".
+    pub fn new() -> Clock {
+        Clock { epoch: Instant::now() }
+    }
+
+    /// A clock anchored at an existing epoch (see `Trace::clock`).
+    pub fn from_epoch(epoch: Instant) -> Clock {
+        Clock { epoch }
+    }
+
+    /// Seconds since the epoch.
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+}
+
+/// Sentinel for a lifecycle stage that has not been reached (timestamps are
+/// seconds since the clock epoch, hence always `>= 0` when stamped).
+pub const UNSET: f64 = -1.0;
+
+/// Lifecycle timestamps for one generation request, in seconds since the
+/// run's clock epoch; `UNSET` marks stages not (yet) reached. `Copy` and a
+/// handful of words wide, so it travels inside requests/results/rollouts
+/// without allocation; in `metrics.level = "basic"` runs it stays entirely
+/// unstamped and costs nothing.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestTimeline {
+    /// Driver created/queued the request.
+    pub enqueue_s: f64,
+    /// Driver handed the request to a worker inbox (re-stamped if a drain
+    /// re-routes the request to a surviving engine).
+    pub dispatch_s: f64,
+    /// Engine claimed a decode slot and began admission.
+    pub admit_s: f64,
+    /// Prefill completed and the first token was sampled.
+    pub first_token_s: f64,
+    /// Sequence finished and the slot was retired.
+    pub finish_s: f64,
+    /// Trainer consumed the scored rollout into a micro-batch.
+    pub consume_s: f64,
+    /// Tokens generated after the first one (decode-phase tokens).
+    pub decode_tokens: u32,
+}
+
+impl Default for RequestTimeline {
+    fn default() -> Self {
+        RequestTimeline {
+            enqueue_s: UNSET,
+            dispatch_s: UNSET,
+            admit_s: UNSET,
+            first_token_s: UNSET,
+            finish_s: UNSET,
+            consume_s: UNSET,
+            decode_tokens: 0,
+        }
+    }
+}
+
+impl RequestTimeline {
+    fn span(a: f64, b: f64) -> Option<f64> {
+        if a >= 0.0 && b >= 0.0 {
+            Some((b - a).max(0.0))
+        } else {
+            None
+        }
+    }
+
+    /// enqueue → admit: time spent waiting in driver + worker queues.
+    pub fn queue_wait(&self) -> Option<f64> {
+        Self::span(self.enqueue_s, self.admit_s)
+    }
+
+    /// enqueue → first token: time-to-first-token as a client would see it.
+    pub fn ttft(&self) -> Option<f64> {
+        Self::span(self.enqueue_s, self.first_token_s)
+    }
+
+    /// enqueue → finish: whole-request latency.
+    pub fn e2e(&self) -> Option<f64> {
+        Self::span(self.enqueue_s, self.finish_s)
+    }
+
+    /// finish → train-consume: how long a finished rollout sat before the
+    /// trainer folded it in (the consumer-side analogue of queue wait).
+    pub fn consume_lag(&self) -> Option<f64> {
+        Self::span(self.finish_s, self.consume_s)
+    }
+
+    /// Decode-phase throughput in tokens/s (first token → finish).
+    pub fn decode_tps(&self) -> Option<f64> {
+        match Self::span(self.first_token_s, self.finish_s) {
+            Some(d) if d > 0.0 && self.decode_tokens > 0 => {
+                Some(self.decode_tokens as f64 / d)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Aggregated per-request distributions for one scope (an iteration, an
+/// engine, a whole run). Each field is a deterministic log-bucketed
+/// [`Histogram`]; [`RequestMetrics::merge`] folds scopes associatively.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RequestMetrics {
+    /// Requests folded in (whether or not every stage was stamped).
+    pub completed: u64,
+    /// Time-to-first-token, seconds.
+    pub ttft: Histogram,
+    /// Queue wait (enqueue → admit), seconds.
+    pub queue_wait: Histogram,
+    /// Decode throughput, tokens/s.
+    pub decode_tps: Histogram,
+    /// Weight-version staleness at train-consumption (0 = strictly
+    /// on-policy, the paper's Prop. 1 regime).
+    pub staleness: Histogram,
+}
+
+impl RequestMetrics {
+    /// Fold one finished request in. `staleness` is the consuming trainer's
+    /// `installed_version − rollout.weight_version`.
+    pub fn observe(&mut self, tl: &RequestTimeline, staleness: u64) {
+        self.completed += 1;
+        if let Some(x) = tl.ttft() {
+            self.ttft.observe(x);
+        }
+        if let Some(x) = tl.queue_wait() {
+            self.queue_wait.observe(x);
+        }
+        if let Some(x) = tl.decode_tps() {
+            self.decode_tps.observe(x);
+        }
+        self.staleness.observe(staleness as f64);
+    }
+
+    /// Fold another scope's aggregate in (associative).
+    pub fn merge(&mut self, other: &RequestMetrics) {
+        self.completed += other.completed;
+        self.ttft.merge(&other.ttft);
+        self.queue_wait.merge(&other.queue_wait);
+        self.decode_tps.merge(&other.decode_tps);
+        self.staleness.merge(&other.staleness);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.completed == 0
+    }
+
+    /// The shared schema for real runs and the simulator's synthesized
+    /// timelines: one summary object per distribution.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("completed", Json::num(self.completed as f64)),
+            ("ttft_s", self.ttft.to_json()),
+            ("queue_wait_s", self.queue_wait.to_json()),
+            ("decode_tok_per_s", self.decode_tps.to_json()),
+            ("staleness", self.staleness.to_json()),
+        ])
+    }
+
+    /// One-line human summary for full-telemetry stdout surfaces.
+    pub fn summary(&self) -> String {
+        format!(
+            "ttft p50 {:.3}s p99 {:.3}s  queue p50 {:.3}s p99 {:.3}s  decode p50 {:.0} tok/s  stale p99 {:.0}",
+            self.ttft.quantile(0.50),
+            self.ttft.quantile(0.99),
+            self.queue_wait.quantile(0.50),
+            self.queue_wait.quantile(0.99),
+            self.decode_tps.quantile(0.50),
+            self.staleness.quantile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stamped() -> RequestTimeline {
+        RequestTimeline {
+            enqueue_s: 1.0,
+            dispatch_s: 1.1,
+            admit_s: 1.5,
+            first_token_s: 2.0,
+            finish_s: 4.0,
+            consume_s: 4.5,
+            decode_tokens: 100,
+        }
+    }
+
+    #[test]
+    fn derived_spans() {
+        let tl = stamped();
+        assert_eq!(tl.queue_wait(), Some(0.5));
+        assert_eq!(tl.ttft(), Some(1.0));
+        assert_eq!(tl.e2e(), Some(3.0));
+        assert_eq!(tl.consume_lag(), Some(0.5));
+        assert_eq!(tl.decode_tps(), Some(50.0));
+    }
+
+    #[test]
+    fn unset_stages_yield_none() {
+        let tl = RequestTimeline::default();
+        assert_eq!(tl.queue_wait(), None);
+        assert_eq!(tl.ttft(), None);
+        assert_eq!(tl.e2e(), None);
+        assert_eq!(tl.consume_lag(), None);
+        assert_eq!(tl.decode_tps(), None);
+
+        // finish stamped but no decode tokens -> no throughput sample
+        let mut tl = stamped();
+        tl.decode_tokens = 0;
+        assert_eq!(tl.decode_tps(), None);
+        // out-of-order stamps clamp to zero-length spans, never negative
+        let mut tl = stamped();
+        tl.first_token_s = 0.5;
+        assert_eq!(tl.ttft(), Some(0.0));
+    }
+
+    #[test]
+    fn clock_is_monotone_and_shareable() {
+        let c = Clock::new();
+        let a = c.now();
+        let c2 = c; // Copy
+        let b = c2.now();
+        assert!(a >= 0.0 && b >= a);
+    }
+
+    #[test]
+    fn metrics_observe_and_merge() {
+        let mut a = RequestMetrics::default();
+        let mut b = RequestMetrics::default();
+        a.observe(&stamped(), 0);
+        b.observe(&stamped(), 2);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.completed, 2);
+        assert_eq!(merged.ttft.count(), 2);
+        assert_eq!(merged.staleness.max(), 2.0);
+
+        // partial timelines only feed the histograms they can support
+        let mut c = RequestMetrics::default();
+        c.observe(&RequestTimeline::default(), 1);
+        assert_eq!(c.completed, 1);
+        assert_eq!(c.ttft.count(), 0);
+        assert_eq!(c.staleness.count(), 1);
+
+        let j = merged.to_json();
+        assert_eq!(j.req_f64("completed").unwrap(), 2.0);
+        assert!(j.req("ttft_s").unwrap().req_f64("p50").is_ok());
+        let line = merged.summary();
+        assert!(line.contains("ttft p50"), "{line}");
+    }
+}

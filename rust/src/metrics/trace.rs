@@ -9,6 +9,7 @@
 //! train   |░░░░████████████████████|
 //! ```
 
+use crate::metrics::timeline::Clock;
 use crate::util::json::Json;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -64,6 +65,12 @@ impl Trace {
 
     pub fn now(&self) -> f64 {
         self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// A copyable [`Clock`] sharing this trace's epoch, so request-timeline
+    /// stamps and span timestamps live on the same time axis.
+    pub fn clock(&self) -> Clock {
+        Clock::from_epoch(self.epoch)
     }
 
     /// Record a span that started at `start_s` (from [`Trace::now`]) and ends
@@ -141,7 +148,7 @@ impl Trace {
                 lanes.push(s.lane.clone());
             }
         }
-        lanes.sort();
+        lanes.sort_by(|a, b| lane_sort_key(a).cmp(&lane_sort_key(b)));
         let name_w = lanes.iter().map(|l| l.len()).max().unwrap_or(4).max(4);
         let mut out = String::new();
         out.push_str(&format!(
@@ -184,6 +191,16 @@ impl Trace {
         }
         out
     }
+}
+
+/// Sort key for lane names: a trailing decimal suffix orders numerically
+/// (`infer-2` before `infer-10`), so wide fleets render in engine order; the
+/// full name breaks remaining ties lexicographically.
+fn lane_sort_key(lane: &str) -> (&str, Option<u64>, &str) {
+    let digits = lane.bytes().rev().take_while(u8::is_ascii_digit).count();
+    let split = lane.len() - digits;
+    let (head, tail) = lane.split_at(split);
+    (head, tail.parse::<u64>().ok(), lane)
 }
 
 #[cfg(test)]
@@ -229,6 +246,27 @@ mod tests {
     #[test]
     fn empty_trace_renders() {
         assert!(Trace::new().render_ascii(10).contains("empty"));
+    }
+
+    #[test]
+    fn lanes_render_in_numeric_engine_order() {
+        let tr = Trace::new();
+        // recorded out of order, with enough engines that lexicographic
+        // sorting would interleave (infer-10 < infer-2 as strings)
+        for idx in [10, 2, 0, 1, 11] {
+            tr.record_abs(&format!("infer-{idx}"), "step", 0.0, 1.0);
+        }
+        tr.record_abs("train", "micro", 0.0, 1.0);
+        let art = tr.render_ascii(10);
+        let order: Vec<usize> = art
+            .lines()
+            .filter_map(|l| l.split_whitespace().next())
+            .filter_map(|lane| lane.strip_prefix("infer-"))
+            .filter_map(|n| n.parse().ok())
+            .collect();
+        assert_eq!(order, vec![0, 1, 2, 10, 11], "{art}");
+        // digit-less lanes still sort lexicographically among themselves
+        assert!(art.find("infer-11").unwrap() < art.find("train").unwrap());
     }
 
     #[test]

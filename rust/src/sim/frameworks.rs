@@ -7,7 +7,7 @@
 
 use super::queue::{multi_server_fifo, sequential_with_ready, wave_batching};
 use super::specs::{ClusterSpec, EfficiencySpec, ModelSpec, WorkloadSpec};
-use crate::metrics::Trace;
+use crate::metrics::{RequestMetrics, RequestTimeline, Trace};
 use crate::util::rng::Pcg64;
 
 /// Which of the five system designs to simulate.
@@ -338,7 +338,19 @@ impl SimSetup {
     }
 
     /// Simulate, optionally recording one iteration's timeline (Fig. 3).
-    pub fn run_traced(&self, mut trace: Option<&Trace>) -> SimResult {
+    pub fn run_traced(&self, trace: Option<&Trace>) -> SimResult {
+        self.run_traced_metrics(trace, None)
+    }
+
+    /// Like [`Self::run_traced`], additionally synthesizing per-request
+    /// lifecycle timelines for the first iteration into `requests` — the
+    /// same [`RequestMetrics`] schema the real driver aggregates in
+    /// full-telemetry mode, so fig3 sim and real outputs are comparable.
+    pub fn run_traced_metrics(
+        &self,
+        mut trace: Option<&Trace>,
+        mut requests: Option<&mut RequestMetrics>,
+    ) -> SimResult {
         let mut rng = Pcg64::new(self.seed, 0x51A7);
         let reduced = self.elastic_reduced_setup();
         let warmup_iters =
@@ -372,7 +384,11 @@ impl SimSetup {
                         .collect()
                 })
                 .collect();
-            let out = setup.run_iteration(&groups, trace.take().filter(|_| it == 0));
+            let out = setup.run_iteration(
+                &groups,
+                trace.take().filter(|_| it == 0),
+                if it == 0 { requests.take() } else { None },
+            );
             wall += out.wall;
             tokens += out.tokens;
             device_seconds += out.wall * (setup.train_devices() + setup.infer_devices()) as f64;
@@ -406,7 +422,12 @@ impl SimSetup {
         }
     }
 
-    fn run_iteration(&self, groups: &[Vec<(usize, usize)>], trace: Option<&Trace>) -> IterOutcome {
+    fn run_iteration(
+        &self,
+        groups: &[Vec<(usize, usize)>],
+        trace: Option<&Trace>,
+        requests: Option<&mut RequestMetrics>,
+    ) -> IterOutcome {
         let slots = self.slots_per_instance();
         let servers = (self.infer_devices() / self.infer_tp).max(1) * slots;
         let step_s = self.decode_step_s(slots);
@@ -474,6 +495,29 @@ impl SimSetup {
             for (idx, &(gi, m)) in order.iter().enumerate() {
                 let lane = format!("slot-{:02}", idx % servers.min(16));
                 tr.record_abs(&lane, &format!("rollout g{gi}.{m}"), completions[idx] - service[idx], completions[idx]);
+            }
+        }
+
+        // Synthesized request timelines (same schema the real driver stamps
+        // in full-telemetry mode): every request enqueues and dispatches at
+        // the iteration start, is admitted when its server picks it up, and
+        // samples its first token once the prefill portion of service is
+        // done — the remaining lr-1 tokens are decode-phase.
+        if let Some(req) = requests {
+            let staleness = u64::from(matches!(self.framework, Framework::FullyAsync));
+            for (idx, &(gi, m)) in order.iter().enumerate() {
+                let (_, lr) = groups[gi][m];
+                let decode = lr.saturating_sub(1) as f64 * step_s;
+                let tl = RequestTimeline {
+                    enqueue_s: 0.0,
+                    dispatch_s: 0.0,
+                    admit_s: completions[idx] - service[idx],
+                    first_token_s: (completions[idx] - decode).max(0.0),
+                    finish_s: completions[idx],
+                    decode_tokens: lr.saturating_sub(1) as u32,
+                    ..Default::default()
+                };
+                req.observe(&tl, staleness);
             }
         }
 
@@ -778,6 +822,30 @@ mod tests {
         let colo = c.run();
         c.elastic_warmup_frac = 0.5;
         assert_eq!(c.run().tpspd, colo.tpspd);
+    }
+
+    #[test]
+    fn synthesizes_request_metrics_in_driver_schema() {
+        let s = base(Framework::PeriodicAsync);
+        let mut req = RequestMetrics::default();
+        let r = s.run_traced_metrics(None, Some(&mut req));
+        assert!(r.wall_seconds > 0.0);
+        // first iteration only: every member of every group lands once
+        let expected = (s.workload.batch_prompts * s.workload.group_size) as u64;
+        assert_eq!(req.completed, expected);
+        assert_eq!(req.ttft.count(), expected, "all synthetic timelines carry a first token");
+        assert_eq!(req.queue_wait.count(), expected);
+        // strictly on-policy design: staleness is identically zero
+        assert_eq!(req.staleness.max(), 0.0);
+        // the JSON schema matches the driver's RequestMetrics export
+        let j = req.to_json();
+        for key in ["completed", "ttft_s", "queue_wait_s", "decode_tok_per_s", "staleness"] {
+            assert!(j.req(key).is_ok(), "missing {key}");
+        }
+        // fully-async synthesizes one-iteration-stale consumption
+        let mut req = RequestMetrics::default();
+        base(Framework::FullyAsync).run_traced_metrics(None, Some(&mut req));
+        assert_eq!(req.staleness.max(), 1.0);
     }
 
     #[test]

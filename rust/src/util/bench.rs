@@ -5,6 +5,8 @@
 //! printer used to emit exactly the rows the paper's tables report
 //! (paper value alongside measured value and the win-factor).
 
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// Statistics for a set of timed runs.
@@ -52,8 +54,23 @@ impl Stats {
     }
 }
 
+/// True when `PA_RL_BENCH_QUICK=1` — CI smoke mode: [`bench`] shrinks its
+/// warmup and repetition counts so a bench target finishes in seconds and
+/// its emitted `BENCH_*.json` record can be schema-validated cheaply. The
+/// numbers are noisier; the record's `iters` field says how many runs each
+/// value came from.
+pub fn quick_mode() -> bool {
+    std::env::var("PA_RL_BENCH_QUICK").is_ok_and(|v| v == "1")
+}
+
 /// Time `f` with warmup. `label` is printed as progress on stderr.
+/// Under [`quick_mode`] the counts are clamped to a handful of runs.
 pub fn bench<F: FnMut()>(label: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    let (warmup, iters) = if quick_mode() {
+        (warmup.min(2), iters.clamp(2, 10))
+    } else {
+        (warmup, iters)
+    };
     for _ in 0..warmup {
         f();
     }
@@ -80,6 +97,99 @@ pub fn throughput<F: FnOnce() -> usize>(f: F) -> (usize, f64, f64) {
     let items = f();
     let secs = t0.elapsed().as_secs_f64();
     (items, secs, items as f64 / secs.max(1e-12))
+}
+
+/// Machine-readable benchmark record, written as `BENCH_<name>.json` at the
+/// repository root — the in-tree perf trajectory: each optimisation PR
+/// re-runs the bench and commits the refreshed record, and CI validates the
+/// files against the schema with `scripts/check_bench_json.py`.
+///
+/// Schema: `{"bench": <name>, "source": <provenance>, "metrics":
+/// [{"metric", "value", "unit", "iters"}, ...]}` with at least five metric
+/// entries per record.
+#[derive(Debug, Clone)]
+pub struct BenchRecorder {
+    bench: String,
+    source: String,
+    metrics: Vec<BenchMetric>,
+}
+
+#[derive(Debug, Clone)]
+struct BenchMetric {
+    metric: String,
+    value: f64,
+    unit: String,
+    iters: usize,
+}
+
+impl BenchRecorder {
+    /// `bench` names the output file (`BENCH_<bench>.json`); `source` records
+    /// provenance (which target produced the numbers, and on what).
+    pub fn new(bench: &str, source: &str) -> BenchRecorder {
+        BenchRecorder { bench: bench.to_string(), source: source.to_string(), metrics: Vec::new() }
+    }
+
+    /// Append one metric. `iters` is how many timed runs the value came from
+    /// (0 for derived/analytic values).
+    pub fn push(&mut self, metric: &str, value: f64, unit: &str, iters: usize) {
+        self.metrics.push(BenchMetric {
+            metric: metric.to_string(),
+            value,
+            unit: unit.to_string(),
+            iters,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str(&self.bench)),
+            ("source", Json::str(&self.source)),
+            (
+                "metrics",
+                Json::arr(self.metrics.iter().map(|m| {
+                    Json::obj(vec![
+                        ("metric", Json::str(&m.metric)),
+                        ("value", Json::num(m.value)),
+                        ("unit", Json::str(&m.unit)),
+                        ("iters", Json::num(m.iters as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// The repository root: the parent of this crate's manifest directory.
+    pub fn repo_root() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(Path::to_path_buf)
+            .unwrap_or_else(|| PathBuf::from("."))
+    }
+
+    /// Where [`BenchRecorder::write`] puts this record.
+    pub fn path(&self) -> PathBuf {
+        Self::repo_root().join(format!("BENCH_{}.json", self.bench))
+    }
+
+    /// Write the record into `dir`; returns the file path.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, format!("{}\n", self.to_json().to_pretty()))?;
+        Ok(path)
+    }
+
+    /// Write the record at the repository root (the committed convention).
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        self.write_to(&Self::repo_root())
+    }
 }
 
 /// An aligned text table used by the bench binaries to print paper-style rows.
@@ -215,5 +325,41 @@ mod tests {
     fn formatters() {
         assert_eq!(fx(3.118), "3.12x");
         assert_eq!(f3(192.2591), "192.259");
+    }
+
+    #[test]
+    fn quick_mode_defaults_off() {
+        // Tests run without PA_RL_BENCH_QUICK, so bench() must honour the
+        // requested counts (bench_runs_expected_iters relies on this).
+        assert!(!quick_mode());
+    }
+
+    #[test]
+    fn bench_recorder_schema_and_write() {
+        let mut r = BenchRecorder::new("demo", "unit test");
+        assert!(r.is_empty());
+        for i in 0..5 {
+            r.push(&format!("m{i}"), i as f64, "us", 10);
+        }
+        assert_eq!(r.len(), 5);
+        let j = r.to_json();
+        assert_eq!(j.req_str("bench").unwrap(), "demo");
+        assert_eq!(j.req_str("source").unwrap(), "unit test");
+        let ms = j.req("metrics").unwrap().as_arr().unwrap();
+        assert_eq!(ms.len(), 5);
+        assert_eq!(ms[0].req_str("metric").unwrap(), "m0");
+        assert_eq!(ms[2].req_f64("value").unwrap(), 2.0);
+        assert_eq!(ms[0].req_str("unit").unwrap(), "us");
+        assert_eq!(ms[0].req_f64("iters").unwrap(), 10.0);
+        // the committed convention: BENCH_<name>.json at the repo root
+        assert_eq!(r.path().file_name().unwrap().to_str().unwrap(), "BENCH_demo.json");
+        assert_eq!(r.path().parent().unwrap(), BenchRecorder::repo_root());
+        // round-trips through the writer
+        let dir = std::env::temp_dir().join("pa_rl_bench_recorder_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = r.write_to(&dir).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.req("metrics").unwrap().as_arr().unwrap().len(), 5);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -37,7 +37,7 @@ fn engine_generates_and_tags_versions() {
     let reqs: Vec<GenRequest> = prompts
         .iter()
         .enumerate()
-        .map(|(i, p)| GenRequest { request_id: i as u64, prompt: p.tokens.clone() })
+        .map(|(i, p)| GenRequest { request_id: i as u64, prompt: p.tokens.clone(), ..Default::default() })
         .collect();
     let results = engine.generate_all(reqs).unwrap();
     assert_eq!(results.len(), 6);
@@ -74,6 +74,7 @@ fn grouped_prompts_trigger_one_prefill_per_group() {
             (0..g).map(move |s| GenRequest {
                 request_id: (pi * g + s) as u64,
                 prompt: p.clone(),
+                ..Default::default()
             })
         })
         .collect();
@@ -123,7 +124,7 @@ fn warm_template_prefix_reused_across_suffixes() {
         .map(|i| {
             let mut p = template.clone();
             p.push(20 + i as u32);
-            GenRequest { request_id: i as u64, prompt: p }
+            GenRequest { request_id: i as u64, prompt: p, ..Default::default() }
         })
         .collect();
     let results = engine.generate_all(reqs).unwrap();
@@ -199,7 +200,7 @@ fn cross_engine_store_shares_templates_across_engines() {
         prompts
             .iter()
             .enumerate()
-            .map(|(i, p)| GenRequest { request_id: i as u64, prompt: p.clone() })
+            .map(|(i, p)| GenRequest { request_id: i as u64, prompt: p.clone(), ..Default::default() })
             .collect()
     };
 
@@ -279,7 +280,7 @@ fn noop_weight_sync_keeps_cache_warm() {
     let mut loader = DataLoader::new(cfg.data.clone());
     let p = loader.next_batch(1).remove(0);
     engine
-        .generate_all(vec![GenRequest { request_id: 0, prompt: p.tokens.clone() }])
+        .generate_all(vec![GenRequest { request_id: 0, prompt: p.tokens.clone(), ..Default::default() }])
         .unwrap();
     assert_eq!(engine.stats.prefills, 1);
 
@@ -287,7 +288,7 @@ fn noop_weight_sync_keeps_cache_warm() {
     assert!(!engine.set_weights(&params).unwrap(), "no-op sync must be skipped");
     assert_eq!(engine.stats.weight_syncs_skipped, 1);
     engine
-        .generate_all(vec![GenRequest { request_id: 1, prompt: p.tokens.clone() }])
+        .generate_all(vec![GenRequest { request_id: 1, prompt: p.tokens.clone(), ..Default::default() }])
         .unwrap();
     assert_eq!(engine.stats.prefills, 1, "warm cache must survive the no-op sync");
     assert_eq!(engine.stats.prefills_skipped, 1);
@@ -296,7 +297,7 @@ fn noop_weight_sync_keeps_cache_warm() {
     params.version = 6;
     assert!(engine.set_weights(&params).unwrap());
     engine
-        .generate_all(vec![GenRequest { request_id: 2, prompt: p.tokens }])
+        .generate_all(vec![GenRequest { request_id: 2, prompt: p.tokens, ..Default::default() }])
         .unwrap();
     assert_eq!(engine.stats.prefills, 2, "version bump must flush the cache");
 }
@@ -351,7 +352,7 @@ fn cache_on_and_off_produce_identical_rollouts() {
         let p = loader.next_batch(1).remove(0);
         let g = cfg.rl.group_size;
         let reqs: Vec<GenRequest> = (0..g)
-            .map(|i| GenRequest { request_id: i as u64, prompt: p.tokens.clone() })
+            .map(|i| GenRequest { request_id: i as u64, prompt: p.tokens.clone(), ..Default::default() })
             .collect();
         let mut results = engine.generate_all(reqs).unwrap();
         results.sort_by_key(|r| r.request_id);
@@ -387,7 +388,7 @@ fn greedy_decode_is_deterministic() {
         let reqs: Vec<GenRequest> = prompts
             .iter()
             .enumerate()
-            .map(|(i, p)| GenRequest { request_id: i as u64, prompt: p.tokens.clone() })
+            .map(|(i, p)| GenRequest { request_id: i as u64, prompt: p.tokens.clone(), ..Default::default() })
             .collect();
         let mut results = engine.generate_all(reqs).unwrap();
         results.sort_by_key(|r| r.request_id);
@@ -416,6 +417,7 @@ fn gradient_permutation_invariance_end_to_end() {
             reqs.push(GenRequest {
                 request_id: (pi * g + s) as u64,
                 prompt: p.tokens.clone(),
+                ..Default::default()
             });
         }
     }
@@ -431,6 +433,7 @@ fn gradient_permutation_invariance_end_to_end() {
                 tokens: r.tokens.clone(),
                 logprobs: r.logprobs.clone(),
                 reward: (r.request_id % 2) as f32, // synthetic mixed rewards
+                timeline: r.timeline,
             })
             .collect();
         rollouts.sort_by_key(|r| r.sample_idx);
@@ -544,7 +547,7 @@ fn engine_weight_versions_update_between_batches() {
     let mut loader = DataLoader::new(cfg.data.clone());
     let p = loader.next_batch(1).remove(0);
     let r1 = engine
-        .generate_all(vec![GenRequest { request_id: 0, prompt: p.tokens.clone() }])
+        .generate_all(vec![GenRequest { request_id: 0, prompt: p.tokens.clone(), ..Default::default() }])
         .unwrap();
     assert_eq!(r1[0].weight_version, 10);
     // new weights only installable when idle; version propagates
@@ -552,7 +555,7 @@ fn engine_weight_versions_update_between_batches() {
     p2.version = 11;
     engine.set_weights(&p2).unwrap();
     let r2 = engine
-        .generate_all(vec![GenRequest { request_id: 1, prompt: p.tokens }])
+        .generate_all(vec![GenRequest { request_id: 1, prompt: p.tokens, ..Default::default() }])
         .unwrap();
     assert_eq!(r2[0].weight_version, 11);
 }
@@ -566,7 +569,7 @@ fn set_weights_rejected_while_busy() {
     engine.set_weights(&params).unwrap();
     let mut loader = DataLoader::new(cfg.data.clone());
     let p = loader.next_batch(1).remove(0);
-    engine.submit(GenRequest { request_id: 0, prompt: p.tokens });
+    engine.submit(GenRequest { request_id: 0, prompt: p.tokens, ..Default::default() });
     engine.step().unwrap(); // admits; likely still active
     if !engine.idle() {
         assert!(
@@ -598,7 +601,7 @@ fn checkpoint_roundtrip_through_trainer() {
     let results = engine
         .generate_all(
             (0..2)
-                .map(|i| GenRequest { request_id: i, prompt: p.tokens.clone() })
+                .map(|i| GenRequest { request_id: i, prompt: p.tokens.clone(), ..Default::default() })
                 .collect(),
         )
         .unwrap();
@@ -611,6 +614,7 @@ fn checkpoint_roundtrip_through_trainer() {
             tokens: r.tokens.clone(),
             logprobs: r.logprobs.clone(),
             reward: i as f32,
+            timeline: r.timeline,
         })
         .collect();
     let rewards: Vec<f32> = rollouts.iter().map(|r| r.reward).collect();

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Validate BENCH_*.json perf records against the repo's schema.
+
+Usage: check_bench_json.py BENCH_micro.json [BENCH_pipeline.json ...]
+
+Schema (emitted by rust/src/util/bench.rs::BenchRecorder):
+
+    {
+      "bench":   "<name>",            # non-empty string
+      "source":  "<provenance>",      # non-empty string
+      "metrics": [                    # >= MIN_METRICS entries
+        {"metric": "<name>",          # non-empty string, unique per file
+         "value":  <finite number>,
+         "unit":   "<unit string>",
+         "iters":  <int >= 0>},      # timed runs behind the value (0 = analytic)
+        ...
+      ]
+    }
+
+Exits non-zero (failing the CI job) on a missing file, unparseable JSON, or
+any schema violation.
+"""
+
+import json
+import math
+import sys
+
+MIN_METRICS = 5
+
+
+def fail(path, msg):
+    print(f"FAIL {path}: {msg}", file=sys.stderr)
+    return 1
+
+
+def check(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return fail(path, "file missing")
+    except json.JSONDecodeError as e:
+        return fail(path, f"not valid JSON: {e}")
+
+    if not isinstance(doc, dict):
+        return fail(path, "top level must be an object")
+    for key in ("bench", "source"):
+        if not isinstance(doc.get(key), str) or not doc[key]:
+            return fail(path, f"'{key}' must be a non-empty string")
+    metrics = doc.get("metrics")
+    if not isinstance(metrics, list):
+        return fail(path, "'metrics' must be an array")
+    if len(metrics) < MIN_METRICS:
+        return fail(path, f"only {len(metrics)} metrics; need >= {MIN_METRICS}")
+
+    seen = set()
+    for i, m in enumerate(metrics):
+        where = f"metrics[{i}]"
+        if not isinstance(m, dict):
+            return fail(path, f"{where} must be an object")
+        name = m.get("metric")
+        if not isinstance(name, str) or not name:
+            return fail(path, f"{where}.metric must be a non-empty string")
+        if name in seen:
+            return fail(path, f"duplicate metric '{name}'")
+        seen.add(name)
+        value = m.get("value")
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            return fail(path, f"{where}.value must be a number")
+        if not math.isfinite(value):
+            return fail(path, f"{where}.value must be finite, got {value}")
+        if not isinstance(m.get("unit"), str):
+            return fail(path, f"{where}.unit must be a string")
+        iters = m.get("iters")
+        if isinstance(iters, bool) or not isinstance(iters, int) or iters < 0:
+            # BenchRecorder serialises iters through f64; accept exact floats.
+            if not (isinstance(iters, float) and iters >= 0 and iters.is_integer()):
+                return fail(path, f"{where}.iters must be an integer >= 0, got {iters!r}")
+    print(f"OK   {path}: bench '{doc['bench']}', {len(metrics)} metrics")
+    return 0
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    return max(check(p) for p in argv[1:])
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
