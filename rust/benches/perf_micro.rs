@@ -95,8 +95,10 @@ fn main() {
     rec.push("trace_record_p50_ns", s.p50.as_secs_f64() * 1e9, "ns/span", s.n);
     add("trace span record", s, String::new());
 
-    // queue send/recv roundtrip
-    let (tx, rx) = std::sync::mpsc::sync_channel::<u64>(1024);
+    // queue send/recv roundtrip (through the check::sync shim, which must
+    // compile down to plain std::sync::mpsc with the feature off — this
+    // metric doubles as the shim-overhead guard in the bench-diff CI gate)
+    let (tx, rx) = pa_rl::check::sync::mpsc::sync_channel::<u64>(1024);
     let s = bench("queue", 100, 5000, || {
         tx.send(1).unwrap();
         std::hint::black_box(rx.recv().unwrap());
@@ -449,7 +451,7 @@ fn main() {
             let mut handles = Vec::new();
             for th in 0..n_threads {
                 let store = store.clone();
-                handles.push(std::thread::spawn(move || {
+                handles.push(pa_rl::check::thread::spawn(move || {
                     // Deterministic per-thread workload: built from (th, i)
                     // only, so both topologies do byte-identical work.
                     for i in 0..ops {

@@ -1,0 +1,59 @@
+//! Drop-in concurrency shims + an offline mini-loom model checker.
+//!
+//! Every concurrency-bearing module in this crate imports its primitives
+//! from here instead of `std`:
+//!
+//! * [`check::sync`](sync) — `Mutex`, `Condvar`, `mpsc` channels, atomics,
+//!   and the sanctioned [`sync::lock_or_poison`] helper;
+//! * [`check::thread`](thread) — `spawn`, `Builder`, `JoinHandle`,
+//!   `yield_now`.
+//!
+//! With the `pa_modelcheck` cargo feature **off** (the default) these are
+//! transparent re-exports of the `std` types: zero overhead, bit-identical
+//! behavior, nothing to audit. With the feature **on**, the same names
+//! resolve to thin wrappers that route every acquire / release / send /
+//! recv / atomic operation through a deterministic cooperative scheduler —
+//! but *only* for threads spawned inside a [`model`] execution; ordinary
+//! code running under the feature still behaves exactly like `std` (the
+//! wrappers detect that no model is active and pass straight through).
+//!
+//! # Model checking
+//!
+//! [`model`] runs a closure repeatedly, exploring distinct thread
+//! interleavings with a bounded DFS (preemption bound + sleep-set pruning).
+//! One thread runs at a time; every shim operation is a scheduling point.
+//! The explorer detects and reports, each with a compact replayable
+//! schedule string (see [`Failure::schedule`] and [`replay`]):
+//!
+//! * **deadlocks** — every live thread blocked and no timed wait to fire;
+//! * **lock-order inversions** — a cycle in the execution's accumulated
+//!   lock-acquisition-order graph (a latent deadlock even when this
+//!   particular schedule got lucky);
+//! * **assertion failures / panics** in any controlled thread.
+//!
+//! Ground rules for writing model tests (enforced by construction, see
+//! docs/CONCURRENCY.md for the full discipline):
+//!
+//! * create every shared object (mutexes, channels, stores, registries)
+//!   *inside* the model closure, so each explored execution starts from a
+//!   fresh deterministic state;
+//! * the closure must be deterministic apart from scheduling — no wall
+//!   clock, no OS randomness;
+//! * keep per-thread operation counts small: the schedule space is
+//!   exponential and the explorer caps out at
+//!   [`Checker::max_schedules`] executions.
+//!
+//! The scheduler serializes controlled threads, so data races are not
+//! observable as such — races surface as interleaving-dependent invariant
+//! violations (torn-read asserts, lost updates), which is what the model
+//! tests assert on. Atomics execute sequentially consistent under the
+//! model; the shims preserve the caller's `Ordering` argument for the real
+//! execution path.
+
+#[cfg(feature = "pa_modelcheck")]
+pub(crate) mod sched;
+pub mod sync;
+pub mod thread;
+
+#[cfg(feature = "pa_modelcheck")]
+pub use sched::{model, replay, Checker, Failure, FailureKind, Report};

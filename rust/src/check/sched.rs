@@ -1,0 +1,1205 @@
+//! The cooperative schedule-exploring scheduler behind `check::model`.
+//!
+//! Only compiled under the `pa_modelcheck` feature. One real OS thread per
+//! modeled thread, but exactly one runs at a time: every shim operation calls
+//! [`Execution::sched_op`], which parks the caller on a shared condvar until
+//! the scheduler picks it. The explorer ([`Checker::check`]) replays prefixes
+//! of earlier executions and diverges at the deepest frame with an untried,
+//! non-slept, preemption-budget-feasible choice — a bounded DFS over the
+//! schedule tree with Godefroid-style sleep sets.
+//!
+//! Failure classes (all carry a replayable schedule string — the
+//! comma-joined list of chosen thread ids, feed it to [`replay`]):
+//!
+//! * **Deadlock** — every live thread blocked on a disabled op and no timed
+//!   receive to fire.
+//! * **LockOrderInversion** — acquiring mutex `B` while holding `A` after
+//!   some earlier point in the *same execution* acquired `A` while holding
+//!   `B` (a cycle in the accumulated lock-order graph): a latent deadlock
+//!   even when this particular interleaving got lucky.
+//! * **Assertion** — a panic in any controlled thread (assert!, unwrap, ...),
+//!   or exceeding [`Checker::max_steps`] (livelock guard), or a replay
+//!   diverging from its recorded schedule.
+
+use std::collections::{HashMap, HashSet};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering as AOrd};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, Once};
+
+// ---------------------------------------------------------------------------
+// Public result types
+// ---------------------------------------------------------------------------
+
+/// What kind of concurrency bug a model run uncovered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// All live threads blocked with no timed wait left to fire.
+    Deadlock,
+    /// Cycle in the execution's lock-acquisition-order graph.
+    LockOrderInversion,
+    /// Panic in a controlled thread, step-budget blowout, or replay
+    /// divergence.
+    Assertion,
+}
+
+/// A concrete failing execution, with enough to reproduce it.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    pub kind: FailureKind,
+    /// Comma-joined thread ids in scheduling order; pass to [`replay`].
+    pub schedule: String,
+    pub message: String,
+}
+
+impl std::fmt::Display for Failure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:?}: {} [schedule: {}]",
+            self.kind, self.message, self.schedule
+        )
+    }
+}
+
+/// Outcome of a [`Checker::check`] exploration.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Distinct complete schedules executed.
+    pub schedules: usize,
+    /// Executions abandoned because every candidate at some frame was in the
+    /// sleep set (redundant with an already-explored interleaving).
+    pub pruned: usize,
+    /// First failure found, if any. Exploration stops at the first failure.
+    pub failure: Option<Failure>,
+}
+
+impl Report {
+    /// Panic (with the failure's schedule string) if the exploration found a
+    /// bug. Convenience for tests that expect a clean model.
+    pub fn assert_ok(&self) {
+        if let Some(f) = &self.failure {
+            panic!("model check failed: {f}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checker / entry points
+// ---------------------------------------------------------------------------
+
+/// Configurable schedule explorer. The defaults suit the in-repo model
+/// tests: a few thousand schedules in well under a second per scenario.
+#[derive(Clone, Debug)]
+pub struct Checker {
+    /// Stop after this many complete schedules (default 4096).
+    pub max_schedules: usize,
+    /// Max context switches away from the currently running thread while it
+    /// stays enabled (default 3). Bounds the DFS; most bugs need <= 2.
+    pub preemption_bound: usize,
+    /// Per-execution scheduling-point budget; exceeding it is reported as a
+    /// livelock-flavored Assertion failure (default 20_000).
+    pub max_steps: usize,
+    /// Report lock-order-graph cycles as failures (default true). Turn off
+    /// for scenarios that must run *through* an inversion to reach the
+    /// actual deadlock state.
+    pub detect_lock_order: bool,
+}
+
+impl Default for Checker {
+    fn default() -> Self {
+        Checker {
+            max_schedules: 4096,
+            preemption_bound: 3,
+            max_steps: 20_000,
+            detect_lock_order: true,
+        }
+    }
+}
+
+impl Checker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn max_schedules(mut self, n: usize) -> Self {
+        self.max_schedules = n;
+        self
+    }
+
+    pub fn preemption_bound(mut self, n: usize) -> Self {
+        self.preemption_bound = n;
+        self
+    }
+
+    pub fn max_steps(mut self, n: usize) -> Self {
+        self.max_steps = n;
+        self
+    }
+
+    pub fn detect_lock_order(mut self, on: bool) -> Self {
+        self.detect_lock_order = on;
+        self
+    }
+
+    /// Explore interleavings of `f` until a failure, schedule exhaustion, or
+    /// `max_schedules`. `f` runs once per explored schedule and must be
+    /// deterministic apart from thread scheduling.
+    pub fn check<F>(&self, f: F) -> Report
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        install_panic_hook();
+        let f: Arc<dyn Fn() + Send + Sync> = Arc::new(f);
+        let mut report = Report {
+            schedules: 0,
+            pruned: 0,
+            failure: None,
+        };
+
+        // First execution: default policy all the way down.
+        let outcome = run_execution(self, &f, Vec::new());
+        record(&mut report, &outcome);
+        if report.failure.is_some() {
+            return report;
+        }
+        // DFS stack mirrors the frames of the most recent execution.
+        let mut stack: Vec<ExpFrame> = outcome.frames.iter().map(ExpFrame::from_frame).collect();
+
+        while report.schedules + report.pruned < self.max_schedules {
+            // Find the deepest frame with an untried, non-slept,
+            // budget-feasible alternative.
+            let mut pick: Option<(usize, usize)> = None; // (frame idx, tid)
+            while pick.is_none() {
+                let i = match stack.len().checked_sub(1) {
+                    Some(i) => i,
+                    None => break,
+                };
+                // Preemptions consumed by the committed prefix above frame i:
+                // a step preempts when it switches away from a still-enabled
+                // running thread.
+                let mut used = 0usize;
+                for fr in stack[..i].iter() {
+                    let chosen = *fr.tried.last().expect("frame always has a choice");
+                    if chosen != fr.current_before && fr.enabled.contains(&fr.current_before) {
+                        used += 1;
+                    }
+                }
+                let fr = &stack[i];
+                let cand = fr.enabled.iter().copied().find(|t| {
+                    if fr.tried.contains(t) || fr.sleep_entry.contains(t) {
+                        return false;
+                    }
+                    let extra = if *t != fr.current_before && fr.enabled.contains(&fr.current_before)
+                    {
+                        1
+                    } else {
+                        0
+                    };
+                    used + extra <= self.preemption_bound
+                });
+                match cand {
+                    Some(t) => pick = Some((i, t)),
+                    None => {
+                        stack.pop();
+                    }
+                }
+            }
+            let (i, tid) = match pick {
+                Some(p) => p,
+                None => break, // schedule tree exhausted
+            };
+
+            // Build the replay prefix: frames above i replay their last-tried
+            // choice with all *earlier* tried choices added to the sleep set
+            // (they lead to already-explored subtrees); frame i diverges to
+            // `tid`, sleeping everything tried there before.
+            let mut prefix: Vec<PrefixStep> = Vec::with_capacity(i + 1);
+            for fr in stack[..i].iter() {
+                let n = fr.tried.len();
+                prefix.push(PrefixStep {
+                    choice: fr.tried[n - 1],
+                    sleep_add: fr.tried[..n - 1].to_vec(),
+                });
+            }
+            prefix.push(PrefixStep {
+                choice: tid,
+                sleep_add: stack[i].tried.clone(),
+            });
+            stack[i].tried.push(tid);
+            stack.truncate(i + 1);
+
+            let outcome = run_execution(self, &f, prefix);
+            record(&mut report, &outcome);
+            if report.failure.is_some() {
+                return report;
+            }
+            // Extend the stack with the fresh suffix below the divergence.
+            for fr in outcome.frames.iter().skip(i + 1) {
+                stack.push(ExpFrame::from_frame(fr));
+            }
+        }
+        report
+    }
+}
+
+/// Explore interleavings of `f` with default [`Checker`] settings.
+pub fn model<F>(f: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    Checker::new().check(f)
+}
+
+/// Re-run `f` under exactly one schedule — the comma-joined thread-id string
+/// from a [`Failure`]. Returns a single-execution report (schedules == 1).
+pub fn replay<F>(f: F, schedule: &str) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    install_panic_hook();
+    let f: Arc<dyn Fn() + Send + Sync> = Arc::new(f);
+    let prefix: Vec<PrefixStep> = schedule
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| PrefixStep {
+            choice: s
+                .trim()
+                .parse::<usize>()
+                .expect("schedule strings are comma-joined thread ids"),
+            sleep_add: Vec::new(),
+        })
+        .collect();
+    let checker = Checker::new();
+    let outcome = run_execution(&checker, &f, prefix);
+    let mut report = Report {
+        schedules: 0,
+        pruned: 0,
+        failure: None,
+    };
+    record(&mut report, &outcome);
+    report
+}
+
+fn record(report: &mut Report, outcome: &ExecOutcome) {
+    if outcome.pruned {
+        report.pruned += 1;
+    } else {
+        report.schedules += 1;
+    }
+    if report.failure.is_none() {
+        report.failure = outcome.failure.clone();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Operations and object identity
+// ---------------------------------------------------------------------------
+
+/// Identity of a shared object touched by an [`Op`], namespaced so address
+/// reuse across object kinds (or channel-counter ids) can't collide.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub(crate) enum ObjId {
+    /// Mutex, by address.
+    M(usize),
+    /// Channel, by global counter id (shared between endpoints).
+    C(u64),
+    /// Atomic cell, by address.
+    A(usize),
+    /// Condvar, by address.
+    Cv(usize),
+    /// A thread's lifecycle (Begin/Join), by tid.
+    T(usize),
+    /// The thread-id allocation order itself: Spawn ops conflict with each
+    /// other because reordering them renumbers the children.
+    SpawnClock,
+}
+
+/// A scheduling-point operation, as declared by a shim before blocking.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Op {
+    /// First scheduling point of a spawned thread.
+    Begin(usize),
+    Yield,
+    Lock(usize),
+    TryLock(usize),
+    Unlock(usize),
+    CvWait { cv: usize, lock: usize },
+    CvNotify { cv: usize, all: bool },
+    Send(u64),
+    TrySend(u64),
+    Recv(u64),
+    TryRecv(u64),
+    RecvTimeout(u64),
+    Atomic { obj: usize, write: bool },
+    Spawn,
+    Join(usize),
+}
+
+impl Op {
+    /// Shared objects this op touches (CvWait touches two).
+    fn objs(&self) -> [Option<ObjId>; 2] {
+        match *self {
+            Op::Begin(t) => [Some(ObjId::T(t)), None],
+            Op::Yield => [None, None],
+            Op::Lock(m) | Op::TryLock(m) | Op::Unlock(m) => [Some(ObjId::M(m)), None],
+            Op::CvWait { cv, lock } => [Some(ObjId::Cv(cv)), Some(ObjId::M(lock))],
+            Op::CvNotify { cv, .. } => [Some(ObjId::Cv(cv)), None],
+            Op::Send(c) | Op::TrySend(c) | Op::Recv(c) | Op::TryRecv(c) | Op::RecvTimeout(c) => {
+                [Some(ObjId::C(c)), None]
+            }
+            Op::Atomic { obj, .. } => [Some(ObjId::A(obj)), None],
+            Op::Spawn => [Some(ObjId::SpawnClock), None],
+            Op::Join(t) => [Some(ObjId::T(t)), None],
+        }
+    }
+
+    /// Does this op mutate its object(s)? Reads commute; everything else is
+    /// conservatively a write.
+    fn is_write(&self) -> bool {
+        !matches!(*self, Op::Atomic { write: false, .. } | Op::Yield)
+    }
+
+    fn describe(&self) -> String {
+        match *self {
+            Op::Begin(t) => format!("begin(t{t})"),
+            Op::Yield => "yield".into(),
+            Op::Lock(m) => format!("lock({m:#x})"),
+            Op::TryLock(m) => format!("try_lock({m:#x})"),
+            Op::Unlock(m) => format!("unlock({m:#x})"),
+            Op::CvWait { cv, .. } => format!("cv_wait({cv:#x})"),
+            Op::CvNotify { cv, all } => {
+                format!("cv_notify_{}({cv:#x})", if all { "all" } else { "one" })
+            }
+            Op::Send(c) => format!("send(ch{c})"),
+            Op::TrySend(c) => format!("try_send(ch{c})"),
+            Op::Recv(c) => format!("recv(ch{c})"),
+            Op::TryRecv(c) => format!("try_recv(ch{c})"),
+            Op::RecvTimeout(c) => format!("recv_timeout(ch{c})"),
+            Op::Atomic { obj, write } => {
+                format!("atomic_{}({obj:#x})", if write { "rmw" } else { "load" })
+            }
+            Op::Spawn => "spawn".into(),
+            Op::Join(t) => format!("join(t{t})"),
+        }
+    }
+}
+
+/// Two ops are dependent when they touch a common object and at least one
+/// writes it. Independent ops commute — the basis for sleep-set pruning.
+fn dependent(a: &Op, b: &Op) -> bool {
+    let (ao, bo) = (a.objs(), b.objs());
+    for x in ao.iter().flatten() {
+        for y in bo.iter().flatten() {
+            if x == y && (a.is_write() || b.is_write()) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// What the scheduler tells the shim after granting an op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Grant {
+    /// Go ahead (lock acquired, message enqueued, ...).
+    Proceed,
+    /// recv/try_recv: an item is available — do the real receive.
+    DataReady,
+    /// recv on a closed empty channel.
+    Disconnected,
+    /// recv_timeout: modeled timeout fired (channel stayed empty at
+    /// quiescence).
+    Timeout,
+    /// try_* operation would block.
+    WouldBlock,
+}
+
+// ---------------------------------------------------------------------------
+// Per-execution state
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum TState {
+    /// Spawned, OS thread not yet at its first scheduling point.
+    Starting,
+    /// Declared an op, waiting to be scheduled.
+    Pending(Op),
+    /// Parked in a modeled cv wait (released its mutex).
+    CvBlocked { cv: usize, lock: usize },
+    /// Currently scheduled (exactly one thread at a time).
+    Running,
+    Exited,
+}
+
+#[derive(Debug)]
+struct ThreadSlot {
+    state: TState,
+    /// Mutexes held, in acquisition order (for lock-order edges).
+    held: Vec<usize>,
+    grant: Grant,
+}
+
+#[derive(Debug)]
+struct ChanState {
+    /// None = unbounded.
+    cap: Option<usize>,
+    len: usize,
+    senders: usize,
+    recv_alive: bool,
+}
+
+/// One frame of the recorded schedule: who was enabled, who ran.
+#[derive(Clone, Debug)]
+pub(crate) struct Frame {
+    pub(crate) enabled: Vec<usize>,
+    pub(crate) chosen: usize,
+    pub(crate) current_before: usize,
+    /// Sleep set at frame entry (sorted) — replays must re-enter with it.
+    pub(crate) sleep_at: Vec<usize>,
+}
+
+/// One step of a replay prefix.
+#[derive(Clone, Debug)]
+struct PrefixStep {
+    choice: usize,
+    /// Tids to add to the sleep set before choosing (subtrees already
+    /// explored at this node).
+    sleep_add: Vec<usize>,
+}
+
+struct ExecState {
+    threads: Vec<ThreadSlot>,
+    current: usize,
+    live: usize,
+    mutexes: HashMap<usize, Option<usize>>,
+    chans: HashMap<u64, ChanState>,
+    /// cv addr -> FIFO of (tid, mutex addr) parked waiters.
+    cvs: HashMap<usize, Vec<(usize, usize)>>,
+    /// Lock-order graph: edges held -> newly acquired.
+    lock_edges: HashMap<usize, HashSet<usize>>,
+    choices: Vec<usize>,
+    frames: Vec<Frame>,
+    prefix: Vec<PrefixStep>,
+    sleep: HashSet<usize>,
+    failure: Option<Failure>,
+    aborting: bool,
+    pruned: bool,
+    done: bool,
+    steps: usize,
+    max_steps: usize,
+    detect_lock_order: bool,
+}
+
+impl ExecState {
+    fn schedule_string(&self) -> String {
+        let strs: Vec<String> = self.choices.iter().map(|t| t.to_string()).collect();
+        strs.join(",")
+    }
+
+    fn fail(&mut self, kind: FailureKind, message: String) {
+        if self.failure.is_none() {
+            self.failure = Some(Failure {
+                kind,
+                schedule: self.schedule_string(),
+                message,
+            });
+        }
+        self.aborting = true;
+    }
+}
+
+/// Shared between the explorer and all controlled threads of one execution.
+pub(crate) struct Execution {
+    st: StdMutex<ExecState>,
+    cv: StdCondvar,
+    /// Monotonic channel-id source (per execution would also work, but a
+    /// process-global counter keeps ids unique across nested uses).
+    chan_ids: AtomicU64,
+}
+
+thread_local! {
+    /// (execution, my tid) for threads running under a model; None outside.
+    static CTX: std::cell::RefCell<Option<(Arc<Execution>, usize)>> =
+        const { std::cell::RefCell::new(None) };
+    /// Marks panics raised by model threads so the global hook can mute the
+    /// expected ones (Aborted floods, assertion probes).
+    static IN_MODEL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Sentinel panic payload used to tear down controlled threads when the
+/// execution aborts (failure found or subtree pruned).
+struct Aborted;
+
+/// The current thread's model context, if any. Shims call this to decide
+/// between the modeled path and plain std behavior.
+pub(crate) fn ctx() -> Option<(Arc<Execution>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+pub(crate) fn fresh_chan_id(exec: &Execution) -> u64 {
+    exec.chan_ids.fetch_add(1, AOrd::Relaxed)
+}
+
+fn install_panic_hook() {
+    static HOOK: Once = Once::new();
+    HOOK.call_once(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            let muted = IN_MODEL.with(|m| m.get());
+            if !muted {
+                prev(info);
+            }
+        }));
+    });
+}
+
+impl Execution {
+    fn new(checker: &Checker, prefix: Vec<PrefixStep>) -> Self {
+        Execution {
+            st: StdMutex::new(ExecState {
+                threads: Vec::new(),
+                current: 0,
+                live: 0,
+                mutexes: HashMap::new(),
+                chans: HashMap::new(),
+                cvs: HashMap::new(),
+                lock_edges: HashMap::new(),
+                choices: Vec::new(),
+                frames: Vec::new(),
+                prefix,
+                sleep: HashSet::new(),
+                failure: None,
+                aborting: false,
+                pruned: false,
+                done: false,
+                steps: 0,
+                max_steps: checker.max_steps,
+                detect_lock_order: checker.detect_lock_order,
+            }),
+            cv: StdCondvar::new(),
+            chan_ids: AtomicU64::new(0),
+        }
+    }
+
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, ExecState> {
+        match self.st.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    // -- channel registry (called by shim constructors / Drop impls) -------
+
+    pub(crate) fn chan_register(&self, id: u64, cap: Option<usize>) {
+        let mut st = self.lock_state();
+        st.chans.insert(
+            id,
+            ChanState {
+                cap,
+                len: 0,
+                senders: 1,
+                recv_alive: true,
+            },
+        );
+    }
+
+    pub(crate) fn chan_add_sender(&self, id: u64) {
+        let mut st = self.lock_state();
+        if let Some(ch) = st.chans.get_mut(&id) {
+            ch.senders += 1;
+        }
+    }
+
+    pub(crate) fn chan_drop_sender(&self, id: u64) {
+        let mut st = self.lock_state();
+        if let Some(ch) = st.chans.get_mut(&id) {
+            ch.senders = ch.senders.saturating_sub(1);
+        }
+        // A closing sender can unblock receivers waiting for Disconnected.
+        Self::advance(&mut st);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn chan_drop_receiver(&self, id: u64) {
+        let mut st = self.lock_state();
+        if let Some(ch) = st.chans.get_mut(&id) {
+            ch.recv_alive = false;
+        }
+        // Unblocks senders on a bounded channel whose receiver vanished.
+        Self::advance(&mut st);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn chan_is_registered(&self, id: u64) -> bool {
+        self.lock_state().chans.contains_key(&id)
+    }
+
+    // -- thread registry ----------------------------------------------------
+
+    /// Allocate a slot for a not-yet-started thread. Caller then actually
+    /// spawns the OS thread with [`run_controlled`].
+    pub(crate) fn register_thread(&self) -> usize {
+        let mut st = self.lock_state();
+        st.threads.push(ThreadSlot {
+            state: TState::Starting,
+            held: Vec::new(),
+            grant: Grant::Proceed,
+        });
+        st.live += 1;
+        st.threads.len() - 1
+    }
+
+    fn thread_exit(&self, tid: usize, panic_msg: Option<String>) {
+        let mut st = self.lock_state();
+        st.threads[tid].state = TState::Exited;
+        st.live -= 1;
+        if let Some(msg) = panic_msg {
+            if !st.aborting {
+                let schedule = st.schedule_string();
+                if st.failure.is_none() {
+                    st.failure = Some(Failure {
+                        kind: FailureKind::Assertion,
+                        schedule,
+                        message: format!("thread {tid} panicked: {msg}"),
+                    });
+                }
+                st.aborting = true;
+            }
+        }
+        Self::advance(&mut st);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    // -- the heart: declare an op, park until scheduled ---------------------
+
+    pub(crate) fn sched_op(&self, tid: usize, op: Op) -> Grant {
+        if std::thread::panicking() {
+            // Unwinding (assertion probe or Aborted teardown): never panic
+            // again from a Drop — apply silent effects and move on.
+            self.silent_op(tid, op);
+            return Grant::Proceed;
+        }
+        let mut st = self.lock_state();
+        if st.aborting {
+            drop(st);
+            panic::panic_any(Aborted);
+        }
+        st.threads[tid].state = TState::Pending(op);
+        Self::advance(&mut st);
+        self.cv.notify_all();
+        loop {
+            if matches!(st.threads[tid].state, TState::Running) {
+                return st.threads[tid].grant;
+            }
+            if st.aborting {
+                drop(st);
+                panic::panic_any(Aborted);
+            }
+            st = match self.cv.wait(st) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    /// Effects-only op application during panic unwinding: keep bookkeeping
+    /// (mutex owners, channel counts) sane so other threads' enabledness
+    /// stays accurate, but never block and never panic.
+    fn silent_op(&self, tid: usize, op: Op) {
+        let mut st = self.lock_state();
+        match op {
+            Op::Unlock(m) => {
+                st.mutexes.insert(m, None);
+                if let Some(pos) = st.threads[tid].held.iter().position(|&h| h == m) {
+                    st.threads[tid].held.remove(pos);
+                }
+            }
+            Op::CvNotify { cv, all } => {
+                Self::apply_notify(&mut st, cv, all);
+            }
+            _ => {}
+        }
+        Self::advance(&mut st);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn wait_done(&self) {
+        let mut st = self.lock_state();
+        while !st.done {
+            st = match self.cv.wait(st) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    // -- scheduling core ----------------------------------------------------
+
+    /// Is `tid`'s pending op enabled (would not block) in the current state?
+    fn op_enabled(st: &ExecState, op: &Op) -> bool {
+        match *op {
+            Op::Lock(m) => st.mutexes.get(&m).copied().flatten().is_none(),
+            Op::Send(c) => match st.chans.get(&c) {
+                Some(ch) => {
+                    !ch.recv_alive || ch.cap.is_none() || ch.len < ch.cap.expect("checked")
+                }
+                None => true,
+            },
+            Op::Recv(c) | Op::RecvTimeout(c) => match st.chans.get(&c) {
+                Some(ch) => ch.len > 0 || ch.senders == 0,
+                None => true,
+            },
+            Op::Join(t) => matches!(st.threads[t].state, TState::Exited),
+            // Try-ops, unlock, notify, cv-park, atomics, yield, begin, spawn
+            // never block.
+            _ => true,
+        }
+    }
+
+    /// Drive the execution forward: pick and dispatch the next thread
+    /// whenever no thread is Running. Loops because a CvWait dispatch parks
+    /// the chosen thread and requires another pick.
+    fn advance(st: &mut ExecState) {
+        loop {
+            if st.aborting || st.done {
+                if st.live == 0 {
+                    st.done = true;
+                }
+                return;
+            }
+            if st.live == 0 {
+                st.done = true;
+                return;
+            }
+            // Someone still running or not yet at its first scheduling
+            // point: wait for it to arrive.
+            if st
+                .threads
+                .iter()
+                .any(|t| matches!(t.state, TState::Running | TState::Starting))
+            {
+                return;
+            }
+            let pending: Vec<usize> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| matches!(t.state, TState::Pending(_)))
+                .map(|(i, _)| i)
+                .collect();
+            if pending.is_empty() {
+                // Only CvBlocked threads remain: classic lost-wakeup
+                // deadlock.
+                let blocked: Vec<String> = st
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| matches!(t.state, TState::CvBlocked { .. }))
+                    .map(|(i, _)| format!("t{i} in cv wait"))
+                    .collect();
+                st.fail(
+                    FailureKind::Deadlock,
+                    format!("all live threads parked on condvars: {}", blocked.join(", ")),
+                );
+                return;
+            }
+            let enabled: Vec<usize> = pending
+                .iter()
+                .copied()
+                .filter(|&t| {
+                    let op = match st.threads[t].state {
+                        TState::Pending(op) => op,
+                        _ => unreachable!(),
+                    };
+                    Self::op_enabled(st, &op)
+                })
+                .collect();
+
+            if enabled.is_empty() {
+                // Quiescent. A timed receive fires its timeout; otherwise
+                // this is a deadlock.
+                if let Some(&t) = pending.iter().find(|&&t| {
+                    matches!(st.threads[t].state, TState::Pending(Op::RecvTimeout(_)))
+                }) {
+                    let depth = st.frames.len();
+                    if depth < st.prefix.len() && st.prefix[depth].choice != t {
+                        st.fail(
+                            FailureKind::Assertion,
+                            format!(
+                                "replay diverged at step {depth}: expected t{}, \
+                                 only timeout-firing t{t} available",
+                                st.prefix[depth].choice
+                            ),
+                        );
+                        return;
+                    }
+                    let mut sleep_at: Vec<usize> = st.sleep.iter().copied().collect();
+                    sleep_at.sort_unstable();
+                    st.frames.push(Frame {
+                        enabled: vec![t],
+                        chosen: t,
+                        current_before: st.current,
+                        sleep_at,
+                    });
+                    st.choices.push(t);
+                    st.steps += 1;
+                    st.threads[t].grant = Grant::Timeout;
+                    st.threads[t].state = TState::Running;
+                    st.current = t;
+                    return;
+                }
+                let desc: Vec<String> = pending
+                    .iter()
+                    .map(|&t| {
+                        let op = match st.threads[t].state {
+                            TState::Pending(op) => op,
+                            _ => unreachable!(),
+                        };
+                        format!("t{t} blocked on {}", op.describe())
+                    })
+                    .collect();
+                let cv_parked: Vec<String> = st
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| matches!(t.state, TState::CvBlocked { .. }))
+                    .map(|(i, _)| format!("t{i} in cv wait"))
+                    .collect();
+                let mut all = desc;
+                all.extend(cv_parked);
+                st.fail(FailureKind::Deadlock, all.join("; "));
+                return;
+            }
+
+            // Choose.
+            let depth = st.frames.len();
+            let chosen = if depth < st.prefix.len() {
+                for &s in st.prefix[depth].sleep_add.iter() {
+                    st.sleep.insert(s);
+                }
+                let c = st.prefix[depth].choice;
+                if !enabled.contains(&c) {
+                    st.fail(
+                        FailureKind::Assertion,
+                        format!(
+                            "replay diverged at step {depth}: t{c} not enabled \
+                             (enabled: {enabled:?})"
+                        ),
+                    );
+                    return;
+                }
+                c
+            } else {
+                let candidates: Vec<usize> = enabled
+                    .iter()
+                    .copied()
+                    .filter(|t| !st.sleep.contains(t))
+                    .collect();
+                if candidates.is_empty() {
+                    // Every enabled move is redundant with an explored
+                    // subtree — abandon this execution.
+                    st.pruned = true;
+                    st.aborting = true;
+                    return;
+                }
+                // Default policy: keep running the current thread when
+                // possible (fewer context switches ≙ preemption budget),
+                // else lowest tid.
+                if candidates.contains(&st.current) {
+                    st.current
+                } else {
+                    candidates[0]
+                }
+            };
+
+            let mut sleep_at: Vec<usize> = st.sleep.iter().copied().collect();
+            sleep_at.sort_unstable();
+            st.frames.push(Frame {
+                enabled: enabled.clone(),
+                chosen,
+                current_before: st.current,
+                sleep_at,
+            });
+            st.choices.push(chosen);
+            st.steps += 1;
+            if st.steps > st.max_steps {
+                let limit = st.max_steps;
+                st.fail(
+                    FailureKind::Assertion,
+                    format!("execution exceeded {limit} scheduling points (livelock?)"),
+                );
+                return;
+            }
+
+            let op = match st.threads[chosen].state {
+                TState::Pending(op) => op,
+                _ => unreachable!(),
+            };
+            // Forward sleep-set filtering: executing `op` wakes any slept
+            // thread whose pending op depends on it.
+            let sleepers: Vec<usize> = st.sleep.iter().copied().collect();
+            for s in sleepers {
+                if s == chosen {
+                    st.sleep.remove(&s);
+                    continue;
+                }
+                let wake = match st.threads[s].state {
+                    TState::Pending(sop) => dependent(&op, &sop),
+                    _ => true,
+                };
+                if wake {
+                    st.sleep.remove(&s);
+                }
+            }
+
+            let parked = Self::apply_op(st, chosen, op);
+            if st.aborting {
+                return;
+            }
+            if parked {
+                // CvWait: chosen thread went to CvBlocked; pick again.
+                continue;
+            }
+            st.threads[chosen].state = TState::Running;
+            st.current = chosen;
+            return;
+        }
+    }
+
+    /// Mutate state for `op` by `tid`. Returns true when the thread parked
+    /// (CvWait) instead of becoming Running.
+    fn apply_op(st: &mut ExecState, tid: usize, op: Op) -> bool {
+        st.threads[tid].grant = Grant::Proceed;
+        match op {
+            Op::Begin(_) | Op::Yield | Op::Spawn | Op::Join(_) => {}
+            Op::Lock(m) => {
+                Self::note_lock_acquire(st, tid, m);
+                st.mutexes.insert(m, Some(tid));
+                st.threads[tid].held.push(m);
+            }
+            Op::TryLock(m) => {
+                if st.mutexes.get(&m).copied().flatten().is_none() {
+                    Self::note_lock_acquire(st, tid, m);
+                    st.mutexes.insert(m, Some(tid));
+                    st.threads[tid].held.push(m);
+                } else {
+                    st.threads[tid].grant = Grant::WouldBlock;
+                }
+            }
+            Op::Unlock(m) => {
+                st.mutexes.insert(m, None);
+                if let Some(pos) = st.threads[tid].held.iter().position(|&h| h == m) {
+                    st.threads[tid].held.remove(pos);
+                }
+            }
+            Op::CvWait { cv, lock } => {
+                st.mutexes.insert(lock, None);
+                if let Some(pos) = st.threads[tid].held.iter().position(|&h| h == lock) {
+                    st.threads[tid].held.remove(pos);
+                }
+                st.cvs.entry(cv).or_default().push((tid, lock));
+                st.threads[tid].state = TState::CvBlocked { cv, lock };
+                return true;
+            }
+            Op::CvNotify { cv, all } => {
+                Self::apply_notify(st, cv, all);
+            }
+            Op::Send(c) => {
+                if let Some(ch) = st.chans.get_mut(&c) {
+                    if ch.recv_alive {
+                        ch.len += 1;
+                    } else {
+                        // Real send() will return SendError; model just
+                        // lets it proceed to observe that.
+                    }
+                }
+            }
+            Op::TrySend(c) => {
+                if let Some(ch) = st.chans.get_mut(&c) {
+                    if !ch.recv_alive {
+                        // Real try_send returns Disconnected.
+                    } else if ch.cap.map_or(true, |cap| ch.len < cap) {
+                        ch.len += 1;
+                    } else {
+                        st.threads[tid].grant = Grant::WouldBlock;
+                    }
+                }
+            }
+            Op::Recv(c) | Op::RecvTimeout(c) => {
+                if let Some(ch) = st.chans.get_mut(&c) {
+                    if ch.len > 0 {
+                        ch.len -= 1;
+                        st.threads[tid].grant = Grant::DataReady;
+                    } else {
+                        // Enabled with len == 0 means senders == 0.
+                        st.threads[tid].grant = Grant::Disconnected;
+                    }
+                }
+            }
+            Op::TryRecv(c) => {
+                if let Some(ch) = st.chans.get_mut(&c) {
+                    if ch.len > 0 {
+                        ch.len -= 1;
+                        st.threads[tid].grant = Grant::DataReady;
+                    } else if ch.senders == 0 {
+                        st.threads[tid].grant = Grant::Disconnected;
+                    } else {
+                        st.threads[tid].grant = Grant::WouldBlock;
+                    }
+                }
+            }
+            Op::Atomic { .. } => {}
+        }
+        false
+    }
+
+    fn apply_notify(st: &mut ExecState, cv: usize, all: bool) {
+        let waiters = st.cvs.entry(cv).or_default();
+        let woken: Vec<(usize, usize)> = if all {
+            std::mem::take(waiters)
+        } else if waiters.is_empty() {
+            Vec::new()
+        } else {
+            vec![waiters.remove(0)]
+        };
+        for (t, lock) in woken {
+            // Woken waiter must reacquire its mutex: becomes a pending Lock.
+            st.threads[t].state = TState::Pending(Op::Lock(lock));
+        }
+    }
+
+    /// Record held->m edges and check for a cycle (lock-order inversion).
+    fn note_lock_acquire(st: &mut ExecState, tid: usize, m: usize) {
+        let held = st.threads[tid].held.clone();
+        if held.is_empty() {
+            return;
+        }
+        for &h in &held {
+            st.lock_edges.entry(h).or_default().insert(m);
+        }
+        if !st.detect_lock_order {
+            return;
+        }
+        // Cycle check: can we reach any held lock from m?
+        let mut seen: HashSet<usize> = HashSet::new();
+        let mut stack = vec![m];
+        while let Some(x) = stack.pop() {
+            if !seen.insert(x) {
+                continue;
+            }
+            if held.contains(&x) && x != m {
+                st.fail(
+                    FailureKind::LockOrderInversion,
+                    format!(
+                        "t{tid} acquires {m:#x} while holding {held:?}, but an \
+                         earlier acquisition ordered them the other way \
+                         (latent deadlock)"
+                    ),
+                );
+                return;
+            }
+            if let Some(next) = st.lock_edges.get(&x) {
+                stack.extend(next.iter().copied());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Controlled-thread entry points (used by the thread shim)
+// ---------------------------------------------------------------------------
+
+/// Run `f` as controlled thread `tid` of `exec`: set TLS, hit the Begin
+/// scheduling point, catch panics, report exit.
+pub(crate) fn run_controlled<T, F>(exec: Arc<Execution>, tid: usize, f: F) -> Option<T>
+where
+    F: FnOnce() -> T,
+{
+    CTX.with(|c| *c.borrow_mut() = Some((exec.clone(), tid)));
+    IN_MODEL.with(|m| m.set(true));
+    exec.sched_op(tid, Op::Begin(tid));
+    let result = panic::catch_unwind(AssertUnwindSafe(f));
+    match result {
+        Ok(v) => {
+            exec.thread_exit(tid, None);
+            CTX.with(|c| *c.borrow_mut() = None);
+            IN_MODEL.with(|m| m.set(false));
+            Some(v)
+        }
+        Err(payload) => {
+            let msg = if payload.downcast_ref::<Aborted>().is_some() {
+                None // teardown, not a failure
+            } else if let Some(s) = payload.downcast_ref::<&str>() {
+                Some((*s).to_string())
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                Some(s.clone())
+            } else {
+                Some("panic with non-string payload".to_string())
+            };
+            exec.thread_exit(tid, msg);
+            CTX.with(|c| *c.borrow_mut() = None);
+            IN_MODEL.with(|m| m.set(false));
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Explorer plumbing
+// ---------------------------------------------------------------------------
+
+struct ExecOutcome {
+    frames: Vec<Frame>,
+    failure: Option<Failure>,
+    pruned: bool,
+}
+
+struct ExpFrame {
+    enabled: Vec<usize>,
+    current_before: usize,
+    /// Choices taken from this node so far (first = the recorded run's).
+    tried: Vec<usize>,
+    /// Sleep set on entry — permanently-excluded candidates at this node.
+    sleep_entry: Vec<usize>,
+}
+
+impl ExpFrame {
+    fn from_frame(f: &Frame) -> Self {
+        ExpFrame {
+            enabled: f.enabled.clone(),
+            current_before: f.current_before,
+            tried: vec![f.chosen],
+            sleep_entry: f.sleep_at.clone(),
+        }
+    }
+}
+
+fn run_execution(
+    checker: &Checker,
+    f: &Arc<dyn Fn() + Send + Sync>,
+    prefix: Vec<PrefixStep>,
+) -> ExecOutcome {
+    let exec = Arc::new(Execution::new(checker, prefix));
+    let tid = exec.register_thread();
+    debug_assert_eq!(tid, 0);
+    let f = f.clone();
+    let exec2 = exec.clone();
+    let handle = std::thread::Builder::new()
+        .name("pa-model-t0".into())
+        .spawn(move || {
+            run_controlled(exec2, 0, move || f());
+        })
+        .expect("spawning model root thread");
+    exec.wait_done();
+    let _ = handle.join();
+    let st = exec.lock_state();
+    ExecOutcome {
+        frames: st.frames.clone(),
+        failure: st.failure.clone(),
+        pruned: st.pruned,
+    }
+}

@@ -1,0 +1,721 @@
+//! `std::sync` drop-ins: transparent re-exports normally, scheduler-routed
+//! wrappers under the `pa_modelcheck` feature.
+//!
+//! Either way the public surface is the same set of names — `Mutex`,
+//! `MutexGuard`, `Condvar`, `Arc`, the [`atomic`] and [`mpsc`] submodules,
+//! [`channel`] / [`sync_channel`], and the sanctioned [`lock_or_poison`]
+//! helper — so call sites never mention the feature.
+//!
+//! Model-mode wrappers keep a *real* `std` primitive inside and mirror its
+//! state in the scheduler: the scheduler decides *when* an operation runs
+//! (and whether it would block); the real primitive then performs it
+//! uncontended. Threads not spawned through a [`crate::check::model`] run
+//! (no TLS context) bypass the scheduler entirely and behave exactly like
+//! `std`.
+
+// ---------------------------------------------------------------------------
+// Feature OFF: transparent re-exports.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pa_modelcheck"))]
+pub use std::sync::{
+    Arc, Condvar, LockResult, Mutex, MutexGuard, PoisonError, TryLockError, TryLockResult, Weak,
+};
+
+/// `std::sync::atomic` verbatim (feature off).
+#[cfg(not(feature = "pa_modelcheck"))]
+pub mod atomic {
+    pub use std::sync::atomic::*;
+}
+
+/// `std::sync::mpsc` verbatim (feature off).
+#[cfg(not(feature = "pa_modelcheck"))]
+pub mod mpsc {
+    pub use std::sync::mpsc::*;
+}
+
+#[cfg(not(feature = "pa_modelcheck"))]
+pub use std::sync::mpsc::{channel, sync_channel};
+
+// ---------------------------------------------------------------------------
+// Feature ON: scheduler-routed wrappers.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pa_modelcheck")]
+pub use std::sync::{Arc, LockResult, PoisonError, TryLockError, TryLockResult, Weak};
+
+#[cfg(feature = "pa_modelcheck")]
+mod modeled {
+    use crate::check::sched::{self, Grant, Op};
+    use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, PoisonError};
+    use std::sync::{LockResult, TryLockError, TryLockResult};
+
+    type Ctl = Option<(Arc<sched::Execution>, usize)>;
+
+    /// A mutex whose acquire/release are scheduling points under a model
+    /// run. `T: Sized` (the id is the wrapper's address).
+    pub struct Mutex<T> {
+        inner: StdMutex<T>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Self {
+            Mutex {
+                inner: StdMutex::new(t),
+            }
+        }
+
+        fn id(&self) -> usize {
+            self as *const Mutex<T> as usize
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            let ctl: Ctl = sched::ctx();
+            if let Some((exec, tid)) = &ctl {
+                exec.sched_op(*tid, Op::Lock(self.id()));
+            }
+            // Under a model the scheduler only granted the lock when free,
+            // so this acquire is uncontended; outside a model it blocks like
+            // plain std.
+            match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard {
+                    inner: Some(g),
+                    lock: self,
+                    ctl,
+                }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    inner: Some(p.into_inner()),
+                    lock: self,
+                    ctl,
+                })),
+            }
+        }
+
+        pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+            let ctl: Ctl = sched::ctx();
+            if let Some((exec, tid)) = &ctl {
+                if exec.sched_op(*tid, Op::TryLock(self.id())) == Grant::WouldBlock {
+                    return Err(TryLockError::WouldBlock);
+                }
+            }
+            match self.inner.try_lock() {
+                Ok(g) => Ok(MutexGuard {
+                    inner: Some(g),
+                    lock: self,
+                    ctl,
+                }),
+                Err(TryLockError::Poisoned(p)) => {
+                    Err(TryLockError::Poisoned(PoisonError::new(MutexGuard {
+                        inner: Some(p.into_inner().into_inner()),
+                        lock: self,
+                        ctl,
+                    })))
+                }
+                Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+            }
+        }
+
+        pub fn get_mut(&mut self) -> LockResult<&mut T> {
+            self.inner.get_mut()
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.inner.into_inner()
+        }
+    }
+
+    impl<T: Default> Default for Mutex<T> {
+        fn default() -> Self {
+            Mutex::new(T::default())
+        }
+    }
+
+    impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Mutex").finish_non_exhaustive()
+        }
+    }
+
+    pub struct MutexGuard<'a, T> {
+        // `Option` so Drop can release the real guard *before* telling the
+        // scheduler (which may park, or panic during teardown).
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+        lock: &'a Mutex<T>,
+        ctl: Ctl,
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard present until drop")
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard present until drop")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            drop(self.inner.take());
+            if let Some((exec, tid)) = &self.ctl {
+                exec.sched_op(*tid, Op::Unlock(self.lock.id()));
+            }
+        }
+    }
+
+    /// A condvar whose wait/notify are scheduling points under a model run.
+    /// Lost-wakeup schedules surface as deadlocks.
+    pub struct Condvar {
+        inner: StdCondvar,
+    }
+
+    impl Condvar {
+        pub const fn new() -> Self {
+            Condvar {
+                inner: StdCondvar::new(),
+            }
+        }
+
+        fn id(&self) -> usize {
+            self as *const Condvar as usize
+        }
+
+        pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            match guard.ctl.clone() {
+                Some((exec, tid)) => {
+                    let lock = guard.lock;
+                    // Release the real mutex, park in the scheduler, then
+                    // reacquire (the scheduler wakes us as a pending Lock).
+                    drop(guard.inner.take());
+                    guard.ctl = None; // neuter: its Drop must not double-unlock
+                    let _wake = exec.sched_op(
+                        tid,
+                        Op::CvWait {
+                            cv: self.id(),
+                            lock: lock.id(),
+                        },
+                    );
+                    std::mem::forget(guard);
+                    match lock.inner.lock() {
+                        Ok(g) => Ok(MutexGuard {
+                            inner: Some(g),
+                            lock,
+                            ctl: Some((exec, tid)),
+                        }),
+                        Err(p) => Err(PoisonError::new(MutexGuard {
+                            inner: Some(p.into_inner()),
+                            lock,
+                            ctl: Some((exec, tid)),
+                        })),
+                    }
+                }
+                None => {
+                    let lock = guard.lock;
+                    let real = guard.inner.take().expect("guard present until drop");
+                    std::mem::forget(guard);
+                    match self.inner.wait(real) {
+                        Ok(g) => Ok(MutexGuard {
+                            inner: Some(g),
+                            lock,
+                            ctl: None,
+                        }),
+                        Err(p) => Err(PoisonError::new(MutexGuard {
+                            inner: Some(p.into_inner()),
+                            lock,
+                            ctl: None,
+                        })),
+                    }
+                }
+            }
+        }
+
+        pub fn notify_one(&self) {
+            if let Some((exec, tid)) = sched::ctx() {
+                exec.sched_op(
+                    tid,
+                    Op::CvNotify {
+                        cv: self.id(),
+                        all: false,
+                    },
+                );
+            }
+            self.inner.notify_one();
+        }
+
+        pub fn notify_all(&self) {
+            if let Some((exec, tid)) = sched::ctx() {
+                exec.sched_op(
+                    tid,
+                    Op::CvNotify {
+                        cv: self.id(),
+                        all: true,
+                    },
+                );
+            }
+            self.inner.notify_all();
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Self {
+            Condvar::new()
+        }
+    }
+
+    impl std::fmt::Debug for Condvar {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("Condvar").finish_non_exhaustive()
+        }
+    }
+}
+
+#[cfg(feature = "pa_modelcheck")]
+pub use modeled::{Condvar, Mutex, MutexGuard};
+
+/// Scheduler-routed atomics (feature on). Every operation is a scheduling
+/// point; the caller's `Ordering` still reaches the real `std` atomic, but
+/// under a model the serialized schedule makes everything effectively
+/// sequentially consistent.
+#[cfg(feature = "pa_modelcheck")]
+pub mod atomic {
+    use crate::check::sched::{self, Op};
+    pub use std::sync::atomic::Ordering;
+
+    fn hook(addr: usize, write: bool) {
+        if let Some((exec, tid)) = sched::ctx() {
+            exec.sched_op(tid, Op::Atomic { obj: addr, write });
+        }
+    }
+
+    macro_rules! modeled_int_atomic {
+        ($name:ident, $std:ty, $prim:ty) => {
+            pub struct $name {
+                inner: $std,
+            }
+
+            impl $name {
+                pub const fn new(v: $prim) -> Self {
+                    $name {
+                        inner: <$std>::new(v),
+                    }
+                }
+
+                fn id(&self) -> usize {
+                    self as *const $name as usize
+                }
+
+                pub fn load(&self, ord: Ordering) -> $prim {
+                    hook(self.id(), false);
+                    self.inner.load(ord)
+                }
+
+                pub fn store(&self, v: $prim, ord: Ordering) {
+                    hook(self.id(), true);
+                    self.inner.store(v, ord)
+                }
+
+                pub fn swap(&self, v: $prim, ord: Ordering) -> $prim {
+                    hook(self.id(), true);
+                    self.inner.swap(v, ord)
+                }
+
+                pub fn fetch_add(&self, v: $prim, ord: Ordering) -> $prim {
+                    hook(self.id(), true);
+                    self.inner.fetch_add(v, ord)
+                }
+
+                pub fn fetch_sub(&self, v: $prim, ord: Ordering) -> $prim {
+                    hook(self.id(), true);
+                    self.inner.fetch_sub(v, ord)
+                }
+
+                pub fn fetch_min(&self, v: $prim, ord: Ordering) -> $prim {
+                    hook(self.id(), true);
+                    self.inner.fetch_min(v, ord)
+                }
+
+                pub fn fetch_max(&self, v: $prim, ord: Ordering) -> $prim {
+                    hook(self.id(), true);
+                    self.inner.fetch_max(v, ord)
+                }
+
+                pub fn compare_exchange(
+                    &self,
+                    current: $prim,
+                    new: $prim,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$prim, $prim> {
+                    hook(self.id(), true);
+                    self.inner.compare_exchange(current, new, success, failure)
+                }
+
+                pub fn compare_exchange_weak(
+                    &self,
+                    current: $prim,
+                    new: $prim,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$prim, $prim> {
+                    // Spurious CAS failures would make model runs
+                    // schedule-nondeterministic, so weak compiles to strong
+                    // here.
+                    hook(self.id(), true);
+                    self.inner.compare_exchange(current, new, success, failure)
+                }
+
+                pub fn into_inner(self) -> $prim {
+                    self.inner.into_inner()
+                }
+
+                pub fn get_mut(&mut self) -> &mut $prim {
+                    self.inner.get_mut()
+                }
+            }
+
+            impl Default for $name {
+                fn default() -> Self {
+                    Self::new(Default::default())
+                }
+            }
+
+            impl std::fmt::Debug for $name {
+                fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                    write!(f, "{}({:?})", stringify!($name), self.inner)
+                }
+            }
+        };
+    }
+
+    modeled_int_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+    modeled_int_atomic!(AtomicU32, std::sync::atomic::AtomicU32, u32);
+    modeled_int_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+    modeled_int_atomic!(AtomicI64, std::sync::atomic::AtomicI64, i64);
+
+    pub struct AtomicBool {
+        inner: std::sync::atomic::AtomicBool,
+    }
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> Self {
+            AtomicBool {
+                inner: std::sync::atomic::AtomicBool::new(v),
+            }
+        }
+
+        fn id(&self) -> usize {
+            self as *const AtomicBool as usize
+        }
+
+        pub fn load(&self, ord: Ordering) -> bool {
+            hook(self.id(), false);
+            self.inner.load(ord)
+        }
+
+        pub fn store(&self, v: bool, ord: Ordering) {
+            hook(self.id(), true);
+            self.inner.store(v, ord)
+        }
+
+        pub fn swap(&self, v: bool, ord: Ordering) -> bool {
+            hook(self.id(), true);
+            self.inner.swap(v, ord)
+        }
+
+        pub fn fetch_and(&self, v: bool, ord: Ordering) -> bool {
+            hook(self.id(), true);
+            self.inner.fetch_and(v, ord)
+        }
+
+        pub fn fetch_or(&self, v: bool, ord: Ordering) -> bool {
+            hook(self.id(), true);
+            self.inner.fetch_or(v, ord)
+        }
+
+        pub fn compare_exchange(
+            &self,
+            current: bool,
+            new: bool,
+            success: Ordering,
+            failure: Ordering,
+        ) -> Result<bool, bool> {
+            hook(self.id(), true);
+            self.inner.compare_exchange(current, new, success, failure)
+        }
+    }
+
+    impl Default for AtomicBool {
+        fn default() -> Self {
+            AtomicBool::new(false)
+        }
+    }
+
+    impl std::fmt::Debug for AtomicBool {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "AtomicBool({:?})", self.inner)
+        }
+    }
+}
+
+/// Scheduler-routed mpsc channels (feature on). Channels created *inside* a
+/// model closure are registered with that execution; channels created
+/// outside behave exactly like `std` (including for non-model threads under
+/// the feature). Using an unregistered channel from a modeled thread
+/// panics with guidance — create every shared channel inside the closure.
+#[cfg(feature = "pa_modelcheck")]
+pub mod mpsc {
+    use crate::check::sched::{self, Grant, Op};
+    pub use std::sync::mpsc::{
+        RecvError, RecvTimeoutError, SendError, TryRecvError, TrySendError,
+    };
+    use std::time::Duration;
+
+    /// Channel id for endpoints created outside any model execution.
+    const UNREGISTERED: u64 = u64::MAX;
+
+    fn model_ctx_for(id: u64) -> Option<(std::sync::Arc<sched::Execution>, usize)> {
+        let (exec, tid) = sched::ctx()?;
+        if id == UNREGISTERED || !exec.chan_is_registered(id) {
+            panic!(
+                "model-checked thread is using a channel that was created \
+                 outside the model closure; create every shared channel \
+                 inside the closure passed to check::model (see \
+                 docs/CONCURRENCY.md)"
+            );
+        }
+        Some((exec, tid))
+    }
+
+    pub struct Sender<T> {
+        inner: std::sync::mpsc::Sender<T>,
+        id: u64,
+    }
+
+    pub struct SyncSender<T> {
+        inner: std::sync::mpsc::SyncSender<T>,
+        id: u64,
+    }
+
+    pub struct Receiver<T> {
+        inner: std::sync::mpsc::Receiver<T>,
+        id: u64,
+    }
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let id = match sched::ctx() {
+            Some((exec, _)) => {
+                let id = sched::fresh_chan_id(&exec);
+                exec.chan_register(id, None);
+                id
+            }
+            None => UNREGISTERED,
+        };
+        (Sender { inner: tx, id }, Receiver { inner: rx, id })
+    }
+
+    pub fn sync_channel<T>(bound: usize) -> (SyncSender<T>, Receiver<T>) {
+        let (tx, rx) = std::sync::mpsc::sync_channel(bound);
+        let id = match sched::ctx() {
+            Some((exec, _)) => {
+                assert!(
+                    bound > 0,
+                    "rendezvous channels (sync_channel(0)) are not supported \
+                     under the model checker; use a capacity >= 1"
+                );
+                let id = sched::fresh_chan_id(&exec);
+                exec.chan_register(id, Some(bound));
+                id
+            }
+            None => UNREGISTERED,
+        };
+        (SyncSender { inner: tx, id }, Receiver { inner: rx, id })
+    }
+
+    impl<T> Sender<T> {
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            if let Some((exec, tid)) = model_ctx_for(self.id) {
+                exec.sched_op(tid, Op::Send(self.id));
+            }
+            self.inner.send(t)
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            if let Some((exec, _)) = sched::ctx() {
+                if self.id != UNREGISTERED {
+                    exec.chan_add_sender(self.id);
+                }
+            }
+            Sender {
+                inner: self.inner.clone(),
+                id: self.id,
+            }
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            if self.id == UNREGISTERED {
+                return;
+            }
+            if let Some((exec, _)) = sched::ctx() {
+                exec.chan_drop_sender(self.id);
+            }
+        }
+    }
+
+    impl<T> std::fmt::Debug for Sender<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "Sender(ch{})", self.id)
+        }
+    }
+
+    impl<T> SyncSender<T> {
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            if let Some((exec, tid)) = model_ctx_for(self.id) {
+                exec.sched_op(tid, Op::Send(self.id));
+            }
+            // The scheduler only granted the send when the buffer had room
+            // (or the receiver is gone), so the real send cannot block a
+            // modeled thread.
+            self.inner.send(t)
+        }
+
+        pub fn try_send(&self, t: T) -> Result<(), TrySendError<T>> {
+            if let Some((exec, tid)) = model_ctx_for(self.id) {
+                if exec.sched_op(tid, Op::TrySend(self.id)) == Grant::WouldBlock {
+                    return Err(TrySendError::Full(t));
+                }
+            }
+            self.inner.try_send(t)
+        }
+    }
+
+    impl<T> Clone for SyncSender<T> {
+        fn clone(&self) -> Self {
+            if let Some((exec, _)) = sched::ctx() {
+                if self.id != UNREGISTERED {
+                    exec.chan_add_sender(self.id);
+                }
+            }
+            SyncSender {
+                inner: self.inner.clone(),
+                id: self.id,
+            }
+        }
+    }
+
+    impl<T> Drop for SyncSender<T> {
+        fn drop(&mut self) {
+            if self.id == UNREGISTERED {
+                return;
+            }
+            if let Some((exec, _)) = sched::ctx() {
+                exec.chan_drop_sender(self.id);
+            }
+        }
+    }
+
+    impl<T> std::fmt::Debug for SyncSender<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "SyncSender(ch{})", self.id)
+        }
+    }
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, RecvError> {
+            if let Some((exec, tid)) = model_ctx_for(self.id) {
+                exec.sched_op(tid, Op::Recv(self.id));
+                // DataReady: an item is buffered, the real recv returns
+                // immediately. Disconnected: all senders gone, it errors
+                // immediately. Either way no real blocking.
+            }
+            self.inner.recv()
+        }
+
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            if let Some((exec, tid)) = model_ctx_for(self.id) {
+                match exec.sched_op(tid, Op::TryRecv(self.id)) {
+                    Grant::WouldBlock => return Err(TryRecvError::Empty),
+                    _ => {}
+                }
+            }
+            self.inner.try_recv()
+        }
+
+        pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvTimeoutError> {
+            match model_ctx_for(self.id) {
+                Some((exec, tid)) => match exec.sched_op(tid, Op::RecvTimeout(self.id)) {
+                    // Modeled timeout: fires only when the whole system is
+                    // quiescent (no enabled thread could still send), so the
+                    // model never races a wall clock.
+                    Grant::Timeout => Err(RecvTimeoutError::Timeout),
+                    Grant::Disconnected => Err(RecvTimeoutError::Disconnected),
+                    _ => match self.inner.recv() {
+                        Ok(v) => Ok(v),
+                        Err(RecvError) => Err(RecvTimeoutError::Disconnected),
+                    },
+                },
+                None => self.inner.recv_timeout(timeout),
+            }
+        }
+
+        pub fn iter(&self) -> std::sync::mpsc::Iter<'_, T> {
+            self.inner.iter()
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            if self.id == UNREGISTERED {
+                return;
+            }
+            if let Some((exec, _)) = sched::ctx() {
+                exec.chan_drop_receiver(self.id);
+            }
+        }
+    }
+
+    impl<T> std::fmt::Debug for Receiver<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "Receiver(ch{})", self.id)
+        }
+    }
+}
+
+#[cfg(feature = "pa_modelcheck")]
+pub use mpsc::{channel, sync_channel};
+
+// ---------------------------------------------------------------------------
+// Sanctioned helpers (both modes).
+// ---------------------------------------------------------------------------
+
+static POISONED: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Total poisoned-lock recoveries since process start. The coordinator
+/// exports the per-iteration delta as the `pa_rl_lock_poisoned` counter.
+pub fn poisoned_lock_count() -> u64 {
+    POISONED.load(std::sync::atomic::Ordering::SeqCst)
+}
+
+/// Acquire `m`, recovering the guard if a previous holder panicked instead
+/// of propagating the poison panic — a dying publisher must not
+/// cascade-kill every other thread sharing the lock. Each recovery bumps
+/// the process-wide counter behind [`poisoned_lock_count`].
+///
+/// This is the **only** sanctioned way to ignore lock poisoning in this
+/// repo; `tools/pa-lint` flags bare `.lock().unwrap()` / `.lock().expect()`.
+pub fn lock_or_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(p) => {
+            POISONED.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            p.into_inner()
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! `std::thread` drop-ins: transparent re-exports normally, scheduler-aware
+//! wrappers under the `pa_modelcheck` feature.
+//!
+//! Under a model run, [`spawn`] registers the child with the execution so
+//! the scheduler controls it from its first operation, and
+//! [`JoinHandle::join`] is a scheduling point (enabled once the target
+//! exits). Scoped threads (`scope`) and `sleep` are re-exported from `std`
+//! unmodeled — model tests must use `spawn`/`join`; production code using
+//! `scope` (metrics tests) runs them as plain std threads even under the
+//! feature.
+
+// ---------------------------------------------------------------------------
+// Feature OFF: transparent re-exports.
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pa_modelcheck"))]
+pub use std::thread::{
+    available_parallelism, scope, sleep, spawn, yield_now, Builder, JoinHandle, Scope,
+    ScopedJoinHandle,
+};
+
+// ---------------------------------------------------------------------------
+// Feature ON: scheduler-aware wrappers.
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pa_modelcheck")]
+pub use std::thread::{available_parallelism, scope, sleep, Scope, ScopedJoinHandle};
+
+#[cfg(feature = "pa_modelcheck")]
+mod modeled {
+    use crate::check::sched::{self, Op};
+    use std::sync::Arc;
+
+    /// Join handle over either a modeled child (scheduler-registered) or a
+    /// plain std thread (spawned outside any model run).
+    pub struct JoinHandle<T> {
+        inner: std::thread::JoinHandle<Option<T>>,
+        /// `Some((execution, child tid))` when the child is modeled.
+        model: Option<(Arc<sched::Execution>, usize)>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            if let Some((_, target)) = &self.model {
+                if let Some((exec, tid)) = sched::ctx() {
+                    // Scheduling point: enabled only once the target exited,
+                    // so a modeled join never blocks the real thread.
+                    exec.sched_op(tid, Op::Join(*target));
+                }
+            }
+            match self.inner.join() {
+                Ok(Some(v)) => Ok(v),
+                // A modeled child that panicked already reported the failure
+                // to the scheduler; surface a generic payload to the joiner.
+                Ok(None) => Err(Box::new("modeled thread panicked".to_string())),
+                Err(e) => Err(e),
+            }
+        }
+
+        pub fn is_finished(&self) -> bool {
+            self.inner.is_finished()
+        }
+
+        pub fn thread(&self) -> &std::thread::Thread {
+            self.inner.thread()
+        }
+    }
+
+    impl<T> std::fmt::Debug for JoinHandle<T> {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("JoinHandle").finish_non_exhaustive()
+        }
+    }
+
+    fn spawn_inner<F, T>(builder: std::thread::Builder, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        match sched::ctx() {
+            Some((exec, tid)) => {
+                // Spawn order is itself a scheduled op (it assigns the child
+                // tid, so two racing spawns must not silently commute).
+                exec.sched_op(tid, Op::Spawn);
+                let child = exec.register_thread();
+                let exec2 = exec.clone();
+                let inner =
+                    builder.spawn(move || sched::run_controlled(exec2, child, f))?;
+                Ok(JoinHandle {
+                    inner,
+                    model: Some((exec, child)),
+                })
+            }
+            None => {
+                let inner = builder.spawn(move || Some(f()))?;
+                Ok(JoinHandle { inner, model: None })
+            }
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        spawn_inner(std::thread::Builder::new(), f).expect("failed to spawn thread")
+    }
+
+    /// Mirror of `std::thread::Builder` (name + stack size only).
+    pub struct Builder {
+        inner: std::thread::Builder,
+    }
+
+    impl Default for Builder {
+        fn default() -> Self {
+            Builder::new()
+        }
+    }
+
+    impl Builder {
+        pub fn new() -> Self {
+            Builder {
+                inner: std::thread::Builder::new(),
+            }
+        }
+
+        pub fn name(self, name: String) -> Self {
+            Builder {
+                inner: self.inner.name(name),
+            }
+        }
+
+        pub fn stack_size(self, size: usize) -> Self {
+            Builder {
+                inner: self.inner.stack_size(size),
+            }
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            spawn_inner(self.inner, f)
+        }
+    }
+
+    /// A pure scheduling point under a model run; plain `yield_now` outside.
+    pub fn yield_now() {
+        match sched::ctx() {
+            Some((exec, tid)) => {
+                exec.sched_op(tid, Op::Yield);
+            }
+            None => std::thread::yield_now(),
+        }
+    }
+}
+
+#[cfg(feature = "pa_modelcheck")]
+pub use modeled::{spawn, yield_now, Builder, JoinHandle};

@@ -15,13 +15,21 @@ use std::path::Path;
 /// Transformer architecture (Qwen-mini family: RMSNorm, RoPE, GQA, SwiGLU).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelConfig {
+    /// Vocabulary size. Required.
     pub vocab_size: usize,
+    /// Residual-stream width. Required.
     pub d_model: usize,
+    /// Transformer layers. Required.
     pub n_layers: usize,
+    /// Attention query heads. Required.
     pub n_heads: usize,
+    /// KV heads for GQA. Default: `n_heads` (plain multi-head attention).
     pub n_kv_heads: usize,
+    /// SwiGLU hidden width. Required.
     pub d_ff: usize,
+    /// RoPE base frequency. Default: 10000.0.
     pub rope_theta: f64,
+    /// RMSNorm epsilon. Default: 1e-5.
     pub rmsnorm_eps: f64,
 }
 
@@ -62,40 +70,48 @@ impl ModelConfig {
 /// Inference-engine geometry (vLLM-like slot-based continuous batching).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineConfig {
-    /// Concurrent sequence slots per engine instance.
+    /// Concurrent sequence slots per engine instance. Default: 8.
     pub n_slots: usize,
-    /// Maximum prompt length (prefill shape).
+    /// Maximum prompt length (prefill shape). Required.
     pub prompt_max: usize,
-    /// Tokens decoded per compiled decode-chunk call.
+    /// Tokens decoded per compiled decode-chunk call. Default: 16.
     pub decode_chunk: usize,
-    /// Maximum generated tokens per sequence.
+    /// Maximum generated tokens per sequence. Required.
     pub max_new: usize,
+    /// Sampling temperature (<= 1e-6 means greedy). Default: 1.0.
     pub temperature: f64,
+    /// Top-p nucleus truncation. Default: 1.0 (off).
     pub top_p: f64,
-    /// 0 disables top-k.
+    /// Top-k truncation; 0 disables top-k. Default: 0.
     pub top_k: usize,
     /// Shared-prefix KV cache on the admission path (`engine::kvcache`).
-    /// Off = bit-identical to the pre-cache engine (every request prefills).
+    /// Off = bit-identical to the pre-cache engine (every request
+    /// prefills). Default: on.
     pub prefix_cache: bool,
     /// Partial-prefix reuse: resume admission from the longest cached prefix
     /// via the chunked `prefill_chunk` artifact. Only effective with
     /// `prefix_cache` on and artifacts that ship the chunk program; off =
-    /// full-prompt hits only (PR-1 behavior).
+    /// full-prompt hits only (PR-1 behavior). Default: on.
     pub chunked_prefill: bool,
     /// Prefix-cache block size in tokens; must divide `prompt_max`. Also the
     /// fixed token width of one `prefill_chunk` call and the segment
-    /// granularity of the cross-engine shared store.
+    /// granularity of the cross-engine shared store. Default:
+    /// `gcd(prompt_max, 16)`.
     pub cache_block: usize,
     /// Prefix-cache pool capacity in blocks; must be >= `n_slots`.
+    /// Default: four prompt-sets' worth
+    /// (`n_slots * ceil(prompt_max / cache_block) * 4`).
     pub cache_blocks: usize,
     /// Which refcount-zero leaf the prefix cache evicts first.
+    /// Default: `lru`.
     pub cache_evict: EvictPolicy,
     /// Cross-engine shared segment store (`store::SharedKvStore`): dedupe
     /// prompt prefixes across engine instances. Effective with
     /// `prefix_cache` on and >= 2 engines; off = PR-2 behavior (per-engine
-    /// caches only).
+    /// caches only). Default: on.
     pub shared_store: bool,
     /// Shared-store capacity in block entries of `cache_block` tokens.
+    /// Default: `cache_blocks * 2`.
     pub store_blocks: usize,
     /// Independent hash-range shards of the shared store, each behind its
     /// own lock with its own capacity slice and eviction heap. 1 (the
@@ -107,9 +123,9 @@ pub struct EngineConfig {
     /// only a publish that had to evict resident segments consumes a credit
     /// (dedup and free-space growth are free), bounding how hard one engine
     /// can churn a full store. 0 disables publishing — engines become
-    /// read-only store consumers.
+    /// read-only store consumers. Default: 256.
     pub store_publish: usize,
-    /// Which unleased store segment eviction removes first.
+    /// Which unleased store segment eviction removes first. Default: `lru`.
     pub store_evict: EvictPolicy,
 }
 
@@ -136,30 +152,40 @@ fn gcd(a: usize, b: usize) -> usize {
 /// Shared-prompt attention settings.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SpaConfig {
-    /// Responses per packed group (K in the paper; equals RL group size here).
+    /// Responses per packed group (K in the paper; equals RL group size
+    /// here). Default: `rl.group_size`.
     pub k: usize,
-    /// Packed sequence length: prompt_max + k * max_new.
+    /// Packed sequence length. Default: `prompt_max + k * max_new`.
     pub pack_len: usize,
 }
 
 /// Trainer hyper-parameters (paper Table 7/8 analog).
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
-    /// Micro-batch rows for the standard (non-SPA) train step.
+    /// Micro-batch rows for the standard (non-SPA) train step. Default: 4.
     pub micro_bs: usize,
     /// Padded sample length for the standard train step.
+    /// Default: `prompt_max + max_new`.
     pub seq_len: usize,
+    /// Shared-prompt attention settings. Defaults: see [`SpaConfig`].
     pub spa: SpaConfig,
+    /// Learning rate. Default: 1e-4.
     pub lr: f64,
+    /// Adam first-moment decay. Default: 0.9.
     pub beta1: f64,
+    /// Adam second-moment decay. Default: 0.95.
     pub beta2: f64,
+    /// Adam denominator epsilon. Default: 1e-8.
     pub adam_eps: f64,
+    /// Decoupled weight decay. Default: 0.01.
     pub weight_decay: f64,
+    /// Global gradient-norm clip. Default: 1.0.
     pub grad_clip: f64,
-    /// KL penalty coefficient beta (paper: 0.02).
+    /// KL penalty coefficient beta. Default: 0.02 (the paper's value).
     pub kl_beta: f64,
-    /// PPO clip range (paper: eps_low = eps_high = 0.2).
+    /// PPO lower clip range. Default: 0.2 (paper: eps_low = eps_high).
     pub clip_eps_low: f64,
+    /// PPO upper clip range. Default: 0.2 (paper: eps_low = eps_high).
     pub clip_eps_high: f64,
 }
 
@@ -170,39 +196,41 @@ pub struct TrainConfig {
 /// rollouts finish, never-admitted jobs re-route over the survivors).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FleetEvent {
-    /// Iteration whose boundary this event fires at (0 = before the first).
+    /// Iteration whose boundary this event fires at (0 = before the
+    /// first). Required.
     pub iter: u64,
-    /// Engines to spawn at this boundary.
+    /// Engines to spawn at this boundary. Default: 0.
     pub join: usize,
-    /// Engines to drain at this boundary (applied after `join`).
+    /// Engines to drain at this boundary (applied after `join`). Default: 0.
     pub leave: usize,
 }
 
 /// RL loop shape (Algorithm 1).
 #[derive(Debug, Clone, PartialEq)]
 pub struct RlConfig {
-    /// Prompts per iteration (N; paper "batch size").
+    /// Prompts per iteration (N; paper "batch size"). Required.
     pub batch_prompts: usize,
-    /// Rollouts per prompt (G; paper "answers per prompt" = 32).
+    /// Rollouts per prompt (G; paper "answers per prompt" = 32). Required.
     pub group_size: usize,
-    /// Training iterations (T).
+    /// Training iterations (T). Default: 10.
     pub iters: usize,
     /// Inference engine instances at construction (the paper's
     /// training:rollout ratio). The starting point of `fleet_schedule`.
+    /// Default: 1.
     pub n_engines: usize,
-    /// Bounded rollout-queue capacity (groups).
+    /// Bounded rollout-queue capacity (groups). Default: 64.
     pub queue_cap: usize,
     /// Prompt-affinity group routing (`coordinator::route`): prefer the
     /// engine whose cache holds the template warm, spill to least-loaded.
-    /// Off = the original round-robin group pin.
+    /// Off = the original round-robin group pin. Default: on.
     pub affinity_routing: bool,
     /// Backlog slack for affinity routing, in groups: the preferred engine
     /// may run this many groups ahead of the least-loaded engine before a
-    /// group spills.
+    /// group spills. Default: 2.
     pub affinity_slack_groups: usize,
-    /// Scheduled elastic fleet resizes (sorted by iteration; empty = the
-    /// static fleet). `train_grpo --join iter:N` / `--leave iter:N` merge
-    /// into this list.
+    /// Scheduled elastic fleet resizes (sorted by iteration). `train_grpo
+    /// --join iter:N` / `--leave iter:N` merge into this list. Default:
+    /// empty (the static fleet).
     pub fleet_schedule: Vec<FleetEvent>,
     /// Routing warmth-belief TTL in decay epochs (an iteration in the
     /// driver, a dispatched group in `serve_infer`); a belief unconfirmed
@@ -241,15 +269,16 @@ impl RlConfig {
 /// Synthetic-task data settings.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DataConfig {
-    /// Few-shot examples prepended to each prompt (lengthens prompts to reach
-    /// the paper's long-prompt/short-response SPA regime).
+    /// Few-shot examples prepended to each prompt (lengthens prompts to
+    /// reach the paper's long-prompt/short-response SPA regime). Default: 0.
     pub few_shot: usize,
     /// Draw one fixed few-shot template shared by *every* prompt instead of
     /// per-prompt examples — the template-sharing serving workload where
-    /// chunked prefill and cross-engine KV sharing bite.
+    /// chunked prefill and cross-engine KV sharing bite. Default: off.
     pub shared_few_shot: bool,
-    /// Operands drawn uniformly from [0, max_operand].
+    /// Operands drawn uniformly from [0, max_operand]. Default: 99.
     pub max_operand: u64,
+    /// Data-generation RNG seed. Default: 0.
     pub seed: u64,
 }
 
@@ -268,12 +297,19 @@ pub struct MetricsConfig {
 /// Full run configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
+    /// Run name (names the artifacts directory). Default: `"unnamed"`.
     pub name: String,
+    /// Model architecture section. Required.
     pub model: ModelConfig,
+    /// Engine geometry section. Required.
     pub engine: EngineConfig,
+    /// Trainer hyper-parameter section. Required.
     pub train: TrainConfig,
+    /// RL loop section. Required.
     pub rl: RlConfig,
+    /// Data section. Default: all defaults (see [`DataConfig`]).
     pub data: DataConfig,
+    /// Telemetry section. Default: `basic` (see [`MetricsConfig`]).
     pub metrics: MetricsConfig,
 }
 

@@ -78,7 +78,9 @@ impl Assembler {
         if p.received < p.expected {
             return Ok(None);
         }
+        // pa-lint: allow(unwrap): get_mut on the same key succeeded above
         let p = self.partial.remove(&r.prompt_id).unwrap();
+        // pa-lint: allow(unwrap): received == expected, so every slot is Some
         let rollouts: Vec<Rollout> = p.rollouts.into_iter().map(|r| r.unwrap()).collect();
         let rewards: Vec<f32> = rollouts.iter().map(|r| r.reward).collect();
         let weight_version = rollouts[0].weight_version;

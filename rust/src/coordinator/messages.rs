@@ -1,11 +1,10 @@
 //! Messages flowing between the coordinator's threads.
 
+use crate::check::sync::{mpsc, Arc};
 use crate::engine::{CacheStats, EngineStats, GenRequest};
 use crate::metrics::RequestTimeline;
 use crate::runtime::HostParams;
 use crate::store::SharedKvStore;
-use std::sync::mpsc;
-use std::sync::Arc;
 
 /// Commands to an engine worker thread.
 pub enum EngineMsg {

@@ -22,20 +22,21 @@ use crate::engine::{Engine, GenResult};
 use crate::grpo::reward;
 use crate::metrics::Trace;
 use crate::runtime::Runtime;
+use crate::check::sync::mpsc::{self, Receiver, Sender, SyncSender, TryRecvError};
+use crate::check::thread::{Builder, JoinHandle};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{self, Receiver, SyncSender, TryRecvError};
-use std::thread::JoinHandle;
 
 /// Handle to a spawned worker.
 pub struct WorkerHandle {
     pub thread: JoinHandle<Result<()>>,
-    pub inbox: std::sync::mpsc::Sender<EngineMsg>,
+    pub inbox: Sender<EngineMsg>,
 }
 
 /// Spawn an engine worker. `artifacts_dir` is loaded inside the thread (the
-/// PJRT client is thread-bound).
+/// PJRT client is thread-bound). Errors when the OS refuses to give us a
+/// thread — the caller decides whether a smaller fleet is acceptable.
 pub fn spawn_worker(
     idx: usize,
     cfg: Config,
@@ -43,13 +44,13 @@ pub fn spawn_worker(
     seed: u64,
     queue: SyncSender<ScoredRollout>,
     trace: Trace,
-) -> WorkerHandle {
-    let (tx, rx) = std::sync::mpsc::channel::<EngineMsg>();
-    let thread = std::thread::Builder::new()
+) -> Result<WorkerHandle> {
+    let (tx, rx) = mpsc::channel::<EngineMsg>();
+    let thread = Builder::new()
         .name(format!("engine-{idx}"))
         .spawn(move || worker_main(idx, cfg, artifacts_dir, seed, rx, queue, trace))
-        .expect("spawning engine worker");
-    WorkerHandle { thread, inbox: tx }
+        .with_context(|| format!("spawning engine worker {idx}"))?;
+    Ok(WorkerHandle { thread, inbox: tx })
 }
 
 /// What the message handler told the main loop to do next.

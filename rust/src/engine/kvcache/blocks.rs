@@ -95,10 +95,12 @@ impl BlockPool {
     }
 
     fn get(&self, id: BlockId) -> &Block {
+        // pa-lint: allow(expect): BlockIds are arena indices minted by alloc
         self.blocks[id].as_ref().expect("dangling BlockId")
     }
 
     fn get_mut(&mut self, id: BlockId) -> &mut Block {
+        // pa-lint: allow(expect): BlockIds are arena indices minted by alloc
         self.blocks[id].as_mut().expect("dangling BlockId")
     }
 

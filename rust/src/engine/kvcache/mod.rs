@@ -231,6 +231,7 @@ impl PrefixCache {
         match full {
             Some(t) => {
                 let rows = self.tree.path_rows(t, &self.pool);
+                // pa-lint: allow(unwrap): `full` filtered on logits(t).is_some()
                 let logits = self.tree.logits(t).unwrap().to_vec();
                 self.tree.acquire(t);
                 self.stats.hits += 1;

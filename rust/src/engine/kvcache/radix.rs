@@ -143,10 +143,12 @@ impl RadixTree {
     }
 
     fn node(&self, id: usize) -> &Node {
+        // pa-lint: allow(expect): ids are arena indices handed out by add_node
         self.nodes[id].as_ref().expect("dangling node id")
     }
 
     fn node_mut(&mut self, id: usize) -> &mut Node {
+        // pa-lint: allow(expect): ids are arena indices handed out by add_node
         self.nodes[id].as_mut().expect("dangling node id")
     }
 
@@ -469,6 +471,7 @@ impl RadixTree {
         let mut segs = Vec::new();
         let mut off = 0usize; // rows stored so far
         while off < tokens.len() {
+            // pa-lint: allow(expect): insert reserved the block budget up front
             let b = pool.alloc().expect("block budget reserved by caller");
             let n = pool.push_rows(b, &rows[off * pool.row_elems()..]);
             debug_assert!(n > 0);
@@ -510,6 +513,7 @@ impl RadixTree {
                 let block = if pool.refs(last.block) > 1 || !at_packed_tail {
                     let forked = pool
                         .cow(last.block, last.start, last.len)
+                        // pa-lint: allow(expect): insert reserved the budget up front
                         .expect("block budget reserved by caller");
                     if forked != last.block {
                         stats.cow_forks += 1;
@@ -519,12 +523,14 @@ impl RadixTree {
                     last.block
                 };
                 let n = pool.push_rows(block, rows);
+                // pa-lint: allow(unwrap): segs.last() was Some at the branch entry
                 let seg = self.node_mut(id).segs.last_mut().unwrap();
                 *seg = Seg { block, start: if block == last.block { last.start } else { 0 }, len: last.len + n };
                 off += n;
             }
         }
         while off < tokens.len() {
+            // pa-lint: allow(expect): insert reserved the block budget up front
             let b = pool.alloc().expect("block budget reserved by caller");
             let n = pool.push_rows(b, &rows[off * row_elems..]);
             debug_assert!(n > 0);
@@ -607,6 +613,7 @@ impl RadixTree {
                 break id;
             }
         };
+        // pa-lint: allow(expect): the loop above broke only on a live node
         let node = self.nodes[id].take().expect("validated above");
         self.free_ids.push(id);
         let parent_id = node.parent;

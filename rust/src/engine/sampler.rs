@@ -39,7 +39,10 @@ pub fn sample(logits: &[f32], cfg: &SamplerCfg, rng: &mut Pcg64) -> (u32, f32) {
     // top-k: mask everything below the k-th largest.
     if cfg.top_k > 0 && cfg.top_k < scaled.len() {
         let mut sorted = scaled.clone();
-        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // total_cmp: NaN logits (a poisoned upstream matmul) must not panic
+        // the engine thread mid-batch; NaN orders above +inf and the token
+        // sampled from a NaN row is garbage either way.
+        sorted.sort_by(|a, b| b.total_cmp(a));
         let kth = sorted[cfg.top_k - 1];
         for s in scaled.iter_mut() {
             if *s < kth {
@@ -51,7 +54,7 @@ pub fn sample(logits: &[f32], cfg: &SamplerCfg, rng: &mut Pcg64) -> (u32, f32) {
     // top-p: sort descending, keep tokens whose cumulative mass *before* them
     // is < top_p (always keeps the top token).
     let mut idx: Vec<usize> = (0..scaled.len()).collect();
-    idx.sort_by(|&a, &b| scaled[b].partial_cmp(&scaled[a]).unwrap());
+    idx.sort_by(|&a, &b| scaled[b].total_cmp(&scaled[a]));
     let max = scaled[idx[0]];
     let exps: Vec<f32> = idx.iter().map(|&i| (scaled[i] - max).exp()).collect();
     let z: f32 = exps.iter().sum();

@@ -17,8 +17,8 @@
 //! * [`AtomicHistogram`] — lock-free concurrent form behind the registry's
 //!   cloneable handles; `observe` is a couple of relaxed atomic RMWs.
 
+use crate::check::sync::atomic::{AtomicU64, Ordering};
 use crate::util::json::Json;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Sub-octave resolution: 2^SUB_BITS buckets per power of two.
 const SUB_BITS: u32 = 5;
@@ -420,8 +420,8 @@ mod tests {
             .map(|t| (0..256).map(|k| ((t * 256 + k) % 97 + 1) as f64).collect())
             .collect();
         let run = |chunk: usize| {
-            let h = std::sync::Arc::new(AtomicHistogram::new());
-            std::thread::scope(|s| {
+            let h = crate::check::sync::Arc::new(AtomicHistogram::new());
+            crate::check::thread::scope(|s| {
                 for vs in &values {
                     let h = h.clone();
                     s.spawn(move || {
@@ -429,7 +429,7 @@ mod tests {
                             for &v in batch {
                                 h.observe(v);
                             }
-                            std::thread::yield_now();
+                            crate::check::thread::yield_now();
                         }
                     });
                 }

@@ -17,9 +17,9 @@
 //! (Prometheus text exposition, histograms as summaries).
 
 use super::histogram::{AtomicHistogram, Histogram};
+use crate::check::sync::atomic::{AtomicU64, Ordering};
+use crate::check::sync::{lock_or_poison, Arc, Mutex};
 use crate::util::json::Json;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 
 /// Monotonic counter handle (clone = same underlying cell).
 #[derive(Debug, Clone)]
@@ -93,7 +93,7 @@ impl Registry {
 
     /// Get-or-create the counter named `name`.
     pub fn counter(&self, name: &str) -> Counter {
-        let mut tab = self.inner.counters.lock().unwrap();
+        let mut tab = lock_or_poison(&self.inner.counters);
         if let Some((_, c)) = tab.iter().find(|(n, _)| n == name) {
             return Counter(c.clone());
         }
@@ -104,7 +104,7 @@ impl Registry {
 
     /// Get-or-create the gauge named `name` (initial value 0.0).
     pub fn gauge(&self, name: &str) -> Gauge {
-        let mut tab = self.inner.gauges.lock().unwrap();
+        let mut tab = lock_or_poison(&self.inner.gauges);
         if let Some((_, g)) = tab.iter().find(|(n, _)| n == name) {
             return Gauge(g.clone());
         }
@@ -115,7 +115,7 @@ impl Registry {
 
     /// Get-or-create the histogram named `name`.
     pub fn histogram(&self, name: &str) -> HistogramHandle {
-        let mut tab = self.inner.hists.lock().unwrap();
+        let mut tab = lock_or_poison(&self.inner.hists);
         if let Some((_, h)) = tab.iter().find(|(n, _)| n == name) {
             return HistogramHandle(h.clone());
         }
@@ -126,29 +126,17 @@ impl Registry {
 
     /// Freeze every registered series, sorted by name.
     pub fn snapshot(&self) -> RegistrySnapshot {
-        let mut counters: Vec<(String, u64)> = self
-            .inner
-            .counters
-            .lock()
-            .unwrap()
+        let mut counters: Vec<(String, u64)> = lock_or_poison(&self.inner.counters)
             .iter()
             .map(|(n, c)| (n.clone(), c.load(Ordering::Relaxed)))
             .collect();
         counters.sort_by(|a, b| a.0.cmp(&b.0));
-        let mut gauges: Vec<(String, f64)> = self
-            .inner
-            .gauges
-            .lock()
-            .unwrap()
+        let mut gauges: Vec<(String, f64)> = lock_or_poison(&self.inner.gauges)
             .iter()
             .map(|(n, g)| (n.clone(), f64::from_bits(g.load(Ordering::Relaxed))))
             .collect();
         gauges.sort_by(|a, b| a.0.cmp(&b.0));
-        let mut hists: Vec<(String, Histogram)> = self
-            .inner
-            .hists
-            .lock()
-            .unwrap()
+        let mut hists: Vec<(String, Histogram)> = lock_or_poison(&self.inner.hists)
             .iter()
             .map(|(n, h)| (n.clone(), h.snapshot()))
             .collect();
@@ -285,7 +273,7 @@ mod tests {
     #[test]
     fn concurrent_counter_updates_sum_exactly() {
         let reg = Registry::new();
-        std::thread::scope(|s| {
+        crate::check::thread::scope(|s| {
             for _ in 0..4 {
                 let c = reg.counter("hot");
                 s.spawn(move || {

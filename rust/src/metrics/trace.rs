@@ -9,9 +9,9 @@
 //! train   |░░░░████████████████████|
 //! ```
 
+use crate::check::sync::{lock_or_poison, Arc, Mutex};
 use crate::metrics::timeline::Clock;
 use crate::util::json::Json;
-use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// One recorded span.
@@ -51,7 +51,7 @@ impl Trace {
 
     /// Attach (or refresh) a named scalar on a lane.
     pub fn annotate(&self, lane: &str, key: &str, value: f64) {
-        let mut notes = self.notes.lock().unwrap();
+        let mut notes = lock_or_poison(&self.notes);
         match notes.iter_mut().find(|(l, k, _)| l == lane && k == key) {
             Some(entry) => entry.2 = value,
             None => notes.push((lane.to_string(), key.to_string(), value)),
@@ -60,7 +60,7 @@ impl Trace {
 
     /// All lane annotations (lane, key, value).
     pub fn annotations(&self) -> Vec<(String, String, f64)> {
-        self.notes.lock().unwrap().clone()
+        lock_or_poison(&self.notes).clone()
     }
 
     pub fn now(&self) -> f64 {
@@ -77,7 +77,7 @@ impl Trace {
     /// now.
     pub fn record(&self, lane: &str, name: &str, start_s: f64) {
         let end_s = self.now();
-        self.spans.lock().unwrap().push(Span {
+        lock_or_poison(&self.spans).push(Span {
             lane: lane.to_string(),
             name: name.to_string(),
             start_s,
@@ -87,7 +87,7 @@ impl Trace {
 
     /// Record with explicit bounds (simulator).
     pub fn record_abs(&self, lane: &str, name: &str, start_s: f64, end_s: f64) {
-        self.spans.lock().unwrap().push(Span {
+        lock_or_poison(&self.spans).push(Span {
             lane: lane.to_string(),
             name: name.to_string(),
             start_s,
@@ -96,12 +96,12 @@ impl Trace {
     }
 
     pub fn spans(&self) -> Vec<Span> {
-        self.spans.lock().unwrap().clone()
+        lock_or_poison(&self.spans).clone()
     }
 
     /// Total busy time per lane.
     pub fn lane_busy(&self) -> Vec<(String, f64)> {
-        let spans = self.spans.lock().unwrap();
+        let spans = lock_or_poison(&self.spans);
         let mut lanes: Vec<(String, f64)> = Vec::new();
         for s in spans.iter() {
             match lanes.iter_mut().find(|(l, _)| *l == s.lane) {
@@ -231,7 +231,7 @@ mod tests {
         let mut handles = Vec::new();
         for i in 0..4 {
             let tr2 = tr.clone();
-            handles.push(std::thread::spawn(move || {
+            handles.push(crate::check::thread::spawn(move || {
                 for k in 0..25 {
                     tr2.record_abs(&format!("lane-{i}"), "x", k as f64, k as f64 + 0.5);
                 }

@@ -87,9 +87,9 @@ pub mod stats;
 pub use segments::Publish;
 pub use stats::StoreStats;
 
+use crate::check::sync::{lock_or_poison, Mutex, MutexGuard};
 use crate::engine::kvcache::EvictPolicy;
 use shard::Shard;
-use std::sync::Mutex;
 
 /// Store sizing/eviction knobs (validated by `config::Config`).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -166,8 +166,22 @@ impl SharedKvStore {
         self.shards.len()
     }
 
-    fn lock(&self, idx: usize) -> std::sync::MutexGuard<'_, Shard> {
-        self.shards[idx].lock().expect("store shard mutex poisoned")
+    fn lock(&self, idx: usize) -> MutexGuard<'_, Shard> {
+        // Poisoning recovery: a publisher that panicked mid-publish leaves
+        // the shard consistent (all mutations happen after validation), so
+        // other threads keep going instead of cascade-panicking.
+        lock_or_poison(&self.shards[idx])
+    }
+
+    /// Deliberately acquire shards `a` then `b` in *that* textual order —
+    /// exists only so the model-check suite can demonstrate that the
+    /// checker catches an inverted-lock-order deadlock. Never called by
+    /// production code.
+    #[cfg(any(test, feature = "pa_modelcheck"))]
+    pub fn lock_pair_in_order(&self, a: usize, b: usize) -> usize {
+        let ga = self.lock(a);
+        let gb = self.lock(b);
+        ga.live_blocks() + gb.live_blocks()
     }
 
     /// Shard owning `tokens`' chain: range partition on the first block's

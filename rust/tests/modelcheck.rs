@@ -1,0 +1,341 @@
+//! Schedule-exploring model-check suite for the producer-consumer pipeline.
+//!
+//! Compiled only under `--features pa_modelcheck`: the `check::sync` /
+//! `check::thread` shims then route every lock, channel and atomic through
+//! the deterministic cooperative scheduler ([`pa_rl::check::Checker`]),
+//! which explores thousands of distinct thread interleavings per test and
+//! reports any deadlock, lock-order inversion or assertion failure together
+//! with a replayable schedule string (see `docs/CONCURRENCY.md`).
+//!
+//! The scenarios pin the cross-thread invariants the stress tests can only
+//! sample probabilistically:
+//!
+//! * store: 2 publishers + 1 evictor on a 2-shard store — lease pinning and
+//!   the capacity budget hold under *every* explored interleaving, and the
+//!   post-run churn deterministically exercises eviction;
+//! * drain handshake: the bounded-queue flush + ack protocol between a
+//!   worker and the driver pump never deadlocks even when the queue is
+//!   shallower than the backlog;
+//! * metrics: registry snapshots interleaved with writers are coherent
+//!   (monotone counters, bounded mid-flight reads, exact final totals);
+//! * drain re-route: jobs regrouped after an engine drain are re-dispatched
+//!   group-affine with no loss, no duplication, and only to live engines;
+//! * seeded deadlock: an intentionally inverted shard-lock order is caught —
+//!   as a lock-order inversion by the static cycle check, and as an actual
+//!   deadlock (with a schedule that replays) when that check is disabled.
+
+#![cfg(feature = "pa_modelcheck")]
+
+use pa_rl::check::sync::mpsc;
+use pa_rl::check::thread;
+use pa_rl::check::{replay, Checker, FailureKind};
+use pa_rl::coordinator::driver::group_jobs_by_prompt;
+use pa_rl::coordinator::route::{affinity_key, route_group_residency, RouteKind, WarmthMap};
+use pa_rl::coordinator::GenJob;
+use pa_rl::engine::kvcache::EvictPolicy;
+use pa_rl::engine::GenRequest;
+use pa_rl::metrics::Registry;
+use pa_rl::store::{SharedKvStore, StoreCfg};
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Schedules each scenario must explore (the acceptance floor); the cap is
+/// set above it so exploration is cut off only after clearing the bar.
+const MIN_SCHEDULES: usize = 1000;
+const MAX_SCHEDULES: usize = 2048;
+
+const RE: usize = 4; // row elements per token
+
+fn rows_for(seq: &[u32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(seq.len() * RE);
+    for (i, &t) in seq.iter().enumerate() {
+        for e in 0..RE {
+            out.push((t as usize * 31 + i * 7 + e) as f32);
+        }
+    }
+    out
+}
+
+/// Two publishers sharing templates race one evictor on a deliberately tiny
+/// two-shard store. Under every interleaving: a held lease pins its chain
+/// (re-fetch returns identical bytes), the block budget holds at every
+/// observation point, and the structural `check()` passes after the joins.
+/// The single-threaded churn tail then overflows the budget with no leases
+/// outstanding, so eviction is exercised *deterministically* — the property
+/// `tests/store_stress.rs` can only observe by luck.
+#[test]
+fn store_two_publishers_one_evictor_invariants() {
+    let report = Checker::new().max_schedules(MAX_SCHEDULES).check(|| {
+        let store = Arc::new(SharedKvStore::new(StoreCfg {
+            block_tokens: 2,
+            capacity_blocks: 4,
+            policy: EvictPolicy::Lru,
+            shards: 2,
+        }));
+        store.set_version(1);
+        let mut handles = Vec::new();
+        for t in 0..2u32 {
+            let store = store.clone();
+            handles.push(thread::spawn(move || {
+                let p: Vec<u32> = vec![t * 16 + 1, t * 16 + 2];
+                store.publish(&p, &rows_for(&p), None, 1);
+                if let Some(f) = store.fetch_longest(&p, 0, 1) {
+                    // Lease pinning: while `f.lease` is held the chain must
+                    // stay fetchable and bit-identical, whatever the evictor
+                    // thread is doing on the other shard lock.
+                    let again = store
+                        .fetch_longest(&p[..f.len], 0, 1)
+                        .expect("leased chain must stay fetchable");
+                    assert_eq!(again.len, f.len, "leased coverage shrank");
+                    assert_eq!(again.rows, f.rows, "leased chain mutated");
+                    store.release(again.lease);
+                    store.release(f.lease);
+                }
+                assert!(store.live_blocks() <= store.capacity_blocks());
+            }));
+        }
+        {
+            let store = store.clone();
+            handles.push(thread::spawn(move || {
+                // Evictor: cold prefixes churn the heap under the tiny budget.
+                let cold: Vec<u32> = vec![100, 101, 102, 103];
+                store.publish(&cold, &rows_for(&cold), None, 1);
+                assert!(store.live_blocks() <= store.capacity_blocks());
+            }));
+        }
+        for h in handles {
+            h.join().expect("model thread panicked");
+        }
+        assert_eq!(store.leased_blocks(), 0, "leases leaked past join");
+        store.check().expect("structural invariants after joins");
+
+        // Deterministic eviction tail: 4 distinct 2-block prefixes into a
+        // 4-block store with zero leases held — some shard must evict.
+        for c in 0..4u32 {
+            let p: Vec<u32> = vec![200 + c * 8, 201 + c * 8, 202 + c * 8, 203 + c * 8];
+            store.publish(&p, &rows_for(&p), None, 1);
+        }
+        assert!(store.stats().evictions > 0, "overflow churn must evict");
+        assert!(store.live_blocks() <= store.capacity_blocks());
+        store.check().expect("structural invariants after churn");
+    });
+    report.assert_ok();
+    assert!(
+        report.schedules >= MIN_SCHEDULES,
+        "explored only {} schedules",
+        report.schedules
+    );
+}
+
+/// Miniature of [`Driver::drain_engine`]'s handshake with the exact channel
+/// topology of the real pipeline: an unbounded control inbox, a bounded
+/// rollout queue *shallower than the worker's backlog*, and an ack channel.
+/// The driver must keep pumping the queue while waiting for the ack or the
+/// worker's blocking flush wedges both sides — the checker proves no
+/// explored schedule deadlocks and no rollout is lost.
+#[test]
+fn drain_handshake_never_deadlocks() {
+    let report = Checker::new().max_schedules(MAX_SCHEDULES).check(|| {
+        let (inbox_tx, inbox_rx) = mpsc::channel::<u32>();
+        let (queue_tx, queue_rx) = mpsc::sync_channel::<u32>(2); // cap < backlog
+        let (ack_tx, ack_rx) = mpsc::channel::<u32>();
+        let worker = thread::spawn(move || {
+            let _drain = inbox_rx.recv().expect("drain request");
+            for i in 0..3u32 {
+                queue_tx.send(i).expect("queue receiver alive");
+            }
+            ack_tx.send(0).expect("driver alive");
+        });
+        inbox_tx.send(7).expect("worker alive");
+        // The drain pump: poll for the ack, draining the rollout queue in
+        // between so the worker's bounded sends can make progress.
+        let mut got = 0u32;
+        loop {
+            match ack_rx.try_recv() {
+                Ok(_) => break,
+                Err(mpsc::TryRecvError::Empty) => {}
+                Err(mpsc::TryRecvError::Disconnected) => break,
+            }
+            if queue_rx.recv_timeout(Duration::from_millis(2)).is_ok() {
+                got += 1;
+            }
+        }
+        while queue_rx.try_recv().is_ok() {
+            got += 1;
+        }
+        worker.join().expect("worker panicked");
+        assert_eq!(got, 3, "drain lost rollouts");
+    });
+    report.assert_ok();
+    assert!(
+        report.schedules >= MIN_SCHEDULES,
+        "explored only {} schedules",
+        report.schedules
+    );
+}
+
+/// Registry snapshots racing writer threads: mid-flight reads are bounded
+/// by the true totals, two sequential snapshots never observe a counter
+/// moving backwards (no torn reads through the shims), and once the writers
+/// join the totals are exact.
+#[test]
+fn registry_snapshot_vs_writers_is_coherent() {
+    let report = Checker::new().max_schedules(MAX_SCHEDULES).check(|| {
+        let reg = Arc::new(Registry::new());
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let reg = reg.clone();
+            handles.push(thread::spawn(move || {
+                for _ in 0..2 {
+                    reg.counter("writes").inc();
+                    reg.histogram("lat").observe(1.0);
+                }
+            }));
+        }
+        let counter_of = |s: &pa_rl::metrics::RegistrySnapshot| {
+            s.counters.iter().find(|(n, _)| n == "writes").map(|&(_, v)| v).unwrap_or(0)
+        };
+        let hist_count_of = |s: &pa_rl::metrics::RegistrySnapshot| {
+            s.hists.iter().find(|(n, _)| n == "lat").map(|(_, h)| h.count()).unwrap_or(0)
+        };
+        let s1 = reg.snapshot();
+        let s2 = reg.snapshot();
+        assert!(counter_of(&s1) <= 4, "counter over-counted mid-flight");
+        assert!(hist_count_of(&s1) <= 4, "histogram over-counted mid-flight");
+        assert!(
+            counter_of(&s2) >= counter_of(&s1),
+            "counter moved backwards between snapshots"
+        );
+        for h in handles {
+            h.join().expect("writer panicked");
+        }
+        let fin = reg.snapshot();
+        assert_eq!(counter_of(&fin), 4, "final counter total");
+        let lat = fin
+            .hists
+            .iter()
+            .find(|(n, _)| n == "lat")
+            .map(|(_, h)| h.clone())
+            .expect("lat histogram present");
+        assert_eq!(lat.count(), 4, "final histogram count");
+        assert!((lat.sum() - 4.0).abs() < 1e-9, "final histogram sum");
+    });
+    report.assert_ok();
+    assert!(
+        report.schedules >= MIN_SCHEDULES,
+        "explored only {} schedules",
+        report.schedules
+    );
+}
+
+/// Drain re-route regression: after an engine drains, its returned jobs are
+/// regrouped prompt-affine ([`group_jobs_by_prompt`]) and the warmth map
+/// forgets the drained engine ([`WarmthMap::remove_engine`]); every group
+/// then re-dispatches to a *live* engine with no job lost or duplicated,
+/// surviving warm templates keep their affinity, and forgotten ones fall
+/// back to the deterministic hash spread. Pure sequential logic — kept here
+/// because it is the deterministic half of the drain story the handshake
+/// test above model-checks.
+#[test]
+fn drain_reroute_preserves_jobs_and_targets_live_engines() {
+    let bt = 4usize;
+    let prompts: Vec<Vec<u32>> = (0..4u32).map(|p| vec![p + 1; 8]).collect();
+
+    // Engine 1 was the warm home for templates 1..4; template 0 lives on
+    // engine 0. Engine 1 drains and the fleet compacts to 2 engines.
+    let mut warmth = WarmthMap::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let (key, _) = affinity_key(p, bt);
+        warmth.note(key, if i == 0 { 0 } else { 1 }, p.len());
+    }
+    warmth.remove_engine(1, 2);
+
+    // The drained worker hands back its in-flight jobs in completion order
+    // (interleaved across prompts, like a real inbox drain).
+    let mk = |prompt_id: u64, sample_idx: usize| GenJob {
+        prompt_id,
+        sample_idx,
+        request: GenRequest {
+            request_id: prompt_id * 10 + sample_idx as u64,
+            prompt: prompts[prompt_id as usize].clone(),
+            timeline: Default::default(),
+        },
+        answer: 0,
+    };
+    let jobs: Vec<GenJob> =
+        (0..2usize).flat_map(|s| (0..4u64).map(move |p| mk(p, s))).collect();
+
+    let groups = group_jobs_by_prompt(jobs);
+    assert_eq!(groups.len(), 4, "one group per prompt");
+
+    let load = vec![0usize; 2];
+    let mut seen = HashSet::new();
+    for g in &groups {
+        assert_eq!(g.len(), 2, "group-affine re-dispatch keeps groups whole");
+        let prompt = &g[0].request.prompt;
+        assert!(g.iter().all(|j| &j.request.prompt == prompt), "mixed group");
+        let (engine, kind) = route_group_residency(prompt, bt, &load, 4, &warmth, 0);
+        assert!(engine < 2, "routed to a drained engine");
+        let (key, _) = affinity_key(prompt, bt);
+        if warmth.lookup(key).is_some() {
+            assert_eq!(kind, RouteKind::Warm, "surviving template lost affinity");
+            assert_eq!(engine, 0, "warm template left its home");
+        } else {
+            assert_eq!(kind, RouteKind::Hashed, "forgotten template must hash");
+        }
+        for j in g {
+            assert!(seen.insert(j.request.request_id), "job duplicated");
+        }
+    }
+    assert_eq!(seen.len(), 8, "job lost in re-route");
+}
+
+/// The seeded bug: two threads taking the same pair of shard locks in
+/// opposite orders — the classic ABBA deadlock, reachable only under an
+/// adversarial preemption between the two acquisitions.
+fn inverted_shard_locks() {
+    let store = Arc::new(SharedKvStore::new(StoreCfg {
+        block_tokens: 2,
+        capacity_blocks: 8,
+        policy: EvictPolicy::Lru,
+        shards: 2,
+    }));
+    let s2 = store.clone();
+    let a = thread::spawn(move || {
+        s2.lock_pair_in_order(0, 1);
+    });
+    let b = thread::spawn(move || {
+        store.lock_pair_in_order(1, 0);
+    });
+    a.join().expect("thread a");
+    b.join().expect("thread b");
+}
+
+/// With the static cycle check disabled, the checker must *schedule* its
+/// way into the ABBA deadlock, report it, and hand back a schedule string
+/// that deterministically replays the exact interleaving.
+#[test]
+fn seeded_shard_deadlock_is_caught_and_replays() {
+    let report = Checker::new()
+        .detect_lock_order(false)
+        .max_schedules(MAX_SCHEDULES)
+        .check(inverted_shard_locks);
+    let failure = report.failure.expect("checker must find the ABBA deadlock");
+    assert_eq!(failure.kind, FailureKind::Deadlock, "wrong failure: {failure}");
+    assert!(!failure.schedule.is_empty(), "deadlock without a schedule");
+
+    let again = replay(inverted_shard_locks, &failure.schedule);
+    let f2 = again.failure.expect("replay must reproduce the deadlock");
+    assert_eq!(f2.kind, FailureKind::Deadlock, "replay found something else");
+}
+
+/// With the cycle check on (the default), the same bug is flagged as a
+/// lock-order inversion on the *first* schedule that merely acquires the
+/// locks in both orders — no adversarial interleaving required.
+#[test]
+fn inverted_shard_locks_flagged_without_needing_the_deadlock_schedule() {
+    let report = Checker::new().max_schedules(MAX_SCHEDULES).check(inverted_shard_locks);
+    let failure = report.failure.expect("cycle check must flag the inversion");
+    assert_eq!(failure.kind, FailureKind::LockOrderInversion, "wrong failure: {failure}");
+}

@@ -2,6 +2,20 @@
 """Validate BENCH_*.json perf records against the repo's schema.
 
 Usage: check_bench_json.py BENCH_micro.json [BENCH_pipeline.json ...]
+       check_bench_json.py --diff COMMITTED.json FRESH.json
+
+`--diff` compares a freshly measured record against the committed baseline
+and fails (exit 1) on a perf regression:
+
+  * every committed metric must still exist in the fresh record;
+  * a metric measured with a real iteration count (fresh iters >
+    QUICK_ITERS_MAX) may regress at most REGRESSION_LIMIT (25%);
+  * a quick-clamped metric (fresh iters <= QUICK_ITERS_MAX — CI's
+    PA_RL_BENCH_QUICK runs, too noisy for a tight gate) only trips the
+    CATASTROPHIC_LIMIT (4x) backstop;
+  * direction comes from the unit: throughput units ("/s", "ops") regress
+    downward, everything else (ns/us/ms/pct latencies and overheads)
+    regresses upward. Metrics the baseline lacks are new and always pass.
 
 Schema (emitted by rust/src/util/bench.rs::BenchRecorder):
 
@@ -26,6 +40,13 @@ import math
 import sys
 
 MIN_METRICS = 5
+
+# --diff gate: quick-mode runs clamp iters to <= 10 (see benches/perf_micro.rs
+# PA_RL_BENCH_QUICK), so their numbers are noise-bounded only by the 4x
+# catastrophic backstop; properly measured metrics get the strict 25% gate.
+QUICK_ITERS_MAX = 10
+REGRESSION_LIMIT = 1.25
+CATASTROPHIC_LIMIT = 4.0
 
 
 def fail(path, msg):
@@ -80,7 +101,57 @@ def check(path):
     return 0
 
 
+def higher_is_better(unit, metric):
+    """Throughputs regress downward; latencies/overheads regress upward."""
+    return "/s" in unit or unit == "ops" or metric.endswith("_per_s")
+
+
+def diff(committed_path, fresh_path):
+    """Gate FRESH against the COMMITTED baseline; returns an exit code."""
+    if check(committed_path) or check(fresh_path):
+        return 1
+    with open(committed_path, encoding="utf-8") as f:
+        committed = {m["metric"]: m for m in json.load(f)["metrics"]}
+    with open(fresh_path, encoding="utf-8") as f:
+        fresh = {m["metric"]: m for m in json.load(f)["metrics"]}
+
+    rc = 0
+    for name, base in committed.items():
+        cur = fresh.get(name)
+        if cur is None:
+            rc = fail(fresh_path, f"metric '{name}' vanished from the fresh record")
+            continue
+        quick = cur["iters"] <= QUICK_ITERS_MAX
+        limit = CATASTROPHIC_LIMIT if quick else REGRESSION_LIMIT
+        b, v = float(base["value"]), float(cur["value"])
+        if b <= 0 or v <= 0:
+            # Analytic zeros / degenerate baselines carry no ratio.
+            print(f"OK   {name}: {b} -> {v} (no ratio gate on non-positive values)")
+            continue
+        ratio = b / v if higher_is_better(cur.get("unit", ""), name) else v / b
+        tag = "quick, 4x backstop" if quick else "25% gate"
+        if ratio > limit:
+            rc = fail(
+                fresh_path,
+                f"metric '{name}' regressed {ratio:.2f}x (limit {limit}x, {tag}): "
+                f"{b} -> {v} {cur.get('unit', '')}",
+            )
+        else:
+            print(f"OK   {name}: {b} -> {v} ({ratio:.2f}x worse-direction, {tag})")
+    for name in fresh:
+        if name not in committed:
+            print(f"OK   {name}: new metric (no baseline)")
+    if rc == 0:
+        print(f"OK   {fresh_path}: no regression vs {committed_path}")
+    return rc
+
+
 def main(argv):
+    if len(argv) >= 2 and argv[1] == "--diff":
+        if len(argv) != 4:
+            print(__doc__, file=sys.stderr)
+            return 2
+        return diff(argv[2], argv[3])
     if len(argv) < 2:
         print(__doc__, file=sys.stderr)
         return 2

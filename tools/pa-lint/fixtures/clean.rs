@@ -1,0 +1,25 @@
+//! Fixture: idiomatic code every rule accepts (never compiled — scanned as
+//! plain text).
+
+use crate::check::sync::{lock_or_poison, Arc, Mutex};
+use crate::check::thread;
+
+fn shims_ok() {
+    let m = Arc::new(Mutex::new(0u32));
+    let h = thread::spawn(move || *lock_or_poison(&m));
+    drop(h);
+}
+
+fn unwraps_ok(x: Option<u32>) -> anyhow::Result<u32> {
+    // pa-lint: allow(unwrap): fixture demonstrates a waived site
+    let _a = x.unwrap();
+    x.ok_or_else(|| anyhow::anyhow!("missing"))
+}
+
+/// A fully documented config struct.
+pub struct CleanCfg {
+    /// Knob with a stated fallback. Default: 4.
+    pub knob: usize,
+    /// Knob the user must set. Required.
+    pub mandatory: usize,
+}

@@ -1,0 +1,22 @@
+//! Fixture: every rule fires here (never compiled — scanned as plain text).
+
+fn shim_violations() {
+    let _m = std::sync::Mutex::new(0);
+    let _t = std::thread::spawn(|| {});
+    let (_tx, _rx) = std::sync::mpsc::channel::<u32>();
+}
+
+fn unwrap_violations(x: Option<u32>) {
+    let _a = x.unwrap();
+    let _b = x.expect("boom");
+}
+
+/// A config struct whose second knob forgot its fallback line.
+pub struct FixtureCfg {
+    /// Documented knob. Default: 8.
+    pub documented: usize,
+    /// Undocumented knob — the doc comment says nothing about its
+    /// fallback value, so the config-docs rule must flag the field
+    /// below.
+    pub undocumented: usize,
+}

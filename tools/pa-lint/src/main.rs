@@ -1,0 +1,348 @@
+//! `pa-lint` — the repo-invariant source linter, run as a hard CI gate
+//! (`cargo run -q -p pa-lint` from the workspace root).
+//!
+//! A deliberately dumb plain-text scanner (no syn, no regex, no
+//! dependencies) enforcing three invariants the compiler cannot:
+//!
+//! 1. **shims** — no direct `std::sync` concurrency primitive or
+//!    `std::thread` spawn outside `rust/src/check/`: everything must go
+//!    through the `check::sync` / `check::thread` shims so the
+//!    `pa_modelcheck` scheduler sees every operation. `Arc`, `Weak`,
+//!    `Once` and `atomic::Ordering` are exempt (they carry no scheduling
+//!    decision).
+//! 2. **unwraps** — no `.unwrap()` / `.expect(` in non-test code under
+//!    `rust/src/{engine,store,coordinator}` (the hot paths): fallible paths
+//!    use `anyhow` or `check::sync::lock_or_poison`. A site whose panic
+//!    freedom is a structural invariant carries a
+//!    `// pa-lint: allow(unwrap): <reason>` (or `allow(expect)`) waiver on
+//!    the same or the preceding line.
+//! 3. **config-docs** — every `pub` field in `rust/src/config.rs` states
+//!    its default (or that it is required) in its doc comment, so the doc
+//!    comments cannot silently drift from `Config::from_json`.
+//!
+//! Exit status 0 with a one-line summary when clean; otherwise every
+//! violation prints as `file:line: [rule] message` and the status is 1.
+//!
+//! Lines whose trimmed form starts with a comment marker are never
+//! flagged — prose about a pattern is not a use of it.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// One finding, printed as `file:line: [rule] message`.
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// `std::sync` / `std::thread` tokens the shims must mediate. `Arc`,
+/// `Weak`, `Once` and `Ordering` are deliberately absent: they are not
+/// scheduling decisions, and the shims re-export them untouched.
+const FORBIDDEN_STD: &[&str] = &[
+    "std::sync::Mutex",
+    "std::sync::Condvar",
+    "std::sync::RwLock",
+    "std::sync::Barrier",
+    "std::sync::mpsc",
+    "std::sync::atomic::Atomic",
+    "std::thread::spawn",
+    "std::thread::Builder",
+    "std::thread::yield_now",
+    "std::thread::scope",
+];
+
+/// Directories (relative to the workspace root) swept by the shims rule.
+const SHIM_SCAN_DIRS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Hot-path directories swept by the unwraps rule.
+const UNWRAP_SCAN_DIRS: &[&str] =
+    &["rust/src/engine", "rust/src/store", "rust/src/coordinator"];
+
+/// The shim layer itself — the one place allowed to touch std primitives.
+const SHIM_EXEMPT_PREFIX: &str = "rust/src/check";
+
+fn is_comment(trimmed: &str) -> bool {
+    trimmed.starts_with("//")
+}
+
+const WAIVER: &str = "pa-lint: allow(";
+
+/// Rule 1: forbid direct std concurrency primitives outside the shim layer.
+fn lint_shims(file: &str, content: &str, out: &mut Vec<Violation>) {
+    for (i, line) in content.lines().enumerate() {
+        let t = line.trim_start();
+        if is_comment(t) {
+            continue;
+        }
+        for pat in FORBIDDEN_STD {
+            if line.contains(pat) {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: i + 1,
+                    rule: "shims",
+                    msg: format!(
+                        "`{pat}` bypasses the model-check shims; use `crate::check::sync` / `crate::check::thread` instead"
+                    ),
+                });
+                break; // one finding per line is enough
+            }
+        }
+    }
+}
+
+/// Rule 2: forbid `.unwrap()` / `.expect(` in non-test hot-path code,
+/// unless waived on the same or the preceding line.
+fn lint_unwraps(file: &str, content: &str, out: &mut Vec<Violation>) {
+    let mut prev = "";
+    for (i, line) in content.lines().enumerate() {
+        let t = line.trim_start();
+        // Everything from the first `#[cfg(test)]` down is test code.
+        if t.starts_with("#[cfg(test)]") {
+            break;
+        }
+        if is_comment(t) {
+            prev = t;
+            continue;
+        }
+        let hit = line.contains(".unwrap(") || line.contains(".expect(");
+        if hit {
+            let waived =
+                line.contains(WAIVER) || (is_comment(prev) && prev.contains(WAIVER));
+            if !waived {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: i + 1,
+                    rule: "unwraps",
+                    msg: "unwaived `.unwrap()`/`.expect(` on a hot path; return anyhow::Result, use `lock_or_poison`, or add `// pa-lint: allow(unwrap): <reason>`"
+                        .to_string(),
+                });
+            }
+        }
+        prev = t;
+    }
+}
+
+/// Rule 3: every pub field in config.rs documents its default. A field
+/// line is `pub <name>: <type>,` (no parentheses — that would be a fn).
+fn lint_config_docs(file: &str, content: &str, out: &mut Vec<Violation>) {
+    let mut docs = String::new();
+    for (i, line) in content.lines().enumerate() {
+        let t = line.trim_start();
+        if t.starts_with("#[cfg(test)]") {
+            break;
+        }
+        if t.starts_with("///") {
+            docs.push_str(&t.to_ascii_lowercase());
+            docs.push('\n');
+            continue;
+        }
+        let is_field = t.starts_with("pub ")
+            && !t.starts_with("pub fn")
+            && !t.starts_with("pub struct")
+            && !t.starts_with("pub enum")
+            && !t.starts_with("pub use")
+            && !t.starts_with("pub mod")
+            && t.contains(':')
+            && !t.contains('(')
+            && t.ends_with(',');
+        if is_field && !docs.contains("default") && !docs.contains("required") {
+            out.push(Violation {
+                file: file.to_string(),
+                line: i + 1,
+                rule: "config-docs",
+                msg: format!(
+                    "config knob `{}` has no doc comment stating its default (or that it is required)",
+                    t.trim_end_matches(',')
+                ),
+            });
+        }
+        if !t.starts_with("#[") {
+            docs.clear(); // attributes may sit between docs and field
+        }
+    }
+}
+
+/// Collect `.rs` files under `dir`, sorted for deterministic output.
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            rs_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn rel(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+fn read(p: &Path) -> Result<String, String> {
+    std::fs::read_to_string(p).map_err(|e| format!("pa-lint: reading {}: {e}", p.display()))
+}
+
+/// Run all rules against the workspace at `root`.
+fn run(root: &Path) -> Result<Vec<Violation>, String> {
+    let src = root.join("rust/src");
+    if !src.is_dir() {
+        return Err(format!(
+            "pa-lint: {} has no rust/src — run from the workspace root or pass --root",
+            root.display()
+        ));
+    }
+    let mut out = Vec::new();
+
+    for dir in SHIM_SCAN_DIRS {
+        let mut files = Vec::new();
+        rs_files(&root.join(dir), &mut files);
+        for f in files {
+            let name = rel(root, &f);
+            if name.starts_with(SHIM_EXEMPT_PREFIX) {
+                continue;
+            }
+            lint_shims(&name, &read(&f)?, &mut out);
+        }
+    }
+
+    for dir in UNWRAP_SCAN_DIRS {
+        let mut files = Vec::new();
+        rs_files(&root.join(dir), &mut files);
+        for f in files {
+            let name = rel(root, &f);
+            lint_unwraps(&name, &read(&f)?, &mut out);
+        }
+    }
+
+    let cfg = root.join("rust/src/config.rs");
+    lint_config_docs(&rel(root, &cfg), &read(&cfg)?, &mut out);
+
+    Ok(out)
+}
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("pa-lint: --root needs a path");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "-h" | "--help" => {
+                println!("usage: pa-lint [--root <workspace-root>]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("pa-lint: unknown argument {other} (try --help)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    match run(&root) {
+        Err(e) => {
+            eprintln!("{e}");
+            ExitCode::FAILURE
+        }
+        Ok(violations) if violations.is_empty() => {
+            println!("pa-lint: OK (shims, unwraps, config-docs)");
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            eprintln!("pa-lint: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CLEAN: &str = include_str!("../fixtures/clean.rs");
+    const VIOLATIONS: &str = include_str!("../fixtures/violations.rs");
+
+    #[test]
+    fn clean_fixture_passes_every_rule() {
+        let mut out = Vec::new();
+        lint_shims("fixtures/clean.rs", CLEAN, &mut out);
+        lint_unwraps("fixtures/clean.rs", CLEAN, &mut out);
+        lint_config_docs("fixtures/clean.rs", CLEAN, &mut out);
+        assert!(out.is_empty(), "clean fixture flagged: {:?}", out.iter().map(|v| v.to_string()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn violations_fixture_fails_with_file_and_line() {
+        let mut out = Vec::new();
+        lint_shims("fixtures/violations.rs", VIOLATIONS, &mut out);
+        lint_unwraps("fixtures/violations.rs", VIOLATIONS, &mut out);
+        lint_config_docs("fixtures/violations.rs", VIOLATIONS, &mut out);
+        let msgs: Vec<String> = out.iter().map(|v| v.to_string()).collect();
+        // Every expected violation, located by file:line.
+        let expect = [
+            ("shims", 4),      // std::sync::Mutex
+            ("shims", 5),      // std::thread::spawn
+            ("shims", 6),      // std::sync::mpsc
+            ("unwraps", 10),   // bare .unwrap()
+            ("unwraps", 11),   // bare .expect(
+            ("config-docs", 21), // knob without a Default line
+        ];
+        for (rule, line) in expect {
+            assert!(
+                out.iter().any(|v| v.rule == rule && v.line == line),
+                "missing [{rule}] at line {line}; got: {msgs:?}"
+            );
+            assert!(
+                msgs.iter().any(|m| m.starts_with(&format!("fixtures/violations.rs:{line}:"))),
+                "violation at {line} not formatted as file:line; got: {msgs:?}"
+            );
+        }
+        assert_eq!(out.len(), expect.len(), "unexpected extra findings: {msgs:?}");
+    }
+
+    #[test]
+    fn waivers_and_comments_are_respected() {
+        let src = "\
+// std::sync::Mutex in prose is fine
+let a = x.lock(); // no unwrap here
+// pa-lint: allow(unwrap): checked two lines up
+let b = y.unwrap();
+let c = z.unwrap(); // pa-lint: allow(unwrap): same-line waiver
+";
+        let mut out = Vec::new();
+        lint_shims("w.rs", src, &mut out);
+        lint_unwraps("w.rs", src, &mut out);
+        assert!(out.is_empty(), "waived/comment lines flagged: {:?}", out.iter().map(|v| v.to_string()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn test_module_code_is_exempt_from_unwraps() {
+        let src = "\
+fn live() {}
+#[cfg(test)]
+mod tests {
+    fn t() { None::<u32>.unwrap(); }
+}
+";
+        let mut out = Vec::new();
+        lint_unwraps("t.rs", src, &mut out);
+        assert!(out.is_empty());
+    }
+}
