@@ -251,7 +251,15 @@ fn main() -> anyhow::Result<()> {
 
     let mut latencies: Vec<f64> = results.iter().map(|r| r.seconds).collect();
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| latencies[((latencies.len() as f64 - 1.0) * p).round() as usize];
+    // Graceful on an empty run (`--requests 0`): report 0 rather than
+    // indexing an empty vector.
+    let pct = |p: f64| -> f64 {
+        if latencies.is_empty() {
+            0.0
+        } else {
+            latencies[((latencies.len() as f64 - 1.0) * p).round() as usize]
+        }
+    };
     let total_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
     let finished = results
         .iter()
@@ -286,21 +294,37 @@ fn main() -> anyhow::Result<()> {
     if clock.is_some() {
         // Full telemetry: fold the stamped timelines into the standard
         // request-metrics histograms (same aggregation as the coordinator).
+        // A histogram can still be empty (e.g. `--requests 0`, or timelines
+        // the engine never stamped) — say so instead of printing quantiles
+        // of nothing.
         let mut rm = RequestMetrics::default();
         for r in &results {
             rm.observe(&r.timeline, 0);
         }
-        t.row(&[
-            "ttft p50/p99 (s)".into(),
-            format!("{:.3}/{:.3}", rm.ttft.quantile(0.50), rm.ttft.quantile(0.99)),
-        ]);
-        t.row(&[
-            "queue wait p50/p99 (s)".into(),
-            format!("{:.3}/{:.3}", rm.queue_wait.quantile(0.50), rm.queue_wait.quantile(0.99)),
-        ]);
+        let q2 = |h: &pa_rl::metrics::Histogram| -> String {
+            if h.is_empty() {
+                "n/a (no stamped timelines)".into()
+            } else {
+                format!("{:.3}/{:.3}", h.quantile(0.50), h.quantile(0.99))
+            }
+        };
+        t.row(&["ttft p50/p99 (s)".into(), q2(&rm.ttft)]);
+        t.row(&["queue wait p50/p99 (s)".into(), q2(&rm.queue_wait)]);
         t.row(&[
             "decode tok/s p50".into(),
-            format!("{:.0}", rm.decode_tps.quantile(0.50)),
+            if rm.decode_tps.is_empty() {
+                "n/a (no stamped timelines)".into()
+            } else {
+                format!("{:.0}", rm.decode_tps.quantile(0.50))
+            },
+        ]);
+    } else {
+        // Basic level: the lifecycle quantile rows need per-request
+        // timestamps we deliberately don't take. Degrade explicitly rather
+        // than omitting the rows without a word.
+        t.row(&[
+            "ttft / queue wait".into(),
+            "off at metrics.level=basic (rerun with --metrics full)".into(),
         ]);
     }
     t.row(&["EOS-terminated".into(), format!("{finished}/{n_requests}")]);

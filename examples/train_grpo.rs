@@ -99,13 +99,19 @@ fn main() -> anyhow::Result<()> {
         println!("eval before RL: accuracy {:.3} ({} / {})", before.accuracy, before.correct, before.n);
     }
 
-    let mut csv = csv_path.as_ref().map(|p| {
-        CsvLog::new(p, &["iter", "reward", "loss", "kl", "entropy", "grad_norm",
-                         "wall_s", "consumer_wait_s", "train_tokens", "staleness",
-                         "kv_hit_rate", "prefill_tokens_saved",
-                         "cross_engine_hits", "cross_engine_tokens",
-                         "store_publishes", "affinity_spills", "engines"])
-    });
+    // Full telemetry appends the phase-attribution columns; the basic header
+    // (and every row) stays byte-identical to the pre-attribution CSV.
+    let full = cfg.metrics.level.is_full();
+    let mut csv_header = vec!["iter", "reward", "loss", "kl", "entropy", "grad_norm",
+                              "wall_s", "consumer_wait_s", "train_tokens", "staleness",
+                              "kv_hit_rate", "prefill_tokens_saved",
+                              "cross_engine_hits", "cross_engine_tokens",
+                              "store_publishes", "affinity_spills", "engines"];
+    if full {
+        csv_header.extend(["producer_idle_s", "sync_overhead_s", "useful_compute_s",
+                           "pipeline_efficiency"]);
+    }
+    let mut csv = csv_path.as_ref().map(|p| CsvLog::new(p, &csv_header));
     let t0 = std::time::Instant::now();
     let report = {
         let mut iters_done = Vec::new();
@@ -129,8 +135,18 @@ fn main() -> anyhow::Result<()> {
             if let Some(req) = &it.requests {
                 println!("         requests: {}", req.summary());
             }
+            if full {
+                // Bubble attribution (docs/OBSERVABILITY.md): where the
+                // iteration's deployed device-seconds went.
+                let p = &it.phases;
+                println!(
+                    "         phases: idle {:>5.2}s  wait {:>5.2}s  sync {:>5.2}s  useful {:>6.2}s  efficiency {:>4.1}%",
+                    p.producer_idle_s, p.consumer_wait_s, p.sync_overhead_s,
+                    p.useful_compute_s, p.pipeline_efficiency * 100.0,
+                );
+            }
             if let Some(c) = csv.as_mut() {
-                c.add(&[
+                let mut row = vec![
                     t as f64,
                     it.reward_mean,
                     it.stats.loss,
@@ -148,7 +164,16 @@ fn main() -> anyhow::Result<()> {
                     it.store_publishes as f64,
                     it.affinity_spills as f64,
                     it.engines as f64,
-                ]);
+                ];
+                if full {
+                    row.extend([
+                        it.phases.producer_idle_s,
+                        it.phases.sync_overhead_s,
+                        it.phases.useful_compute_s,
+                        it.phases.pipeline_efficiency,
+                    ]);
+                }
+                c.add(&row);
             }
             iters_done.push(it.clone());
         }
@@ -171,6 +196,11 @@ fn main() -> anyhow::Result<()> {
         println!("eval after RL: accuracy {:.3} ({} / {})", after.accuracy, after.correct, after.n);
     }
     println!("\n{}", driver.trace().render_ascii(100));
+    // Full telemetry: the driver already refreshed the Perfetto-loadable
+    // span-tree export at the end of each run() call; surface its path.
+    if let Some(path) = driver.write_trace_json()? {
+        println!("perfetto trace: {} (load in https://ui.perfetto.dev)", path.display());
+    }
     Ok(())
 }
 

@@ -60,6 +60,12 @@ fn main() -> anyhow::Result<()> {
             format!("target/bench-out/fig3_sim_{name}.json"),
             trace.to_json().to_pretty(),
         )?;
+        // Perfetto-loadable twin of the same span tree — CI schema-checks
+        // this file with `pa-report trace` (no artifacts needed).
+        std::fs::write(
+            format!("target/bench-out/fig3_sim_{name}.trace.json"),
+            trace.to_chrome_json().to_pretty(),
+        )?;
     }
 
     let tiny = Path::new("artifacts/tiny");
@@ -79,10 +85,31 @@ fn main() -> anyhow::Result<()> {
                 kv_hit * 100.0,
                 report.iters.iter().map(|i| i.prefill_tokens_saved).sum::<u64>()
             );
+            // Phase attribution (computed at every metrics level): surface
+            // the run means on the driver lane so the fig3 JSON carries the
+            // bubble breakdown alongside the spans.
+            let n = report.iters.len().max(1) as f64;
+            let mean = |f: fn(&pa_rl::coordinator::IterReport) -> f64| {
+                report.iters.iter().map(f).sum::<f64>() / n
+            };
+            let eff = mean(|i| i.phases.pipeline_efficiency);
+            println!(
+                "[{name}] phases: idle {:.2}s  wait {:.2}s  sync {:.2}s  efficiency {:.1}%",
+                mean(|i| i.phases.producer_idle_s),
+                mean(|i| i.phases.consumer_wait_s),
+                mean(|i| i.phases.sync_overhead_s),
+                eff * 100.0,
+            );
+            report.trace.annotate("driver", "pipeline_efficiency", eff);
+            report.trace.annotate("driver", "producer_idle_s", mean(|i| i.phases.producer_idle_s));
             println!("{}", report.trace.render_ascii(100));
             std::fs::write(
                 format!("target/bench-out/fig3_real_{name}.json"),
                 report.trace.to_json().to_pretty(),
+            )?;
+            std::fs::write(
+                format!("target/bench-out/fig3_real_{name}.trace.json"),
+                report.trace.to_chrome_json().to_pretty(),
             )?;
         }
     } else {

@@ -424,6 +424,24 @@ fn main() {
     });
     rec.push("sim_iteration_p50_ms", s.p50.as_secs_f64() * 1e3, "ms/iteration", s.n);
     add("simulator iteration (1024 rollouts)", s, String::new());
+    // Analytic pipeline efficiency for the same setup: useful device-seconds
+    // (inference busy + trainer busy) over deployed device-seconds — the
+    // simulator's view of the gauge the driver now measures per iteration
+    // (IterReport.phases.pipeline_efficiency). Unit "ratio": higher is
+    // better in the bench-diff gate.
+    {
+        let r = sim.run();
+        let d = sim.cluster.n_devices as f64;
+        let d_inf = (d * r.infer_fraction).round().max(1.0);
+        let useful = d_inf * r.t_infer_mean + (d - d_inf) * r.t_train_mean;
+        let eff = (useful / (d * r.wall_seconds)).clamp(0.0, 1.0);
+        rec.push("pipeline_efficiency", eff, "ratio", 0);
+        println!(
+            "  pipeline efficiency (analytic, same sim): {:.1}% ({d_inf:.0} infer + {:.0} train devices)",
+            eff * 100.0,
+            d - d_inf
+        );
+    }
 
     // Store contention: 8 worker threads hammer publish+fetch on one shared
     // store. With shards=1 every operation serializes on a single mutex
@@ -567,6 +585,7 @@ fn main() {
                 finish_s: clock.now(),
                 consume_s: clock.now(),
                 decode_tokens: 32,
+                ..Default::default()
             };
             rm.observe(std::hint::black_box(&tl), 1);
         });

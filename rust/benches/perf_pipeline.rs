@@ -124,7 +124,7 @@ fn main() -> anyhow::Result<()> {
     // ---- full iterations in each mode ---------------------------------------
     let mut t2 = Table::new(
         "Full-iteration wall clock by mode (2 iterations each)",
-        &["Mode", "wall (s)", "TPSPD", "consumer wait (s)"],
+        &["Mode", "wall (s)", "TPSPD", "consumer wait (s)", "efficiency"],
     );
     for (name, slug, mode, spa) in [
         ("sync", "sync", Mode::Sync, false),
@@ -135,13 +135,19 @@ fn main() -> anyhow::Result<()> {
         let opts = DriverOpts { mode, spa, seed: 9 };
         let mut driver = Driver::new(cfg.clone(), dir, opts)?;
         let report = driver.run(2)?;
+        // Phase attribution is computed at every metrics level, so the
+        // measured pipeline efficiency rides the perf trajectory too.
+        let eff = report.iters.iter().map(|i| i.phases.pipeline_efficiency).sum::<f64>()
+            / report.iters.len().max(1) as f64;
         rec.push(&format!("{slug}_wall_s"), report.wall_seconds, "s/2 iterations", 2);
         rec.push(&format!("{slug}_tpspd"), report.tpspd(), "tokens/s/device", 2);
+        rec.push(&format!("{slug}_pipeline_efficiency"), eff, "ratio", 2);
         t2.row(&[
             name.to_string(),
             format!("{:.2}", report.wall_seconds),
             format!("{:.1}", report.tpspd()),
             format!("{:.2}", report.iters.iter().map(|i| i.consumer_wait_seconds).sum::<f64>()),
+            format!("{:.1}%", eff * 100.0),
         ]);
     }
     t2.print();
@@ -155,7 +161,9 @@ fn main() -> anyhow::Result<()> {
 /// only when no record exists yet: a committed, *measured* record must
 /// never be clobbered by the skip path.
 fn write_analytic_record_if_missing() -> anyhow::Result<()> {
-    use pa_rl::sim::{ClusterSpec, EfficiencySpec, Framework, ModelSpec, SimSetup, WorkloadSpec};
+    use pa_rl::sim::{
+        ClusterSpec, EfficiencySpec, Framework, ModelSpec, SimResult, SimSetup, WorkloadSpec,
+    };
     let mut rec = BenchRecorder::new("pipeline", "simulator (analytic; artifacts/tiny missing)");
     if rec.path().exists() {
         println!("(BENCH_pipeline.json already present — leaving it untouched)");
@@ -191,6 +199,17 @@ fn write_analytic_record_if_missing() -> anyhow::Result<()> {
     rec.push("sim_async_tpspd", asyn.tpspd, "tokens/s/device", 0);
     rec.push("sim_async_speedup_x", asyn.tpspd / sync.tpspd, "x", 0);
     rec.push("sim_async_consumer_idle_s", asyn.consumer_idle_mean, "s/iteration", 0);
+    // Analytic pipeline efficiency (useful / deployed device-seconds), the
+    // simulator counterpart of IterReport.phases.pipeline_efficiency. The
+    // setup above runs 5 iterations, so wall_seconds / 5 is one iteration.
+    let eff = |r: &SimResult| -> f64 {
+        let d = 16.0; // ClusterSpec::npu(16) above
+        let d_inf = (d * r.infer_fraction).round().max(1.0);
+        let useful = d_inf * r.t_infer_mean + (d - d_inf) * r.t_train_mean;
+        (useful / (d * (r.wall_seconds / 5.0))).clamp(0.0, 1.0)
+    };
+    rec.push("sim_sync_pipeline_efficiency", eff(&sync), "ratio", 0);
+    rec.push("sim_async_pipeline_efficiency", eff(&asyn), "ratio", 0);
     let path = rec.write()?;
     println!("analytic bench record written to {}", path.display());
     Ok(())

@@ -290,8 +290,15 @@ pub struct MetricsConfig {
     /// `"full"` stamps per-request lifecycle timelines, aggregates
     /// TTFT / queue-wait / decode-throughput / staleness histograms into
     /// `IterReport` + the fig3 JSON, and writes per-iteration registry
-    /// snapshots (JSON + Prometheus text) under `artifacts/runs/`.
+    /// snapshots (JSON + Prometheus text) plus a Perfetto-loadable
+    /// `trace.json` under `artifacts/runs/`.
     pub level: MetricsLevel,
+    /// Stall watchdog window in seconds: if no rollout reaches the driver
+    /// for this long while work is outstanding, a one-shot diagnostic
+    /// snapshot (queue depths, per-engine in-flight counts, registry, last
+    /// span per lane) is dumped to stderr and `stall_snapshot.json`.
+    /// Default: 0.0 (watchdog off). Independent of `level`.
+    pub stall_timeout_s: f64,
 }
 
 /// Full run configuration.
@@ -478,10 +485,15 @@ impl Config {
 
         let mt = j.get("metrics").cloned().unwrap_or(Json::Obj(vec![]));
         let level_str = mt.str_or("level", "basic");
+        let stall_timeout_s = mt.f64_or("stall_timeout_s", 0.0);
+        if stall_timeout_s < 0.0 || !stall_timeout_s.is_finite() {
+            bail!("metrics.stall_timeout_s must be a finite value >= 0.0 (0 = off), got {stall_timeout_s}");
+        }
         let metrics = MetricsConfig {
             level: MetricsLevel::parse(level_str).with_context(|| {
                 format!("metrics.level '{level_str}' is not one of: basic, full")
             })?,
+            stall_timeout_s,
         };
 
         Ok(Config { name, model, engine, train, rl, data, metrics })
@@ -566,8 +578,9 @@ mod tests {
         // elastic-fleet defaults: static fleet, no warmth decay
         assert!(c.rl.fleet_schedule.is_empty());
         assert_eq!(c.rl.warmth_ttl, 0);
-        // telemetry defaults to basic (bit-identical surfaces)
+        // telemetry defaults to basic (bit-identical surfaces), watchdog off
         assert_eq!(c.metrics.level, MetricsLevel::Basic);
+        assert_eq!(c.metrics.stall_timeout_s, 0.0);
     }
 
     #[test]
@@ -576,12 +589,23 @@ mod tests {
             r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
                 "engine":{"prompt_max":16,"max_new":4},
                 "train":{},"rl":{"batch_prompts":1,"group_size":1},
-                "metrics":{"level":"full"}}"#,
+                "metrics":{"level":"full","stall_timeout_s":2.5}}"#,
         )
         .unwrap();
         let c = Config::from_json(&j).unwrap();
         assert_eq!(c.metrics.level, MetricsLevel::Full);
         assert!(c.metrics.level.is_full());
+        assert_eq!(c.metrics.stall_timeout_s, 2.5);
+        // a negative watchdog window is a config mistake, not a silent off
+        let j = Json::parse(
+            r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},
+                "engine":{"prompt_max":16,"max_new":4},
+                "train":{},"rl":{"batch_prompts":1,"group_size":1},
+                "metrics":{"stall_timeout_s":-1.0}}"#,
+        )
+        .unwrap();
+        let err = Config::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("stall_timeout_s"), "unexpected error: {err}");
         // unknown levels are config mistakes, not silent basics
         let j = Json::parse(
             r#"{"name":"x","model":{"vocab_size":8,"d_model":64,"n_layers":1,"n_heads":4,"d_ff":8},

@@ -108,4 +108,9 @@ pub struct WorkerStats {
     /// into its routing warmth map, so dispatch consults *actual* per-engine
     /// residency instead of hashing blindly.
     pub warm: Vec<(u64, usize)>,
+    /// Jobs queued on the engine but not yet admitted to a decode slot —
+    /// the per-engine backlog the stall watchdog snapshots.
+    pub pending: usize,
+    /// Sequences currently occupying decode slots (in flight right now).
+    pub active: usize,
 }

@@ -22,6 +22,9 @@ pub mod route;
 pub mod worker;
 
 pub use assembler::Assembler;
-pub use driver::{Driver, DriverOpts, IterReport, Mode, RunReport};
+pub use driver::{
+    stall_snapshot_json, Driver, DriverOpts, IterReport, Mode, PhaseAttribution, RunReport,
+    StallWatchdog,
+};
 pub use eval::{evaluate, EvalReport};
 pub use messages::{DrainAck, EngineMsg, GenJob, ScoredRollout, WeightSyncAck, WorkerStats};

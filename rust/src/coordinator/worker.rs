@@ -93,6 +93,7 @@ fn worker_main(
     }
     let tokenizer = Tokenizer::new();
     let lane = format!("infer-{idx}");
+    let req_lane = format!("req-{idx}");
     // request_id -> job metadata for scoring
     let mut jobs: HashMap<u64, GenJob> = HashMap::new();
 
@@ -127,6 +128,25 @@ fn worker_main(
             let t0 = trace.now();
             let finished = engine.step().with_context(|| format!("engine-{idx}: step"))?;
             trace.record(&lane, "step", t0);
+            if full_metrics {
+                // Causal per-request spans: one `gen` span per finished
+                // request on this engine's request lane, admit -> finish,
+                // linked back to the driver's dispatch span that sent it
+                // (`timeline.parent_span`). Full mode only — new spans would
+                // change the rendered basic trace.
+                for r in &finished {
+                    let tl = &r.timeline;
+                    if tl.admit_s >= 0.0 && tl.finish_s >= 0.0 {
+                        trace.record_abs_child(
+                            &req_lane,
+                            "gen",
+                            tl.admit_s,
+                            tl.finish_s,
+                            tl.parent_span,
+                        );
+                    }
+                }
+            }
             if !score_and_send(finished, idx, &mut jobs, &tokenizer, &queue)? {
                 return Ok(()); // consumer gone; shut down quietly
             }
@@ -254,6 +274,8 @@ fn handle_msg(
                 // Advertise which template prefixes are verifiably resident
                 // here — the router's per-engine warmth refresh.
                 warm: engine.warm_templates(),
+                pending: engine.pending_count(),
+                active: engine.active_count(),
             });
         }
         EngineMsg::Drain(ack) => return Ok(Flow::Drain(ack)),

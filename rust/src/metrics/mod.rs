@@ -18,7 +18,7 @@ pub mod trace;
 pub use histogram::Histogram;
 pub use registry::{Counter, Gauge, HistogramHandle, Registry, RegistrySnapshot};
 pub use timeline::{Clock, RequestMetrics, RequestTimeline};
-pub use trace::{Span, Trace};
+pub use trace::{validate_chrome_trace, Span, Trace, NO_PARENT};
 
 use std::io::Write;
 use std::time::Instant;

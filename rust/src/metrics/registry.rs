@@ -316,4 +316,84 @@ mod tests {
         // round-trips through the JSON parser (schema sanity)
         assert!(Json::parse(&j.to_pretty()).is_ok());
     }
+
+    /// The driver's full metric plane (`coordinator/driver.rs`:
+    /// `Telemetry::new` histograms + `finish_telemetry` counters/gauges,
+    /// including the poisoned-lock counter and the phase-attribution
+    /// gauges): every registered series must appear in the Prometheus
+    /// exposition exactly once. A series silently dropped from — or
+    /// duplicated in — `metrics.prom` passes every other test.
+    #[test]
+    fn every_registered_metric_exports_exactly_once() {
+        const COUNTERS: &[&str] = &[
+            "engine.prefills",
+            "engine.prefills_skipped",
+            "engine.prefill_chunks",
+            "engine.prefill_tokens_saved",
+            "cache.hit_tokens",
+            "cache.miss_tokens",
+            "store.cross_engine_hits",
+            "store.cross_engine_tokens",
+            "store.publishes",
+            "store.evictions",
+            "route.affinity_hits",
+            "route.affinity_spills",
+            "request.completed",
+            "train.iterations",
+            "lock.poisoned",
+        ];
+        const GAUGES: &[&str] = &[
+            "fleet.engines",
+            "cache.kv_hit_rate",
+            "phase.producer_idle_s",
+            "phase.consumer_wait_s",
+            "phase.sync_overhead_s",
+            "phase.useful_compute_s",
+            "phase.pipeline_efficiency",
+        ];
+        const HISTS: &[&str] = &[
+            "request.ttft_s",
+            "request.queue_wait_s",
+            "request.decode_tok_per_s",
+            "request.e2e_s",
+            "request.staleness",
+        ];
+        let reg = Registry::new();
+        for (i, n) in COUNTERS.iter().enumerate() {
+            reg.counter(n).add(i as u64 + 1);
+        }
+        for (i, n) in GAUGES.iter().enumerate() {
+            reg.gauge(n).set(i as f64 + 0.5);
+        }
+        for n in HISTS {
+            reg.histogram(n).observe(1.0);
+        }
+        let snap = reg.snapshot();
+        assert_eq!(snap.counters.len(), COUNTERS.len());
+        assert_eq!(snap.gauges.len(), GAUGES.len());
+        assert_eq!(snap.hists.len(), HISTS.len());
+
+        let prom = snap.to_prometheus();
+        let count = |needle: &str| prom.matches(needle).count();
+        for n in COUNTERS {
+            let p = prom_name(n);
+            assert_eq!(count(&format!("# TYPE {p} counter\n")), 1, "{p} TYPE");
+            // Trailing space excludes longer names sharing the prefix
+            // (engine.prefills vs engine.prefills_skipped); the leading
+            // newline excludes the TYPE line itself.
+            assert_eq!(count(&format!("\n{p} ")), 1, "{p} sample:\n{prom}");
+        }
+        for n in GAUGES {
+            let p = prom_name(n);
+            assert_eq!(count(&format!("# TYPE {p} gauge\n")), 1, "{p} TYPE");
+            assert_eq!(count(&format!("\n{p} ")), 1, "{p} sample:\n{prom}");
+        }
+        for n in HISTS {
+            let p = prom_name(n);
+            assert_eq!(count(&format!("# TYPE {p} summary\n")), 1, "{p} TYPE");
+            assert_eq!(count(&format!("{p}{{quantile=")), 3, "{p} quantiles");
+            assert_eq!(count(&format!("{p}_sum ")), 1, "{p} sum");
+            assert_eq!(count(&format!("{p}_count ")), 1, "{p} count");
+        }
+    }
 }

@@ -75,6 +75,12 @@ pub struct RequestTimeline {
     pub consume_s: f64,
     /// Tokens generated after the first one (decode-phase tokens).
     pub decode_tokens: u32,
+    /// Causal parent for the full-telemetry span trace: the id of the
+    /// driver-side dispatch span that sent this request out, so the worker's
+    /// per-request `gen` span links back to the iteration's span tree
+    /// (`crate::metrics::trace`). `0` ([`crate::metrics::NO_PARENT`]) when
+    /// unlinked — basic mode never sets it.
+    pub parent_span: u64,
 }
 
 impl Default for RequestTimeline {
@@ -87,6 +93,7 @@ impl Default for RequestTimeline {
             finish_s: UNSET,
             consume_s: UNSET,
             decode_tokens: 0,
+            parent_span: 0,
         }
     }
 }
@@ -219,6 +226,7 @@ mod tests {
             finish_s: 4.0,
             consume_s: 4.5,
             decode_tokens: 100,
+            ..Default::default()
         }
     }
 

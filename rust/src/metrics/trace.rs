@@ -1,4 +1,4 @@
-//! Wall-clock execution timeline (paper Figure 3).
+//! Wall-clock execution timeline (paper Figure 3) and causal span tree.
 //!
 //! Threads record named spans into lanes ("infer-0", "train", "sync"); the
 //! trace renders as JSON (machine-readable) or as an ASCII timeline that
@@ -8,15 +8,31 @@
 //! infer-0 |████████████░░░░░░░░░░░░|
 //! train   |░░░░████████████████████|
 //! ```
+//!
+//! Each span carries a trace-unique `id` and an optional `parent` id, so
+//! causally-linked work (an iteration root → its dispatch / sync / train
+//! children, a dispatch → the engine-side generation it triggered) forms a
+//! tree across threads. [`Trace::to_chrome_json`] exports the whole tree as
+//! Chrome trace-event JSON loadable in Perfetto / `chrome://tracing`: one
+//! process per engine plus driver/trainer lanes, overlapping spans spread
+//! over per-lane tracks so every track's B/E events nest trivially.
 
+use crate::check::sync::atomic::{AtomicU64, Ordering};
 use crate::check::sync::{lock_or_poison, Arc, Mutex};
 use crate::metrics::timeline::Clock;
 use crate::util::json::Json;
 use std::time::Instant;
 
+/// Parent id for a root span (span ids start at 1).
+pub const NO_PARENT: u64 = 0;
+
 /// One recorded span.
 #[derive(Debug, Clone)]
 pub struct Span {
+    /// Trace-unique id (>= 1); [`NO_PARENT`] never names a real span.
+    pub id: u64,
+    /// Id of the causally-enclosing span, or [`NO_PARENT`] for roots.
+    pub parent: u64,
     pub lane: String,
     pub name: String,
     pub start_s: f64,
@@ -28,6 +44,8 @@ pub struct Span {
 pub struct Trace {
     epoch: Instant,
     spans: Arc<Mutex<Vec<Span>>>,
+    /// Next span id; 0 is reserved as [`NO_PARENT`].
+    next_id: Arc<AtomicU64>,
     /// Per-lane scalar annotations, e.g. `("infer-0", "kv_hit", 0.88)` —
     /// latest value wins. Rendered beside the lane's timeline so throughput
     /// lines carry the prefix-cache hit rate.
@@ -45,6 +63,7 @@ impl Trace {
         Trace {
             epoch: Instant::now(),
             spans: Arc::new(Mutex::new(Vec::new())),
+            next_id: Arc::new(AtomicU64::new(1)),
             notes: Arc::new(Mutex::new(Vec::new())),
         }
     }
@@ -73,11 +92,56 @@ impl Trace {
         Clock::from_epoch(self.epoch)
     }
 
+    /// Reserve a span id without recording yet — for roots (an iteration)
+    /// whose children are recorded before the root's own end is known.
+    pub fn alloc_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
     /// Record a span that started at `start_s` (from [`Trace::now`]) and ends
-    /// now.
-    pub fn record(&self, lane: &str, name: &str, start_s: f64) {
+    /// now. Returns the new span's id so callers can parent further work.
+    pub fn record(&self, lane: &str, name: &str, start_s: f64) -> u64 {
+        self.record_child(lane, name, start_s, NO_PARENT)
+    }
+
+    /// [`Trace::record`] with an explicit causal parent.
+    pub fn record_child(&self, lane: &str, name: &str, start_s: f64, parent: u64) -> u64 {
         let end_s = self.now();
+        self.push(lane, name, start_s, end_s, parent)
+    }
+
+    /// Record with explicit bounds (simulator). Returns the span's id.
+    pub fn record_abs(&self, lane: &str, name: &str, start_s: f64, end_s: f64) -> u64 {
+        self.push(lane, name, start_s, end_s, NO_PARENT)
+    }
+
+    /// [`Trace::record_abs`] with an explicit causal parent.
+    pub fn record_abs_child(
+        &self,
+        lane: &str,
+        name: &str,
+        start_s: f64,
+        end_s: f64,
+        parent: u64,
+    ) -> u64 {
+        self.push(lane, name, start_s, end_s, parent)
+    }
+
+    /// Record a span under a pre-allocated id (see [`Trace::alloc_id`]) —
+    /// how an iteration root is closed after its children already recorded
+    /// themselves against it.
+    pub fn record_reserved(
+        &self,
+        id: u64,
+        lane: &str,
+        name: &str,
+        start_s: f64,
+        end_s: f64,
+        parent: u64,
+    ) {
         lock_or_poison(&self.spans).push(Span {
+            id,
+            parent,
             lane: lane.to_string(),
             name: name.to_string(),
             start_s,
@@ -85,18 +149,29 @@ impl Trace {
         });
     }
 
-    /// Record with explicit bounds (simulator).
-    pub fn record_abs(&self, lane: &str, name: &str, start_s: f64, end_s: f64) {
-        lock_or_poison(&self.spans).push(Span {
-            lane: lane.to_string(),
-            name: name.to_string(),
-            start_s,
-            end_s,
-        });
+    fn push(&self, lane: &str, name: &str, start_s: f64, end_s: f64, parent: u64) -> u64 {
+        let id = self.alloc_id();
+        self.record_reserved(id, lane, name, start_s, end_s, parent);
+        id
     }
 
     pub fn spans(&self) -> Vec<Span> {
         lock_or_poison(&self.spans).clone()
+    }
+
+    /// The most recently *recorded* span per lane (insertion order, not end
+    /// time) — the stall watchdog's "what was each lane last doing".
+    pub fn last_span_per_lane(&self) -> Vec<Span> {
+        let spans = lock_or_poison(&self.spans);
+        let mut last: Vec<Span> = Vec::new();
+        for s in spans.iter() {
+            match last.iter_mut().find(|l| l.lane == s.lane) {
+                Some(slot) => *slot = s.clone(),
+                None => last.push(s.clone()),
+            }
+        }
+        last.sort_by(|a, b| lane_sort_key(&a.lane).cmp(&lane_sort_key(&b.lane)));
+        last
     }
 
     /// Total busy time per lane.
@@ -114,8 +189,8 @@ impl Trace {
 
     /// Machine-readable form: `{"spans": [...], "annotations": [...]}`. The
     /// annotations carry per-lane scalars (notably each engine lane's
-    /// `kv_hit` rate) so the fig3 timeline files record cache effectiveness
-    /// alongside the spans.
+    /// `kv_hit` rate and the driver's per-phase attribution) so the fig3
+    /// timeline files record cache effectiveness alongside the spans.
     pub fn to_json(&self) -> Json {
         let spans = Json::arr(self.spans().into_iter().map(|s| {
             Json::obj(vec![
@@ -133,6 +208,122 @@ impl Trace {
             ])
         }));
         Json::obj(vec![("spans", spans), ("annotations", notes)])
+    }
+
+    /// Chrome trace-event JSON (Perfetto / `chrome://tracing`-loadable):
+    /// `{"traceEvents": [...]}` with B/E duration events in microseconds.
+    ///
+    /// * One *process* (pid) per engine — any lane with a numeric suffix
+    ///   (`infer-3`, `req-3`) maps to `pid = 100 + 3` — plus pid 2 for the
+    ///   trainer (`train*` lanes) and pid 1 for everything driver-side.
+    /// * One *thread* (tid) per non-overlapping track: a lane whose spans
+    ///   overlap (concurrent slot generations) is spread greedily over
+    ///   `lane.0`, `lane.1`, ... so each tid's B/E events nest trivially.
+    /// * Every B event's `args` carries the span's causal `id`/`parent`.
+    /// * Events are globally sorted by `ts` (E before B on ties), so the
+    ///   stream is monotonic — the invariant the schema proptest pins.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut spans = self.spans();
+        spans.sort_by(|a, b| {
+            lane_sort_key(&a.lane)
+                .cmp(&lane_sort_key(&b.lane))
+                .then(a.start_s.total_cmp(&b.start_s))
+                .then(a.id.cmp(&b.id))
+        });
+
+        // Group into lanes (already sorted), then partition each lane's
+        // spans into non-overlapping tracks.
+        let mut events: Vec<(i64, u8, Json)> = Vec::new(); // (ts_us, order, event)
+        let mut named_pids: Vec<i64> = Vec::new();
+        let mut next_tid: Vec<(i64, i64)> = Vec::new(); // per-pid tid counter
+        let mut i = 0;
+        while i < spans.len() {
+            let lane = spans[i].lane.clone();
+            let mut j = i;
+            while j < spans.len() && spans[j].lane == lane {
+                j += 1;
+            }
+            let pid = lane_pid(&lane);
+            if !named_pids.contains(&pid) {
+                named_pids.push(pid);
+                events.push((i64::MIN, 0, meta_event(pid, None, "process_name", pid_name(pid))));
+            }
+            // Greedy interval partitioning: first track whose last end fits.
+            let mut tracks: Vec<f64> = Vec::new(); // last end per track
+            let mut assigned: Vec<(usize, &Span)> = Vec::new();
+            for s in &spans[i..j] {
+                let start = s.start_s.min(s.end_s);
+                let track = match tracks.iter().position(|&end| end <= start + 1e-12) {
+                    Some(t) => t,
+                    None => {
+                        tracks.push(f64::NEG_INFINITY);
+                        tracks.len() - 1
+                    }
+                };
+                tracks[track] = s.start_s.max(s.end_s);
+                assigned.push((track, s));
+            }
+            // Stable tids: tracks of a lane take consecutive tids within the
+            // lane's pid, in lane-sorted order.
+            let counter = match next_tid.iter_mut().find(|(p, _)| *p == pid) {
+                Some(c) => c,
+                None => {
+                    next_tid.push((pid, 1));
+                    // pa-lint: allow(unwrap): pushed the entry on the line above
+                    next_tid.last_mut().expect("just pushed")
+                }
+            };
+            let tid0 = counter.1;
+            counter.1 += tracks.len() as i64;
+            for (t, tid) in (0..tracks.len()).zip(tid0..) {
+                let label = if tracks.len() == 1 {
+                    lane.clone()
+                } else {
+                    format!("{lane}.{t}")
+                };
+                events.push((i64::MIN, 1, meta_event(pid, Some(tid), "thread_name", &label)));
+            }
+            for (track, s) in assigned {
+                let tid = tid0 + track as i64;
+                let ts = us(s.start_s.min(s.end_s));
+                let te = us(s.start_s.max(s.end_s)).max(ts);
+                events.push((
+                    ts,
+                    1,
+                    Json::obj(vec![
+                        ("name", Json::str(&s.name)),
+                        ("cat", Json::str(&lane)),
+                        ("ph", Json::str("B")),
+                        ("ts", Json::num(ts as f64)),
+                        ("pid", Json::num(pid as f64)),
+                        ("tid", Json::num(tid as f64)),
+                        (
+                            "args",
+                            Json::obj(vec![
+                                ("id", Json::num(s.id as f64)),
+                                ("parent", Json::num(s.parent as f64)),
+                            ]),
+                        ),
+                    ]),
+                ));
+                events.push((
+                    te,
+                    0,
+                    Json::obj(vec![
+                        ("ph", Json::str("E")),
+                        ("ts", Json::num(te as f64)),
+                        ("pid", Json::num(pid as f64)),
+                        ("tid", Json::num(tid as f64)),
+                    ]),
+                ));
+            }
+            i = j;
+        }
+        events.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+        Json::obj(vec![
+            ("traceEvents", Json::arr(events.into_iter().map(|(_, _, e)| e))),
+            ("displayTimeUnit", Json::str("ms")),
+        ])
     }
 
     /// ASCII rendering: one row per lane, `width` columns over [0, t_max].
@@ -193,6 +384,50 @@ impl Trace {
     }
 }
 
+/// Microseconds for Chrome `ts`, clamped at zero (spans never predate the
+/// epoch; tiny negative rounding artifacts must not break monotonicity).
+fn us(s: f64) -> i64 {
+    ((s * 1e6).round() as i64).max(0)
+}
+
+/// Chrome pid for a lane: numeric-suffixed lanes (`infer-3`) are engine
+/// processes (`100 + n`), `train*` lanes are the trainer (2), everything
+/// else rides the driver process (1).
+fn lane_pid(lane: &str) -> i64 {
+    let (head, suffix, _) = lane_sort_key(lane);
+    if let Some(n) = suffix {
+        if head.ends_with('-') || head.ends_with('_') {
+            return 100 + n as i64;
+        }
+    }
+    if lane.starts_with("train") {
+        2
+    } else {
+        1
+    }
+}
+
+fn pid_name(pid: i64) -> String {
+    match pid {
+        1 => "driver".to_string(),
+        2 => "trainer".to_string(),
+        n => format!("engine-{}", n - 100),
+    }
+}
+
+fn meta_event(pid: i64, tid: Option<i64>, name: &str, value: &str) -> Json {
+    let mut fields = vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+    ];
+    if let Some(t) = tid {
+        fields.push(("tid", Json::num(t as f64)));
+    }
+    fields.push(("args", Json::obj(vec![("name", Json::str(value))])));
+    Json::obj(fields)
+}
+
 /// Sort key for lane names: a trailing decimal suffix orders numerically
 /// (`infer-2` before `infer-10`), so wide fleets render in engine order; the
 /// full name breaks remaining ties lexicographically.
@@ -203,9 +438,80 @@ fn lane_sort_key(lane: &str) -> (&str, Option<u64>, &str) {
     (head, tail.parse::<u64>().ok(), lane)
 }
 
+/// Validate a parsed Chrome trace-event document against the invariants the
+/// exporter guarantees: monotonic non-decreasing `ts`, per-tid matched and
+/// alternating B/E pairs, and a stable pid/tid per (lane, track) — shared by
+/// the schema proptest and `pa-report trace`.
+pub fn validate_chrome_trace(doc: &Json) -> Result<(), String> {
+    let events = doc
+        .req("traceEvents")
+        .ok()
+        .and_then(Json::as_arr)
+        .ok_or("missing 'traceEvents' array")?;
+    let mut last_ts = f64::NEG_INFINITY;
+    // (pid, tid) -> open B count; strict alternation means depth is 0 or 1.
+    let mut open: Vec<((i64, i64), u32)> = Vec::new();
+    // tid -> lane (cat) seen, to pin pid/tid stability per lane track.
+    let mut tid_lane: Vec<((i64, i64), String)> = Vec::new();
+    for (idx, e) in events.iter().enumerate() {
+        let ph = e.req_str("ph").map_err(|_| format!("event {idx}: missing 'ph'"))?;
+        if ph == "M" {
+            continue;
+        }
+        if ph != "B" && ph != "E" {
+            return Err(format!("event {idx}: unexpected phase '{ph}'"));
+        }
+        let ts = e.req_f64("ts").map_err(|_| format!("event {idx}: missing 'ts'"))?;
+        if !ts.is_finite() || ts < 0.0 {
+            return Err(format!("event {idx}: bad ts {ts}"));
+        }
+        if ts < last_ts {
+            return Err(format!("event {idx}: ts {ts} < previous {last_ts} (not monotonic)"));
+        }
+        last_ts = ts;
+        let pid = e.req_f64("pid").map_err(|_| format!("event {idx}: missing 'pid'"))? as i64;
+        let tid = e.req_f64("tid").map_err(|_| format!("event {idx}: missing 'tid'"))? as i64;
+        let key = (pid, tid);
+        let depth = match open.iter_mut().find(|(k, _)| *k == key) {
+            Some(d) => &mut d.1,
+            None => {
+                open.push((key, 0));
+                // pa-lint: allow(unwrap): pushed the entry on the line above
+                &mut open.last_mut().expect("just pushed").1
+            }
+        };
+        if ph == "B" {
+            if *depth != 0 {
+                return Err(format!("event {idx}: B while pid {pid} tid {tid} already open"));
+            }
+            *depth = 1;
+            let lane = e.req_str("cat").map_err(|_| format!("event {idx}: B without 'cat'"))?;
+            match tid_lane.iter().find(|(k, _)| *k == key) {
+                Some((_, seen)) if seen != lane => {
+                    return Err(format!(
+                        "event {idx}: pid {pid} tid {tid} hosts lanes '{seen}' and '{lane}'"
+                    ));
+                }
+                Some(_) => {}
+                None => tid_lane.push((key, lane.to_string())),
+            }
+        } else {
+            if *depth != 1 {
+                return Err(format!("event {idx}: E without open B on pid {pid} tid {tid}"));
+            }
+            *depth = 0;
+        }
+    }
+    if let Some(((pid, tid), _)) = open.iter().find(|(_, d)| *d != 0) {
+        return Err(format!("unclosed B event on pid {pid} tid {tid}"));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
 
     #[test]
     fn records_and_renders() {
@@ -287,5 +593,163 @@ mod tests {
         let notes = j.req("annotations").unwrap().as_arr().unwrap();
         assert_eq!(notes.len(), 2);
         assert_eq!(notes[0].req_str("key").unwrap(), "kv_hit");
+    }
+
+    #[test]
+    fn span_ids_are_unique_and_parents_link() {
+        let tr = Trace::new();
+        let root = tr.alloc_id();
+        let a = tr.record_abs_child("infer-0", "gen", 0.0, 0.5, root);
+        let b = tr.record_abs_child("infer-0", "gen", 0.2, 0.9, root);
+        tr.record_reserved(root, "driver", "iter", 0.0, 1.0, NO_PARENT);
+        let spans = tr.spans();
+        assert_eq!(spans.len(), 3);
+        let mut ids: Vec<u64> = spans.iter().map(|s| s.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 3, "ids must be unique");
+        assert_ne!(a, b);
+        for s in spans.iter().filter(|s| s.lane == "infer-0") {
+            assert_eq!(s.parent, root);
+        }
+        assert_eq!(
+            spans.iter().find(|s| s.id == root).unwrap().parent,
+            NO_PARENT
+        );
+    }
+
+    #[test]
+    fn last_span_per_lane_tracks_latest() {
+        let tr = Trace::new();
+        tr.record_abs("infer-0", "step", 0.0, 0.1);
+        tr.record_abs("train", "micro", 0.0, 0.2);
+        tr.record_abs("infer-0", "drain", 0.1, 0.3);
+        let last = tr.last_span_per_lane();
+        assert_eq!(last.len(), 2);
+        assert_eq!(last[0].lane, "infer-0");
+        assert_eq!(last[0].name, "drain");
+        assert_eq!(last[1].lane, "train");
+    }
+
+    #[test]
+    fn chrome_export_maps_lanes_to_processes() {
+        let tr = Trace::new();
+        tr.record_abs("infer-0", "step", 0.0, 0.5);
+        tr.record_abs("infer-3", "step", 0.1, 0.6);
+        tr.record_abs("train", "micro", 0.2, 0.7);
+        tr.record_abs("sync", "weights", 0.0, 0.1);
+        let doc = tr.to_chrome_json();
+        validate_chrome_trace(&doc).unwrap();
+        let events = doc.req("traceEvents").unwrap().as_arr().unwrap();
+        // process metadata names driver (1), trainer (2) and engines (100+n)
+        let pids: Vec<f64> = events
+            .iter()
+            .filter(|e| e.req_str("ph").unwrap() == "M")
+            .filter(|e| e.req_str("name").unwrap() == "process_name")
+            .map(|e| e.req_f64("pid").unwrap())
+            .collect();
+        assert!(pids.contains(&1.0), "driver pid: {pids:?}");
+        assert!(pids.contains(&2.0), "trainer pid: {pids:?}");
+        assert!(pids.contains(&100.0) && pids.contains(&103.0), "engine pids: {pids:?}");
+        // B events carry causal args and microsecond timestamps
+        let b = events
+            .iter()
+            .find(|e| e.req_str("ph").unwrap() == "B" && e.req_str("cat").unwrap() == "infer-3")
+            .unwrap();
+        assert_eq!(b.req_f64("ts").unwrap(), 100_000.0);
+        assert!(b.req("args").unwrap().req_f64("id").unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn chrome_export_spreads_overlapping_spans_over_tracks() {
+        let tr = Trace::new();
+        // three mutually-overlapping generations on one engine lane
+        tr.record_abs("req-0", "gen", 0.0, 1.0);
+        tr.record_abs("req-0", "gen", 0.2, 0.8);
+        tr.record_abs("req-0", "gen", 0.4, 1.2);
+        // and a sequential pair that should share one track
+        tr.record_abs("infer-0", "step", 0.0, 0.5);
+        tr.record_abs("infer-0", "step", 0.5, 1.0);
+        let doc = tr.to_chrome_json();
+        validate_chrome_trace(&doc).unwrap();
+        let events = doc.req("traceEvents").unwrap().as_arr().unwrap();
+        let req_tids: std::collections::BTreeSet<i64> = events
+            .iter()
+            .filter(|e| e.req_str("ph").unwrap() == "B")
+            .filter(|e| e.req_str("cat").unwrap() == "req-0")
+            .map(|e| e.req_f64("tid").unwrap() as i64)
+            .collect();
+        assert_eq!(req_tids.len(), 3, "overlapping spans need distinct tracks");
+        let step_tids: std::collections::BTreeSet<i64> = events
+            .iter()
+            .filter(|e| e.req_str("ph").unwrap() == "B")
+            .filter(|e| e.req_str("cat").unwrap() == "infer-0")
+            .map(|e| e.req_f64("tid").unwrap() as i64)
+            .collect();
+        assert_eq!(step_tids.len(), 1, "sequential spans share a track");
+    }
+
+    #[test]
+    fn chrome_export_schema_holds_under_random_traces() {
+        prop::quick(
+            "chrome-trace-schema",
+            |rng, size| {
+                let tr = Trace::new();
+                let n = rng.range(0, size.scaled(120) + 1);
+                for _ in 0..n {
+                    let lane = match rng.range(0, 5) {
+                        0 => format!("infer-{}", rng.range(0, 4)),
+                        1 => format!("req-{}", rng.range(0, 4)),
+                        2 => "train".to_string(),
+                        3 => "sync".to_string(),
+                        _ => "driver".to_string(),
+                    };
+                    let start = rng.range(0, 5_000) as f64 / 1000.0;
+                    let dur = rng.range(0, 2_000) as f64 / 1000.0;
+                    let parent = rng.range(0, 3) as u64; // includes dangling parents
+                    tr.record_abs_child(&lane, "s", start, start + dur, parent);
+                }
+                tr.to_chrome_json()
+            },
+            |doc| validate_chrome_trace(doc),
+        );
+    }
+
+    #[test]
+    fn chrome_validator_rejects_malformed_streams() {
+        // non-monotonic ts
+        let bad = Json::obj(vec![(
+            "traceEvents",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("name", Json::str("a")),
+                    ("cat", Json::str("l")),
+                    ("ph", Json::str("B")),
+                    ("ts", Json::num(10.0)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(1.0)),
+                ]),
+                Json::obj(vec![
+                    ("ph", Json::str("E")),
+                    ("ts", Json::num(5.0)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(1.0)),
+                ]),
+            ]),
+        )]);
+        assert!(validate_chrome_trace(&bad).unwrap_err().contains("monotonic"));
+        // unmatched B
+        let open = Json::obj(vec![(
+            "traceEvents",
+            Json::Arr(vec![Json::obj(vec![
+                ("name", Json::str("a")),
+                ("cat", Json::str("l")),
+                ("ph", Json::str("B")),
+                ("ts", Json::num(1.0)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(1.0)),
+            ])]),
+        )]);
+        assert!(validate_chrome_trace(&open).unwrap_err().contains("unclosed"));
     }
 }

@@ -739,6 +739,74 @@ fn elastic_async_run_stays_on_policy_and_consistent() {
     assert!(stats.fetches > 0, "post-join admissions must consult the store");
 }
 
+/// Acceptance (bubble attribution): a `metrics.level = "full"` run accounts
+/// every deployed engine device-second — per iteration, producer idle plus
+/// measured engine busy time covers `wall * E` within 1% — and exports a
+/// Perfetto-loadable `trace.json` plus per-iteration snapshots carrying the
+/// same phase split it reports.
+#[test]
+fn full_run_phase_attribution_accounts_wall_clock_and_exports_trace() {
+    use pa_rl::metrics::{validate_chrome_trace, MetricsLevel};
+    use pa_rl::util::json::Json;
+    let Some((mut cfg, dir)) = artifacts() else { return };
+    cfg.name = "it_phases".into();
+    cfg.metrics.level = MetricsLevel::Full;
+    let opts = DriverOpts { mode: Mode::Async, spa: false, seed: 19 };
+    let mut driver = Driver::new(cfg.clone(), &dir, opts).unwrap();
+    let report = driver.run(2).unwrap();
+    assert_eq!(report.iters.len(), 2);
+    for it in &report.iters {
+        let p = &it.phases;
+        let deployed_engine_s = it.wall_seconds * it.engines as f64;
+        let trainer_busy = it.stats.train_seconds + it.stats.update_seconds;
+        let engine_busy = p.useful_compute_s - trainer_busy;
+        assert!(engine_busy >= 0.0, "negative engine busy time");
+        // The attribution identity: idle + busy covers the engines' deployed
+        // device-seconds. 1% slack absorbs engine-counter vs driver-wall
+        // clock skew (the only way the two sides can disagree).
+        assert!(
+            (p.producer_idle_s + engine_busy - deployed_engine_s).abs()
+                <= 0.01 * deployed_engine_s + 1e-9,
+            "iter {}: idle {:.4} + busy {:.4} != deployed {:.4} (past 1%)",
+            it.iter,
+            p.producer_idle_s,
+            engine_busy,
+            deployed_engine_s
+        );
+        assert!(
+            p.pipeline_efficiency > 0.0 && p.pipeline_efficiency <= 1.0,
+            "efficiency {} out of (0, 1]",
+            p.pipeline_efficiency
+        );
+        assert!(p.consumer_wait_s >= 0.0 && p.sync_overhead_s >= 0.0);
+        assert!(it.requests.is_some(), "full mode must stamp request timelines");
+    }
+
+    // trace.json: written by the run, parses, Chrome trace-event schema-valid.
+    let runs = dir.parent().unwrap().join("runs").join("it_phases");
+    let trace_txt =
+        std::fs::read_to_string(runs.join("trace.json")).expect("full run writes trace.json");
+    let doc = Json::parse(&trace_txt).expect("trace.json must parse");
+    validate_chrome_trace(&doc).expect("trace.json must satisfy the Perfetto schema");
+
+    // Per-iteration snapshots carry the exact phase split the report carries.
+    for it in &report.iters {
+        let snap = std::fs::read_to_string(runs.join(format!("iter_{:04}.json", it.iter)))
+            .expect("full run writes per-iteration snapshots");
+        let j = Json::parse(&snap).unwrap();
+        let eff = j
+            .req("phases")
+            .and_then(|p| p.req_f64("pipeline_efficiency"))
+            .expect("snapshot carries the phase split");
+        assert!(
+            (eff - it.phases.pipeline_efficiency).abs() < 1e-9,
+            "snapshot/report efficiency mismatch at iter {}",
+            it.iter
+        );
+    }
+    assert!(runs.join("metrics.prom").exists(), "Prometheus export written");
+}
+
 #[test]
 fn spa_driver_matches_standard_training_direction() {
     // SPA and standard async runs from the same seed should produce similar

@@ -18,6 +18,10 @@
 //!   shallower than the backlog;
 //! * metrics: registry snapshots interleaved with writers are coherent
 //!   (monotone counters, bounded mid-flight reads, exact final totals);
+//! * stall watchdog: the one-shot latch plus the full diagnostic snapshot
+//!   path (registry snapshot → `stall_snapshot_json` → re-parse, Prometheus
+//!   export, last-span-per-lane) never deadlocks and stays internally
+//!   consistent while engine threads race counter/gauge/span writes;
 //! * drain re-route: jobs regrouped after an engine drain are re-dispatched
 //!   group-affine with no loss, no duplication, and only to live engines;
 //! * seeded deadlock: an intentionally inverted shard-lock order is caught —
@@ -31,10 +35,11 @@ use pa_rl::check::thread;
 use pa_rl::check::{replay, Checker, FailureKind};
 use pa_rl::coordinator::driver::group_jobs_by_prompt;
 use pa_rl::coordinator::route::{affinity_key, route_group_residency, RouteKind, WarmthMap};
-use pa_rl::coordinator::GenJob;
+use pa_rl::coordinator::{stall_snapshot_json, GenJob, StallWatchdog, WorkerStats};
 use pa_rl::engine::kvcache::EvictPolicy;
-use pa_rl::engine::GenRequest;
-use pa_rl::metrics::Registry;
+use pa_rl::engine::{EngineStats, GenRequest};
+use pa_rl::metrics::{Registry, Trace};
+use pa_rl::util::json::Json;
 use pa_rl::store::{SharedKvStore, StoreCfg};
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -220,6 +225,118 @@ fn registry_snapshot_vs_writers_is_coherent() {
             .expect("lat histogram present");
         assert_eq!(lat.count(), 4, "final histogram count");
         assert!((lat.sum() - 4.0).abs() < 1e-9, "final histogram sum");
+    });
+    report.assert_ok();
+    assert!(
+        report.schedules >= MIN_SCHEDULES,
+        "explored only {} schedules",
+        report.schedules
+    );
+}
+
+/// The stall-watchdog diagnostic path raced against live telemetry writers:
+/// two "engine" threads hammer the exact metrics the driver maintains
+/// (the `request.completed` counter, a `phase.*` gauge, spans on their own
+/// lanes) while the "driver" thread crosses the watchdog window and
+/// assembles the same payload [`Driver::dump_stall_snapshot`] writes —
+/// registry snapshot, last-span-per-lane, [`stall_snapshot_json`], and the
+/// Prometheus export. Under every explored interleaving: nothing deadlocks
+/// (the snapshot takes the same locks the writers hold), the one-shot latch
+/// fires exactly once, mid-flight reads are bounded by the true totals, the
+/// JSON round-trips through the parser, and no lane appears twice in the
+/// last-span listing.
+#[test]
+fn watchdog_snapshot_vs_racing_telemetry_writers() {
+    let report = Checker::new().max_schedules(MAX_SCHEDULES).check(|| {
+        let reg = Arc::new(Registry::new());
+        let trace = Arc::new(Trace::new());
+        let mut handles = Vec::new();
+        for t in 0..2u64 {
+            let reg = reg.clone();
+            let trace = trace.clone();
+            handles.push(thread::spawn(move || {
+                let lane = format!("engine{t}");
+                for i in 0..2 {
+                    reg.counter("request.completed").inc();
+                    reg.gauge("phase.producer_idle_s").set((t * 2 + i) as f64);
+                    trace.record_abs(&lane, "generate", i as f64, i as f64 + 0.5);
+                }
+            }));
+        }
+
+        // Driver side: accumulate queue silence past the window; the latch
+        // must fire exactly once however the writers interleave around it.
+        let mut dog = StallWatchdog::new(1.0);
+        assert!(!dog.note_timeout(0.6), "fired before the window");
+        assert!(dog.note_timeout(0.6), "must latch when silence crosses the window");
+        assert!(!dog.note_timeout(5.0), "one-shot latch fired twice");
+
+        // The snapshot taken mid-race: the same sequence of lock
+        // acquisitions `dump_stall_snapshot` performs.
+        let snap = reg.snapshot();
+        let spans = trace.last_span_per_lane();
+        let mut lanes = HashSet::new();
+        for s in &spans {
+            assert!(lanes.insert(s.lane.clone()), "lane {} listed twice", s.lane);
+            assert!(s.end_s >= s.start_s, "span ends before it starts");
+        }
+        let completed = snap
+            .counters
+            .iter()
+            .find(|(n, _)| n == "request.completed")
+            .map(|&(_, v)| v)
+            .unwrap_or(0);
+        assert!(completed <= 4, "counter over-counted mid-flight");
+
+        let stats: Vec<WorkerStats> = (0..2)
+            .map(|e| WorkerStats {
+                engine_idx: e,
+                engine: EngineStats { busy_seconds: 1.5, ..Default::default() },
+                cache: None,
+                warm: Vec::new(),
+                pending: 3,
+                active: 1,
+            })
+            .collect();
+        let doc = stall_snapshot_json(
+            dog.stalled_s(),
+            6,
+            1,
+            &[2, 1],
+            4,
+            Some(7),
+            2,
+            &stats,
+            Some(&snap),
+            &spans,
+        );
+        let parsed = Json::parse(&doc.to_pretty()).expect("snapshot must round-trip");
+        assert_eq!(parsed.req_usize("responsive_engines").unwrap(), 2);
+        assert!(parsed.req_f64("stalled_s").unwrap() >= 1.0, "latched below the window");
+        let listed = parsed
+            .get("last_span_per_lane")
+            .and_then(Json::as_arr)
+            .map_or(0, <[Json]>::len);
+        assert_eq!(listed, spans.len(), "span listing lost lanes");
+
+        // Prometheus export takes the registry locks once more, still racing
+        // any writer that hasn't finished.
+        let prom = reg.to_prometheus();
+        assert!(prom.contains("pa_rl_request_completed"), "counter missing from export");
+        assert!(prom.contains("pa_rl_phase_producer_idle_s"), "gauge missing from export");
+
+        for h in handles {
+            h.join().expect("writer panicked");
+        }
+        let fin = reg.snapshot();
+        let total = fin
+            .counters
+            .iter()
+            .find(|(n, _)| n == "request.completed")
+            .map(|&(_, v)| v)
+            .unwrap_or(0);
+        assert_eq!(total, 4, "final counter total");
+        assert_eq!(trace.last_span_per_lane().len(), 2, "one last-span per engine lane");
     });
     report.assert_ok();
     assert!(

@@ -2,10 +2,12 @@
 """Validate BENCH_*.json perf records against the repo's schema.
 
 Usage: check_bench_json.py BENCH_micro.json [BENCH_pipeline.json ...]
-       check_bench_json.py --diff COMMITTED.json FRESH.json
+       check_bench_json.py --diff COMMITTED.json FRESH.json [COMMITTED2 FRESH2 ...]
 
-`--diff` compares a freshly measured record against the committed baseline
-and fails (exit 1) on a perf regression:
+`--diff` compares freshly measured records against their committed
+baselines, one (committed, fresh) pair at a time — CI gates both
+BENCH_micro.json and BENCH_pipeline.json in a single invocation — and
+fails (exit 1) on a perf regression:
 
   * every committed metric must still exist in the fresh record;
   * a metric measured with a real iteration count (fresh iters >
@@ -13,9 +15,10 @@ and fails (exit 1) on a perf regression:
   * a quick-clamped metric (fresh iters <= QUICK_ITERS_MAX — CI's
     PA_RL_BENCH_QUICK runs, too noisy for a tight gate) only trips the
     CATASTROPHIC_LIMIT (4x) backstop;
-  * direction comes from the unit: throughput units ("/s", "ops") regress
-    downward, everything else (ns/us/ms/pct latencies and overheads)
-    regresses upward. Metrics the baseline lacks are new and always pass.
+  * direction comes from the unit: throughput, speedup and efficiency
+    units ("/s", "ops", "x", "ratio") regress downward, everything else
+    (ns/us/ms/pct latencies and overheads) regresses upward. Metrics the
+    baseline lacks are new and always pass.
 
 Schema (emitted by rust/src/util/bench.rs::BenchRecorder):
 
@@ -102,8 +105,14 @@ def check(path):
 
 
 def higher_is_better(unit, metric):
-    """Throughputs regress downward; latencies/overheads regress upward."""
-    return "/s" in unit or unit == "ops" or metric.endswith("_per_s")
+    """Throughputs/speedups/efficiencies regress downward; latencies and
+    overheads regress upward. Mirrored by tools/pa-report."""
+    return (
+        "/s" in unit
+        or unit in ("ops", "x", "ratio")
+        or metric.endswith("_per_s")
+        or metric.endswith("_efficiency")
+    )
 
 
 def diff(committed_path, fresh_path):
@@ -148,10 +157,13 @@ def diff(committed_path, fresh_path):
 
 def main(argv):
     if len(argv) >= 2 and argv[1] == "--diff":
-        if len(argv) != 4:
+        pairs = argv[2:]
+        if not pairs or len(pairs) % 2 != 0:
             print(__doc__, file=sys.stderr)
             return 2
-        return diff(argv[2], argv[3])
+        return max(
+            diff(pairs[i], pairs[i + 1]) for i in range(0, len(pairs), 2)
+        )
     if len(argv) < 2:
         print(__doc__, file=sys.stderr)
         return 2

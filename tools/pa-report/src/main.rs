@@ -1,0 +1,539 @@
+//! `pa-report` — the human front-end for the repo's perf trajectory
+//! (`cargo run -q -p pa-report -- <subcommand>` from the workspace root).
+//!
+//! Three subcommands, all reading artifacts other parts of the repo already
+//! emit (no new instrumentation here):
+//!
+//! * `bench <fresh.json> [<baseline.json>]` — render a `BENCH_*.json`
+//!   record (rust/src/util/bench.rs::BenchRecorder schema) as an aligned
+//!   table; with a baseline, add delta columns and fail on regressions
+//!   using the same gates as `scripts/check_bench_json.py`: 25% for
+//!   properly measured metrics, a 4x backstop for quick-clamped ones
+//!   (`iters <= 10`), direction from the unit.
+//! * `diff <runA> <runB>` — compare two full-telemetry run directories
+//!   (`artifacts/runs/<name>/`, written by the driver at
+//!   `metrics.level = "full"`): per-iteration phase-attribution tables
+//!   (producer idle / consumer wait / sync / useful / efficiency) for each
+//!   run, then a mean-per-iteration comparison that fails when run B's
+//!   pipeline efficiency regresses more than 25% against run A.
+//! * `trace <trace.json>` — parse a Chrome trace-event export
+//!   (`artifacts/runs/<name>/trace.json`) and check it against the schema
+//!   Perfetto needs (monotonic `ts`, matched B/E pairs per track, stable
+//!   pid/tid) via `pa_rl::metrics::validate_chrome_trace` — CI's gate on
+//!   the exporter.
+//!
+//! Exit status 0 when clean; 1 with every finding on stderr otherwise.
+
+use pa_rl::metrics::validate_chrome_trace;
+use pa_rl::util::bench::Table;
+use pa_rl::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// `--diff` gates, mirrored from `scripts/check_bench_json.py`: quick-mode
+/// runs clamp `iters` to <= 10 and are noise-bounded only by the 4x
+/// backstop; properly measured metrics get the strict 25% gate.
+const QUICK_ITERS_MAX: f64 = 10.0;
+const REGRESSION_LIMIT: f64 = 1.25;
+const CATASTROPHIC_LIMIT: f64 = 4.0;
+
+/// Throughputs, speedups, ratios and efficiencies regress downward;
+/// latencies and overheads regress upward. Mirrors (and is mirrored by)
+/// `higher_is_better` in `scripts/check_bench_json.py`.
+fn higher_is_better(unit: &str, metric: &str) -> bool {
+    unit.contains("/s")
+        || unit == "ops"
+        || unit == "x"
+        || unit == "ratio"
+        || metric.ends_with("_per_s")
+        || metric.ends_with("_efficiency")
+}
+
+fn load_json(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+// ---------------------------------------------------------------- bench --
+
+struct BenchMetric {
+    name: String,
+    value: f64,
+    unit: String,
+    iters: f64,
+}
+
+fn parse_bench(doc: &Json, path: &str) -> Result<(String, Vec<BenchMetric>), String> {
+    let err = |e: pa_rl::util::json::JsonError| format!("{path}: {e}");
+    let bench = doc.req_str("bench").map_err(err)?.to_string();
+    let arr = doc
+        .req("metrics")
+        .map_err(err)?
+        .as_arr()
+        .ok_or_else(|| format!("{path}: 'metrics' must be an array"))?;
+    let mut out = Vec::new();
+    for m in arr {
+        out.push(BenchMetric {
+            name: m.req_str("metric").map_err(err)?.to_string(),
+            value: m.req_f64("value").map_err(err)?,
+            unit: m.req_str("unit").map_err(err)?.to_string(),
+            iters: m.f64_or("iters", 0.0),
+        });
+    }
+    Ok((bench, out))
+}
+
+/// Render the bench table (with delta columns when a baseline is given) and
+/// collect regression findings. Pure, so the gate logic is unit-testable.
+fn bench_report(
+    fresh: &Json,
+    fresh_path: &str,
+    baseline: Option<(&Json, &str)>,
+) -> Result<(String, Vec<String>), String> {
+    let (name, metrics) = parse_bench(fresh, fresh_path)?;
+    let base = match baseline {
+        Some((doc, path)) => Some(parse_bench(doc, path)?.1),
+        None => None,
+    };
+    let mut findings = Vec::new();
+    let header: &[&str] = if base.is_some() {
+        &["Metric", "Value", "Unit", "Iters", "Baseline", "Delta", "Gate"]
+    } else {
+        &["Metric", "Value", "Unit", "Iters"]
+    };
+    let mut t = Table::new(&format!("BENCH '{name}' ({fresh_path})"), header);
+    for m in &metrics {
+        let mut row = vec![
+            m.name.clone(),
+            format!("{}", m.value),
+            m.unit.clone(),
+            format!("{}", m.iters as u64),
+        ];
+        if let Some(base) = &base {
+            match base.iter().find(|b| b.name == m.name) {
+                None => row.extend(["(new)".into(), "-".into(), "pass".into()]),
+                Some(b) if b.value <= 0.0 || m.value <= 0.0 => {
+                    // Analytic zeros / degenerate baselines carry no ratio.
+                    row.extend([format!("{}", b.value), "-".into(), "no-ratio".into()]);
+                }
+                Some(b) => {
+                    let quick = m.iters <= QUICK_ITERS_MAX;
+                    let limit = if quick { CATASTROPHIC_LIMIT } else { REGRESSION_LIMIT };
+                    let ratio = if higher_is_better(&m.unit, &m.name) {
+                        b.value / m.value
+                    } else {
+                        m.value / b.value
+                    };
+                    let gate = if ratio > limit {
+                        findings.push(format!(
+                            "{fresh_path}: metric '{}' regressed {ratio:.2}x \
+                             (limit {limit}x{}): {} -> {} {}",
+                            m.name,
+                            if quick { ", quick backstop" } else { "" },
+                            b.value,
+                            m.value,
+                            m.unit,
+                        ));
+                        "FAIL".to_string()
+                    } else {
+                        "pass".to_string()
+                    };
+                    row.extend([format!("{}", b.value), format!("{ratio:.2}x"), gate]);
+                }
+            }
+        }
+        t.row(&row);
+    }
+    if let Some(base) = &base {
+        for b in base {
+            if !metrics.iter().any(|m| m.name == b.name) {
+                findings.push(format!(
+                    "{fresh_path}: metric '{}' vanished vs the baseline",
+                    b.name
+                ));
+            }
+        }
+    }
+    Ok((t.render(), findings))
+}
+
+// ----------------------------------------------------------------- diff --
+
+/// One iteration's phase attribution, from `iter_NNNN.json`'s `phases`
+/// object (written by the driver at `metrics.level = "full"`).
+#[derive(Debug, Clone, Copy, Default)]
+struct IterPhases {
+    iter: usize,
+    idle: f64,
+    wait: f64,
+    sync: f64,
+    useful: f64,
+    eff: f64,
+}
+
+/// Load every `iter_*.json` under a full-telemetry run directory, in
+/// iteration order. Errors when the directory holds none — the usual cause
+/// is a run at `metrics.level = "basic"`, which writes no snapshots.
+fn load_run(dir: &Path) -> Result<Vec<IterPhases>, String> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("iter_") && n.ends_with(".json"))
+        })
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        return Err(format!(
+            "{}: no iter_*.json snapshots — was the run at metrics.level = \"full\"?",
+            dir.display()
+        ));
+    }
+    let mut out = Vec::new();
+    for p in paths {
+        let doc = load_json(&p)?;
+        let phases = doc
+            .req("phases")
+            .map_err(|e| format!("{}: {e} (pre-attribution run?)", p.display()))?;
+        out.push(IterPhases {
+            iter: doc.f64_or("iter", out.len() as f64) as usize,
+            idle: phases.f64_or("producer_idle_s", 0.0),
+            wait: phases.f64_or("consumer_wait_s", 0.0),
+            sync: phases.f64_or("sync_overhead_s", 0.0),
+            useful: phases.f64_or("useful_compute_s", 0.0),
+            eff: phases.f64_or("pipeline_efficiency", 0.0),
+        });
+    }
+    Ok(out)
+}
+
+fn phase_table(name: &str, iters: &[IterPhases]) -> String {
+    let mut t = Table::new(
+        &format!("Phase attribution: {name}"),
+        &["Iter", "Idle (s)", "Wait (s)", "Sync (s)", "Useful (s)", "Efficiency"],
+    );
+    for p in iters {
+        t.row(&[
+            format!("{}", p.iter),
+            format!("{:.3}", p.idle),
+            format!("{:.3}", p.wait),
+            format!("{:.3}", p.sync),
+            format!("{:.3}", p.useful),
+            format!("{:.1}%", p.eff * 100.0),
+        ]);
+    }
+    t.render()
+}
+
+fn mean<F: Fn(&IterPhases) -> f64>(iters: &[IterPhases], f: F) -> f64 {
+    if iters.is_empty() {
+        0.0
+    } else {
+        iters.iter().map(f).sum::<f64>() / iters.len() as f64
+    }
+}
+
+/// Compare the per-iteration means of two runs; B regresses when a
+/// lower-is-better phase grows (or efficiency shrinks) past the 25% gate.
+/// Near-zero baselines (< 1 ms) carry no ratio and never flag.
+fn diff_report(
+    a_name: &str,
+    a: &[IterPhases],
+    b_name: &str,
+    b: &[IterPhases],
+) -> (String, Vec<String>) {
+    let mut findings = Vec::new();
+    let mut t = Table::new(
+        &format!("Mean per iteration: {a_name} (A) vs {b_name} (B)"),
+        &["Phase", "A", "B", "Ratio", "Gate"],
+    );
+    let rows: [(&str, fn(&IterPhases) -> f64, bool); 5] = [
+        ("producer_idle_s", |p| p.idle, false),
+        ("consumer_wait_s", |p| p.wait, false),
+        ("sync_overhead_s", |p| p.sync, false),
+        ("useful_compute_s", |p| p.useful, true),
+        ("pipeline_efficiency", |p| p.eff, true),
+    ];
+    for (label, f, hib) in rows {
+        let (va, vb) = (mean(a, f), mean(b, f));
+        let (ratio, gate) = if va < 1e-3 || vb < 1e-3 {
+            (None, "no-ratio".to_string())
+        } else {
+            let r = if hib { va / vb } else { vb / va };
+            let gate = if r > REGRESSION_LIMIT {
+                findings.push(format!(
+                    "phase '{label}' regressed {r:.2}x (limit {REGRESSION_LIMIT}x): \
+                     {va:.3} -> {vb:.3}"
+                ));
+                "FAIL".to_string()
+            } else {
+                "pass".to_string()
+            };
+            (Some(r), gate)
+        };
+        t.row(&[
+            label.to_string(),
+            format!("{va:.3}"),
+            format!("{vb:.3}"),
+            ratio.map_or("-".to_string(), |r| format!("{r:.2}x")),
+            gate,
+        ]);
+    }
+    (t.render(), findings)
+}
+
+// ---------------------------------------------------------------- trace --
+
+fn trace_report(doc: &Json, path: &str) -> Result<String, String> {
+    validate_chrome_trace(doc).map_err(|e| format!("{path}: {e}"))?;
+    let events = doc
+        .req("traceEvents")
+        .ok()
+        .and_then(Json::as_arr)
+        .map_or(0, <[Json]>::len);
+    Ok(format!("trace OK: {path} ({events} events, Perfetto-loadable)"))
+}
+
+// ----------------------------------------------------------------- main --
+
+const USAGE: &str = "usage: pa-report bench <fresh.json> [<baseline.json>]
+       pa-report diff <runA-dir> <runB-dir>
+       pa-report trace <trace.json>";
+
+fn run(args: &[String]) -> Result<Vec<String>, String> {
+    match args {
+        [cmd, fresh] if cmd == "bench" => {
+            let doc = load_json(Path::new(fresh))?;
+            let (table, findings) = bench_report(&doc, fresh, None)?;
+            print!("{table}");
+            Ok(findings)
+        }
+        [cmd, fresh, base] if cmd == "bench" => {
+            let doc = load_json(Path::new(fresh))?;
+            let base_doc = load_json(Path::new(base))?;
+            let (table, findings) =
+                bench_report(&doc, fresh, Some((&base_doc, base.as_str())))?;
+            print!("{table}");
+            Ok(findings)
+        }
+        [cmd, run_a, run_b] if cmd == "diff" => {
+            let a = load_run(Path::new(run_a))?;
+            let b = load_run(Path::new(run_b))?;
+            print!("{}", phase_table(run_a, &a));
+            print!("{}", phase_table(run_b, &b));
+            let (table, findings) = diff_report(run_a, &a, run_b, &b);
+            print!("{table}");
+            Ok(findings)
+        }
+        [cmd, trace] if cmd == "trace" => {
+            let doc = load_json(Path::new(trace))?;
+            println!("{}", trace_report(&doc, trace)?);
+            Ok(Vec::new())
+        }
+        [h] if h == "-h" || h == "--help" => {
+            println!("{USAGE}");
+            Ok(Vec::new())
+        }
+        _ => Err(USAGE.to_string()),
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Err(e) => {
+            eprintln!("pa-report: {e}");
+            ExitCode::FAILURE
+        }
+        Ok(findings) if findings.is_empty() => ExitCode::SUCCESS,
+        Ok(findings) => {
+            for f in &findings {
+                eprintln!("pa-report: {f}");
+            }
+            eprintln!("pa-report: {} regression(s)", findings.len());
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bench_doc(metrics: &[(&str, f64, &str, f64)]) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("t")),
+            ("source", Json::str("test")),
+            (
+                "metrics",
+                Json::arr(metrics.iter().map(|(n, v, u, i)| {
+                    Json::obj(vec![
+                        ("metric", Json::str(n)),
+                        ("value", Json::num(*v)),
+                        ("unit", Json::str(u)),
+                        ("iters", Json::num(*i)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    #[test]
+    fn direction_follows_unit_and_name() {
+        assert!(higher_is_better("ops/s", "m"));
+        assert!(higher_is_better("tokens/s/device", "m"));
+        assert!(higher_is_better("x", "sim_async_speedup_x"));
+        assert!(higher_is_better("ratio", "m"));
+        assert!(higher_is_better("s", "pipeline_efficiency"));
+        assert!(!higher_is_better("ns/token", "m"));
+        assert!(!higher_is_better("us/call", "m"));
+        assert!(!higher_is_better("%", "overhead_pct"));
+    }
+
+    #[test]
+    fn bench_without_baseline_renders_and_passes() {
+        let doc = bench_doc(&[("a", 10.0, "us/call", 100.0)]);
+        let (table, findings) = bench_report(&doc, "f.json", None).unwrap();
+        assert!(table.contains("a"));
+        assert!(table.contains("us/call"));
+        assert!(findings.is_empty());
+    }
+
+    #[test]
+    fn bench_latency_regression_flags_past_25pct() {
+        let base = bench_doc(&[("lat", 100.0, "us/call", 100.0)]);
+        let ok = bench_doc(&[("lat", 120.0, "us/call", 100.0)]);
+        let bad = bench_doc(&[("lat", 130.0, "us/call", 100.0)]);
+        let (_, f) = bench_report(&ok, "f", Some((&base, "b"))).unwrap();
+        assert!(f.is_empty(), "{f:?}");
+        let (t, f) = bench_report(&bad, "f", Some((&base, "b"))).unwrap();
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(t.contains("FAIL"));
+    }
+
+    #[test]
+    fn bench_throughput_regresses_downward_only() {
+        let base = bench_doc(&[("tps", 100.0, "ops/s", 100.0)]);
+        let up = bench_doc(&[("tps", 200.0, "ops/s", 100.0)]);
+        let down = bench_doc(&[("tps", 70.0, "ops/s", 100.0)]);
+        assert!(bench_report(&up, "f", Some((&base, "b"))).unwrap().1.is_empty());
+        assert_eq!(bench_report(&down, "f", Some((&base, "b"))).unwrap().1.len(), 1);
+    }
+
+    #[test]
+    fn bench_quick_iters_get_4x_backstop() {
+        let base = bench_doc(&[("lat", 100.0, "us/call", 100.0)]);
+        let noisy = bench_doc(&[("lat", 300.0, "us/call", 5.0)]);
+        let awful = bench_doc(&[("lat", 500.0, "us/call", 5.0)]);
+        assert!(bench_report(&noisy, "f", Some((&base, "b"))).unwrap().1.is_empty());
+        assert_eq!(bench_report(&awful, "f", Some((&base, "b"))).unwrap().1.len(), 1);
+    }
+
+    #[test]
+    fn bench_new_and_vanished_metrics() {
+        let base = bench_doc(&[("gone", 1.0, "us", 100.0)]);
+        let fresh = bench_doc(&[("new", 1.0, "us", 100.0)]);
+        let (t, f) = bench_report(&fresh, "f", Some((&base, "b"))).unwrap();
+        assert!(t.contains("(new)"));
+        assert_eq!(f.len(), 1);
+        assert!(f[0].contains("vanished"));
+    }
+
+    #[test]
+    fn bench_non_positive_values_skip_the_ratio() {
+        let base = bench_doc(&[("m", 0.0, "us", 0.0)]);
+        let fresh = bench_doc(&[("m", 5.0, "us", 0.0)]);
+        let (t, f) = bench_report(&fresh, "f", Some((&base, "b"))).unwrap();
+        assert!(f.is_empty(), "{f:?}");
+        assert!(t.contains("no-ratio"));
+    }
+
+    fn phases(iter: usize, idle: f64, eff: f64) -> IterPhases {
+        IterPhases { iter, idle, wait: 0.5, sync: 0.2, useful: 8.0, eff }
+    }
+
+    #[test]
+    fn diff_flags_efficiency_drop_and_idle_growth() {
+        let a = vec![phases(0, 1.0, 0.8), phases(1, 1.0, 0.8)];
+        let b = vec![phases(0, 2.0, 0.5), phases(1, 2.0, 0.5)];
+        let (table, findings) = diff_report("a", &a, "b", &b);
+        assert!(table.contains("pipeline_efficiency"));
+        assert!(findings.iter().any(|f| f.contains("pipeline_efficiency")));
+        assert!(findings.iter().any(|f| f.contains("producer_idle_s")));
+    }
+
+    #[test]
+    fn diff_passes_on_equal_runs() {
+        let a = vec![phases(0, 1.0, 0.8)];
+        let (_, findings) = diff_report("a", &a, "b", &a.clone());
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn diff_near_zero_baselines_carry_no_ratio() {
+        let a = vec![IterPhases { iter: 0, ..Default::default() }];
+        let b = vec![IterPhases { iter: 0, idle: 5.0, ..Default::default() }];
+        let (table, findings) = diff_report("a", &a, "b", &b);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert!(table.contains("no-ratio"));
+    }
+
+    #[test]
+    fn run_dir_loads_iter_snapshots_in_order() {
+        let dir = std::env::temp_dir().join("pa_report_run_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (i, eff) in [(1usize, 0.5), (0, 0.4)] {
+            let doc = Json::obj(vec![
+                ("iter", Json::num(i as f64)),
+                (
+                    "phases",
+                    Json::obj(vec![
+                        ("producer_idle_s", Json::num(1.0)),
+                        ("consumer_wait_s", Json::num(0.1)),
+                        ("sync_overhead_s", Json::num(0.2)),
+                        ("useful_compute_s", Json::num(4.0)),
+                        ("pipeline_efficiency", Json::num(eff)),
+                    ]),
+                ),
+            ]);
+            std::fs::write(dir.join(format!("iter_{i:04}.json")), doc.to_pretty()).unwrap();
+        }
+        // A non-iteration file in the same dir is ignored.
+        std::fs::write(dir.join("metrics.prom"), "x 1\n").unwrap();
+        let run = load_run(&dir).unwrap();
+        assert_eq!(run.len(), 2);
+        assert_eq!((run[0].iter, run[1].iter), (0, 1));
+        assert!((run[0].eff - 0.4).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_dir_without_snapshots_errors_helpfully() {
+        let dir = std::env::temp_dir().join("pa_report_empty_run_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = load_run(&dir).unwrap_err();
+        assert!(err.contains("metrics.level"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_subcommand_accepts_a_real_export() {
+        let trace = pa_rl::metrics::Trace::new();
+        trace.record_abs("infer-0", "step", 0.0, 0.5);
+        trace.record_abs("train", "micro", 0.2, 0.9);
+        let doc = trace.to_chrome_json();
+        let report = trace_report(&doc, "t.json").unwrap();
+        assert!(report.contains("trace OK"));
+    }
+
+    #[test]
+    fn trace_subcommand_rejects_garbage() {
+        let doc = Json::obj(vec![("nope", Json::num(1.0))]);
+        assert!(trace_report(&doc, "t.json").is_err());
+    }
+}
