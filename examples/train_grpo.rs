@@ -22,6 +22,12 @@
 //! weight-synced before they can receive work, drains finish in-flight
 //! rollouts and re-route the rest — the run stays strictly on-policy and
 //! loses nothing.
+//!
+//! `--engines N`, `--temperature T`, and `--dump-rollouts PATH` serve the
+//! placement-independence gate: override the fleet size and sampling
+//! temperature, then dump every request's sampled token/logprob stream
+//! (JSONL, sorted by request id). Two runs that differ only in fleet shape
+//! must produce byte-identical dumps — see docs/DETERMINISM.md.
 
 use pa_rl::config::{Config, FleetEvent};
 use pa_rl::coordinator::{evaluate, Driver, DriverOpts, Mode};
@@ -43,8 +49,22 @@ fn main() -> anyhow::Result<()> {
     let eval_n = args.usize_or("eval", 0);
     let seed = args.u64_or("seed", 0);
     let csv_path = args.get("csv").map(PathBuf::from);
+    let dump_rollouts = args.get("dump-rollouts").map(PathBuf::from);
 
     let mut cfg = Config::load(Path::new(&config_path))?;
+    // --engines N / --temperature T override the config so the determinism
+    // gate (scripts/determinism_gate.sh) can diff rollout streams across
+    // fleet shapes without per-shape config files (docs/DETERMINISM.md).
+    if let Some(n) = args.get("engines") {
+        cfg.rl.n_engines = n
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--engines expects an integer, got '{n}'"))?;
+    }
+    if let Some(t) = args.get("temperature") {
+        cfg.engine.temperature = t
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--temperature expects a float, got '{t}'"))?;
+    }
     // --metrics basic|full overrides the config's telemetry level (full
     // stamps request timelines and writes per-iteration snapshots under
     // artifacts/runs/<name>/ — see docs/OBSERVABILITY.md).
@@ -91,6 +111,13 @@ fn main() -> anyhow::Result<()> {
     // ---- RL -------------------------------------------------------------
     let opts = DriverOpts { mode, spa, seed };
     let mut driver = Driver::new(cfg.clone(), &artifacts, opts)?;
+    // --dump-rollouts PATH records every (request_id, tokens, logprobs)
+    // triple and writes them sorted by request id after the run — two runs
+    // with different fleet shapes must produce byte-identical files
+    // (docs/DETERMINISM.md describes the oracle-diff recipe).
+    if dump_rollouts.is_some() {
+        driver.record_rollouts(true);
+    }
     if let Some(params) = warm {
         driver.set_policy(params)?;
     }
@@ -190,6 +217,36 @@ fn main() -> anyhow::Result<()> {
     if let Some(c) = csv.as_mut() {
         c.flush()?;
         println!("curve written to {}", csv_path.unwrap().display());
+    }
+    if let Some(path) = &dump_rollouts {
+        // Engine index is deliberately omitted: it is placement metadata and
+        // the one field allowed to differ between fleet shapes. f32 Display
+        // is shortest-roundtrip, so equal bytes <=> equal bits.
+        let records = driver.take_rollout_records();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::new();
+        for r in &records {
+            let toks: Vec<String> = r.tokens.iter().map(|t| t.to_string()).collect();
+            // f32 Display renders NaN/inf as bare tokens that are not valid
+            // JSON; a poisoned rollout must not make the whole dump
+            // unparseable.
+            let lps: Vec<String> = r
+                .logprobs
+                .iter()
+                .map(|l| if l.is_finite() { l.to_string() } else { "null".to_string() })
+                .collect();
+            out.push_str(&format!(
+                "{{\"request_id\":{},\"weight_version\":{},\"tokens\":[{}],\"logprobs\":[{}]}}\n",
+                r.request_id,
+                r.weight_version,
+                toks.join(","),
+                lps.join(",")
+            ));
+        }
+        std::fs::write(path, out)?;
+        println!("rollout streams ({} records) written to {}", records.len(), path.display());
     }
     if eval_n > 0 {
         let after = evaluate(&cfg, &artifacts, driver.trainer().policy(), eval_n)?;

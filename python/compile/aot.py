@@ -29,7 +29,9 @@ from jax._src.lib import xla_client as xc
 from . import config as cfgmod
 from . import model
 
-MANIFEST_VERSION = 4
+# v5: decode takes per-slot `seeds` [n_slots] i32 (one per request stream)
+# instead of a scalar `seed` — the placement-independent sampling change.
+MANIFEST_VERSION = 5
 
 
 def to_hlo_text(lowered):
@@ -108,7 +110,7 @@ def artifact_specs(cfg, attn_impl):
     specs["decode"] = (
         model.make_decode(cfg),
         model.decode_example_args(cfg),
-        _param_names() + ["kv", "tokens", "pos", "active", "seed", "temperature", "top_p"],
+        _param_names() + ["kv", "tokens", "pos", "active", "seeds", "temperature", "top_p"],
         ["kv", "tokens", "logprobs", "pos", "active"],
     )
     specs["adam_update"] = (

@@ -528,11 +528,16 @@ def prefill_chunk_example_args(cfg):
     ]
 
 
-def sample_token(logits, key, temperature, top_p, top_k):
-    """Temperature / top-p / top-k sampling (greedy when temperature ~ 0).
+def truncate_logits(logits, temperature, top_p, top_k):
+    """Temperature-scale [B, V] logits and apply the top-k / top-p masks.
 
-    logits: [B, V]; returns (tokens [B] i32, logprob [B] under the sampling
-    distribution).
+    Top-k tie rule (mirrored by the host sampler in
+    `rust/src/engine/sampler.rs`): every token whose scaled logit is >= the
+    k-th largest value is kept, so ties at the cutoff widen the support past
+    `top_k` — ties are never broken by token index. NaN logits fail the
+    `>= kth` comparison and are masked out.
+
+    Returns masked scaled logits (dropped tokens at -1e30).
     """
     v = logits.shape[-1]
     scaled = logits / jnp.maximum(temperature, 1e-6)
@@ -549,8 +554,34 @@ def sample_token(logits, key, temperature, top_p, top_k):
     keep = jnp.zeros_like(keep_sorted).at[
         jnp.arange(logits.shape[0])[:, None], sort_idx
     ].set(keep_sorted)
-    masked = jnp.where(keep, scaled, -1e30)
+    return jnp.where(keep, scaled, -1e30)
+
+
+def sample_token(logits, key, temperature, top_p, top_k):
+    """Temperature / top-p / top-k sampling (greedy when temperature ~ 0).
+
+    logits: [B, V], one shared key for the whole batch; returns (tokens [B]
+    i32, logprob [B] under the sampling distribution). See `truncate_logits`
+    for the top-k tie rule shared with the host sampler.
+    """
+    masked = truncate_logits(logits, temperature, top_p, top_k)
     sampled = jax.random.categorical(key, masked, axis=-1)
+    greedy = jnp.argmax(logits, axis=-1)
+    tok = jnp.where(temperature > 1e-6, sampled, greedy).astype(jnp.int32)
+    lp = kref.logprob_gather_ref(masked, tok)
+    return tok, lp
+
+
+def sample_token_per_slot(logits, keys, temperature, top_p, top_k):
+    """Like `sample_token` but with one PRNG key per row (keys: [B, 2]).
+
+    Each slot draws from its own request's stream, so a slot's sampled token
+    is a pure function of that request's (seed, step) — independent of which
+    batch-mates share the decode chunk. This is what makes rollouts
+    bit-identical across fleet sizes and placements at temperature > 0.
+    """
+    masked = truncate_logits(logits, temperature, top_p, top_k)
+    sampled = jax.vmap(jax.random.categorical)(keys, masked)
     greedy = jnp.argmax(logits, axis=-1)
     tok = jnp.where(temperature > 1e-6, sampled, greedy).astype(jnp.int32)
     lp = kref.logprob_gather_ref(masked, tok)
@@ -562,7 +593,9 @@ def make_decode(cfg):
 
     Signature: params (12), kv [cache], tokens [B] i32 (each slot's current
     last token), pos [B] i32 (cache index where that token's K/V goes),
-    active [B] i32, seed () i32, temperature () f32, top_p () f32
+    active [B] i32, seeds [B] i32 (per-slot, each derived on the host from
+    the occupying request's own stream at its current decode step),
+    temperature () f32, top_p () f32
       -> (kv', out_tokens [B, C] i32, out_logprobs [B, C] f32,
           new_pos [B] i32, new_active [B] i32).
 
@@ -581,8 +614,11 @@ def make_decode(cfg):
 
     def step(*args):
         p = params_dict(args[0:n])
-        kv0, tok0, pos0, active0, seed, temperature, top_p = args[n:]
-        key = jax.random.PRNGKey(seed)
+        kv0, tok0, pos0, active0, seeds, temperature, top_p = args[n:]
+        # One base key per slot: the chunk-local step offset is folded in
+        # below, so token (base_step + step_i) of a request depends only on
+        # its own seed — never on batch composition.
+        keys = jax.vmap(jax.random.PRNGKey)(seeds)
         layer_stack = tuple(p[name] for name in LAYER_PARAMS)
 
         def one_step(carry, step_i):
@@ -623,8 +659,8 @@ def make_decode(cfg):
             x, kv = jax.lax.scan(layer, x, (layer_stack, kv))
             x = rmsnorm(x, p["ln_f"], m.rmsnorm_eps)
             logits = x @ p["lm_head"]  # [B, V]
-            k_step = jax.random.fold_in(key, step_i)
-            nxt, lp = sample_token(logits, k_step, temperature, top_p, e.top_k)
+            k_step = jax.vmap(jax.random.fold_in, in_axes=(0, None))(keys, step_i)
+            nxt, lp = sample_token_per_slot(logits, k_step, temperature, top_p, e.top_k)
             is_active = active > 0
             tok_out = jnp.where(is_active, nxt, PAD_ID).astype(jnp.int32)
             lp_out = jnp.where(is_active, lp, 0.0)
@@ -651,7 +687,7 @@ def decode_example_args(cfg):
         jax.ShapeDtypeStruct((b,), jnp.int32),
         jax.ShapeDtypeStruct((b,), jnp.int32),
         jax.ShapeDtypeStruct((b,), jnp.int32),
-        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),  # per-slot seeds
         jax.ShapeDtypeStruct((), jnp.float32),
         jax.ShapeDtypeStruct((), jnp.float32),
     ]

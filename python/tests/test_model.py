@@ -259,7 +259,7 @@ class TestEngineSteps:
         for chunk in range(2):
             kv, toks, lps, pos, active = decode(
                 *flat, kv, tok, pos, active,
-                jnp.asarray(chunk, jnp.int32),
+                jnp.full((b,), chunk, jnp.int32),
                 jnp.asarray(0.0, jnp.float32),  # greedy
                 jnp.asarray(1.0, jnp.float32),
             )
@@ -285,7 +285,7 @@ class TestEngineSteps:
         active = jnp.zeros((b,), jnp.int32)  # nothing active
         kv2, toks, lps, pos2, act2 = decode(
             *flat, kv, tok, pos, active,
-            jnp.asarray(0, jnp.int32), jnp.asarray(1.0, jnp.float32), jnp.asarray(1.0, jnp.float32),
+            jnp.zeros((b,), jnp.int32), jnp.asarray(1.0, jnp.float32), jnp.asarray(1.0, jnp.float32),
         )
         assert np.all(np.asarray(toks) == model.PAD_ID)
         assert np.all(np.asarray(pos2) == np.asarray(pos))
@@ -320,7 +320,7 @@ class TestEngineSteps:
         active = jnp.ones((b,), jnp.int32)
         _, toks, _, pos2, act2 = decode(
             *flat, kv, tok, pos, active,
-            jnp.asarray(0, jnp.int32), jnp.asarray(0.0, jnp.float32), jnp.asarray(1.0, jnp.float32),
+            jnp.zeros((b,), jnp.int32), jnp.asarray(0.0, jnp.float32), jnp.asarray(1.0, jnp.float32),
         )
         toks = np.asarray(toks)
         assert np.all(toks[:, 0] == model.EOS_ID)
@@ -428,7 +428,7 @@ class TestChunkedPrefill:
             active = jnp.zeros((b,), jnp.int32).at[slot].set(1)
             kv2, toks, _, _, _ = decode(
                 *flat, jnp.asarray(kv), tok, pos, active,
-                jnp.asarray(0, jnp.int32),
+                jnp.zeros((b,), jnp.int32),
                 jnp.asarray(0.0, jnp.float32),  # greedy
                 jnp.asarray(1.0, jnp.float32),
             )
@@ -471,6 +471,34 @@ class TestSampler:
                 logits, jax.random.PRNGKey(seed), jnp.asarray(1.0), jnp.asarray(1.0), 2
             )
             assert int(tok[0]) in (0, 1)
+
+    def test_top_k_keeps_all_tokens_tied_at_cutoff(self):
+        # Tie rule (shared with rust/src/engine/sampler.rs): all tokens tied
+        # at the k-th value stay in the support, so top_k=2 over
+        # {2.0, 1.0, 1.0, 1.0} keeps four tokens and never the fifth.
+        logits = jnp.asarray([[2.0, 1.0, 1.0, 1.0, -4.0]])
+        seen = set()
+        for seed in range(300):
+            tok, _ = model.sample_token(
+                logits, jax.random.PRNGKey(seed), jnp.asarray(1.0), jnp.asarray(1.0), 2
+            )
+            seen.add(int(tok[0]))
+        assert seen == {0, 1, 2, 3}, f"cutoff ties broken: sampled {sorted(seen)}"
+
+    def test_per_slot_sampling_independent_of_batchmates(self):
+        # The placement-independence contract: a slot's token depends only on
+        # its own key and logits row, not on which rows share the batch.
+        row = jnp.asarray([0.3, 1.1, -0.5, 0.8, 0.0])
+        key = jax.random.fold_in(jax.random.PRNGKey(1234), 7)
+        outs = []
+        for other in (-2.0, 3.0):  # vary the batch-mate's logits
+            logits = jnp.stack([row, jnp.full((5,), other)])
+            keys = jnp.stack([key, jax.random.PRNGKey(99)])
+            tok, lp = model.sample_token_per_slot(
+                logits, keys, jnp.asarray(1.0), jnp.asarray(0.9), 3
+            )
+            outs.append((int(tok[0]), float(lp[0])))
+        assert outs[0] == outs[1], f"slot 0 depends on batch-mate: {outs}"
 
 
 class TestAdam:

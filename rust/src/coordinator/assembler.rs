@@ -106,6 +106,7 @@ mod tests {
 
     fn mk_rollout(prompt_id: u64, sample_idx: usize, reward: f32) -> ScoredRollout {
         ScoredRollout {
+            request_id: prompt_id * 100 + sample_idx as u64,
             prompt_id,
             sample_idx,
             weight_version: 1,

@@ -38,6 +38,11 @@ pub fn evaluate(
 
     let mut correct = 0usize;
     let mut total_len = 0usize;
+    // Request ids are the enumeration index — assigned deterministically at
+    // enqueue, like the driver's dispatch-order ids. Greedy evaluation never
+    // consumes the per-request sampling streams, but keeping the id scheme
+    // deterministic means a temperature>0 eval would inherit
+    // placement-independent sampling for free.
     let prompts: Vec<_> = (0..n as u64).map(|i| gen.eval_prompt(i)).collect();
     let reqs: Vec<GenRequest> = prompts
         .iter()

@@ -80,6 +80,10 @@ pub struct GenJob {
 /// through the shared queue to the consumer.
 #[derive(Debug, Clone)]
 pub struct ScoredRollout {
+    /// Driver-minted id (assigned deterministically at enqueue, before any
+    /// routing decision): the key of the request's sampling stream, and the
+    /// join key for cross-run determinism diffs.
+    pub request_id: u64,
     pub prompt_id: u64,
     pub sample_idx: usize,
     pub weight_version: u64,

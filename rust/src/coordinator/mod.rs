@@ -23,8 +23,8 @@ pub mod worker;
 
 pub use assembler::Assembler;
 pub use driver::{
-    stall_snapshot_json, Driver, DriverOpts, IterReport, Mode, PhaseAttribution, RunReport,
-    StallWatchdog,
+    stall_snapshot_json, Driver, DriverOpts, IterReport, Mode, PhaseAttribution, RolloutRecord,
+    RunReport, StallWatchdog,
 };
 pub use eval::{evaluate, EvalReport};
 pub use messages::{DrainAck, EngineMsg, GenJob, ScoredRollout, WeightSyncAck, WorkerStats};

@@ -85,7 +85,11 @@ fn worker_main(
     rt.prepare(&artifacts)
         .with_context(|| format!("engine-{idx}: compiling artifacts"))?;
     let full_metrics = cfg.metrics.level.is_full();
-    let mut engine = Engine::new(cfg, rt, seed ^ (idx as u64).wrapping_mul(0x9E37));
+    // Every engine gets the SAME run seed: sampling is keyed per request
+    // (`(run_seed, request_id, decode_step)` streams inside the engine), so
+    // perturbing the seed by worker index would re-introduce the placement
+    // dependence this scheme exists to remove.
+    let mut engine = Engine::new(cfg, rt, seed);
     if full_metrics {
         // Full telemetry: the engine stamps admit / first-token / finish on
         // every request timeline, on the same clock as the trace spans.
@@ -171,6 +175,7 @@ fn score_and_send(
             .context("engine returned unknown request id")?;
         let score = reward::score(tokenizer, &r.tokens, job.answer);
         let rollout = ScoredRollout {
+            request_id: r.request_id,
             prompt_id: job.prompt_id,
             sample_idx: job.sample_idx,
             weight_version: r.weight_version,

@@ -50,9 +50,10 @@ mod tests {
         gather_prompt_rows, gather_rows_range, scatter_prompt_rows, EvictPolicy, KvGeometry,
         Lease, PrefixCache, PrefixCacheCfg,
     };
+    use crate::engine::sampler::{sample, SamplerCfg};
     use crate::store::{SharedKvStore, StoreCfg, StoreLease};
     use crate::util::prop;
-    use crate::util::rng::Pcg64;
+    use crate::util::rng::{Pcg64, RequestRng};
 
     #[test]
     fn plans_cover_the_suffix_exactly() {
@@ -398,6 +399,98 @@ mod tests {
         cache_a.check().unwrap();
         cache_b.check().unwrap();
         store.check().unwrap();
+    }
+
+    /// Sampling placement-independence at the admission seam: the first
+    /// response token is drawn from the request's own stream
+    /// ([`RequestRng`]) over logits the admission algebra guarantees
+    /// bit-equal — so for any assignment of requests to two mock engines
+    /// and any admission order, every request samples exactly the token the
+    /// single-engine in-order oracle samples. This is the property the old
+    /// per-engine `Pcg64` (consumed in admission order) violated at
+    /// temperature > 0.
+    #[test]
+    fn prop_first_token_sampling_is_placement_independent() {
+        prop::quick(
+            "first-token sample independent of placement and admission order",
+            |rng: &mut Pcg64, size| {
+                let run_seed = rng.next_u64();
+                let n = rng.range(2, size.scaled(10).max(2) + 2);
+                let n_templates = rng.range(1, 3);
+                let templates: Vec<Vec<u32>> = (0..n_templates)
+                    .map(|_| (0..rng.range(1, 10)).map(|_| rng.range(0, 6) as u32).collect())
+                    .collect();
+                let prompts: Vec<Vec<u32>> = (0..n)
+                    .map(|_| {
+                        let mut p = templates[rng.range(0, n_templates)].clone();
+                        p.extend((0..rng.range(0, 5)).map(|_| rng.range(0, 6) as u32));
+                        p.truncate(20); // keep within cache_len
+                        p
+                    })
+                    .collect();
+                // Fisher–Yates permutation of the admission order.
+                let mut perm: Vec<usize> = (0..n).collect();
+                for i in (1..n).rev() {
+                    let j = rng.range(0, i + 1);
+                    perm.swap(i, j);
+                }
+                // Which of the two mock engines serves each request.
+                let assign: Vec<usize> = (0..n).map(|_| rng.range(0, 2)).collect();
+                (run_seed, prompts, perm, assign)
+            },
+            |(run_seed, prompts, perm, assign)| {
+                let cfg = SamplerCfg { temperature: 1.0, top_p: 0.9, top_k: 3 };
+                // The request's own stream at step 0, over logits scaled
+                // into a range where the categorical draw is non-degenerate.
+                let first_token = |id: u64, logits: &[f32]| -> (u32, f32) {
+                    let soft: Vec<f32> = logits.iter().map(|l| l / 32.0).collect();
+                    let mut g = RequestRng::new(*run_seed, id).at_step(0);
+                    sample(&soft, &cfg, &mut g)
+                };
+                let g = tiny_geom();
+                // Oracle: one engine, dispatch order.
+                let mut oracle_tokens = Vec::new();
+                {
+                    let mut cache = mk_cache(64, 4);
+                    let mut kv = kv_slab(&g);
+                    let mut leases: Vec<Lease> = Vec::new();
+                    for (id, prompt) in prompts.iter().enumerate() {
+                        let (logits, _) = admit_mock(
+                            &mut cache,
+                            &mut kv,
+                            id % g.n_slots,
+                            prompt,
+                            &mut leases,
+                            None,
+                        );
+                        oracle_tokens.push(first_token(id as u64, &logits));
+                    }
+                }
+                // Two engines, permuted admission order: same tokens per id.
+                let mut caches = [mk_cache(64, 4), mk_cache(64, 4)];
+                let mut kvs = [kv_slab(&g), kv_slab(&g)];
+                let mut leases: [Vec<Lease>; 2] = [Vec::new(), Vec::new()];
+                for &i in perm {
+                    let e = assign[i];
+                    let (logits, _) = admit_mock(
+                        &mut caches[e],
+                        &mut kvs[e],
+                        i % g.n_slots,
+                        &prompts[i],
+                        &mut leases[e],
+                        None,
+                    );
+                    let got = first_token(i as u64, &logits);
+                    if got != oracle_tokens[i] {
+                        return Err(format!(
+                            "request {i} sampled {got:?} on engine {e}, oracle says {:?}",
+                            oracle_tokens[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     /// The acceptance proptest: for any chunk size, any prompt mix (shared

@@ -6,6 +6,14 @@
 //! temperature scaling, optional top-k, then top-p nucleus truncation that
 //! always keeps the highest-probability token, then categorical sampling;
 //! temperature <= 1e-6 means greedy argmax).
+//!
+//! Top-k tie rule (identical in both samplers): every token whose scaled
+//! logit is >= the k-th largest value is kept, so ties at the cutoff widen
+//! the support past `top_k` — ties are never broken by token index. NaN
+//! logits are masked out *in the top-k path*, matching the compiled
+//! `scaled >= kth` predicate (false for NaN); with top-k disabled a NaN
+//! row is a poisoned upstream matmul and the sampled token is garbage on
+//! both sides — neither sampler panics on it.
 
 use crate::util::rng::Pcg64;
 
@@ -36,16 +44,23 @@ pub fn sample(logits: &[f32], cfg: &SamplerCfg, rng: &mut Pcg64) -> (u32, f32) {
     let inv_t = 1.0 / cfg.temperature;
     let mut scaled: Vec<f32> = logits.iter().map(|&l| l * inv_t).collect();
 
-    // top-k: mask everything below the k-th largest.
+    // top-k: keep exactly the tokens whose scaled logit is >= the k-th
+    // largest value. Tie rule (shared with the compiled
+    // `python/compile/model.py::sample_token`, which masks via
+    // `scaled >= kth`): *all* tokens tied at the k-th value are kept, so the
+    // support may exceed `top_k` when ties straddle the cutoff — both
+    // samplers widen identically rather than breaking ties by index.
     if cfg.top_k > 0 && cfg.top_k < scaled.len() {
         let mut sorted = scaled.clone();
         // total_cmp: NaN logits (a poisoned upstream matmul) must not panic
-        // the engine thread mid-batch; NaN orders above +inf and the token
-        // sampled from a NaN row is garbage either way.
+        // the engine thread mid-batch; NaN orders above +inf here.
         sorted.sort_by(|a, b| b.total_cmp(a));
         let kth = sorted[cfg.top_k - 1];
         for s in scaled.iter_mut() {
-            if *s < kth {
+            // NaN is masked explicitly: `< kth` is false for NaN, but the
+            // compiled `jnp.where(scaled >= kth, ...)` masks NaN entries to
+            // the fill value, so the host must drop them too.
+            if *s < kth || s.is_nan() {
                 *s = f32::NEG_INFINITY;
             }
         }
@@ -138,6 +153,40 @@ mod tests {
         for _ in 0..100 {
             let (tok, _) = sample(&logits, &cfg, &mut rng);
             assert!(tok < 2, "token {tok} outside top-2");
+        }
+    }
+
+    #[test]
+    fn top_k_keeps_all_tokens_tied_at_cutoff() {
+        // Parity with python/compile/model.py::sample_token, which masks via
+        // `scaled >= kth`: every token tied at the k-th value stays in the
+        // support, so top_k=2 over {2.0, 1.0, 1.0, 1.0} keeps four tokens.
+        let mut rng = Pcg64::seeded(9);
+        let logits = vec![2.0, 1.0, 1.0, 1.0, -4.0];
+        let cfg = SamplerCfg { temperature: 1.0, top_p: 1.0, top_k: 2 };
+        let mut seen = [false; 5];
+        for _ in 0..2000 {
+            let (tok, _) = sample(&logits, &cfg, &mut rng);
+            seen[tok as usize] = true;
+        }
+        assert!(
+            seen[0] && seen[1] && seen[2] && seen[3],
+            "all tokens tied at the cutoff must stay sampleable: {seen:?}"
+        );
+        assert!(!seen[4], "below-cutoff token was sampled");
+    }
+
+    #[test]
+    fn top_k_masks_nan_like_compiled_spec() {
+        // The compiled `jnp.where(scaled >= kth, ...)` drops NaN entries
+        // (the comparison is false for NaN); the host sampler must never
+        // emit one either.
+        let mut rng = Pcg64::seeded(10);
+        let logits = vec![1.0, f32::NAN, 0.5, 0.0];
+        let cfg = SamplerCfg { temperature: 1.0, top_p: 1.0, top_k: 3 };
+        for _ in 0..500 {
+            let (tok, _) = sample(&logits, &cfg, &mut rng);
+            assert_ne!(tok, 1, "NaN logit was sampled");
         }
     }
 

@@ -11,6 +11,7 @@
 //! the pre-free-list engine.
 
 use super::kvcache::Lease;
+use crate::util::rng::RequestRng;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
@@ -19,6 +20,13 @@ use std::collections::BinaryHeap;
 pub struct InFlight {
     /// Caller-assigned request id.
     pub request_id: u64,
+    /// This request's own sampling stream, keyed by `(run_seed,
+    /// request_id)`. Every random draw for the rollout — the host-side
+    /// first-token sample and each compiled decode chunk's per-slot seed —
+    /// comes from here at the request's own decode-step counter
+    /// (`tokens.len()`), so sampled tokens are independent of which engine,
+    /// slot, or admission order served the request.
+    pub rng: RequestRng,
     /// Prompt token length (cache rows [0, prompt_len) hold the prompt).
     pub prompt_len: usize,
     /// Response tokens generated so far (including EOS when emitted).
@@ -114,6 +122,7 @@ mod tests {
     fn mk(id: u64) -> InFlight {
         InFlight {
             request_id: id,
+            rng: RequestRng::new(0, id),
             prompt_len: 4,
             tokens: vec![],
             logprobs: vec![],

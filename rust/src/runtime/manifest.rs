@@ -190,6 +190,24 @@ impl Manifest {
                 bail!("manifest/config mismatch on train.{name}: {mv} vs {cv} — re-run `make artifacts`");
             }
         }
+        // Manifests older than v5 compiled `decode` with a scalar `seed`
+        // drawn from per-engine state — sampled tokens then depend on
+        // placement. v5 decode takes per-slot `seeds` [n_slots], one per
+        // request stream. Catch the stale artifact here, not as a shape
+        // error mid-rollout.
+        if let Some(decode) = self.artifacts.get("decode") {
+            let seeds_ok = decode
+                .inputs
+                .iter()
+                .any(|t| t.name == "seeds" && t.shape == [cfg.engine.n_slots]);
+            if !seeds_ok {
+                bail!(
+                    "decode artifact predates per-request sampling streams \
+                     (needs a `seeds` input of shape [{}]) — re-run `make artifacts`",
+                    cfg.engine.n_slots
+                );
+            }
+        }
         if cfg.model.param_count() != self.param_count {
             bail!(
                 "param count mismatch: rust computes {}, manifest says {}",
@@ -228,6 +246,61 @@ mod tests {
       },
       "special_tokens": {"pad": 0, "bos": 1, "eos": 2}
     }"#;
+
+    #[test]
+    fn validate_rejects_pre_v5_scalar_decode_seed() {
+        let cfg_json = r#"{
+          "name": "unit",
+          "model": {"vocab_size": 64, "d_model": 64, "n_layers": 2, "n_heads": 4,
+                    "n_kv_heads": 2, "d_ff": 128},
+          "engine": {"n_slots": 4, "prompt_max": 16, "decode_chunk": 4, "max_new": 8},
+          "train": {"micro_bs": 2, "lr": 0.001},
+          "rl": {"batch_prompts": 4, "group_size": 4, "iters": 3, "n_engines": 2},
+          "data": {"few_shot": 1, "max_operand": 20, "seed": 7}
+        }"#;
+        let cfg =
+            crate::config::Config::from_json(&crate::util::json::Json::parse(cfg_json).unwrap())
+                .unwrap();
+        let pc = cfg.model.param_count();
+        let mk = |seed_input: &str| {
+            format!(
+                r#"{{
+          "version": 5,
+          "fingerprint": "abc",
+          "attn_impl": "jnp",
+          "config": {{
+            "model": {{"vocab_size": 64, "d_model": 64, "n_layers": 2, "n_heads": 4,
+                      "n_kv_heads": 2, "d_ff": 128}},
+            "engine": {{"n_slots": 4, "prompt_max": 16, "decode_chunk": 4, "max_new": 8,
+                       "cache_block": 16}},
+            "train": {{"micro_bs": 2, "seq_len": 24, "spa_k": 4, "spa_pack_len": 48}}
+          }},
+          "param_count": {pc},
+          "params": [{{"name": "all", "shape": [{pc}], "dtype": "float32"}}],
+          "kv_cache": {{"shape": [2, 4, 2, 24, 2, 16], "dtype": "float32"}},
+          "artifacts": {{
+            "decode": {{"file": "decode.hlo.txt",
+                       "inputs": [{seed_input}],
+                       "outputs": []}}
+          }},
+          "special_tokens": {{"pad": 0, "bos": 1, "eos": 2}}
+        }}"#
+            )
+        };
+        let dir = std::env::temp_dir().join("pa_rl_manifest_seeds_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let load = |text: &str| {
+            std::fs::write(dir.join("manifest.json"), text).unwrap();
+            Manifest::load(&dir).unwrap()
+        };
+        // Pre-v5 artifact: scalar `seed` drawn from per-engine state.
+        let stale = load(&mk(r#"{"name": "seed", "shape": [], "dtype": "int32"}"#));
+        let err = stale.validate(&cfg).unwrap_err().to_string();
+        assert!(err.contains("per-request sampling streams"), "unexpected error: {err}");
+        // v5 artifact: per-slot `seeds` [n_slots].
+        let fresh = load(&mk(r#"{"name": "seeds", "shape": [4], "dtype": "int32"}"#));
+        fresh.validate(&cfg).unwrap();
+    }
 
     #[test]
     fn parses_demo_manifest() {

@@ -8,7 +8,7 @@
 use super::queue::{multi_server_fifo, sequential_with_ready, wave_batching};
 use super::specs::{ClusterSpec, EfficiencySpec, ModelSpec, WorkloadSpec};
 use crate::metrics::{RequestMetrics, RequestTimeline, Trace};
-use crate::util::rng::Pcg64;
+use crate::util::rng::RequestRng;
 
 /// Which of the five system designs to simulate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -351,7 +351,13 @@ impl SimSetup {
         mut trace: Option<&Trace>,
         mut requests: Option<&mut RequestMetrics>,
     ) -> SimResult {
-        let mut rng = Pcg64::new(self.seed, 0x51A7);
+        // Workload draws are keyed per dispatch-order id — the sim mirror of
+        // the engine's per-request sampling streams. Ids are minted in a
+        // fixed order (prompt, then its G members), so every drawn length is
+        // a pure function of `(seed, id)`: no shared sequential generator
+        // whose consumption order could couple draws to fleet composition.
+        let draw_rng = |id: u64| RequestRng::new(self.seed ^ 0x51A7, id).at_step(0);
+        let mut next_id = 0u64;
         let reduced = self.elastic_reduced_setup();
         let warmup_iters =
             (self.iters as f64 * self.elastic_warmup_frac.clamp(0.0, 1.0)).round() as usize;
@@ -371,14 +377,19 @@ impl SimSetup {
                 _ => self,
             };
             // Sample the batch: N groups of G rollouts. Always drawn from
-            // `self` so the workload stream is identical whether or not the
-            // fleet is elastic — joins must not change what is trained.
+            // `self`'s workload spec so the stream is identical whether or
+            // not the fleet is elastic — joins must not change what is
+            // trained.
             let groups: Vec<Vec<(usize, usize)>> = (0..self.workload.batch_prompts)
                 .map(|_| {
-                    let (lp, _) = self.workload.sample(&mut rng);
+                    let mut prompt_rng = draw_rng(next_id);
+                    next_id += 1;
+                    let (lp, _) = self.workload.sample(&mut prompt_rng);
                     (0..self.workload.group_size)
                         .map(|_| {
-                            let (_, lr) = self.workload.sample(&mut rng);
+                            let mut member_rng = draw_rng(next_id);
+                            next_id += 1;
+                            let (_, lr) = self.workload.sample(&mut member_rng);
                             (lp, lr.min(self.workload.context - lp))
                         })
                         .collect()

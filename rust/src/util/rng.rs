@@ -22,6 +22,16 @@ pub struct Pcg64 {
 
 const PCG_MULT: u64 = 6364136223846793005;
 
+/// SplitMix64 step: add the golden-gamma constant, then run the finalizer.
+/// A bijection on `u64` — distinct inputs provably map to distinct outputs —
+/// which is what makes the stream derivations below collision-free.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 impl Pcg64 {
     /// Create a generator from a seed and a stream id. Different `stream`
     /// values with the same seed yield statistically independent sequences.
@@ -39,8 +49,31 @@ impl Pcg64 {
     }
 
     /// Fork an independent child stream; advances `self`.
+    ///
+    /// The stream id is splitmixed and folded into *both* the child's seed
+    /// and its increment. `new` can only honour the low 63 bits of a stream
+    /// id (the increment is `(stream << 1) | 1`), so ids whose mixed values
+    /// differ only in the top bit alias to the same increment — the seed
+    /// perturbation keeps even those children on provably distinct streams.
+    /// (The previous `stream * GOLDEN` derivation collapsed ids `a` and
+    /// `a + 2^63` to the *same* generator outright.)
     pub fn fork(&mut self, stream: u64) -> Self {
-        Self::new(self.next_u64(), stream.wrapping_mul(0x9E3779B97F4A7C15).max(1))
+        let h = splitmix64(stream);
+        Self::new(self.next_u64() ^ h, h)
+    }
+
+    /// Counter-based constructor: the generator is a pure function of
+    /// `(seed, stream)` with no parent state and no warm-up draws to share.
+    /// For a fixed seed, distinct stream ids provably yield distinct
+    /// generators: `splitmix64` is a bijection, so the derived states
+    /// differ whenever the ids do (the independently derived odd increment
+    /// additionally decorrelates the sequences). This is the substrate for
+    /// per-request sampling streams ([`RequestRng`]), where draws must be
+    /// keyed by identity, never by the order in which anything happened.
+    pub fn from_stream(seed: u64, stream: u64) -> Self {
+        let state = splitmix64(stream ^ splitmix64(seed));
+        let inc = splitmix64(stream ^ splitmix64(seed ^ 0x5851_F42D_4C95_7F2D)) | 1;
+        Pcg64 { state, inc, spare_normal: None }
     }
 
     fn next_u32(&mut self) -> u32 {
@@ -172,6 +205,51 @@ impl Pcg64 {
     }
 }
 
+/// Per-request sampling stream: every draw for a rollout is keyed by
+/// `(run_seed, request_id, decode_step)` and nothing else.
+///
+/// The stream is *counter-based* — [`RequestRng::at_step`] returns a fresh
+/// generator for one decode step as a pure function of the key, so the draw
+/// at step `k` does not depend on how many draws any other step (or any
+/// other request) made. That is exactly the property that makes sampled
+/// tokens identical across engine placements, admission orders, chunked vs.
+/// monolithic prefill, and cache on/off: the only inputs are the request's
+/// identity and its own position in its own response.
+///
+/// Distinctness is provable, not statistical: `key = splitmix64(request_id
+/// ^ splitmix64(run_seed))` is injective in `request_id` for a fixed seed
+/// (bijection composed with xor-by-constant), and [`Pcg64::from_stream`]
+/// keeps the per-step states injective in `(key, step)` the same way.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestRng {
+    /// Mixed `(run_seed, request_id)` key; distinct requests under one run
+    /// seed are guaranteed distinct keys.
+    key: u64,
+}
+
+impl RequestRng {
+    pub fn new(run_seed: u64, request_id: u64) -> RequestRng {
+        RequestRng { key: splitmix64(request_id ^ splitmix64(run_seed)) }
+    }
+
+    /// The generator for decode step `step` of this request (step 0 is the
+    /// first response token, sampled host-side from the prefill logits).
+    pub fn at_step(&self, step: u64) -> Pcg64 {
+        Pcg64::from_stream(self.key, step)
+    }
+
+    /// The compiled decode chunk's per-slot seed for the chunk whose first
+    /// sampled token is decode step `step`. The full 64-bit draw is
+    /// xor-folded into 32 bits — no truncation bias, and the `u32 -> i32`
+    /// bit-cast is lossless (the compiled sampler consumes it as raw PRNG
+    /// key material, sign included).
+    pub fn decode_seed(&self, step: u64) -> i32 {
+        let mut g = self.at_step(step);
+        let s = g.next_u64();
+        (((s >> 32) ^ s) as u32) as i32
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,6 +269,100 @@ mod tests {
         let mut b = Pcg64::new(42, 2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same < 2, "streams should be effectively independent");
+    }
+
+    /// Regression (PR 9): the old fork derivation `(stream * GOLDEN)` fed
+    /// through `new`'s `(stream << 1) | 1` discarded the product's top bit,
+    /// so ids `a` and `a + 2^63` produced the *same* child generator. The
+    /// splitmix derivation must keep adjacent and high-bit-differing ids on
+    /// distinct streams.
+    #[test]
+    fn fork_streams_distinct_for_adjacent_and_high_bit_ids() {
+        let parent = Pcg64::new(7, 3);
+        let seq = |stream: u64| {
+            let mut p = parent.clone();
+            let mut child = p.fork(stream);
+            (0..16).map(|_| child.next_u64()).collect::<Vec<_>>()
+        };
+        let ids = [0u64, 1, 2, 3, 1 << 63, (1 << 63) | 1, 42, 42 + (1 << 63)];
+        for (i, &a) in ids.iter().enumerate() {
+            for &b in &ids[i + 1..] {
+                assert_ne!(seq(a), seq(b), "fork streams {a:#x} and {b:#x} alias");
+            }
+        }
+    }
+
+    #[test]
+    fn from_stream_is_deterministic_and_streams_differ() {
+        let mut a = Pcg64::from_stream(9, 5);
+        let mut b = Pcg64::from_stream(9, 5);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // Adjacent and high-bit-differing stream ids must not alias.
+        for (x, y) in [(0u64, 1u64), (5, 6), (0, 1 << 63), (7, 7 + (1 << 63))] {
+            let mut gx = Pcg64::from_stream(9, x);
+            let mut gy = Pcg64::from_stream(9, y);
+            let same = (0..64).filter(|_| gx.next_u64() == gy.next_u64()).count();
+            assert!(same < 2, "streams {x:#x}/{y:#x} correlate ({same} equal draws)");
+        }
+    }
+
+    /// Regression (PR 9 satellite): per-request decode seeds must be
+    /// distinct across requests and reproducible across calls — the old
+    /// engine derivation (`engine_rng.next_u64() as i32`, one shared scalar
+    /// per chunk) was neither per-request nor full-width.
+    #[test]
+    fn request_decode_seeds_distinct_and_reproducible() {
+        let a = RequestRng::new(41, 0);
+        let b = RequestRng::new(41, 1);
+        for step in [0u64, 1, 17, 1 + (1 << 32)] {
+            assert_eq!(a.decode_seed(step), a.decode_seed(step), "seed must be reproducible");
+            assert_ne!(
+                a.decode_seed(step),
+                b.decode_seed(step),
+                "two requests drew the same decode seed at step {step}"
+            );
+        }
+        // Steps within one request are distinct draws too.
+        assert_ne!(a.decode_seed(1), a.decode_seed(2));
+        // And the stream is a pure function of the key: a different run
+        // seed moves every draw.
+        assert_ne!(RequestRng::new(42, 0).decode_seed(1), a.decode_seed(1));
+    }
+
+    /// Counter-based means stateless: reading step 7 first and step 0 later
+    /// yields exactly what reading them in order yields.
+    #[test]
+    fn request_stream_is_order_independent() {
+        let r = RequestRng::new(3, 99);
+        let out_of_order: Vec<u64> = [7u64, 0, 3]
+            .iter()
+            .map(|&s| {
+                let mut g = r.at_step(s);
+                g.next_u64()
+            })
+            .collect();
+        let in_order: Vec<u64> = [0u64, 3, 7]
+            .iter()
+            .map(|&s| {
+                let mut g = r.at_step(s);
+                g.next_u64()
+            })
+            .collect();
+        assert_eq!(out_of_order[1], in_order[0]);
+        assert_eq!(out_of_order[2], in_order[1]);
+        assert_eq!(out_of_order[0], in_order[2]);
+    }
+
+    #[test]
+    fn splitmix64_mixes_and_distinguishes() {
+        // Bijection smoke: no collisions over a dense low range + high bits.
+        let mut seen = std::collections::HashSet::new();
+        for x in 0..1000u64 {
+            assert!(seen.insert(splitmix64(x)));
+            assert!(seen.insert(splitmix64(x | (1 << 63))));
+        }
     }
 
     #[test]

@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# Determinism gate: placement-independent sampling (docs/DETERMINISM.md).
+#
+# Runs train_grpo twice at temperature 1.0 — a 1-engine fleet, then a
+# 2-engine fleet that joins a third engine at iteration 2 — and fails if any
+# request's sampled token/logprob stream differs between the dumps. This is
+# the end-to-end check that every random draw is keyed by
+# (run_seed, request_id, decode_step), never by engine identity, slot index,
+# batch-mates, or admission order.
+#
+# Skips loudly (exit 0) when compiled artifacts are missing and cannot be
+# built, or when the binary was built against the vendored xla stub (no PJRT
+# backend) — environments that cannot execute artifacts at all. It becomes a
+# hard gate automatically wherever a real backend is vendored.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+CONFIG="${PA_RL_DET_CONFIG:-configs/tiny.json}"
+ITERS="${PA_RL_DET_ITERS:-3}"
+OUT="${PA_RL_DET_OUT:-target/determinism-gate}"
+NAME="$(basename "$CONFIG" .json)"
+ARTIFACTS="artifacts/$NAME"
+
+if [ ! -f "$ARTIFACTS/manifest.json" ]; then
+  echo "determinism gate: $ARTIFACTS/manifest.json missing, trying to build it"
+  if ! (cd python && python3 -m compile.aot --config "../$CONFIG") \
+      || [ ! -f "$ARTIFACTS/manifest.json" ]; then
+    echo "SKIP determinism gate: no compiled artifacts for $CONFIG (need python + jax)"
+    exit 0
+  fi
+fi
+
+mkdir -p "$OUT"
+
+run() { # run <tag> <extra train_grpo flags...>
+  local tag="$1"
+  shift
+  local log="$OUT/$tag.log"
+  if ! cargo run -q --release --example train_grpo -- \
+      --config "$CONFIG" --mode sync --iters "$ITERS" --temperature 1.0 \
+      --dump-rollouts "$OUT/$tag.jsonl" "$@" >"$log" 2>&1; then
+    if grep -q "requires a PJRT backend" "$log"; then
+      echo "SKIP determinism gate: built against the vendored xla stub (no PJRT backend)"
+      exit 0
+    fi
+    echo "determinism gate: run '$tag' failed:" >&2
+    cat "$log" >&2
+    exit 1
+  fi
+}
+
+run single --engines 1
+run elastic --engines 2 --join iter:2
+
+if ! cmp -s "$OUT/single.jsonl" "$OUT/elastic.jsonl"; then
+  echo "determinism gate FAILED: rollout streams differ between fleet shapes" >&2
+  diff -u "$OUT/single.jsonl" "$OUT/elastic.jsonl" | head -40 >&2 || true
+  exit 1
+fi
+echo "determinism gate OK: $(wc -l <"$OUT/single.jsonl") per-request streams bit-identical across fleet shapes"
