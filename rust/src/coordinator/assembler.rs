@@ -5,6 +5,11 @@
 //! in the staleness ablation, across batches); the assembler buffers partial
 //! groups and releases each group the moment its G-th rollout lands — the
 //! earliest point at which GRPO advantages are computable.
+//!
+//! Ingest rejects unknown and duplicate `(prompt, sample)` pairs with an
+//! error rather than dropping them silently: that check is what the
+//! sim-fleet property suite ([`crate::sim::fleet`]) leans on for its
+//! no-job-duplicated invariant under drain/re-route schedules.
 
 use super::messages::ScoredRollout;
 use crate::data::Prompt;

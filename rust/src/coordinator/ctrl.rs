@@ -1,0 +1,626 @@
+//! Execution-agnostic coordinator control plane.
+//!
+//! The driver's dispatch/drain/join/route bookkeeping, extracted so the
+//! *same* code runs in two harnesses (docs/CONCURRENCY.md "Deterministic
+//! coordinator"):
+//!
+//! * **Real threads** (the default): [`Driver`](super::Driver) owns worker
+//!   threads and real shim channels, and feeds this module through
+//!   [`ChannelSource`]. Pure code movement — bit-identical to the
+//!   pre-refactor driver at default knobs.
+//! * **Simulated fleets**: [`crate::sim::fleet`] owns mock engine tasks on
+//!   the deterministic executor ([`super::exec`]) and feeds this module
+//!   through a virtual-time [`RolloutSource`], driving 1000-engine fleets
+//!   from seeded, replayable schedules.
+//!
+//! Everything here is single-threaded state machine + the two protocol
+//! loops the driver used to inline: the liveness-checked queue receive
+//! ([`recv_step`]) and the drain-ack pump ([`pump_drain_ack`]). Timeouts
+//! are seconds-based constants shared by both paths, so the stall watchdog
+//! and phase attribution produce identical numbers on simulated and real
+//! runs.
+
+use super::messages::{DrainAck, GenJob, ScoredRollout};
+use super::route;
+use anyhow::{bail, Result};
+
+/// Queue-receive poll window (the real path's 100 ms `recv_timeout`; the
+/// simulated path advances virtual time by the same amount).
+pub const RECV_POLL_S: f64 = 0.1;
+
+/// Drain-ack pump poll window: while waiting for a draining engine's ack,
+/// the control loop keeps consuming rollouts in slices of this long so a
+/// full queue cannot deadlock the handshake.
+pub const DRAIN_PUMP_POLL_S: f64 = 0.002;
+
+/// Bounded per-reply wait for `QueryStats` while diagnosing a possibly
+/// wedged fleet (the stall watchdog's snapshot must not hang). Shared by
+/// the real path (`Driver::worker_stats_timeout`) and the simulated fleet,
+/// so both report the same responsiveness picture.
+pub const STATS_REPLY_TIMEOUT_S: f64 = 0.2;
+
+/// One-shot stall detector over the rollout queue (`metrics.stall_timeout_s`,
+/// default off). The control loop accounts every consecutive receive timeout
+/// into it and resets it whenever a rollout arrives; when the accumulated
+/// silence first crosses the window the watchdog latches and the driver dumps
+/// a single diagnostic snapshot (stderr + `stall_snapshot.json`) instead of
+/// hanging silently. It never fires twice and never aborts the run — a
+/// stalled queue may still resolve (e.g. a slow first-iteration compile),
+/// and the all-workers-dead liveness check handles true death. Pure
+/// accounting over caller-measured durations, so real (`Instant`) and
+/// virtual clocks drive it identically.
+#[derive(Debug, Clone)]
+pub struct StallWatchdog {
+    timeout_s: f64,
+    stalled_s: f64,
+    fired: bool,
+}
+
+impl StallWatchdog {
+    pub fn new(timeout_s: f64) -> StallWatchdog {
+        StallWatchdog { timeout_s, stalled_s: 0.0, fired: false }
+    }
+
+    /// Account `dt` seconds of consecutive queue silence. Returns `true`
+    /// exactly once — when the accumulated stall first crosses the window.
+    pub fn note_timeout(&mut self, dt: f64) -> bool {
+        self.stalled_s += dt;
+        if !self.fired && self.stalled_s >= self.timeout_s {
+            self.fired = true;
+            return true;
+        }
+        false
+    }
+
+    /// A rollout arrived: the pipeline is alive. Resets the stall clock;
+    /// the one-shot latch stays latched.
+    pub fn note_progress(&mut self) {
+        self.stalled_s = 0.0;
+    }
+
+    /// Seconds of consecutive queue silence accumulated so far.
+    pub fn stalled_s(&self) -> f64 {
+        self.stalled_s
+    }
+
+    /// Whether the one-shot snapshot has already fired.
+    pub fn fired(&self) -> bool {
+        self.fired
+    }
+}
+
+/// Outcome of one bounded queue poll.
+pub enum QueuePoll {
+    Rollout(ScoredRollout),
+    /// Nothing arrived within the window; `waited_s` is how long the caller
+    /// actually waited (measured — real elapsed time or virtual advance),
+    /// which is what the watchdog accounts.
+    TimedOut { waited_s: f64 },
+}
+
+/// The control loop's view of the rollout queue plus worker liveness —
+/// the seam between the shared protocol loops and the execution substrate.
+/// [`ChannelSource`] implements it over real shim channels and thread
+/// handles; the simulated fleet implements it over executor channels and
+/// virtual time.
+pub trait RolloutSource {
+    /// Wait up to `timeout_s` for the next scored rollout. Implementations
+    /// may return early, but must report the waited duration faithfully.
+    /// `Err` means the substrate itself failed (the simulator uses this for
+    /// its silence cap — "drains always terminate" violations).
+    fn poll(&mut self, timeout_s: f64) -> Result<QueuePoll>;
+
+    /// True when every worker has exited — queue silence is then permanent.
+    fn workers_dead(&mut self) -> bool;
+}
+
+/// One step of the liveness-checked blocking receive.
+pub enum RecvStep {
+    Got(ScoredRollout),
+    /// The poll window elapsed without a rollout. `watchdog_fired` is true
+    /// exactly once per watchdog — the caller dumps its diagnostic snapshot
+    /// *during* the wait, not after it resolves.
+    Waiting { watchdog_fired: bool },
+}
+
+/// One poll of the driver's blocking queue receive, shared by the real and
+/// simulated paths. The driver holds a producer handle itself (for
+/// joiners), so channel disconnection can no longer signal worker death —
+/// instead every timed-out poll checks liveness explicitly and fails once
+/// all workers have exited with work still owed.
+pub fn recv_step<S: RolloutSource>(
+    src: &mut S,
+    watchdog: &mut Option<StallWatchdog>,
+    timeout_s: f64,
+) -> Result<RecvStep> {
+    match src.poll(timeout_s)? {
+        QueuePoll::Rollout(r) => {
+            if let Some(w) = watchdog {
+                w.note_progress();
+            }
+            Ok(RecvStep::Got(r))
+        }
+        QueuePoll::TimedOut { waited_s } => {
+            if src.workers_dead() {
+                bail!("all engine workers exited with work outstanding");
+            }
+            let fired = match watchdog {
+                Some(w) => w.note_timeout(waited_s),
+                None => false,
+            };
+            Ok(RecvStep::Waiting { watchdog_fired: fired })
+        }
+    }
+}
+
+/// One non-blocking probe of a drain-ack channel.
+pub enum AckPoll {
+    Ready(Box<DrainAck>),
+    Pending,
+    /// The ack sender dropped without sending — the engine died mid-drain.
+    Gone,
+}
+
+/// The drain handshake's pump loop, shared by the real and simulated paths:
+/// probe the ack channel; while it is pending, keep consuming rollouts (the
+/// draining engine may be blocked publishing its last completions into a
+/// full queue). Rollouts consumed during the pump are returned for the
+/// caller to ingest. A dropped ack channel surfaces as an error — a worker
+/// dying mid-drain must never hang the control loop.
+pub fn pump_drain_ack<S: RolloutSource>(
+    src: &mut S,
+    engine_idx: usize,
+    mut try_ack: impl FnMut() -> AckPoll,
+) -> Result<(DrainAck, Vec<ScoredRollout>)> {
+    let mut pumped = Vec::new();
+    loop {
+        match try_ack() {
+            AckPoll::Ready(ack) => return Ok((*ack, pumped)),
+            AckPoll::Gone => bail!("engine-{engine_idx} exited without acking the drain"),
+            AckPoll::Pending => {
+                if let QueuePoll::Rollout(r) = src.poll(DRAIN_PUMP_POLL_S)? {
+                    pumped.push(r);
+                }
+            }
+        }
+    }
+}
+
+/// [`RolloutSource`] over a real shim channel plus a worker-liveness probe
+/// (the default execution substrate). `waited_s` is measured with the real
+/// clock; any receive error (timeout or disconnect — the driver holds a
+/// sender, so disconnect cannot happen in practice) reads as a timeout,
+/// exactly as the pre-refactor driver treated it.
+pub struct ChannelSource<'a, F: FnMut() -> bool> {
+    pub rx: &'a crate::check::sync::mpsc::Receiver<ScoredRollout>,
+    pub dead: F,
+}
+
+impl<F: FnMut() -> bool> RolloutSource for ChannelSource<'_, F> {
+    fn poll(&mut self, timeout_s: f64) -> Result<QueuePoll> {
+        let t0 = std::time::Instant::now();
+        match self.rx.recv_timeout(std::time::Duration::from_secs_f64(timeout_s)) {
+            Ok(r) => Ok(QueuePoll::Rollout(r)),
+            Err(_) => Ok(QueuePoll::TimedOut { waited_s: t0.elapsed().as_secs_f64() }),
+        }
+    }
+
+    fn workers_dead(&mut self) -> bool {
+        (self.dead)()
+    }
+}
+
+/// The fleet's routing + accounting state, independent of how engines run:
+/// per-engine outstanding load, the warmth beliefs behind residency-aware
+/// dispatch, the round-robin fallback, cumulative routing counters, the
+/// global outstanding-jobs count and the request-id mint. The driver and the
+/// simulated fleet both own one of these and drive it with the same calls in
+/// the same order, which is what makes the simulation a faithful model of
+/// the real control loop.
+pub struct FleetCtrl {
+    /// Prompt-affinity routing active (falls back to round-robin when off).
+    affinity: bool,
+    /// Spill threshold in jobs (`rl.affinity_slack_groups * rl.group_size`).
+    slack: usize,
+    /// Cache block size in tokens (the affinity-key granularity).
+    cache_block: usize,
+    /// Per-template warmth beliefs driving residency-aware dispatch.
+    pub warmth: route::WarmthMap,
+    /// Outstanding jobs per engine — the router's load signal.
+    load: Vec<usize>,
+    rr_next: usize,
+    /// Cumulative routing counters (affinity / spilled groups).
+    pub route_hits: u64,
+    pub route_spills: u64,
+    outstanding: usize,
+    next_request_id: u64,
+}
+
+impl FleetCtrl {
+    pub fn new(
+        n_engines: usize,
+        affinity: bool,
+        warmth_ttl: u64,
+        slack: usize,
+        cache_block: usize,
+    ) -> FleetCtrl {
+        FleetCtrl {
+            affinity,
+            slack,
+            cache_block,
+            warmth: route::WarmthMap::with_ttl(warmth_ttl),
+            load: vec![0; n_engines],
+            rr_next: 0,
+            route_hits: 0,
+            route_spills: 0,
+            outstanding: 0,
+            next_request_id: 0,
+        }
+    }
+
+    /// Engines currently in the routing pool.
+    pub fn engines(&self) -> usize {
+        self.load.len()
+    }
+
+    /// Outstanding jobs per engine (the stall snapshot's fleet picture).
+    pub fn load(&self) -> &[usize] {
+        &self.load
+    }
+
+    /// Jobs dispatched and not yet ingested, fleet-wide.
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    /// Re-evaluate the affinity gate after a fleet resize.
+    pub fn set_affinity(&mut self, on: bool) {
+        self.affinity = on;
+    }
+
+    /// Mint the next driver-global request id.
+    pub fn mint_request_id(&mut self) -> u64 {
+        let id = self.next_request_id;
+        self.next_request_id += 1;
+        id
+    }
+
+    /// Choose the engine for one group over the current fleet: residency-
+    /// aware routing when affinity is active, the round-robin pin otherwise.
+    /// `count_route` separates fresh dispatches (counted as affinity
+    /// hits/spills) from drain re-routes (bookkeeping moves of groups that
+    /// already counted once). `store_resident` prices spills from the shared
+    /// store's coverage; it is only consulted when affinity is active.
+    pub fn pick_engine(
+        &mut self,
+        prompt_tokens: &[u32],
+        count_route: bool,
+        store_resident: impl FnOnce() -> usize,
+    ) -> usize {
+        if self.affinity {
+            // Residency-aware dispatch: prefer the engine the warmth map
+            // proves warm, consult the store's coverage to price spills.
+            let (idx, kind) = route::route_group_residency(
+                prompt_tokens,
+                self.cache_block,
+                &self.load,
+                self.slack,
+                &self.warmth,
+                store_resident(),
+            );
+            if count_route {
+                if kind.is_spill() {
+                    self.route_spills += 1;
+                } else {
+                    self.route_hits += 1;
+                }
+            }
+            // Whoever admits the group becomes the template's warm home.
+            let (key, alen) = route::affinity_key(prompt_tokens, self.cache_block);
+            self.warmth.note(key, idx, alen);
+            idx
+        } else {
+            let idx = self.rr_next % self.load.len();
+            self.rr_next += 1;
+            idx
+        }
+    }
+
+    /// Account a fresh dispatch of `n` jobs to engine `idx`.
+    pub fn note_dispatch(&mut self, idx: usize, n: usize) {
+        self.load[idx] += n;
+        self.outstanding += n;
+    }
+
+    /// Account a drain re-route of `n` jobs to engine `idx`. Re-routed jobs
+    /// are already outstanding — only the load signal moves.
+    pub fn note_reroute(&mut self, idx: usize, n: usize) {
+        self.load[idx] += n;
+    }
+
+    /// Book-keep one scored rollout off the queue. The engine-load index is
+    /// guarded: a drained engine's last completions arrive tagged with an
+    /// index that is no longer in the fleet. The global outstanding count is
+    /// *not* guarded — ingesting more than was dispatched is a control-loop
+    /// bug (it underflows loudly in debug builds).
+    pub fn note_ingest(&mut self, engine_idx: usize) {
+        self.outstanding -= 1;
+        if let Some(load) = self.load.get_mut(engine_idx) {
+            *load = load.saturating_sub(1);
+        }
+    }
+
+    /// Grow the routing pool by one engine (index = new length - 1).
+    pub fn add_engine(&mut self) {
+        self.load.push(0);
+    }
+
+    /// Shrink the routing pool from the tail (the convention the warmth
+    /// map's index compaction assumes), rebalancing warmth beliefs over the
+    /// survivors. Returns the departed engine's index.
+    pub fn remove_tail_engine(&mut self) -> usize {
+        let idx = self.load.len() - 1;
+        self.load.pop();
+        self.warmth.remove_engine(idx, self.load.len());
+        idx
+    }
+
+    /// Re-route a drained engine's returned jobs over the survivors,
+    /// group-affine: jobs regroup by prompt (first-seen order) and each
+    /// group lands whole on one engine through the same residency-aware
+    /// routing as a fresh batch — without recounting as an affinity hit and
+    /// without touching the outstanding count (the jobs never stopped being
+    /// outstanding). Returns `(target engine, jobs)` per group for the
+    /// caller to deliver.
+    pub fn reroute_drained(
+        &mut self,
+        pending: Vec<GenJob>,
+        store_resident: impl Fn(&[u32]) -> usize,
+    ) -> Vec<(usize, Vec<GenJob>)> {
+        super::driver::group_jobs_by_prompt(pending)
+            .into_iter()
+            .map(|jobs| {
+                let prompt = jobs[0].request.prompt.clone();
+                let target = self.pick_engine(&prompt, false, || store_resident(&prompt));
+                self.note_reroute(target, jobs.len());
+                (target, jobs)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::sync::mpsc;
+    use crate::coordinator::messages::WorkerStats;
+    use crate::engine::{EngineStats, GenRequest};
+
+    fn rollout(request_id: u64, engine_idx: usize) -> ScoredRollout {
+        ScoredRollout {
+            request_id,
+            prompt_id: 0,
+            sample_idx: 0,
+            weight_version: 0,
+            tokens: vec![1],
+            logprobs: vec![0.0],
+            reward: 0.0,
+            gen_seconds: 0.0,
+            engine_idx,
+            timeline: Default::default(),
+        }
+    }
+
+    /// A scripted RolloutSource: a queue of poll outcomes plus a liveness
+    /// flag, no threads involved.
+    struct Scripted {
+        polls: std::collections::VecDeque<QueuePoll>,
+        dead: bool,
+    }
+
+    impl RolloutSource for Scripted {
+        fn poll(&mut self, timeout_s: f64) -> Result<QueuePoll> {
+            Ok(self
+                .polls
+                .pop_front()
+                .unwrap_or(QueuePoll::TimedOut { waited_s: timeout_s }))
+        }
+        fn workers_dead(&mut self) -> bool {
+            self.dead
+        }
+    }
+
+    #[test]
+    fn recv_step_surfaces_worker_death_instead_of_hanging() {
+        let mut src = Scripted { polls: Default::default(), dead: true };
+        let err = recv_step(&mut src, &mut None, RECV_POLL_S).unwrap_err();
+        assert!(
+            err.to_string().contains("all engine workers exited"),
+            "got: {err}"
+        );
+    }
+
+    #[test]
+    fn recv_step_accounts_watchdog_and_resets_on_progress() {
+        let mut src = Scripted { polls: Default::default(), dead: false };
+        let mut wd = Some(StallWatchdog::new(0.25));
+        // Two silent polls accumulate 0.2s; the third crosses 0.25 and fires
+        // exactly once.
+        for _ in 0..2 {
+            match recv_step(&mut src, &mut wd, RECV_POLL_S).unwrap() {
+                RecvStep::Waiting { watchdog_fired } => assert!(!watchdog_fired),
+                RecvStep::Got(_) => panic!("nothing was queued"),
+            }
+        }
+        match recv_step(&mut src, &mut wd, RECV_POLL_S).unwrap() {
+            RecvStep::Waiting { watchdog_fired } => assert!(watchdog_fired),
+            RecvStep::Got(_) => panic!("nothing was queued"),
+        }
+        // A rollout resets the stall clock (latch stays latched).
+        src.polls.push_back(QueuePoll::Rollout(rollout(1, 0)));
+        match recv_step(&mut src, &mut wd, RECV_POLL_S).unwrap() {
+            RecvStep::Got(r) => assert_eq!(r.request_id, 1),
+            RecvStep::Waiting { .. } => panic!("a rollout was queued"),
+        }
+        let wd = wd.unwrap();
+        assert_eq!(wd.stalled_s(), 0.0);
+        assert!(wd.fired());
+    }
+
+    #[test]
+    fn recv_step_over_real_channel_reports_dead_workers() {
+        // The real-path composition: a shim channel nobody feeds plus a
+        // liveness probe that flips to dead, exactly how the driver wires
+        // ChannelSource. Must error out, not spin forever.
+        let (_tx, rx) = mpsc::sync_channel::<ScoredRollout>(4);
+        let mut calls = 0;
+        let mut src = ChannelSource {
+            rx: &rx,
+            dead: || {
+                calls += 1;
+                calls >= 2
+            },
+        };
+        let mut wd = None;
+        let err = loop {
+            match recv_step(&mut src, &mut wd, 0.005) {
+                Ok(RecvStep::Got(_)) => panic!("queue is never fed"),
+                Ok(RecvStep::Waiting { .. }) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert!(err.to_string().contains("all engine workers exited"));
+    }
+
+    fn ack(pending: Vec<GenJob>) -> DrainAck {
+        DrainAck { pending, stats: EngineStats::default(), cache: None }
+    }
+
+    #[test]
+    fn pump_drain_ack_consumes_rollouts_until_ready() {
+        let mut src = Scripted {
+            polls: [
+                QueuePoll::Rollout(rollout(7, 0)),
+                QueuePoll::TimedOut { waited_s: DRAIN_PUMP_POLL_S },
+                QueuePoll::Rollout(rollout(8, 1)),
+            ]
+            .into_iter()
+            .collect(),
+            dead: false,
+        };
+        let mut probes = 0;
+        let (got, pumped) = pump_drain_ack(&mut src, 2, || {
+            probes += 1;
+            if probes <= 3 {
+                AckPoll::Pending
+            } else {
+                AckPoll::Ready(Box::new(ack(Vec::new())))
+            }
+        })
+        .unwrap();
+        assert!(got.pending.is_empty());
+        let ids: Vec<u64> = pumped.iter().map(|r| r.request_id).collect();
+        assert_eq!(ids, vec![7, 8], "queue stays pumped while the ack is pending");
+    }
+
+    #[test]
+    fn pump_drain_ack_errors_when_the_engine_dies() {
+        let mut src = Scripted { polls: Default::default(), dead: false };
+        let err = pump_drain_ack(&mut src, 5, || AckPoll::Gone).unwrap_err();
+        assert!(err.to_string().contains("engine-5 exited without acking"));
+    }
+
+    #[test]
+    fn fleet_ctrl_round_robin_and_outstanding_accounting() {
+        let mut c = FleetCtrl::new(3, false, 0, 4, 16);
+        let picks: Vec<usize> =
+            (0..6).map(|_| c.pick_engine(&[1, 2], true, || 0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!((c.route_hits, c.route_spills), (0, 0), "rr never counts routes");
+        c.note_dispatch(1, 4);
+        assert_eq!(c.outstanding(), 4);
+        assert_eq!(c.load(), &[0, 4, 0]);
+        c.note_ingest(1);
+        c.note_ingest(99); // drained-engine index: load guarded, outstanding not
+        assert_eq!(c.outstanding(), 2);
+        assert_eq!(c.load(), &[0, 3, 0]);
+        c.note_reroute(2, 2);
+        assert_eq!(c.outstanding(), 2, "re-routes never re-count outstanding");
+        assert_eq!(c.load(), &[0, 3, 2]);
+    }
+
+    #[test]
+    fn fleet_ctrl_affinity_keeps_group_home_and_counts_routes() {
+        let mut c = FleetCtrl::new(2, true, 0, 100, 4);
+        let prompt: Vec<u32> = (0..16).collect();
+        let first = c.pick_engine(&prompt, true, || 0);
+        c.note_dispatch(first, 2);
+        // Same template routes home while slack allows, and a drain re-route
+        // (count_route = false) moves no counters.
+        let (h0, s0) = (c.route_hits, c.route_spills);
+        let again = c.pick_engine(&prompt, false, || 0);
+        assert_eq!(again, first, "warm template stays home");
+        assert_eq!((c.route_hits, c.route_spills), (h0, s0));
+        let counted = c.pick_engine(&prompt, true, || 0);
+        assert_eq!(counted, first);
+        assert!(c.route_hits > h0);
+    }
+
+    #[test]
+    fn fleet_ctrl_resize_round_trip() {
+        let mut c = FleetCtrl::new(2, false, 0, 4, 16);
+        c.add_engine();
+        assert_eq!(c.engines(), 3);
+        let departed = c.remove_tail_engine();
+        assert_eq!(departed, 2);
+        assert_eq!(c.engines(), 2);
+    }
+
+    #[test]
+    fn reroute_drained_is_group_affine_and_load_accounted() {
+        let mk = |prompt_id: u64, sample_idx: usize, rid: u64| GenJob {
+            prompt_id,
+            sample_idx,
+            request: GenRequest {
+                request_id: rid,
+                prompt: vec![prompt_id as u32; 8],
+                ..Default::default()
+            },
+            answer: 0,
+        };
+        let mut c = FleetCtrl::new(2, false, 0, 4, 16);
+        c.note_dispatch(0, 4); // the jobs being returned were outstanding
+        let routed = c.reroute_drained(
+            vec![mk(1, 0, 10), mk(2, 0, 11), mk(1, 1, 12), mk(2, 1, 13)],
+            |_| 0,
+        );
+        assert_eq!(routed.len(), 2, "two prompts, two group-affine deliveries");
+        for (_, jobs) in &routed {
+            assert!(jobs.windows(2).all(|w| w[0].prompt_id == w[1].prompt_id));
+        }
+        let total: usize = c.load().iter().sum();
+        // 4 original minus nothing ingested, plus 4 re-routed onto survivors.
+        assert_eq!(total, 8);
+        assert_eq!(c.outstanding(), 4, "re-route leaves outstanding unchanged");
+    }
+
+    #[test]
+    fn stats_reply_timeout_is_shared_and_bounded() {
+        // Satellite guard: the bounded stats query and the sim fleet must
+        // read the same constant, and it must stay well under the recv poll
+        // cadence's order of magnitude (a stall dump may query hundreds of
+        // engines).
+        assert!(STATS_REPLY_TIMEOUT_S > 0.0 && STATS_REPLY_TIMEOUT_S <= 1.0);
+        // Keep WorkerStats constructible without a live engine — the sim
+        // fleet fabricates these.
+        let ws = WorkerStats {
+            engine_idx: 3,
+            engine: EngineStats::default(),
+            cache: None,
+            warm: Vec::new(),
+            pending: 0,
+            active: 0,
+        };
+        assert_eq!(ws.engine_idx, 3);
+    }
+}

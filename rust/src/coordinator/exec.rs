@@ -1,0 +1,815 @@
+//! Deterministic single-threaded async executor + discrete-event virtual
+//! clock — the coordinator's simulation substrate.
+//!
+//! Modeled on nexosim's `st_executor`: a slab of tasks (`Pin<Box<dyn
+//! Future>>` slots with generation counters so recycled ids can't be woken
+//! by stale wakers), a FIFO ready queue fed by the wakers, a **scoped
+//! executor context** (thread-local, entered around every poll) through
+//! which tasks spawn siblings ([`spawn`]) and read virtual time ([`now`],
+//! [`sleep`]), and an explicit **run-to-quiescence** loop ([`Executor::run`]
+//! / [`Executor::step`]): poll ready tasks until none remain, then advance
+//! the [`VirtualClock`] to the next timer and continue; when neither side
+//! can make progress the system is quiescent.
+//!
+//! Everything is deterministic by construction — FIFO ready order,
+//! registration-order timer tie-breaks, no `HashMap` iteration, no wall
+//! clock, one OS thread. The ready queue and the wake flags route through
+//! the [`check::sync`](crate::check::sync) shims, the same seam the
+//! `pa_modelcheck` scheduler instruments, so the model-check suite doubles
+//! as the executor's regression harness (`docs/CONCURRENCY.md`).
+//!
+//! [`channel`] provides the matching deterministic mpsc: bounded sends
+//! park the sender exactly like the driver's bounded rollout queue, so the
+//! simulated fleet reproduces real backpressure under virtual time.
+
+use crate::check::sync::atomic::{AtomicBool, Ordering};
+use crate::check::sync::{lock_or_poison, Arc, Mutex};
+use std::cell::RefCell;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::future::Future;
+use std::pin::Pin;
+use std::rc::Rc;
+use std::task::{Context, Poll, Wake, Waker};
+
+type BoxFut = Pin<Box<dyn Future<Output = ()> + 'static>>;
+
+/// FIFO of `(slot id, generation)` pairs ready to poll. Behind a shim mutex:
+/// wakers must be `Send + Sync` by contract even though this executor never
+/// leaves its thread, and routing the wake path through `check::sync` keeps
+/// it on the model checker's seam.
+struct ReadyQueue {
+    q: Mutex<VecDeque<(usize, u64)>>,
+}
+
+/// One task's waker: re-queues the task unless it is already queued (the
+/// `queued` flag dedupes multi-wakes between polls).
+struct TaskWaker {
+    id: usize,
+    gen: u64,
+    queued: AtomicBool,
+    ready: Arc<ReadyQueue>,
+}
+
+impl Wake for TaskWaker {
+    fn wake(self: Arc<Self>) {
+        self.wake_by_ref();
+    }
+
+    fn wake_by_ref(self: &Arc<Self>) {
+        if !self.queued.swap(true, Ordering::SeqCst) {
+            lock_or_poison(&self.ready.q).push_back((self.id, self.gen));
+        }
+    }
+}
+
+struct Slot {
+    fut: Option<BoxFut>,
+    gen: u64,
+    waker: Option<Arc<TaskWaker>>,
+}
+
+/// Total order for finite virtual timestamps (timer heap key).
+#[derive(PartialEq)]
+struct Time(f64);
+
+impl Eq for Time {}
+
+impl PartialOrd for Time {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Time {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Timestamps are finite by construction: sleep() rejects NaN and
+        // advance only ever moves forward from a finite origin.
+        // pa-lint: allow(expect): finite-by-construction, see above
+        self.0.partial_cmp(&other.0).expect("virtual timestamps are finite")
+    }
+}
+
+struct Timer {
+    at: Time,
+    seq: u64,
+    waker: Waker,
+}
+
+impl PartialEq for Timer {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Timer {}
+impl PartialOrd for Timer {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Timer {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Earliest deadline first; registration order breaks ties so two
+        // sleepers due at the same instant wake deterministically.
+        self.at.cmp(&other.at).then(self.seq.cmp(&other.seq))
+    }
+}
+
+struct ClockInner {
+    now: f64,
+    seq: u64,
+    timers: BinaryHeap<Reverse<Timer>>,
+}
+
+/// Discrete-event virtual clock. Time only moves when the executor has no
+/// ready task: it jumps to the next timer deadline (or an explicit
+/// [`VirtualClock::advance_to`] bound), so a simulated second costs nothing
+/// and a simulated run is a pure function of its inputs.
+#[derive(Clone)]
+pub struct VirtualClock(Rc<RefCell<ClockInner>>);
+
+impl VirtualClock {
+    fn new() -> VirtualClock {
+        VirtualClock(Rc::new(RefCell::new(ClockInner {
+            now: 0.0,
+            seq: 0,
+            timers: BinaryHeap::new(),
+        })))
+    }
+
+    /// Current virtual time in seconds since the executor's epoch.
+    pub fn now(&self) -> f64 {
+        self.0.borrow().now
+    }
+
+    /// A future resolving `dt` virtual seconds from now (clamped to >= 0;
+    /// NaN is rejected — it would corrupt the timer order).
+    pub fn sleep(&self, dt: f64) -> Sleep {
+        assert!(!dt.is_nan(), "sleep duration must not be NaN");
+        Sleep { clock: self.clone(), deadline: self.now() + dt.max(0.0) }
+    }
+
+    /// Earliest pending timer deadline, if any.
+    pub fn next_deadline(&self) -> Option<f64> {
+        self.0.borrow().timers.peek().map(|Reverse(t)| t.at.0)
+    }
+
+    /// Advance to `t` without firing anything. Panics if a timer is due at
+    /// or before `t` (that would silently skip a scheduled wake) or if `t`
+    /// is in the past — callers advance through [`Executor::step`] instead.
+    pub fn advance_to(&self, t: f64) {
+        let mut inner = self.0.borrow_mut();
+        assert!(t >= inner.now, "virtual time cannot run backwards");
+        if let Some(Reverse(timer)) = inner.timers.peek() {
+            assert!(timer.at.0 > t, "advance_to would skip a pending timer");
+        }
+        inner.now = t;
+    }
+
+    fn register(&self, deadline: f64, waker: Waker) {
+        let mut inner = self.0.borrow_mut();
+        let seq = inner.seq;
+        inner.seq += 1;
+        inner.timers.push(Reverse(Timer { at: Time(deadline), seq, waker }));
+    }
+
+    /// Advance to the earliest timer at or before `bound` and collect every
+    /// waker due at that instant. Empty when no timer is due by `bound`.
+    fn fire_next(&self, bound: f64) -> Vec<Waker> {
+        let mut inner = self.0.borrow_mut();
+        let due = match inner.timers.peek() {
+            Some(Reverse(t)) if t.at.0 <= bound => t.at.0,
+            _ => return Vec::new(),
+        };
+        inner.now = inner.now.max(due);
+        let mut woke = Vec::new();
+        while let Some(Reverse(t)) = inner.timers.peek() {
+            if t.at.0 > inner.now {
+                break;
+            }
+            // pa-lint: allow(unwrap): peek above proved the heap non-empty
+            woke.push(inner.timers.pop().expect("peeked timer present").0.waker);
+        }
+        woke
+    }
+}
+
+/// Timer future returned by [`VirtualClock::sleep`] / [`sleep`].
+pub struct Sleep {
+    clock: VirtualClock,
+    deadline: f64,
+}
+
+impl Future for Sleep {
+    type Output = ();
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if self.clock.now() >= self.deadline {
+            Poll::Ready(())
+        } else {
+            self.clock.register(self.deadline, cx.waker().clone());
+            Poll::Pending
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scoped executor context
+// ---------------------------------------------------------------------------
+
+struct Ctx {
+    spawns: Rc<RefCell<VecDeque<BoxFut>>>,
+    clock: VirtualClock,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+struct CtxGuard;
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| c.borrow_mut().take());
+    }
+}
+
+fn enter_ctx(spawns: Rc<RefCell<VecDeque<BoxFut>>>, clock: VirtualClock) -> CtxGuard {
+    CTX.with(|c| {
+        let mut slot = c.borrow_mut();
+        assert!(slot.is_none(), "executor context is not reentrant");
+        *slot = Some(Ctx { spawns, clock });
+    });
+    CtxGuard
+}
+
+fn with_ctx<R>(f: impl FnOnce(&Ctx) -> R) -> R {
+    CTX.with(|c| {
+        let slot = c.borrow();
+        // Free-function misuse outside a poll is a programming error; the
+        // panic message says exactly what to fix.
+        let ctx = slot
+            .as_ref()
+            // pa-lint: allow(expect): misuse panics with an actionable message
+            .expect("called outside an executor poll (no scoped context)");
+        f(ctx)
+    })
+}
+
+/// Spawn a sibling task from inside a running task. The task is admitted
+/// before the executor's next poll, in spawn order. Panics outside a poll.
+pub fn spawn(fut: impl Future<Output = ()> + 'static) {
+    with_ctx(|ctx| ctx.spawns.borrow_mut().push_back(Box::pin(fut)));
+}
+
+/// Virtual time, read from inside a running task. Panics outside a poll.
+pub fn now() -> f64 {
+    with_ctx(|ctx| ctx.clock.now())
+}
+
+/// Sleep `dt` virtual seconds, from inside a running task. Panics outside a
+/// poll.
+pub fn sleep(dt: f64) -> Sleep {
+    with_ctx(|ctx| ctx.clock.sleep(dt))
+}
+
+// ---------------------------------------------------------------------------
+// The executor
+// ---------------------------------------------------------------------------
+
+/// Deterministic single-threaded executor over a slab of tasks (see module
+/// docs). Dropping it drops every live task.
+pub struct Executor {
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    live: usize,
+    polls: u64,
+    ready: Arc<ReadyQueue>,
+    pending_spawns: Rc<RefCell<VecDeque<BoxFut>>>,
+    clock: VirtualClock,
+}
+
+impl Default for Executor {
+    fn default() -> Self {
+        Executor::new()
+    }
+}
+
+impl Executor {
+    pub fn new() -> Executor {
+        Executor {
+            slots: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            polls: 0,
+            ready: Arc::new(ReadyQueue { q: Mutex::new(VecDeque::new()) }),
+            pending_spawns: Rc::new(RefCell::new(VecDeque::new())),
+            clock: VirtualClock::new(),
+        }
+    }
+
+    /// The executor's virtual clock (cheap to clone; shared handle).
+    pub fn clock(&self) -> VirtualClock {
+        self.clock.clone()
+    }
+
+    /// Tasks admitted and not yet completed.
+    pub fn live_tasks(&self) -> usize {
+        self.live
+    }
+
+    /// Total polls performed (diagnostic; deterministic per run).
+    pub fn polls(&self) -> u64 {
+        self.polls
+    }
+
+    /// Admit a task from outside any poll (the harness root does this).
+    pub fn spawn(&mut self, fut: impl Future<Output = ()> + 'static) {
+        self.admit(Box::pin(fut));
+    }
+
+    fn admit(&mut self, fut: BoxFut) {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                self.slots.push(Slot { fut: None, gen: 0, waker: None });
+                self.slots.len() - 1
+            }
+        };
+        let slot = &mut self.slots[id];
+        slot.gen += 1;
+        slot.fut = Some(fut);
+        let waker = Arc::new(TaskWaker {
+            id,
+            gen: slot.gen,
+            queued: AtomicBool::new(true),
+            ready: self.ready.clone(),
+        });
+        slot.waker = Some(waker);
+        self.live += 1;
+        lock_or_poison(&self.ready.q).push_back((id, slot.gen));
+    }
+
+    fn admit_spawned(&mut self) {
+        loop {
+            let next = self.pending_spawns.borrow_mut().pop_front();
+            match next {
+                Some(fut) => self.admit(fut),
+                None => break,
+            }
+        }
+    }
+
+    fn pop_ready(&mut self) -> Option<(usize, u64)> {
+        lock_or_poison(&self.ready.q).pop_front()
+    }
+
+    fn poll_slot(&mut self, id: usize, gen: u64) {
+        let (mut fut, waker_arc) = {
+            let slot = &mut self.slots[id];
+            if slot.gen != gen {
+                return; // stale waker from a recycled slot
+            }
+            let Some(fut) = slot.fut.take() else {
+                return; // duplicate queue entry for a finished task
+            };
+            // pa-lint: allow(unwrap): a live slot always carries its waker
+            (fut, slot.waker.clone().expect("live slot has a waker"))
+        };
+        waker_arc.queued.store(false, Ordering::SeqCst);
+        let waker = Waker::from(waker_arc);
+        let mut cx = Context::from_waker(&waker);
+        let guard = enter_ctx(self.pending_spawns.clone(), self.clock.clone());
+        self.polls += 1;
+        let done = fut.as_mut().poll(&mut cx).is_ready();
+        drop(guard);
+        let slot = &mut self.slots[id];
+        if done {
+            slot.waker = None;
+            self.free.push(id);
+            self.live -= 1;
+        } else {
+            slot.fut = Some(fut);
+        }
+        self.admit_spawned();
+    }
+
+    /// One unit of progress bounded by virtual time `deadline`: poll the
+    /// next ready task, or — when none is ready — advance the clock to the
+    /// next timer due at or before `deadline` and wake its sleepers.
+    /// Returns `false` when neither is possible (quiescent up to
+    /// `deadline`); the clock is then still at its last event, and the
+    /// caller decides whether to advance further.
+    pub fn step(&mut self, deadline: f64) -> bool {
+        self.admit_spawned();
+        if let Some((id, gen)) = self.pop_ready() {
+            self.poll_slot(id, gen);
+            return true;
+        }
+        let woke = self.clock.fire_next(deadline);
+        if woke.is_empty() {
+            return false;
+        }
+        for w in woke {
+            w.wake();
+        }
+        true
+    }
+
+    /// Run to quiescence: poll and advance until no task is ready and no
+    /// timer is pending. Returns the number of progress steps taken.
+    pub fn run(&mut self) -> u64 {
+        let mut steps = 0;
+        while self.step(f64::INFINITY) {
+            steps += 1;
+        }
+        steps
+    }
+
+    /// Run until quiescent *up to* virtual time `deadline`, then advance the
+    /// clock exactly to `deadline` (timers beyond it stay pending).
+    pub fn run_until(&mut self, deadline: f64) {
+        while self.step(deadline) {}
+        if self.clock.now() < deadline {
+            self.clock.advance_to(deadline);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic async channels
+// ---------------------------------------------------------------------------
+
+/// `try_recv` outcome (mirrors `mpsc::TryRecvError` plus the item).
+pub enum TryRecv<T> {
+    Item(T),
+    Empty,
+    /// Every sender dropped and the buffer is empty.
+    Closed,
+}
+
+/// `try_send` failure.
+#[derive(Debug)]
+pub enum TrySendError<T> {
+    Full(T),
+    Closed(T),
+}
+
+/// The receiver dropped; the value is returned to the caller.
+#[derive(Debug)]
+pub struct SendError<T>(pub T);
+
+struct ChanInner<T> {
+    buf: VecDeque<T>,
+    cap: Option<usize>,
+    recv_wakers: Vec<Waker>,
+    send_wakers: Vec<Waker>,
+    senders: usize,
+    rx_alive: bool,
+}
+
+impl<T> ChanInner<T> {
+    fn wake_receivers(&mut self) {
+        for w in self.recv_wakers.drain(..) {
+            w.wake();
+        }
+    }
+
+    fn wake_senders(&mut self) {
+        for w in self.send_wakers.drain(..) {
+            w.wake();
+        }
+    }
+}
+
+/// Sending half of a deterministic executor channel ([`channel`]).
+pub struct SimSender<T>(Rc<RefCell<ChanInner<T>>>);
+
+/// Receiving half of a deterministic executor channel ([`channel`]).
+pub struct SimReceiver<T>(Rc<RefCell<ChanInner<T>>>);
+
+/// A deterministic single-threaded mpsc channel for executor tasks.
+/// `cap = None` is unbounded (the control inboxes); `cap = Some(n)` bounds
+/// the buffer and parks senders when full (the rollout queue's
+/// backpressure). All wake-ups are FIFO and deterministic.
+pub fn channel<T>(cap: Option<usize>) -> (SimSender<T>, SimReceiver<T>) {
+    if let Some(n) = cap {
+        assert!(n > 0, "rendezvous (cap 0) channels are not supported");
+    }
+    let inner = Rc::new(RefCell::new(ChanInner {
+        buf: VecDeque::new(),
+        cap,
+        recv_wakers: Vec::new(),
+        send_wakers: Vec::new(),
+        senders: 1,
+        rx_alive: true,
+    }));
+    (SimSender(inner.clone()), SimReceiver(inner))
+}
+
+impl<T> Clone for SimSender<T> {
+    fn clone(&self) -> Self {
+        self.0.borrow_mut().senders += 1;
+        SimSender(self.0.clone())
+    }
+}
+
+impl<T> Drop for SimSender<T> {
+    fn drop(&mut self) {
+        let mut inner = self.0.borrow_mut();
+        inner.senders -= 1;
+        if inner.senders == 0 {
+            inner.wake_receivers();
+        }
+    }
+}
+
+impl<T> Drop for SimReceiver<T> {
+    fn drop(&mut self) {
+        let mut inner = self.0.borrow_mut();
+        inner.rx_alive = false;
+        inner.wake_senders();
+    }
+}
+
+impl<T> SimSender<T> {
+    /// Async send: parks on a full bounded channel until the receiver makes
+    /// room; errors (returning the value) when the receiver is gone.
+    pub fn send(&self, v: T) -> SendFut<T> {
+        SendFut { chan: self.0.clone(), v: Some(v) }
+    }
+
+    /// Non-blocking send (for the harness root, which is not a task).
+    pub fn try_send(&self, v: T) -> Result<(), TrySendError<T>> {
+        let mut inner = self.0.borrow_mut();
+        if !inner.rx_alive {
+            return Err(TrySendError::Closed(v));
+        }
+        if let Some(cap) = inner.cap {
+            if inner.buf.len() >= cap {
+                return Err(TrySendError::Full(v));
+            }
+        }
+        inner.buf.push_back(v);
+        inner.wake_receivers();
+        Ok(())
+    }
+}
+
+impl<T> SimReceiver<T> {
+    /// Async receive: `None` once every sender dropped and the buffer is
+    /// empty.
+    pub fn recv(&self) -> RecvFut<T> {
+        RecvFut { chan: self.0.clone() }
+    }
+
+    /// Non-blocking receive (for the harness root, which is not a task).
+    pub fn try_recv(&self) -> TryRecv<T> {
+        let mut inner = self.0.borrow_mut();
+        match inner.buf.pop_front() {
+            Some(v) => {
+                inner.wake_senders();
+                TryRecv::Item(v)
+            }
+            None if inner.senders == 0 => TryRecv::Closed,
+            None => TryRecv::Empty,
+        }
+    }
+
+    /// Items currently buffered.
+    pub fn len(&self) -> usize {
+        self.0.borrow().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Future returned by [`SimSender::send`].
+pub struct SendFut<T> {
+    chan: Rc<RefCell<ChanInner<T>>>,
+    v: Option<T>,
+}
+
+impl<T> Future for SendFut<T> {
+    type Output = Result<(), SendError<T>>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        // Safety not needed: no structural pinning (T is not pinned data).
+        let this = unsafe { self.get_unchecked_mut() };
+        let mut inner = this.chan.borrow_mut();
+        let v = match this.v.take() {
+            Some(v) => v,
+            None => return Poll::Ready(Ok(())), // polled after completion
+        };
+        if !inner.rx_alive {
+            return Poll::Ready(Err(SendError(v)));
+        }
+        if let Some(cap) = inner.cap {
+            if inner.buf.len() >= cap {
+                this.v = Some(v);
+                inner.send_wakers.push(cx.waker().clone());
+                return Poll::Pending;
+            }
+        }
+        inner.buf.push_back(v);
+        inner.wake_receivers();
+        Poll::Ready(Ok(()))
+    }
+}
+
+/// Future returned by [`SimReceiver::recv`].
+pub struct RecvFut<T> {
+    chan: Rc<RefCell<ChanInner<T>>>,
+}
+
+impl<T> Future for RecvFut<T> {
+    type Output = Option<T>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Self::Output> {
+        let mut inner = self.chan.borrow_mut();
+        match inner.buf.pop_front() {
+            Some(v) => {
+                inner.wake_senders();
+                Poll::Ready(Some(v))
+            }
+            None if inner.senders == 0 => Poll::Ready(None),
+            None => {
+                inner.recv_wakers.push(cx.waker().clone());
+                Poll::Pending
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tasks_run_in_spawn_order_to_quiescence() {
+        let mut ex = Executor::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for i in 0..4 {
+            let log = log.clone();
+            ex.spawn(async move {
+                log.borrow_mut().push(i);
+            });
+        }
+        assert_eq!(ex.live_tasks(), 4);
+        ex.run();
+        assert_eq!(ex.live_tasks(), 0);
+        assert_eq!(*log.borrow(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn virtual_time_fires_timers_in_deadline_then_registration_order() {
+        let mut ex = Executor::new();
+        let clock = ex.clock();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        for (name, dt) in [("late", 2.0), ("early", 1.0), ("tie-a", 1.5), ("tie-b", 1.5)] {
+            let log = log.clone();
+            let clock = clock.clone();
+            ex.spawn(async move {
+                clock.sleep(dt).await;
+                log.borrow_mut().push((name, now()));
+            });
+        }
+        ex.run();
+        let got = log.borrow().clone();
+        assert_eq!(
+            got,
+            vec![("early", 1.0), ("tie-a", 1.5), ("tie-b", 1.5), ("late", 2.0)]
+        );
+        assert_eq!(clock.now(), 2.0, "clock rests at the last event");
+    }
+
+    #[test]
+    fn scoped_context_spawns_and_sleeps() {
+        let mut ex = Executor::new();
+        let log = Rc::new(RefCell::new(Vec::new()));
+        {
+            let log = log.clone();
+            ex.spawn(async move {
+                let inner_log = log.clone();
+                spawn(async move {
+                    sleep(0.5).await;
+                    inner_log.borrow_mut().push(("child", now()));
+                });
+                log.borrow_mut().push(("parent", now()));
+            });
+        }
+        ex.run();
+        assert_eq!(*log.borrow(), vec![("parent", 0.0), ("child", 0.5)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside an executor poll")]
+    fn context_is_unavailable_outside_polls() {
+        now();
+    }
+
+    #[test]
+    fn bounded_channel_applies_backpressure_and_closes() {
+        let mut ex = Executor::new();
+        let (tx, rx) = channel::<u32>(Some(2));
+        let sent = Rc::new(RefCell::new(Vec::new()));
+        {
+            let sent = sent.clone();
+            ex.spawn(async move {
+                for i in 0..5 {
+                    tx.send(i).await.expect("receiver alive");
+                    sent.borrow_mut().push(i);
+                }
+            });
+        }
+        // Fill the buffer: the producer parks after 2 sends.
+        while ex.step(f64::INFINITY) {}
+        assert_eq!(*sent.borrow(), vec![0, 1], "cap-2 channel parks the third send");
+        // Each receive frees a slot and re-wakes the producer.
+        let mut got = Vec::new();
+        loop {
+            match rx.try_recv() {
+                TryRecv::Item(v) => got.push(v),
+                TryRecv::Empty => {
+                    if !ex.step(f64::INFINITY) {
+                        break;
+                    }
+                }
+                TryRecv::Closed => break,
+            }
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        assert_eq!(ex.live_tasks(), 0);
+    }
+
+    #[test]
+    fn send_to_dropped_receiver_errors() {
+        let mut ex = Executor::new();
+        let (tx, rx) = channel::<u32>(None);
+        drop(rx);
+        let saw_err = Rc::new(RefCell::new(false));
+        {
+            let saw_err = saw_err.clone();
+            ex.spawn(async move {
+                if tx.send(1).await.is_err() {
+                    *saw_err.borrow_mut() = true;
+                }
+            });
+        }
+        ex.run();
+        assert!(*saw_err.borrow());
+    }
+
+    #[test]
+    fn run_until_advances_clock_without_skipping_timers() {
+        let mut ex = Executor::new();
+        let clock = ex.clock();
+        let fired = Rc::new(RefCell::new(false));
+        {
+            let fired = fired.clone();
+            ex.spawn(async move {
+                sleep(10.0).await;
+                *fired.borrow_mut() = true;
+            });
+        }
+        ex.run_until(5.0);
+        assert_eq!(clock.now(), 5.0);
+        assert!(!*fired.borrow(), "timer beyond the bound must not fire");
+        ex.run_until(10.0);
+        assert!(*fired.borrow());
+    }
+
+    #[test]
+    fn identical_programs_produce_identical_poll_counts() {
+        let run = || {
+            let mut ex = Executor::new();
+            let (tx, rx) = channel::<u64>(Some(3));
+            for i in 0..8u64 {
+                let tx = tx.clone();
+                ex.spawn(async move {
+                    sleep(0.1 * (i % 4) as f64).await;
+                    let _ = tx.send(i).await;
+                });
+            }
+            drop(tx);
+            let order = Rc::new(RefCell::new(Vec::new()));
+            {
+                let order = order.clone();
+                ex.spawn(async move {
+                    while let Some(v) = rx.recv().await {
+                        order.borrow_mut().push(v);
+                    }
+                });
+            }
+            ex.run();
+            (ex.polls(), order.borrow().clone())
+        };
+        let (p1, o1) = run();
+        let (p2, o2) = run();
+        assert_eq!(p1, p2, "poll count must be deterministic");
+        assert_eq!(o1, o2, "delivery order must be deterministic");
+        assert_eq!(o1.len(), 8);
+    }
+}

@@ -1,4 +1,9 @@
 //! Messages flowing between the coordinator's threads.
+//!
+//! The simulated fleet mirrors this protocol one-for-one (`SimMsg` in
+//! [`crate::sim::fleet`]) so the shared control loops in [`super::ctrl`]
+//! exercise the same message shapes — `SetWeights`/`QueryStats`/`Drain`
+//! acks included — against mock engines on the deterministic executor.
 
 use crate::check::sync::{mpsc, Arc};
 use crate::engine::{CacheStats, EngineStats, GenRequest};

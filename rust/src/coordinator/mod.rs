@@ -15,16 +15,19 @@
 //! on the router's warmth beliefs.
 
 pub mod assembler;
+pub mod ctrl;
 pub mod driver;
 pub mod eval;
+pub mod exec;
 pub mod messages;
 pub mod route;
 pub mod worker;
 
 pub use assembler::Assembler;
+pub use ctrl::{FleetCtrl, QueuePoll, RecvStep, RolloutSource, StallWatchdog};
 pub use driver::{
     stall_snapshot_json, Driver, DriverOpts, IterReport, Mode, PhaseAttribution, RolloutRecord,
-    RunReport, StallWatchdog,
+    RunReport,
 };
 pub use eval::{evaluate, EvalReport};
 pub use messages::{DrainAck, EngineMsg, GenJob, ScoredRollout, WeightSyncAck, WorkerStats};

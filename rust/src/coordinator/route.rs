@@ -476,4 +476,88 @@ mod tests {
         }
         assert_eq!(w.lookup(1), Some((0, 4)), "TTL 0 must be the PR-4 no-decay router");
     }
+
+    /// TTL decay at fleet scale: 128 templates over 64 engines, with the
+    /// decay clock driven like the simulated fleet drives it (one `advance`
+    /// per stats sweep). Short-resident and long-resident beliefs must expire
+    /// on *different* windows, confirmation must reset the clock, and an
+    /// engine's advertisement must stay absence-authoritative — interleavings
+    /// a 2–3-engine fixture never produces.
+    #[test]
+    fn warmth_ttl_decay_across_a_64_engine_fleet() {
+        let n = 64usize;
+        let mut w = WarmthMap::with_ttl(2);
+        // Even keys: short templates (one base window of 2 epochs). Odd
+        // keys: a full RESIDENT_TTL_UNIT resident, doubling the window to 4.
+        for k in 0..128u64 {
+            let resident = if k % 2 == 0 { 32 } else { RESIDENT_TTL_UNIT };
+            w.note(k, (k as usize) % n, resident);
+        }
+        assert_eq!(w.len(), 128);
+        // Three epochs; engine 0 keeps advertising only template 0 each
+        // sweep. The first sweep drops its *other* claim (key 64 — absence
+        // on the stats channel is authoritative), leaving 127 beliefs.
+        for _ in 0..3 {
+            w.refresh_engine(0, &[(0, 32)]);
+            w.advance();
+        }
+        // clock = 3: unconfirmed shorts (window 2) have expired; the
+        // re-confirmed short survives, and every long (window 4) survives.
+        assert!(w.lookup(0).is_some(), "re-confirmed short belief must survive");
+        assert_eq!(w.lookup(2), None, "unconfirmed short belief must expire at clock 3");
+        assert!(w.lookup(1).is_some(), "long-resident belief still inside its window");
+        assert_eq!(w.len(), 64 + 1, "64 longs + the one confirmed short");
+        w.advance(); // clock = 4: longs are exactly at their window edge.
+        assert_eq!(w.len(), 65, "window is inclusive: longs live through clock 4");
+        w.advance(); // clock = 5: everything left lapses.
+        assert!(w.is_empty(), "even stretched windows expire eventually");
+    }
+
+    /// `remove_engine` rebalancing at fleet scale: shrink a 64-engine fleet
+    /// to 48 one tail-drain at a time. Survivors' beliefs must be untouched
+    /// at every step, removed engines' claims must vanish, and routing over
+    /// the shrunk fleet must send every orphaned template back to the hash
+    /// spread — always in range — while warm templates keep their homes.
+    #[test]
+    fn remove_engine_rebalances_a_64_engine_fleet() {
+        let block = 4usize;
+        let mut n = 64usize;
+        let mut w = WarmthMap::new();
+        // 96 distinct templates: engines 0..31 hold two each, 32..63 one.
+        let prompts: Vec<Vec<u32>> = (0..96u32)
+            .map(|t| {
+                let mut p: Vec<u32> = (0..8).map(|i| t * 131 + i + 1).collect();
+                p.push(100_000 + t); // tail past the block-aligned prefix
+                p
+            })
+            .collect();
+        for (i, p) in prompts.iter().enumerate() {
+            let (key, alen) = affinity_key(p, block);
+            w.note(key, i % n, alen);
+        }
+        assert_eq!(w.len(), 96, "96 distinct templates, 96 beliefs");
+        while n > 48 {
+            n -= 1;
+            w.remove_engine(n, n);
+            // Homes are i % 64: engines below n keep their claims, i >= 64
+            // wraps back under 32, so the survivor count is n + 32.
+            assert_eq!(w.len(), n + 32, "only the drained engine's claims drop");
+        }
+        let load = vec![0usize; n];
+        for (i, p) in prompts.iter().enumerate() {
+            let home = i % 64;
+            let (key, _) = affinity_key(p, block);
+            match w.lookup(key) {
+                Some((e, _)) => assert_eq!(e, home, "surviving belief must not move"),
+                None => assert!(home >= n, "in-range belief was dropped"),
+            }
+            let (e, kind) = route_group_residency(p, block, &load, 4, &w, 0);
+            assert!(e < n, "routed to a drained engine: {e} >= {n}");
+            if home < n {
+                assert_eq!((e, kind), (home, RouteKind::Warm), "warm template left home");
+            } else {
+                assert_eq!(kind, RouteKind::Hashed, "orphaned template must re-hash");
+            }
+        }
+    }
 }

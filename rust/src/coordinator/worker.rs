@@ -14,6 +14,14 @@
 //! the in-flight sequences to completion (their rollouts still flow through
 //! the shared queue), and hands the leftover jobs plus its final counters
 //! back so nothing is lost and the fleet-wide metrics stay exact.
+//!
+//! This module is the coordinator's **only** thread-creation site
+//! (pa-lint's `coordinator-threads` rule): everything the driver does with
+//! these workers runs through the shared protocol loops in
+//! [`super::ctrl`], which the simulated fleet ([`crate::sim::fleet`])
+//! drives identically over the deterministic executor ([`super::exec`])
+//! with mock engines and virtual time — see *Deterministic coordinator* in
+//! `docs/CONCURRENCY.md`.
 
 use super::messages::{DrainAck, EngineMsg, GenJob, ScoredRollout, WeightSyncAck, WorkerStats};
 use crate::config::Config;

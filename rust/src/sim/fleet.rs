@@ -1,0 +1,1049 @@
+//! Simulated N-engine fleets on the deterministic coordinator executor.
+//!
+//! This is the discrete-event half of the coordinator refactor: the *same*
+//! protocol loops the real driver runs over worker threads —
+//! [`ctrl::recv_step`] for the liveness-checked queue receive,
+//! [`ctrl::pump_drain_ack`] for the drain handshake, [`FleetCtrl`] for
+//! routing and job accounting — driven here over [`exec::Executor`] tasks,
+//! virtual time and mock engines. One engine is one executor task; the
+//! rollout queue is a bounded deterministic channel (so backpressure and the
+//! drain pump are exercised for real); generation latency is a seeded
+//! virtual-time sleep, placement-independent like the per-request RNG
+//! streams.
+//!
+//! A run is fully described by a **schedule string**, e.g.
+//!
+//! ```text
+//! simfleet/v1 e=4 i=3 b=8 g=2 tpl=4 seed=42 aff=1 ttl=0 sv=1 cap=64 ops=j@1,d@2,s@0:1x8
+//! ```
+//!
+//! (`e` engines, `i` iterations, `b` prompts per batch, `g` rollouts per
+//! group, `tpl` shared prompt templates, `aff` affinity routing, `ttl`
+//! warmth TTL, `sv` sync-every-K-iterations, `cap` queue bound; ops are
+//! `j@I` join, `d@I` tail drain, `s@I:ExF` straggle engine E by F,
+//! `k@I:E` crash instead of acking the next drain, `x@I:E` crash now.)
+//! Same schedule ⇒ same event trace, verbatim — failing property schedules
+//! replay with [`replay`]. Grammar and design: `docs/CONCURRENCY.md`,
+//! "Deterministic coordinator".
+
+use std::cell::Cell;
+use std::collections::{HashSet, VecDeque};
+use std::fmt;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::check::sync::mpsc;
+use crate::coordinator::assembler::Assembler;
+use crate::coordinator::ctrl::{
+    self, AckPoll, FleetCtrl, QueuePoll, RecvStep, RolloutSource, StallWatchdog,
+};
+use crate::coordinator::exec::{self, Executor, TryRecv};
+use crate::coordinator::messages::{DrainAck, GenJob, ScoredRollout, WeightSyncAck, WorkerStats};
+use crate::coordinator::route;
+use crate::data::taskgen::Prompt;
+use crate::engine::{EngineStats, GenRequest};
+use crate::util::rng::{splitmix64, Pcg64};
+
+/// Affinity-key granularity for simulated prompts (tokens per cache block).
+const CACHE_BLOCK: usize = 16;
+/// Unique suffix tokens appended to each prompt after its template prefix.
+const TAIL_TOKENS: usize = 8;
+/// Response length every mock engine produces.
+const RESPONSE_TOKENS: usize = 4;
+/// Virtual seconds of queue silence after which the harness declares the
+/// run wedged ("drains always terminate" violations surface as this error,
+/// not as a hung test). Far beyond any legitimate batch: a job takes at
+/// most ~2 s × the largest straggle factor.
+const SILENCE_CAP_S: f64 = 3600.0;
+
+// ---------------------------------------------------------------------------
+// Schedules
+// ---------------------------------------------------------------------------
+
+/// Fleet shape and workload knobs — the `key=value` half of a schedule
+/// string.
+#[derive(Debug, Clone)]
+pub struct SimFleetCfg {
+    /// Engines at start (`e=`).
+    pub engines: usize,
+    /// Training iterations (`i=`).
+    pub iters: u32,
+    /// Prompts per batch (`b=`).
+    pub batch_prompts: usize,
+    /// Rollouts per group (`g=`).
+    pub group_size: usize,
+    /// Shared prompt templates — the affinity/warmth workload (`tpl=`).
+    pub templates: usize,
+    /// Seed for prompt content and generation latency (`seed=`).
+    pub seed: u64,
+    /// Residency-aware affinity routing (`aff=`, gated off below 2 engines).
+    pub affinity: bool,
+    /// Warmth-belief TTL in router epochs, 0 = never expire (`ttl=`).
+    pub warmth_ttl: u64,
+    /// Sync weights every K iterations; 0 = only the initial sync (`sv=`).
+    pub sync_every: u32,
+    /// Rollout queue bound (`cap=`) — small values exercise backpressure.
+    pub queue_cap: usize,
+}
+
+impl Default for SimFleetCfg {
+    fn default() -> Self {
+        SimFleetCfg {
+            engines: 4,
+            iters: 3,
+            batch_prompts: 8,
+            group_size: 2,
+            templates: 4,
+            seed: 0,
+            affinity: true,
+            warmth_ttl: 0,
+            sync_every: 1,
+            queue_cap: 64,
+        }
+    }
+}
+
+/// One scheduled fleet event. Events land mid-iteration, after dispatch:
+/// drains hand back queued jobs and joiners can receive re-routes — the
+/// corner cases the real `rl.fleet_schedule` exists to exercise.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetOp {
+    /// `j@I`: spawn and weight-sync one engine during iteration `I`.
+    Join { iter: u32 },
+    /// `d@I`: drain the tail engine during iteration `I`, re-routing its
+    /// returned jobs over the survivors.
+    Drain { iter: u32 },
+    /// `s@I:ExF`: engine `E` multiplies its generation latency by `F` from
+    /// iteration `I` on.
+    Straggle { iter: u32, engine: usize, factor: f64 },
+    /// `k@I:E`: engine `E` crashes instead of acking its next drain (the
+    /// `pump_drain_ack` liveness regression).
+    KillOnDrain { iter: u32, engine: usize },
+    /// `x@I:E`: engine `E` crashes immediately, losing its queued jobs.
+    Die { iter: u32, engine: usize },
+}
+
+impl FleetOp {
+    /// The iteration this event fires in.
+    pub fn fires_at(&self) -> u32 {
+        match *self {
+            FleetOp::Join { iter }
+            | FleetOp::Drain { iter }
+            | FleetOp::Straggle { iter, .. }
+            | FleetOp::KillOnDrain { iter, .. }
+            | FleetOp::Die { iter, .. } => iter,
+        }
+    }
+}
+
+/// A complete, replayable run description: config plus ordered fleet events.
+/// `Display` renders the canonical schedule string; [`FleetScript::parse`]
+/// round-trips it.
+#[derive(Debug, Clone)]
+pub struct FleetScript {
+    pub cfg: SimFleetCfg,
+    pub ops: Vec<FleetOp>,
+}
+
+impl fmt::Display for FleetScript {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let c = &self.cfg;
+        write!(
+            f,
+            "simfleet/v1 e={} i={} b={} g={} tpl={} seed={} aff={} ttl={} sv={} cap={} ops=",
+            c.engines,
+            c.iters,
+            c.batch_prompts,
+            c.group_size,
+            c.templates,
+            c.seed,
+            u8::from(c.affinity),
+            c.warmth_ttl,
+            c.sync_every,
+            c.queue_cap
+        )?;
+        if self.ops.is_empty() {
+            return write!(f, "-");
+        }
+        for (i, op) in self.ops.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            match *op {
+                FleetOp::Join { iter } => write!(f, "j@{iter}")?,
+                FleetOp::Drain { iter } => write!(f, "d@{iter}")?,
+                FleetOp::Straggle { iter, engine, factor } => {
+                    write!(f, "s@{iter}:{engine}x{factor}")?
+                }
+                FleetOp::KillOnDrain { iter, engine } => write!(f, "k@{iter}:{engine}")?,
+                FleetOp::Die { iter, engine } => write!(f, "x@{iter}:{engine}")?,
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_op(o: &str) -> Result<FleetOp> {
+    let bad = || anyhow!("bad schedule op {o:?}");
+    let mut halves = o.splitn(2, '@');
+    let kind = halves.next().unwrap_or("");
+    let body = halves.next().ok_or_else(bad)?;
+    match kind {
+        "j" => Ok(FleetOp::Join { iter: body.parse().map_err(|_| bad())? }),
+        "d" => Ok(FleetOp::Drain { iter: body.parse().map_err(|_| bad())? }),
+        "s" => {
+            let (iter, rest) = body.split_once(':').ok_or_else(bad)?;
+            let (engine, factor) = rest.split_once('x').ok_or_else(bad)?;
+            Ok(FleetOp::Straggle {
+                iter: iter.parse().map_err(|_| bad())?,
+                engine: engine.parse().map_err(|_| bad())?,
+                factor: factor.parse().map_err(|_| bad())?,
+            })
+        }
+        "k" | "x" => {
+            let (iter, engine) = body.split_once(':').ok_or_else(bad)?;
+            let iter = iter.parse().map_err(|_| bad())?;
+            let engine = engine.parse().map_err(|_| bad())?;
+            Ok(if kind == "k" {
+                FleetOp::KillOnDrain { iter, engine }
+            } else {
+                FleetOp::Die { iter, engine }
+            })
+        }
+        _ => Err(bad()),
+    }
+}
+
+impl FleetScript {
+    /// Parse a schedule string (the inverse of `Display`). Unlisted keys
+    /// keep their [`SimFleetCfg::default`] values.
+    pub fn parse(s: &str) -> Result<FleetScript> {
+        let mut toks = s.split_whitespace();
+        let magic = toks.next().unwrap_or("");
+        if magic != "simfleet/v1" {
+            bail!("schedule must start with `simfleet/v1`, got {magic:?}");
+        }
+        let mut cfg = SimFleetCfg::default();
+        let mut ops = Vec::new();
+        for tok in toks {
+            let (k, v) =
+                tok.split_once('=').ok_or_else(|| anyhow!("bad token {tok:?} (want key=value)"))?;
+            match k {
+                "e" => cfg.engines = v.parse().context("e=")?,
+                "i" => cfg.iters = v.parse().context("i=")?,
+                "b" => cfg.batch_prompts = v.parse().context("b=")?,
+                "g" => cfg.group_size = v.parse().context("g=")?,
+                "tpl" => cfg.templates = v.parse().context("tpl=")?,
+                "seed" => cfg.seed = v.parse().context("seed=")?,
+                "aff" => cfg.affinity = v.parse::<u8>().context("aff=")? != 0,
+                "ttl" => cfg.warmth_ttl = v.parse().context("ttl=")?,
+                "sv" => cfg.sync_every = v.parse().context("sv=")?,
+                "cap" => cfg.queue_cap = v.parse().context("cap=")?,
+                "ops" => {
+                    if v != "-" {
+                        for o in v.split(',') {
+                            ops.push(parse_op(o)?);
+                        }
+                    }
+                }
+                _ => bail!("unknown schedule key {k:?} in {tok:?}"),
+            }
+        }
+        Ok(FleetScript { cfg, ops })
+    }
+
+    /// A seeded random schedule over `cfg`: per iteration, maybe a join, a
+    /// tail drain (never shrinking below 2 engines) and/or a straggler.
+    /// Fault injection (`k@`/`x@`) is never generated — those ops model
+    /// crashes whose whole point is to *fail* the run, and belong to the
+    /// error-path tests.
+    pub fn random(cfg: SimFleetCfg, ops_seed: u64) -> FleetScript {
+        let mut rng = Pcg64::from_stream(ops_seed, 0x51AF_F1EE);
+        let mut n = cfg.engines;
+        let mut ops = Vec::new();
+        for iter in 0..cfg.iters {
+            if rng.chance(0.35) {
+                ops.push(FleetOp::Join { iter });
+                n += 1;
+            }
+            if n > 2 && rng.chance(0.35) {
+                ops.push(FleetOp::Drain { iter });
+                n -= 1;
+            }
+            if rng.chance(0.4) {
+                let engine = rng.range(0, n);
+                let factor = [2.0, 4.0, 8.0, 16.0][rng.range(0, 4)];
+                ops.push(FleetOp::Straggle { iter, engine, factor });
+            }
+        }
+        FleetScript { cfg, ops }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mock engines (one executor task each)
+// ---------------------------------------------------------------------------
+
+/// Control messages into a simulated engine — the executor-task analogue of
+/// [`crate::coordinator::messages::EngineMsg`], with reply channels over the
+/// shim `mpsc` (replies are non-blocking sends; the harness root polls them
+/// between executor steps, exactly as the real driver polls its worker
+/// handshakes).
+enum SimMsg {
+    Gen(Vec<GenJob>),
+    SetWeights { version: u64, ack: mpsc::Sender<WeightSyncAck> },
+    QueryStats(mpsc::Sender<WorkerStats>),
+    Drain(mpsc::Sender<DrainAck>),
+    Straggle(f64),
+    KillOnDrain,
+    Die,
+}
+
+/// Flips the shared liveness flag when the engine task ends — normally or
+/// by crash — which is what [`RolloutSource::workers_dead`] reads.
+struct AliveGuard(Rc<Cell<bool>>);
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.0.set(false);
+    }
+}
+
+/// Seeded per-request virtual generation latency in `[1, 2)` seconds:
+/// a pure function of `(fleet seed, request id)`, so latency follows the
+/// request wherever routing places it (placement-independent, like the
+/// per-request sampling streams).
+fn gen_latency_s(seed: u64, request_id: u64) -> f64 {
+    1.0 + (splitmix64(seed ^ splitmix64(request_id ^ 0x00C0_FFEE)) % 1024) as f64 / 1024.0
+}
+
+/// Mutable state of one mock engine.
+struct EngineSim {
+    idx: usize,
+    seed: u64,
+    version: u64,
+    straggle: f64,
+    kill_on_drain: bool,
+    stats: EngineStats,
+    /// Warm-template advertisement, `(affinity key, resident tokens)` in
+    /// first-completion order — cleared on weight upload like a real KV
+    /// cache.
+    warm: Vec<(u64, usize)>,
+    queue: exec::SimSender<ScoredRollout>,
+}
+
+impl EngineSim {
+    /// Run one job: a seeded virtual-latency sleep, then publish the scored
+    /// rollout (parking on the bounded queue while the consumer lags —
+    /// that park is what the drain pump exists to unblock). Returns false
+    /// when the consumer is gone and the task should exit quietly.
+    async fn complete(&mut self, job: GenJob) -> bool {
+        let rid = job.request.request_id;
+        let dt = gen_latency_s(self.seed, rid) * self.straggle;
+        exec::sleep(dt).await;
+        let (key, alen) = route::affinity_key(&job.request.prompt, CACHE_BLOCK);
+        if !self.warm.iter().any(|&(k, _)| k == key) {
+            self.warm.push((key, alen));
+        }
+        self.stats.prefills += 1;
+        self.stats.tokens_generated += RESPONSE_TOKENS as u64;
+        self.stats.busy_seconds += dt;
+        let rollout = ScoredRollout {
+            request_id: rid,
+            prompt_id: job.prompt_id,
+            sample_idx: job.sample_idx,
+            weight_version: self.version,
+            tokens: (0..RESPONSE_TOKENS as u32).map(|i| 2 + i).collect(),
+            logprobs: vec![-0.5; RESPONSE_TOKENS],
+            reward: (splitmix64(self.seed ^ rid ^ 0x5EED) % 2) as f32,
+            gen_seconds: dt,
+            engine_idx: self.idx,
+            timeline: Default::default(),
+        };
+        self.queue.send(rollout).await.is_ok()
+    }
+}
+
+/// The engine task body — a mirror of `worker::worker_main`'s two-phase
+/// receive: park on the inbox when idle, drain control messages without
+/// blocking when busy, then run one job.
+async fn engine_task(
+    idx: usize,
+    seed: u64,
+    inbox: exec::SimReceiver<SimMsg>,
+    queue: exec::SimSender<ScoredRollout>,
+    alive: Rc<Cell<bool>>,
+) {
+    let _guard = AliveGuard(alive);
+    let mut eng = EngineSim {
+        idx,
+        seed,
+        version: 0,
+        straggle: 1.0,
+        kill_on_drain: false,
+        stats: EngineStats::default(),
+        warm: Vec::new(),
+        queue,
+    };
+    let mut pending: VecDeque<GenJob> = VecDeque::new();
+    loop {
+        let mut msgs: Vec<SimMsg> = Vec::new();
+        if pending.is_empty() {
+            match inbox.recv().await {
+                Some(m) => msgs.push(m),
+                None => return, // coordinator gone: clean shutdown
+            }
+        }
+        loop {
+            match inbox.try_recv() {
+                TryRecv::Item(m) => msgs.push(m),
+                TryRecv::Empty => break,
+                TryRecv::Closed => {
+                    if msgs.is_empty() && pending.is_empty() {
+                        return;
+                    }
+                    break;
+                }
+            }
+        }
+        for msg in msgs {
+            match msg {
+                SimMsg::Gen(jobs) => pending.extend(jobs),
+                SimMsg::SetWeights { version, ack } => {
+                    let uploaded = version != eng.version;
+                    if uploaded {
+                        eng.version = version;
+                        // A weight upload evicts the KV cache: warm
+                        // templates are gone, like the real engine.
+                        eng.warm.clear();
+                        eng.stats.weight_syncs += 1;
+                    } else {
+                        eng.stats.weight_syncs_skipped += 1;
+                    }
+                    let _ = ack.send(WeightSyncAck { uploaded });
+                }
+                SimMsg::QueryStats(reply) => {
+                    let _ = reply.send(WorkerStats {
+                        engine_idx: eng.idx,
+                        engine: eng.stats.clone(),
+                        cache: None,
+                        warm: eng.warm.clone(),
+                        pending: pending.len(),
+                        active: 0,
+                    });
+                }
+                SimMsg::Straggle(factor) => eng.straggle = factor,
+                SimMsg::KillOnDrain => eng.kill_on_drain = true,
+                SimMsg::Die => return, // crash: queued jobs are lost
+                SimMsg::Drain(ack) => {
+                    if eng.kill_on_drain {
+                        // Crash mid-drain: the ack sender drops unsent and
+                        // the pump surfaces it as `AckPoll::Gone`.
+                        return;
+                    }
+                    // The head job models work already admitted when the
+                    // drain landed: it runs to completion *through the
+                    // queue*, which is what exercises `pump_drain_ack`'s
+                    // rollout pump; the rest return in the ack.
+                    if let Some(job) = pending.pop_front() {
+                        if !eng.complete(job).await {
+                            return;
+                        }
+                    }
+                    let _ = ack.send(DrainAck {
+                        pending: pending.drain(..).collect(),
+                        stats: eng.stats.clone(),
+                        cache: None,
+                    });
+                    return;
+                }
+            }
+        }
+        if let Some(job) = pending.pop_front() {
+            if !eng.complete(job).await {
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The harness
+// ---------------------------------------------------------------------------
+
+struct EngineSlot {
+    inbox: exec::SimSender<SimMsg>,
+    alive: Rc<Cell<bool>>,
+}
+
+/// [`RolloutSource`] over the simulated substrate: poll the deterministic
+/// queue, driving the executor and advancing virtual time to cover the
+/// window. A run that goes [`SILENCE_CAP_S`] virtual seconds with no
+/// rollout is declared wedged — "drains always terminate" violations
+/// surface as that error instead of a hung test.
+struct SimPlane<'a> {
+    ex: &'a mut Executor,
+    rx: &'a exec::SimReceiver<ScoredRollout>,
+    engines: &'a [EngineSlot],
+    silence_s: &'a mut f64,
+}
+
+impl RolloutSource for SimPlane<'_> {
+    fn poll(&mut self, timeout_s: f64) -> Result<QueuePoll> {
+        let deadline = self.ex.clock().now() + timeout_s;
+        loop {
+            if let TryRecv::Item(r) = self.rx.try_recv() {
+                *self.silence_s = 0.0;
+                return Ok(QueuePoll::Rollout(r));
+            }
+            if self.ex.step(deadline) {
+                continue;
+            }
+            // Quiescent through the window: no runnable task, no timer due
+            // before the deadline. Cover the remaining virtual time, then
+            // probe once more (the quiescing step may have published).
+            let clock = self.ex.clock();
+            if clock.now() < deadline {
+                clock.advance_to(deadline);
+            }
+            if let TryRecv::Item(r) = self.rx.try_recv() {
+                *self.silence_s = 0.0;
+                return Ok(QueuePoll::Rollout(r));
+            }
+            *self.silence_s += timeout_s;
+            if *self.silence_s > SILENCE_CAP_S {
+                bail!(
+                    "simulated fleet made no progress for {:.0} virtual seconds \
+                     (a drain or batch failed to terminate)",
+                    *self.silence_s
+                );
+            }
+            return Ok(QueuePoll::TimedOut { waited_s: timeout_s });
+        }
+    }
+
+    fn workers_dead(&mut self) -> bool {
+        self.engines.iter().all(|e| !e.alive.get())
+    }
+}
+
+/// What a completed run reports — enough for tests to assert the paper's
+/// invariants and to diff event traces across runs.
+#[derive(Debug, Clone)]
+pub struct SimFleetReport {
+    /// Canonical schedule string; feed to [`replay`] to reproduce.
+    pub schedule: String,
+    /// Deterministic event trace: same schedule ⇒ same lines, verbatim.
+    pub trace: Vec<String>,
+    /// Jobs dispatched across the run.
+    pub minted: u64,
+    /// Rollouts consumed across the run (conservation: equals `minted`).
+    pub consumed: u64,
+    /// Max observed `synced version − rollout version` (Prop. 1 ⇒ 0).
+    pub max_staleness: u64,
+    /// Fleet size after the last iteration.
+    pub engines: usize,
+    /// Router warmth beliefs alive at the end.
+    pub warm_beliefs: usize,
+    /// Virtual seconds the whole run took.
+    pub virtual_s: f64,
+    /// Total executor polls — a cheap determinism fingerprint.
+    pub polls: u64,
+}
+
+struct SimFleet {
+    cfg: SimFleetCfg,
+    ex: Executor,
+    ctrl: FleetCtrl,
+    assembler: Assembler,
+    engines: Vec<EngineSlot>,
+    queue_tx: exec::SimSender<ScoredRollout>,
+    queue_rx: exec::SimReceiver<ScoredRollout>,
+    watchdog: Option<StallWatchdog>,
+    silence_s: f64,
+    version: u64,
+    minted: u64,
+    consumed: u64,
+    seen_ids: HashSet<u64>,
+    max_staleness: u64,
+    iter_groups_done: usize,
+    next_prompt_id: u64,
+    trace: Vec<String>,
+}
+
+impl SimFleet {
+    fn new(cfg: &SimFleetCfg) -> Result<SimFleet> {
+        if cfg.engines == 0 || cfg.batch_prompts == 0 || cfg.group_size == 0 {
+            bail!("schedule needs engines, batch and group size >= 1");
+        }
+        let (queue_tx, queue_rx) = exec::channel(Some(cfg.queue_cap.max(1)));
+        let mut fleet = SimFleet {
+            cfg: cfg.clone(),
+            ex: Executor::new(),
+            ctrl: FleetCtrl::new(
+                cfg.engines,
+                cfg.affinity && cfg.engines >= 2,
+                cfg.warmth_ttl,
+                2 * cfg.group_size,
+                CACHE_BLOCK,
+            ),
+            assembler: Assembler::new(),
+            engines: Vec::new(),
+            queue_tx,
+            queue_rx,
+            watchdog: None,
+            silence_s: 0.0,
+            version: 0,
+            minted: 0,
+            consumed: 0,
+            seen_ids: HashSet::new(),
+            max_staleness: 0,
+            iter_groups_done: 0,
+            next_prompt_id: 0,
+            trace: Vec::new(),
+        };
+        for _ in 0..cfg.engines {
+            fleet.spawn_engine();
+        }
+        Ok(fleet)
+    }
+
+    fn now(&self) -> f64 {
+        self.ex.clock().now()
+    }
+
+    fn spawn_engine(&mut self) -> usize {
+        let idx = self.engines.len();
+        let (inbox_tx, inbox_rx) = exec::channel(None);
+        let alive = Rc::new(Cell::new(true));
+        self.ex.spawn(engine_task(
+            idx,
+            self.cfg.seed,
+            inbox_rx,
+            self.queue_tx.clone(),
+            alive.clone(),
+        ));
+        self.engines.push(EngineSlot { inbox: inbox_tx, alive });
+        idx
+    }
+
+    /// Non-blocking control send (engine inboxes are unbounded). A closed
+    /// inbox means the task already exited — schedules that message a
+    /// crashed engine fail here, loudly.
+    fn send_to(&self, idx: usize, msg: SimMsg) -> Result<()> {
+        match self.engines[idx].inbox.try_send(msg) {
+            Ok(()) => Ok(()),
+            Err(_) => bail!("engine-{idx} inbox is closed (worker exited)"),
+        }
+    }
+
+    fn check_engine(&self, engine: usize) -> Result<()> {
+        if engine >= self.engines.len() {
+            bail!("op targets engine {engine} but the fleet has {}", self.engines.len());
+        }
+        Ok(())
+    }
+
+    /// Drive the executor until `want` replies arrive on `rx` or
+    /// `timeout_s` of virtual time elapses — the virtual-time analogue of
+    /// the driver's bounded `recv_timeout` handshake loops, using the same
+    /// seconds-based constants (the satellite-6 parity fix).
+    fn await_replies<T>(&mut self, rx: &mpsc::Receiver<T>, want: usize, timeout_s: f64) -> Vec<T> {
+        let mut got = Vec::new();
+        let deadline = self.now() + timeout_s;
+        loop {
+            while let Ok(v) = rx.try_recv() {
+                got.push(v);
+            }
+            if got.len() >= want {
+                return got;
+            }
+            if !self.ex.step(deadline) {
+                let clock = self.ex.clock();
+                if clock.now() < deadline {
+                    clock.advance_to(deadline);
+                }
+                while let Ok(v) = rx.try_recv() {
+                    got.push(v);
+                }
+                return got;
+            }
+        }
+    }
+
+    fn sync_weights(&mut self, iter: u32) -> Result<()> {
+        self.version += 1;
+        let v = self.version;
+        let n = self.engines.len();
+        let (ack_tx, ack_rx) = mpsc::channel();
+        for (idx, slot) in self.engines.iter().enumerate() {
+            if slot.inbox.try_send(SimMsg::SetWeights { version: v, ack: ack_tx.clone() }).is_err()
+            {
+                bail!("engine-{idx} inbox is closed (worker exited)");
+            }
+        }
+        drop(ack_tx);
+        let acks = self.await_replies(&ack_rx, n, ctrl::STATS_REPLY_TIMEOUT_S);
+        if acks.len() != n {
+            bail!("weight sync v{v}: {}/{} engines acked within the timeout", acks.len(), n);
+        }
+        if acks.iter().any(|a| a.uploaded) {
+            // Uploads evicted engine KV caches; the router's warmth
+            // beliefs are stale, exactly as in the real driver.
+            self.ctrl.warmth.flush();
+        }
+        self.trace.push(format!("i{iter} sync v{v} -> {n} engines @{:.3}", self.now()));
+        Ok(())
+    }
+
+    fn next_prompt(&mut self) -> Prompt {
+        let id = self.next_prompt_id;
+        self.next_prompt_id += 1;
+        let tid = (splitmix64(self.cfg.seed ^ splitmix64(id)) % self.cfg.templates.max(1) as u64)
+            as u32;
+        let mut tokens: Vec<u32> = (0..CACHE_BLOCK as u32).map(|i| tid * 131 + i + 1).collect();
+        tokens.extend((0..TAIL_TOKENS as u32).map(|i| 100_000 + (id as u32) * TAIL_TOKENS as u32 + i));
+        Prompt { id, tokens, text: format!("sim-{id}"), answer: 0 }
+    }
+
+    fn dispatch_batch(&mut self, iter: u32) -> Result<()> {
+        let g = self.cfg.group_size;
+        for _ in 0..self.cfg.batch_prompts {
+            let prompt = self.next_prompt();
+            self.assembler.register(prompt.clone(), g);
+            let mut jobs = Vec::with_capacity(g);
+            for sample_idx in 0..g {
+                jobs.push(GenJob {
+                    prompt_id: prompt.id,
+                    sample_idx,
+                    request: GenRequest {
+                        request_id: self.ctrl.mint_request_id(),
+                        prompt: prompt.tokens.clone(),
+                        ..Default::default()
+                    },
+                    answer: prompt.answer,
+                });
+            }
+            self.minted += g as u64;
+            let idx = self.ctrl.pick_engine(&prompt.tokens, true, || 0);
+            self.ctrl.note_dispatch(idx, g);
+            self.trace.push(format!("i{iter} dispatch p{} -> e{idx}", prompt.id));
+            self.send_to(idx, SimMsg::Gen(jobs))?;
+        }
+        Ok(())
+    }
+
+    fn join_engine(&mut self, iter: u32) -> Result<()> {
+        let idx = self.spawn_engine();
+        // Weight-sync the joiner before it enters the routing pool — a
+        // joiner generating at a stale version would break Prop. 1, and
+        // the staleness tally below would catch it.
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.send_to(idx, SimMsg::SetWeights { version: self.version, ack: ack_tx })?;
+        let acks = self.await_replies(&ack_rx, 1, ctrl::STATS_REPLY_TIMEOUT_S);
+        if acks.len() != 1 {
+            bail!("engine-{idx} never acked its join weight sync");
+        }
+        self.ctrl.add_engine();
+        self.ctrl.set_affinity(self.cfg.affinity && self.engines.len() >= 2);
+        self.trace
+            .push(format!("i{iter} join e{idx} -> {} engines @{:.3}", self.engines.len(), self.now()));
+        Ok(())
+    }
+
+    fn drain_tail(&mut self, iter: u32) -> Result<()> {
+        if self.engines.len() <= 1 {
+            bail!("schedule drains the last engine");
+        }
+        let idx = self.engines.len() - 1;
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.send_to(idx, SimMsg::Drain(ack_tx))?;
+        let (ack, pumped) = {
+            let mut plane = SimPlane {
+                ex: &mut self.ex,
+                rx: &self.queue_rx,
+                engines: &self.engines,
+                silence_s: &mut self.silence_s,
+            };
+            ctrl::pump_drain_ack(&mut plane, idx, || match ack_rx.try_recv() {
+                Ok(a) => AckPoll::Ready(Box::new(a)),
+                Err(mpsc::TryRecvError::Empty) => AckPoll::Pending,
+                Err(mpsc::TryRecvError::Disconnected) => AckPoll::Gone,
+            })?
+        };
+        // Pumped rollouts are ingested before the pool shrinks, so their
+        // engine index still resolves for load accounting (the same order
+        // the real driver uses).
+        for r in pumped {
+            self.ingest(iter, r)?;
+        }
+        let pend = ack.pending.len();
+        let departed = self.ctrl.remove_tail_engine();
+        debug_assert_eq!(departed, idx);
+        self.engines.pop();
+        self.ctrl.set_affinity(self.cfg.affinity && self.engines.len() >= 2);
+        for (target, jobs) in self.ctrl.reroute_drained(ack.pending, |_| 0) {
+            self.send_to(target, SimMsg::Gen(jobs))?;
+        }
+        self.trace.push(format!(
+            "i{iter} drain e{idx} pend={pend} -> {} engines @{:.3}",
+            self.engines.len(),
+            self.now()
+        ));
+        Ok(())
+    }
+
+    fn apply_op(&mut self, iter: u32, op: &FleetOp) -> Result<()> {
+        match *op {
+            FleetOp::Join { .. } => self.join_engine(iter),
+            FleetOp::Drain { .. } => self.drain_tail(iter),
+            FleetOp::Straggle { engine, factor, .. } => {
+                self.check_engine(engine)?;
+                self.trace.push(format!("i{iter} straggle e{engine} x{factor}"));
+                self.send_to(engine, SimMsg::Straggle(factor))
+            }
+            FleetOp::KillOnDrain { engine, .. } => {
+                self.check_engine(engine)?;
+                self.trace.push(format!("i{iter} kill-on-drain e{engine}"));
+                self.send_to(engine, SimMsg::KillOnDrain)
+            }
+            FleetOp::Die { engine, .. } => {
+                self.check_engine(engine)?;
+                self.trace.push(format!("i{iter} die e{engine}"));
+                self.send_to(engine, SimMsg::Die)
+            }
+        }
+    }
+
+    fn ingest(&mut self, iter: u32, r: ScoredRollout) -> Result<()> {
+        if !self.seen_ids.insert(r.request_id) {
+            bail!("request {} consumed twice (job duplicated)", r.request_id);
+        }
+        self.max_staleness = self.max_staleness.max(self.version.saturating_sub(r.weight_version));
+        self.consumed += 1;
+        self.ctrl.note_ingest(r.engine_idx);
+        let pid = r.prompt_id;
+        if self.assembler.ingest(r)?.is_some() {
+            self.iter_groups_done += 1;
+            self.trace.push(format!("i{iter} group p{pid} done @{:.3}", self.now()));
+        }
+        Ok(())
+    }
+
+    fn consume_batch(&mut self, iter: u32) -> Result<()> {
+        while self.iter_groups_done < self.cfg.batch_prompts {
+            let step = {
+                let mut plane = SimPlane {
+                    ex: &mut self.ex,
+                    rx: &self.queue_rx,
+                    engines: &self.engines,
+                    silence_s: &mut self.silence_s,
+                };
+                ctrl::recv_step(&mut plane, &mut self.watchdog, ctrl::RECV_POLL_S)?
+            };
+            match step {
+                RecvStep::Got(r) => self.ingest(iter, r)?,
+                RecvStep::Waiting { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// End-of-iteration stats sweep: fold each engine's warm-template
+    /// advertisement into the router's beliefs and tick the warmth epoch —
+    /// the TTL-decay clock the ≥64-engine tests drive.
+    fn refresh_warmth(&mut self, iter: u32) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        let mut asked = 0;
+        for slot in &self.engines {
+            if slot.alive.get() && slot.inbox.try_send(SimMsg::QueryStats(tx.clone())).is_ok() {
+                asked += 1;
+            }
+        }
+        drop(tx);
+        let mut stats = self.await_replies(&rx, asked, ctrl::STATS_REPLY_TIMEOUT_S);
+        stats.sort_by_key(|s| s.engine_idx);
+        for s in &stats {
+            self.ctrl.warmth.refresh_engine(s.engine_idx, &s.warm);
+        }
+        self.ctrl.warmth.advance();
+        self.trace.push(format!(
+            "i{iter} end warm={} out={} @{:.3}",
+            self.ctrl.warmth.len(),
+            self.ctrl.outstanding(),
+            self.now()
+        ));
+        Ok(())
+    }
+
+    fn run_inner(&mut self, ops: &[FleetOp]) -> Result<()> {
+        for iter in 0..self.cfg.iters {
+            if iter == 0 || (self.cfg.sync_every > 0 && iter % self.cfg.sync_every == 0) {
+                self.sync_weights(iter)?;
+            }
+            self.iter_groups_done = 0;
+            self.dispatch_batch(iter)?;
+            // Fleet events land mid-iteration, after dispatch: drains hand
+            // back queued jobs and joiners can receive re-routes — the
+            // corner cases the real fleet schedule exists to exercise.
+            for op in ops.iter().filter(|o| o.fires_at() == iter) {
+                self.apply_op(iter, op)?;
+            }
+            self.consume_batch(iter)?;
+            self.refresh_warmth(iter)?;
+            if self.ctrl.outstanding() != 0 {
+                bail!("iteration {iter} ended with {} jobs outstanding", self.ctrl.outstanding());
+            }
+            if self.assembler.pending_prompts() != 0 {
+                bail!(
+                    "iteration {iter} ended with {} groups incomplete",
+                    self.assembler.pending_prompts()
+                );
+            }
+        }
+        if self.consumed != self.minted {
+            bail!("job conservation broken: minted {} consumed {}", self.minted, self.consumed);
+        }
+        Ok(())
+    }
+}
+
+/// Execute `script` and return its report. Every fleet invariant — job
+/// conservation, drain termination, zero Sync-mode staleness, group
+/// completion — is enforced inside; violations come back as `Err` with the
+/// schedule string attached for [`replay`].
+pub fn run(script: &FleetScript) -> Result<SimFleetReport> {
+    let schedule = script.to_string();
+    let mut fleet = SimFleet::new(&script.cfg).with_context(|| format!("schedule: {schedule}"))?;
+    match fleet.run_inner(&script.ops) {
+        Ok(()) => Ok(SimFleetReport {
+            schedule,
+            trace: std::mem::take(&mut fleet.trace),
+            minted: fleet.minted,
+            consumed: fleet.consumed,
+            max_staleness: fleet.max_staleness,
+            engines: fleet.engines.len(),
+            warm_beliefs: fleet.ctrl.warmth.len(),
+            virtual_s: fleet.now(),
+            polls: fleet.ex.polls(),
+        }),
+        Err(e) => Err(e.context(format!("schedule: {schedule}"))),
+    }
+}
+
+/// Parse and run a schedule string — the replay entry point printed by
+/// failing property tests (`docs/CONCURRENCY.md`, "Deterministic
+/// coordinator").
+pub fn replay(schedule: &str) -> Result<SimFleetReport> {
+    run(&FleetScript::parse(schedule)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_string_round_trips() {
+        let s = "simfleet/v1 e=4 i=3 b=8 g=2 tpl=4 seed=42 aff=1 ttl=2 sv=1 cap=64 \
+                 ops=j@1,d@2,s@0:1x8,k@1:3,x@2:0";
+        let script = FleetScript::parse(s).unwrap();
+        assert_eq!(script.to_string(), s);
+        assert_eq!(script.ops.len(), 5);
+        assert_eq!(script.ops[2], FleetOp::Straggle { iter: 0, engine: 1, factor: 8.0 });
+    }
+
+    #[test]
+    fn schedule_rejects_garbage() {
+        assert!(FleetScript::parse("fleet/v0 e=2").is_err());
+        assert!(FleetScript::parse("simfleet/v1 bogus").is_err());
+        assert!(FleetScript::parse("simfleet/v1 z=3").is_err());
+        assert!(FleetScript::parse("simfleet/v1 ops=q@1").is_err());
+        assert!(FleetScript::parse("simfleet/v1 ops=s@1:2").is_err());
+    }
+
+    #[test]
+    fn random_schedules_round_trip() {
+        for seed in 0..32 {
+            let script = FleetScript::random(SimFleetCfg::default(), seed);
+            let reparsed = FleetScript::parse(&script.to_string()).unwrap();
+            assert_eq!(script.ops, reparsed.ops, "seed {seed}");
+            assert_eq!(script.to_string(), reparsed.to_string(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn smoke_run_conserves_jobs_and_stays_on_policy() {
+        let script = FleetScript {
+            cfg: SimFleetCfg { engines: 2, iters: 2, ..Default::default() },
+            ops: vec![],
+        };
+        let r = run(&script).unwrap();
+        assert_eq!(r.minted, r.consumed);
+        assert_eq!(r.minted, 2 * 8 * 2); // iters * batch * group
+        assert_eq!(r.max_staleness, 0);
+        assert!(r.virtual_s > 0.0);
+    }
+
+    #[test]
+    fn drain_and_join_mid_iteration_lose_nothing() {
+        let script = FleetScript {
+            cfg: SimFleetCfg { engines: 3, iters: 3, seed: 7, ..Default::default() },
+            ops: vec![
+                FleetOp::Drain { iter: 0 },
+                FleetOp::Join { iter: 1 },
+                FleetOp::Straggle { iter: 1, engine: 0, factor: 8.0 },
+            ],
+        };
+        let r = run(&script).unwrap();
+        assert_eq!(r.minted, r.consumed);
+        assert_eq!(r.max_staleness, 0);
+        assert_eq!(r.engines, 3); // 3 - 1 + 1
+    }
+
+    #[test]
+    fn small_queue_cap_exercises_backpressure() {
+        let script = FleetScript {
+            cfg: SimFleetCfg { engines: 2, iters: 2, queue_cap: 1, ..Default::default() },
+            ops: vec![FleetOp::Drain { iter: 1 }],
+        };
+        let r = run(&script).unwrap();
+        assert_eq!(r.minted, r.consumed);
+    }
+
+    #[test]
+    fn kill_on_drain_surfaces_the_pump_error() {
+        let script = FleetScript {
+            cfg: SimFleetCfg { engines: 2, iters: 1, ..Default::default() },
+            ops: vec![FleetOp::KillOnDrain { iter: 0, engine: 1 }, FleetOp::Drain { iter: 0 }],
+        };
+        let err = run(&script).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("exited without acking the drain"), "got: {msg}");
+        assert!(msg.contains("simfleet/v1"), "error should carry the schedule: {msg}");
+    }
+
+    #[test]
+    fn dead_fleet_surfaces_liveness_error_not_a_hang() {
+        let script = FleetScript {
+            cfg: SimFleetCfg { engines: 2, iters: 1, ..Default::default() },
+            ops: vec![FleetOp::Die { iter: 0, engine: 0 }, FleetOp::Die { iter: 0, engine: 1 }],
+        };
+        let err = run(&script).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("all engine workers exited"), "got: {msg}");
+    }
+
+    #[test]
+    fn same_schedule_same_trace() {
+        let script = FleetScript::random(
+            SimFleetCfg { engines: 6, iters: 3, seed: 9, ..Default::default() },
+            17,
+        );
+        let a = run(&script).unwrap();
+        let b = replay(&a.schedule).unwrap();
+        assert_eq!(a.trace, b.trace);
+        assert_eq!(a.polls, b.polls);
+        assert_eq!(a.virtual_s, b.virtual_s);
+    }
+}

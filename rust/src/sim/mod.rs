@@ -9,11 +9,19 @@
 //! async), and `experiments` wires up each paper table. The real mini-cluster
 //! (coordinator module) validates the same scheduling logic end-to-end at
 //! small scale; the simulator extends the comparison to paper scale.
+//!
+//! [`fleet`] is the third rung between those two: the *real* coordinator
+//! protocol loops (`coordinator::ctrl`) driven over the deterministic
+//! executor (`coordinator::exec`) with mock engines and virtual time, so
+//! 1000-engine join/drain/straggler schedules run — and replay — in
+//! milliseconds.
 
 pub mod experiments;
+pub mod fleet;
 pub mod frameworks;
 pub mod queue;
 pub mod specs;
 
+pub use fleet::{replay as replay_fleet, FleetOp, FleetScript, SimFleetCfg, SimFleetReport};
 pub use frameworks::{Framework, SimResult, SimSetup};
 pub use specs::{ClusterSpec, DeviceSpec, EfficiencySpec, ModelSpec, WorkloadSpec};

@@ -24,6 +24,12 @@
 //!   consistent while engine threads race counter/gauge/span writes;
 //! * drain re-route: jobs regrouped after an engine drain are re-dispatched
 //!   group-affine with no loss, no duplication, and only to live engines;
+//! * shared control loops: the *same* `ctrl::pump_drain_ack` /
+//!   `ctrl::recv_step` code the driver and the deterministic-executor
+//!   fleet harness (`sim::fleet`) both run is explored here over modeled
+//!   threads — drain handshakes never deadlock, and a worker dying
+//!   mid-drain (or a whole fleet dying mid-batch) surfaces an error
+//!   instead of hanging the control loop;
 //! * seeded deadlock: an intentionally inverted shard-lock order is caught —
 //!   as a lock-order inversion by the static cycle check, and as an actual
 //!   deadlock (with a schedule that replays) when that check is disabled.
@@ -33,9 +39,13 @@
 use pa_rl::check::sync::mpsc;
 use pa_rl::check::thread;
 use pa_rl::check::{replay, Checker, FailureKind};
+use pa_rl::coordinator::ctrl::{pump_drain_ack, recv_step, AckPoll, ChannelSource};
 use pa_rl::coordinator::driver::group_jobs_by_prompt;
 use pa_rl::coordinator::route::{affinity_key, route_group_residency, RouteKind, WarmthMap};
-use pa_rl::coordinator::{stall_snapshot_json, GenJob, StallWatchdog, WorkerStats};
+use pa_rl::coordinator::{
+    stall_snapshot_json, DrainAck, FleetCtrl, GenJob, RecvStep, ScoredRollout, StallWatchdog,
+    WorkerStats,
+};
 use pa_rl::engine::kvcache::EvictPolicy;
 use pa_rl::engine::{EngineStats, GenRequest};
 use pa_rl::metrics::{Registry, Trace};
@@ -171,6 +181,166 @@ fn drain_handshake_never_deadlocks() {
         }
         worker.join().expect("worker panicked");
         assert_eq!(got, 3, "drain lost rollouts");
+    });
+    report.assert_ok();
+    assert!(
+        report.schedules >= MIN_SCHEDULES,
+        "explored only {} schedules",
+        report.schedules
+    );
+}
+
+fn mk_rollout(request_id: u64) -> ScoredRollout {
+    ScoredRollout {
+        request_id,
+        prompt_id: request_id / 2,
+        sample_idx: (request_id % 2) as usize,
+        weight_version: 1,
+        tokens: vec![1, 2],
+        logprobs: vec![-0.1, -0.2],
+        reward: 0.0,
+        gen_seconds: 0.1,
+        engine_idx: 0,
+        timeline: Default::default(),
+    }
+}
+
+fn mk_job(prompt_id: u64, sample_idx: usize, prompt: &[u32]) -> GenJob {
+    GenJob {
+        prompt_id,
+        sample_idx,
+        request: GenRequest {
+            request_id: prompt_id * 10 + sample_idx as u64,
+            prompt: prompt.to_vec(),
+            timeline: Default::default(),
+        },
+        answer: 0,
+    }
+}
+
+/// Probe a drain-ack channel the way both control-loop substrates do.
+fn ack_probe(rx: &mpsc::Receiver<DrainAck>) -> AckPoll {
+    match rx.try_recv() {
+        Ok(a) => AckPoll::Ready(Box::new(a)),
+        Err(mpsc::TryRecvError::Empty) => AckPoll::Pending,
+        Err(mpsc::TryRecvError::Disconnected) => AckPoll::Gone,
+    }
+}
+
+/// The drain handshake ported onto the shared control loop: the *same*
+/// [`pump_drain_ack`] the driver and the deterministic-executor fleet
+/// harness both call, here over modeled threads and real message types.
+/// The worker flushes a backlog deeper than the queue bound before acking
+/// with pending jobs; under every explored interleaving the pump keeps the
+/// queue moving (no deadlock) and nothing — flushed or pending — is lost.
+#[test]
+fn drain_handshake_through_shared_pump_never_deadlocks() {
+    let report = Checker::new().max_schedules(MAX_SCHEDULES).check(|| {
+        let (queue_tx, queue_rx) = mpsc::sync_channel::<ScoredRollout>(2); // cap < backlog
+        let (ack_tx, ack_rx) = mpsc::channel::<DrainAck>();
+        let (inbox_tx, inbox_rx) = mpsc::channel::<u32>();
+        let worker = thread::spawn(move || {
+            let _drain = inbox_rx.recv().expect("drain request");
+            for i in 0..3u64 {
+                queue_tx.send(mk_rollout(i)).expect("driver alive");
+            }
+            ack_tx
+                .send(DrainAck {
+                    pending: vec![mk_job(7, 0, &[1; 8]), mk_job(7, 1, &[1; 8])],
+                    stats: EngineStats::default(),
+                    cache: None,
+                })
+                .expect("driver alive");
+        });
+        inbox_tx.send(0).expect("worker alive");
+        let mut src = ChannelSource { rx: &queue_rx, dead: || false };
+        let (ack, pumped) =
+            pump_drain_ack(&mut src, 0, || ack_probe(&ack_rx)).expect("pump must not error");
+        // Flushed rollouts either arrived during the pump or still sit in
+        // the queue; together with the ack's pending jobs all 3+2 survive.
+        let mut flushed = pumped.len();
+        while queue_rx.try_recv().is_ok() {
+            flushed += 1;
+        }
+        assert_eq!(flushed, 3, "drain lost flushed rollouts");
+        assert_eq!(ack.pending.len(), 2, "drain lost pending jobs");
+        worker.join().expect("worker panicked");
+    });
+    report.assert_ok();
+    assert!(
+        report.schedules >= MIN_SCHEDULES,
+        "explored only {} schedules",
+        report.schedules
+    );
+}
+
+/// Satellite regression: a worker that dies mid-drain — ack channel dropped
+/// without a send — must surface [`pump_drain_ack`]'s liveness error on
+/// every explored schedule, never hang the control loop.
+#[test]
+fn worker_death_mid_drain_surfaces_pump_error_not_hang() {
+    let report = Checker::new().max_schedules(MAX_SCHEDULES).check(|| {
+        let (queue_tx, queue_rx) = mpsc::sync_channel::<ScoredRollout>(1);
+        let (ack_tx, ack_rx) = mpsc::channel::<DrainAck>();
+        let worker = thread::spawn(move || {
+            // One last completion, then death without an ack.
+            queue_tx.send(mk_rollout(0)).expect("driver alive");
+            drop(ack_tx);
+        });
+        let mut src = ChannelSource { rx: &queue_rx, dead: || false };
+        let err = pump_drain_ack(&mut src, 5, || ack_probe(&ack_rx))
+            .expect_err("dead worker must error the pump");
+        assert!(
+            err.to_string().contains("engine-5 exited without acking the drain"),
+            "wrong error: {err:#}"
+        );
+        worker.join().expect("worker panicked");
+    });
+    report.assert_ok();
+    assert!(
+        report.schedules >= MIN_SCHEDULES,
+        "explored only {} schedules",
+        report.schedules
+    );
+}
+
+/// The driver's `recv_rollout` liveness poll, through the shared
+/// [`recv_step`]: a worker completes one of its two jobs and then dies.
+/// Under every interleaving the completed rollout is consumed, and the
+/// loop then fails fast with the dead-fleet error instead of waiting
+/// forever on a queue nobody will ever feed again.
+#[test]
+fn recv_step_fails_fast_when_all_workers_die_with_work_outstanding() {
+    let report = Checker::new().max_schedules(MAX_SCHEDULES).check(|| {
+        let (queue_tx, queue_rx) = mpsc::sync_channel::<ScoredRollout>(2);
+        // Worker liveness the way the driver models it: a handle the dead
+        // probe can interrogate — here a channel whose sender dies with
+        // the worker.
+        let (live_tx, live_rx) = mpsc::channel::<()>();
+        let worker = thread::spawn(move || {
+            let _live = live_tx; // dropped on exit = worker death
+            queue_tx.send(mk_rollout(0)).expect("driver alive");
+            // ...dies with the second job still owed.
+        });
+        let mut src = ChannelSource {
+            rx: &queue_rx,
+            dead: || matches!(live_rx.try_recv(), Err(mpsc::TryRecvError::Disconnected)),
+        };
+        let mut watchdog = None;
+        let mut got = 0u32;
+        let err = loop {
+            match recv_step(&mut src, &mut watchdog, 0.002) {
+                Ok(RecvStep::Got(_)) => got += 1,
+                Ok(RecvStep::Waiting { .. }) => {}
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(got, 1, "the completed rollout must be consumed, not dropped");
+        assert!(
+            err.to_string().contains("all engine workers exited"),
+            "wrong error: {err:#}"
+        );
+        worker.join().expect("worker panicked");
     });
     report.assert_ok();
     assert!(
@@ -406,6 +576,61 @@ fn drain_reroute_preserves_jobs_and_targets_live_engines() {
         }
     }
     assert_eq!(seen.len(), 8, "job lost in re-route");
+}
+
+/// The same re-route story through [`FleetCtrl`] — the shared routing and
+/// accounting object the driver and the simulated fleet both drive. A
+/// drained tail engine hands back interleaved jobs; after
+/// `remove_tail_engine` + `reroute_drained` every group lands whole on a
+/// live engine, no job is lost or duplicated, the outstanding count is
+/// untouched (re-routed jobs never stopped being outstanding) and the load
+/// signal moves onto the survivors.
+#[test]
+fn drain_reroute_via_fleet_ctrl_preserves_jobs_and_accounting() {
+    let bt = 4usize;
+    let mut ctrl = FleetCtrl::new(3, true, 0, 4, bt);
+    let prompts: Vec<Vec<u32>> = (0..4u32).map(|p| vec![p + 1; 8]).collect();
+
+    // Dispatch one group per prompt; remember which landed on the tail.
+    let mut on_tail: Vec<GenJob> = Vec::new();
+    for (pid, p) in prompts.iter().enumerate() {
+        let idx = ctrl.pick_engine(p, true, || 0);
+        ctrl.note_dispatch(idx, 2);
+        if idx == 2 {
+            on_tail.push(mk_job(pid as u64, 0, p));
+            on_tail.push(mk_job(pid as u64, 1, p));
+        }
+    }
+    let outstanding_before = ctrl.outstanding();
+    assert_eq!(outstanding_before, 8);
+    let tail_jobs = on_tail.len();
+
+    let departed = ctrl.remove_tail_engine();
+    assert_eq!(departed, 2);
+    let placed = ctrl.reroute_drained(on_tail, |_| 0);
+
+    let mut seen = HashSet::new();
+    let mut replaced = 0usize;
+    for (target, jobs) in &placed {
+        assert!(*target < ctrl.engines(), "re-routed to a drained engine");
+        let prompt = &jobs[0].request.prompt;
+        assert!(jobs.iter().all(|j| &j.request.prompt == prompt), "group split in re-route");
+        for j in jobs {
+            assert!(seen.insert(j.request.request_id), "job duplicated in re-route");
+            replaced += 1;
+        }
+    }
+    assert_eq!(replaced, tail_jobs, "job lost in re-route");
+    assert_eq!(
+        ctrl.outstanding(),
+        outstanding_before,
+        "re-route must not change the outstanding count"
+    );
+    assert_eq!(
+        ctrl.load().iter().sum::<usize>(),
+        outstanding_before,
+        "load signal must move onto the survivors"
+    );
 }
 
 /// The seeded bug: two threads taking the same pair of shard locks in

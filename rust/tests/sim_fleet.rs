@@ -1,0 +1,203 @@
+//! Fleet-scale property suite over the simulated coordinator
+//! (`pa_rl::sim::fleet`): seeded random join/drain/straggler schedules
+//! driven through the *real* control-loop code (`coordinator::ctrl`) on the
+//! deterministic executor, asserting the paper's machine-checkable
+//! invariants — no job lost or duplicated, drains always terminate, and
+//! Sync-mode staleness stays 0 (Prop. 1).
+//!
+//! On failure the offending schedule string is appended to
+//! `target/tmp/sim-fleet/failing_schedules.txt` (uploaded as a CI artifact)
+//! and printed with replay instructions: paste it into
+//! `pa_rl::sim::fleet::replay(...)` to reproduce the identical event trace.
+//!
+//! `PA_RL_SIM_FLEET_QUICK=1` clamps case counts for CI wall-clock, same
+//! convention as `PA_RL_BENCH_QUICK`.
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use pa_rl::sim::fleet::{self, FleetOp, FleetScript, SimFleetCfg, SimFleetReport};
+
+fn quick() -> bool {
+    std::env::var("PA_RL_SIM_FLEET_QUICK").is_ok()
+}
+
+/// Persist the failing schedule for the CI artifact sweep, then panic with
+/// the schedule and replay instructions front and center.
+fn fail_with_schedule(schedule: &str, why: &str) -> ! {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join("sim-fleet");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join("failing_schedules.txt");
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = writeln!(f, "{schedule}\t# {why}");
+    }
+    panic!(
+        "sim-fleet invariant violated: {why}\n\
+         schedule: {schedule}\n\
+         replay:   pa_rl::sim::fleet::replay(\"{schedule}\")\n\
+         (also appended to {})",
+        path.display()
+    );
+}
+
+/// Run one schedule and enforce the property-test invariants. The harness
+/// itself already fails a run that loses jobs, duplicates a request id,
+/// wedges a drain or leaves a group incomplete; this layer turns either
+/// kind of failure into a replayable artifact.
+fn check_invariants(script: &FleetScript) -> SimFleetReport {
+    let schedule = script.to_string();
+    match fleet::run(script) {
+        Ok(r) => {
+            if r.consumed != r.minted {
+                fail_with_schedule(
+                    &schedule,
+                    &format!("job conservation: minted {} consumed {}", r.minted, r.consumed),
+                );
+            }
+            if r.max_staleness != 0 {
+                fail_with_schedule(
+                    &schedule,
+                    &format!("Sync-mode staleness reached {}", r.max_staleness),
+                );
+            }
+            r
+        }
+        Err(e) => fail_with_schedule(&schedule, &format!("{e:#}")),
+    }
+}
+
+/// Random schedules across fleet shapes, TTLs and queue bounds. Seeds are
+/// fixed: the suite explores the same schedule corpus on every run.
+#[test]
+fn random_schedules_preserve_jobs_and_stay_on_policy() {
+    let cases: u64 = if quick() { 6 } else { 24 };
+    for case in 0..cases {
+        let cfg = SimFleetCfg {
+            engines: 3 + (case as usize % 5) * 4,
+            iters: 3,
+            batch_prompts: 8,
+            group_size: 2,
+            templates: 4,
+            seed: 1_000 + case,
+            warmth_ttl: case % 3,
+            // Odd cases run with a tiny queue bound so senders park and the
+            // drain pump's backpressure path is exercised, not just covered.
+            queue_cap: if case % 2 == 0 { 64 } else { 2 },
+            ..Default::default()
+        };
+        let script = FleetScript::random(cfg, 7_700 + case);
+        check_invariants(&script);
+    }
+}
+
+/// The acceptance-criteria case: a 1000-engine fleet under joins, drains
+/// and stragglers, run twice — same seed must give the same event trace,
+/// poll count and virtual-time span, verbatim.
+#[test]
+fn thousand_engine_fleet_runs_deterministically() {
+    let cfg = SimFleetCfg {
+        engines: 1000,
+        iters: if quick() { 2 } else { 3 },
+        batch_prompts: 250,
+        group_size: 2,
+        templates: 32,
+        seed: 4_242,
+        ..Default::default()
+    };
+    let mut script = FleetScript::random(cfg, 99);
+    // Guarantee the interesting events regardless of what the random
+    // schedule drew: a mid-batch tail drain, a joiner, a hard straggler.
+    script.ops.push(FleetOp::Drain { iter: 0 });
+    script.ops.push(FleetOp::Join { iter: 1 });
+    script.ops.push(FleetOp::Straggle { iter: 0, engine: 500, factor: 16.0 });
+
+    let a = check_invariants(&script);
+    let b = check_invariants(&script);
+    assert_eq!(a.trace, b.trace, "same seed must produce the same event trace");
+    assert_eq!(a.polls, b.polls, "same seed must produce the same executor poll count");
+    assert_eq!(a.virtual_s, b.virtual_s, "same seed must produce the same virtual-time span");
+    // 250 prompts × 2 rollouts × ≥2 iterations, even under the quick clamp.
+    assert!(a.minted >= 1000, "the big fleet actually dispatched work");
+}
+
+/// The reported schedule string replays to the identical trace — the
+/// debugging loop a failing property case depends on.
+#[test]
+fn reported_schedule_replays_to_identical_trace() {
+    let script = FleetScript::random(
+        SimFleetCfg { engines: 8, iters: 3, seed: 5, ..Default::default() },
+        123,
+    );
+    let a = fleet::run(&script).expect("schedule runs");
+    let b = fleet::replay(&a.schedule).expect("reported schedule replays");
+    assert_eq!(a.trace, b.trace);
+    assert_eq!(a.polls, b.polls);
+}
+
+/// Satellite-2 regression, fleet-level: an engine that crashes instead of
+/// acking its drain must surface `pump_drain_ack`'s liveness error — with
+/// the schedule attached — not hang the control loop.
+#[test]
+fn engine_death_mid_drain_surfaces_an_error_not_a_hang() {
+    let script = FleetScript {
+        cfg: SimFleetCfg { engines: 3, iters: 2, seed: 13, ..Default::default() },
+        ops: vec![FleetOp::KillOnDrain { iter: 0, engine: 2 }, FleetOp::Drain { iter: 0 }],
+    };
+    let err = fleet::run(&script).expect_err("killed drain must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("exited without acking the drain"), "got: {msg}");
+    assert!(msg.contains("simfleet/v1"), "error must carry the replay schedule: {msg}");
+}
+
+/// Satellite-2 regression, fleet-level: when every worker dies with work
+/// outstanding, `recv_step`'s liveness poll must fail the run — the
+/// simulated analogue of the driver's `recv_rollout` dead-fleet check.
+#[test]
+fn whole_fleet_death_surfaces_the_liveness_error() {
+    let script = FleetScript {
+        cfg: SimFleetCfg { engines: 2, iters: 1, seed: 3, ..Default::default() },
+        ops: vec![FleetOp::Die { iter: 0, engine: 0 }, FleetOp::Die { iter: 0, engine: 1 }],
+    };
+    let err = fleet::run(&script).expect_err("dead fleet must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("all engine workers exited"), "got: {msg}");
+}
+
+/// Satellite 3, fleet-level: 64-engine runs with warmth TTLs, drains and a
+/// joiner keep every invariant, and the router's belief set stays bounded
+/// by the template population (beliefs are per-template, rebalanced on
+/// `remove_engine`, decayed by TTL). `sync_every=0` keeps caches warm
+/// across iterations so the TTL clock is what governs expiry.
+#[test]
+fn sixty_four_engine_fleet_with_ttl_and_drains_stays_consistent() {
+    for &ttl in &[0u64, 1, 3] {
+        let cfg = SimFleetCfg {
+            engines: 64,
+            iters: 4,
+            batch_prompts: 48,
+            group_size: 2,
+            templates: 12,
+            seed: 21,
+            warmth_ttl: ttl,
+            sync_every: 0,
+            ..Default::default()
+        };
+        let script = FleetScript {
+            cfg,
+            ops: vec![
+                FleetOp::Drain { iter: 0 },
+                FleetOp::Drain { iter: 1 },
+                FleetOp::Join { iter: 2 },
+                FleetOp::Straggle { iter: 1, engine: 7, factor: 8.0 },
+            ],
+        };
+        let r = check_invariants(&script);
+        assert_eq!(r.engines, 63, "ttl={ttl}: 64 - 2 drains + 1 join");
+        assert!(
+            r.warm_beliefs <= 12,
+            "ttl={ttl}: beliefs are per-template, got {}",
+            r.warm_beliefs
+        );
+        assert!(r.warm_beliefs > 0, "ttl={ttl}: the stats sweep must have fed the warmth map");
+    }
+}

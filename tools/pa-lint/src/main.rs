@@ -2,7 +2,7 @@
 //! (`cargo run -q -p pa-lint` from the workspace root).
 //!
 //! A deliberately dumb plain-text scanner (no syn, no regex, no
-//! dependencies) enforcing three invariants the compiler cannot:
+//! dependencies) enforcing four invariants the compiler cannot:
 //!
 //! 1. **shims** — no direct `std::sync` concurrency primitive or
 //!    `std::thread` spawn outside `rust/src/check/`: everything must go
@@ -19,6 +19,12 @@
 //! 3. **config-docs** — every `pub` field in `rust/src/config.rs` states
 //!    its default (or that it is required) in its doc comment, so the doc
 //!    comments cannot silently drift from `Config::from_json`.
+//! 4. **coordinator-threads** — no thread creation (not even via the
+//!    shims) inside `rust/src/coordinator/` outside the executor entry
+//!    point `worker.rs`: coordinator control flow lives on the
+//!    deterministic executor (`coordinator::exec`), where the simulated
+//!    fleet can replay it. New concurrency goes in as an executor task or
+//!    behind `spawn_worker`, not as an ad-hoc thread.
 //!
 //! Exit status 0 with a one-line summary when clean; otherwise every
 //! violation prints as `file:line: [rule] message` and the status is 1.
@@ -171,6 +177,37 @@ fn lint_config_docs(file: &str, content: &str, out: &mut Vec<Violation>) {
     }
 }
 
+/// The coordinator module swept by the coordinator-threads rule, and the
+/// one file inside it allowed to create OS threads (the bridge between the
+/// real fleet and the executor's control loops).
+const COORD_DIR: &str = "rust/src/coordinator/";
+const COORD_THREAD_EXEMPT: &str = "rust/src/coordinator/worker.rs";
+
+/// Rule 4: coordinator control flow runs on the deterministic executor;
+/// only the executor entry point (`worker.rs`) may create threads, even
+/// through the shims. Everything else would run outside both the simulated
+/// fleet and the model checker.
+fn lint_coordinator_threads(file: &str, content: &str, out: &mut Vec<Violation>) {
+    if !file.starts_with(COORD_DIR) || file == COORD_THREAD_EXEMPT {
+        return;
+    }
+    for (i, line) in content.lines().enumerate() {
+        let t = line.trim_start();
+        if is_comment(t) {
+            continue;
+        }
+        if t.contains("thread::") || t.contains("check::thread") {
+            out.push(Violation {
+                file: file.to_string(),
+                line: i + 1,
+                rule: "coordinator-threads",
+                msg: "thread use in the coordinator outside the executor entry point (worker.rs); run it as an `exec::spawn` task so the simulated fleet and model checker see it"
+                    .to_string(),
+            });
+        }
+    }
+}
+
 /// Collect `.rs` files under `dir`, sorted for deterministic output.
 fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
     let Ok(entries) = std::fs::read_dir(dir) else { return };
@@ -212,7 +249,9 @@ fn run(root: &Path) -> Result<Vec<Violation>, String> {
             if name.starts_with(SHIM_EXEMPT_PREFIX) {
                 continue;
             }
-            lint_shims(&name, &read(&f)?, &mut out);
+            let content = read(&f)?;
+            lint_shims(&name, &content, &mut out);
+            lint_coordinator_threads(&name, &content, &mut out);
         }
     }
 
@@ -259,7 +298,7 @@ fn main() -> ExitCode {
             ExitCode::FAILURE
         }
         Ok(violations) if violations.is_empty() => {
-            println!("pa-lint: OK (shims, unwraps, config-docs)");
+            println!("pa-lint: OK (shims, unwraps, config-docs, coordinator-threads)");
             ExitCode::SUCCESS
         }
         Ok(violations) => {
@@ -330,6 +369,36 @@ let c = z.unwrap(); // pa-lint: allow(unwrap): same-line waiver
         lint_shims("w.rs", src, &mut out);
         lint_unwraps("w.rs", src, &mut out);
         assert!(out.is_empty(), "waived/comment lines flagged: {:?}", out.iter().map(|v| v.to_string()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn coordinator_threads_rule_is_scoped_to_the_executor_entry_point() {
+        let src = "\
+use crate::check::thread::Builder;
+let h = thread::spawn(work);
+";
+        let mut out = Vec::new();
+        lint_coordinator_threads("rust/src/coordinator/driver.rs", src, &mut out);
+        assert_eq!(out.len(), 2, "both the import and the spawn must be flagged");
+        assert!(out.iter().all(|v| v.rule == "coordinator-threads"));
+        assert_eq!((out[0].line, out[1].line), (1, 2));
+
+        out.clear();
+        // worker.rs is the executor entry point; code outside the
+        // coordinator is the shims rule's business, not this one's.
+        lint_coordinator_threads("rust/src/coordinator/worker.rs", src, &mut out);
+        lint_coordinator_threads("rust/src/engine/mod.rs", src, &mut out);
+        // Prose about threads is never a violation.
+        lint_coordinator_threads(
+            "rust/src/coordinator/exec.rs",
+            "// unlike thread::spawn, tasks are polled deterministically\n",
+            &mut out,
+        );
+        assert!(
+            out.is_empty(),
+            "exempt paths flagged: {:?}",
+            out.iter().map(|v| v.to_string()).collect::<Vec<_>>()
+        );
     }
 
     #[test]
